@@ -1,0 +1,144 @@
+//! Ablations of DeepCABAC's design choices (DESIGN.md calls these out):
+//!
+//!  1. AbsGr flag budget n (paper App. A-C fixes n = 10)
+//!  2. context-coded Exp-Golomb prefix positions (vs all-bypass tail)
+//!  3. scan order feeding the sig-context (row-major vs alternatives)
+//!  4. slice segmentation: parallel-decode speedup vs size overhead
+//!  5. compressed-domain inference: CER/CSER matvec vs dense, and the
+//!     representation sizes vs CSR ([14], paper §IV-B.3)
+//!
+//! ```bash
+//! cargo bench --offline --bench ablation
+//! ```
+
+use deepcabac::benchutil::{artifacts_dir, artifacts_ready, bench};
+use deepcabac::cabac::slices::{decode_layer_sliced, encode_layer_sliced};
+use deepcabac::cabac::{self, CodingConfig};
+use deepcabac::codecs::cer::{dense_matvec, Cer, Cser};
+use deepcabac::codecs::csr::Csr;
+use deepcabac::model::{read_nwf, ScanOrder};
+use deepcabac::quant::uniform;
+use deepcabac::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_ready() {
+        println!("ablation: SKIP (run `make artifacts`)");
+        return Ok(());
+    }
+    let art = artifacts_dir();
+    let net = read_nwf(art.join("smallvgg_sparse.nwf"))?;
+    // One realistic quantized plane set (uniform 255-pt grid).
+    let q = uniform::quantize_network(&net, 255);
+
+    println!("== ablation 1/2: binarization budget (smallvgg_sparse, total bytes) ==");
+    println!("{:<26} {:>10} {:>12}", "config", "bytes", "bits/param");
+    let params: usize = q.iter().map(|l| l.ints.len()).sum();
+    for (label, cfg) in [
+        ("n=1,  eg_ctx=16", CodingConfig { max_abs_gr: 1, eg_contexts: 16 }),
+        ("n=2,  eg_ctx=16", CodingConfig { max_abs_gr: 2, eg_contexts: 16 }),
+        ("n=5,  eg_ctx=16", CodingConfig { max_abs_gr: 5, eg_contexts: 16 }),
+        ("n=10, eg_ctx=16 (paper)", CodingConfig::default()),
+        ("n=20, eg_ctx=16", CodingConfig { max_abs_gr: 20, eg_contexts: 16 }),
+        ("n=10, eg_ctx=0 (bypass)", CodingConfig { max_abs_gr: 10, eg_contexts: 0 }),
+        ("n=10, eg_ctx=4", CodingConfig { max_abs_gr: 10, eg_contexts: 4 }),
+    ] {
+        let total: usize = q
+            .iter()
+            .map(|l| cabac::encode_layer(&l.ints, cfg).len())
+            .sum();
+        println!(
+            "{label:<26} {total:>10} {:>12.4}",
+            total as f64 * 8.0 / params as f64
+        );
+    }
+
+    println!("\n== ablation 3: scan order (sig-context neighbourhood) ==");
+    println!("{:<12} {:>10} {:>12}", "scan", "bytes", "bits/param");
+    let cfg = CodingConfig::default();
+    for order in ScanOrder::ALL {
+        let total: usize = q
+            .iter()
+            .map(|l| {
+                let scanned = order.apply(&l.ints, l.rows, l.cols);
+                cabac::encode_layer(&scanned, cfg).len()
+            })
+            .sum();
+        println!(
+            "{:<12} {total:>10} {:>12.4}",
+            order.name(),
+            total as f64 * 8.0 / params as f64
+        );
+    }
+
+    println!("\n== ablation 4: slice segmentation (largest layer) ==");
+    let big = q.iter().max_by_key(|l| l.ints.len()).unwrap();
+    let mono = cabac::encode_layer(&big.ints, cfg);
+    let (mono_stats, _) = bench(1, 5, || {
+        cabac::decode_layer(&mono, big.ints.len(), cfg).unwrap()
+    });
+    println!(
+        "{:<22} {:>10} B   decode {:>7.2} ms",
+        "monolithic",
+        mono.len(),
+        mono_stats.median_s * 1e3
+    );
+    for (slice_len, threads) in [(16384usize, 8usize), (4096, 8), (4096, 2)] {
+        let sliced = encode_layer_sliced(&big.ints, cfg, slice_len);
+        let (stats, out) = bench(1, 5, || {
+            decode_layer_sliced(&sliced, big.ints.len(), cfg, threads).unwrap()
+        });
+        assert_eq!(out, big.ints);
+        println!(
+            "slice={slice_len:<6} thr={threads:<2}   {:>10} B   decode {:>7.2} ms  (x{:.2} vs mono, +{:.2}% size)",
+            sliced.len(),
+            stats.median_s * 1e3,
+            mono_stats.median_s / stats.median_s,
+            100.0 * (sliced.len() as f64 - mono.len() as f64) / mono.len() as f64
+        );
+    }
+
+    println!("\n== ablation 5: compressed-domain inference (CER/CSER, [14]) ==");
+    // A low-entropy quantized layer: coarse 9-point grid on the big layer.
+    let coarse = uniform::quantize_network(&net, 9);
+    let l = coarse.iter().max_by_key(|l| l.ints.len()).unwrap();
+    let mut rng = Pcg64::new(99);
+    let x: Vec<f32> = (0..l.cols).map(|_| rng.normal() as f32).collect();
+    let csr = Csr::from_dense(&l.ints, l.rows, l.cols);
+    let cer = Cer::from_dense(&l.ints, l.rows, l.cols);
+    let cser = Cser::from_dense(&l.ints, l.rows, l.cols);
+    println!(
+        "layer {} ({}x{}, nnz {:.1}%, alphabet {}):",
+        l.name,
+        l.rows,
+        l.cols,
+        100.0 * csr.nnz() as f64 / l.ints.len() as f64,
+        cser.dict.len()
+    );
+    println!(
+        "  sizes: csr-int {} B, csr-f32 {} B, cer {} B, cser {} B",
+        csr.plain_bytes(),
+        12 + (l.rows + 1) * 4 + csr.nnz() * 5,
+        cer.size_bytes(),
+        cser.size_bytes()
+    );
+    let (d_stats, y_d) = bench(2, 20, || {
+        dense_matvec(&l.ints, l.rows, l.cols, &x, l.delta)
+    });
+    let (c_stats, y_c) = bench(2, 20, || cer.matvec(&x, l.delta));
+    let (s_stats, y_s) = bench(2, 20, || cser.matvec(&x, l.delta));
+    for (a, b) in y_d.iter().zip(&y_c) {
+        assert!((a - b).abs() < 1e-3);
+    }
+    for (a, b) in y_d.iter().zip(&y_s) {
+        assert!((a - b).abs() < 1e-3);
+    }
+    println!(
+        "  matvec: dense {:.1} µs, cer {:.1} µs (x{:.2}), cser {:.1} µs (x{:.2})",
+        d_stats.median_s * 1e6,
+        c_stats.median_s * 1e6,
+        d_stats.median_s / c_stats.median_s,
+        s_stats.median_s * 1e6,
+        d_stats.median_s / s_stats.median_s
+    );
+    Ok(())
+}

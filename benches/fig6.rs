@@ -1,0 +1,80 @@
+//! Fig. 6 regeneration: the weight distribution of the last layer of the
+//! (Small)VGG model after uniform quantization, against CABAC's learned
+//! probability estimate — showing the context-adaptive region around 0 and
+//! the step-wise Exp-Golomb tail.
+//!
+//! Emits artifacts/bench_fig6.csv: symbol, empirical count, empirical bits
+//! (-log2 p̂), CABAC-estimated bits after adaptation.
+//!
+//! ```bash
+//! cargo bench --offline --bench fig6
+//! ```
+
+use std::collections::HashMap;
+
+use deepcabac::benchutil::{artifacts_dir, artifacts_ready, write_csv};
+use deepcabac::cabac::arith::Encoder;
+use deepcabac::cabac::binarize::encode_int;
+use deepcabac::cabac::context::{CodingConfig, SigHistory, WeightContexts};
+use deepcabac::cabac::estimator::estimate_int;
+use deepcabac::model::read_nwf;
+use deepcabac::quant::uniform;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_ready() {
+        println!("fig6: SKIP (run `make artifacts`)");
+        return Ok(());
+    }
+    let art = artifacts_dir();
+    let net = read_nwf(art.join("smallvgg.nwf"))?;
+    let last = net.layers.last().unwrap();
+    println!(
+        "== Fig. 6: last layer of SmallVGG ({}, {}x{}) uniformly quantized ==",
+        last.name, last.rows, last.cols
+    );
+    let delta = uniform::delta_for_clusters(last.max_abs(), 257);
+    let ints = uniform::assign_nearest(&last.weights, delta, 128);
+
+    // Empirical distribution.
+    let mut counts: HashMap<i32, usize> = HashMap::new();
+    for &i in &ints {
+        *counts.entry(i).or_insert(0) += 1;
+    }
+    let n = ints.len() as f64;
+
+    // Adapt CABAC over the layer, then read its per-symbol estimates.
+    let cfg = CodingConfig::default();
+    let mut ctxs = WeightContexts::new(cfg);
+    let mut hist = SigHistory::default();
+    let mut enc = Encoder::new();
+    for &v in &ints {
+        encode_int(&mut enc, &mut ctxs, &mut hist, v);
+    }
+    let stream = enc.finish();
+
+    let mut symbols: Vec<i32> = counts.keys().copied().collect();
+    symbols.sort();
+    let mut rows = Vec::new();
+    println!("symbol  count  empirical-bits  cabac-bits");
+    for &s in &symbols {
+        let c = counts[&s];
+        let emp_bits = -((c as f64 / n).log2());
+        let cab_bits = estimate_int(&ctxs, hist.ctx_index(), s);
+        if s.abs() <= 12 || c > 3 {
+            println!("{s:>6}  {c:>6}  {emp_bits:>13.3}  {cab_bits:>9.3}");
+        }
+        rows.push(format!("{s},{c},{emp_bits:.4},{cab_bits:.4}"));
+    }
+    println!(
+        "\nlayer coded in {} bytes = {:.3} bits/param (EPMD entropy {:.3});\n\
+         the CABAC estimate tracks the empirical -log2 p̂ closely for the\n\
+         context-coded |symbol| <= n+1 region and staircases beyond (the\n\
+         bypass fixed-length suffix of the Exp-Golomb code — Fig. 6 blue).",
+        stream.len(),
+        stream.len() as f64 * 8.0 / n,
+        deepcabac::codecs::entropy::entropy_bits_per_symbol(&ints)
+    );
+    let p = write_csv("fig6", "symbol,count,empirical_bits,cabac_bits", &rows);
+    println!("csv -> {}", p.display());
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! Microbenchmarks for the hot paths (the §Perf harness):
+//!  * CABAC encode / decode throughput (MB/s of payload, Msym/s)
+//!  * RDOQ assignment throughput (Mweights/s), table vs exact refresh
+//!  * CABAC bit-estimator / cost-table build
+//!  * scalar Huffman + bzip2 reference throughput
+//!  * PJRT eval-graph latency (per batch) and Pallas rd_assign chunk latency
+//!
+//! ```bash
+//! cargo bench --offline --bench micro
+//! ```
+
+use deepcabac::benchutil::{artifacts_dir, artifacts_ready, bench};
+use deepcabac::cabac::{self, CodingConfig};
+use deepcabac::cabac::context::WeightContexts;
+use deepcabac::cabac::estimator::CostTable;
+use deepcabac::codecs::{external, huffman};
+use deepcabac::quant::rd::{rd_quantize_layer, RdParams};
+use deepcabac::util::Pcg64;
+
+fn sparse_symbols(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            if rng.next_f64() < 0.8 {
+                0
+            } else {
+                let m = 1 + (rng.next_f64() * rng.next_f64() * 30.0) as i32;
+                if rng.next_f64() < 0.5 {
+                    -m
+                } else {
+                    m
+                }
+            }
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = 1_000_000;
+    let symbols = sparse_symbols(n, 7);
+    let coding = CodingConfig::default();
+
+    println!("== micro: CABAC engine ==");
+    let (enc_stats, stream) = bench(1, 5, || cabac::encode_layer(&symbols, coding));
+    println!(
+        "encode: {:>8.2} Msym/s  ({:.1} MB/s payload, {} B for {} syms, {:.3} bits/sym)",
+        n as f64 / enc_stats.median_s / 1e6,
+        stream.len() as f64 / enc_stats.median_s / 1e6,
+        stream.len(),
+        n,
+        stream.len() as f64 * 8.0 / n as f64,
+    );
+    let (dec_stats, decoded) = bench(1, 5, || {
+        cabac::decode_layer(&stream, n, coding).unwrap()
+    });
+    assert_eq!(decoded, symbols);
+    println!(
+        "decode: {:>8.2} Msym/s",
+        n as f64 / dec_stats.median_s / 1e6
+    );
+
+    println!("\n== micro: RDOQ quantizer ==");
+    let mut rng = Pcg64::new(8);
+    let w = rng.sparse_laplace_vec(n, 0.05, 0.5);
+    for (label, refresh, half, nn) in [
+        // exact refresh rebuilds 3 cost tables per weight — run it on a
+        // 20k slice (it exists to quantify the ablation, not for speed).
+        ("table-refresh=256, half=128", 256usize, 128, n),
+        ("table-refresh=256, half=512", 256, 512, n),
+        ("exact (refresh=1), half=128", 1, 128, 20_000),
+    ] {
+        let mut p = RdParams::new(0.002, 0.5 * 0.002 * 0.002, half);
+        p.refresh = refresh;
+        let slice = &w[..nn];
+        let (stats, ints) = bench(0, 3, || rd_quantize_layer(slice, &[], &p));
+        println!(
+            "{label:<28}: {:>7.3} Mw/s  ({} nonzero / {} w)",
+            nn as f64 / stats.median_s / 1e6,
+            ints.iter().filter(|&&i| i != 0).count(),
+            nn
+        );
+    }
+
+    println!("\n== micro: estimator ==");
+    let ctxs = WeightContexts::new(coding);
+    let (t_stats, table) = bench(2, 10, || deepcabac::cabac::estimator::build_cost_tables(&ctxs, 512));
+    println!(
+        "cost-table build x3 (K=1025): {:>6.1} µs",
+        t_stats.median_s * 1e6
+    );
+    std::hint::black_box(&table);
+
+    println!("\n== micro: baseline coders (same 1M-symbol plane) ==");
+    let (h_stats, h_bytes) = bench(1, 3, || {
+        huffman::encode_two_part(&symbols).unwrap().1
+    });
+    println!(
+        "scalar-Huffman encode: {:>8.2} Msym/s ({} B)",
+        n as f64 / h_stats.median_s / 1e6,
+        h_bytes.len()
+    );
+    let (packed_stats, packed) = bench(1, 3, || external::pack_symbols(&symbols).1);
+    std::hint::black_box(packed_stats);
+    let (bz_stats, bz) = bench(0, 3, || external::bzip2_compress(&packed).unwrap());
+    println!(
+        "bzip2 compress:        {:>8.2} Msym/s ({} B)",
+        n as f64 / bz_stats.median_s / 1e6,
+        bz.len()
+    );
+
+    if artifacts_ready() {
+        println!("\n== micro: PJRT runtime ==");
+        let art = artifacts_dir();
+        let engine = deepcabac::runtime::Engine::new(&art)?;
+        let data = deepcabac::data::Dataset::load(art.join("dataset.nds"))?;
+        let net = deepcabac::model::read_nwf(art.join("smallvgg.nwf"))?;
+        let mats: Vec<(&[f32], usize, usize)> = net
+            .layers
+            .iter()
+            .map(|l| (l.weights.as_slice(), l.rows, l.cols))
+            .collect();
+        let biases: Vec<&[f32]> = net
+            .layers
+            .iter()
+            .map(|l| l.bias.as_deref().unwrap())
+            .collect();
+        let x = data.batch_images(0, deepcabac::runtime::EVAL_BATCH);
+        // warm compile
+        let _ = engine.eval_logits("smallvgg", &mats, &biases, x, (16, 16, 1))?;
+        let (ev_stats, _) = bench(1, 5, || {
+            engine
+                .eval_logits("smallvgg", &mats, &biases, x, (16, 16, 1))
+                .unwrap()
+        });
+        println!(
+            "smallvgg eval batch(256): {:>7.2} ms ({:.0} img/s)",
+            ev_stats.median_s * 1e3,
+            256.0 / ev_stats.median_s
+        );
+
+        let kw = rng.normal_vec(deepcabac::runtime::KERNEL_N, 0.05);
+        let kf = vec![1.0f32; deepcabac::runtime::KERNEL_N];
+        let table = CostTable::build(&ctxs, 0, deepcabac::runtime::KERNEL_HALF);
+        let _ = engine.rd_assign_chunk(&kw, &kf, 0.002, 1e-5, &table.cost)?;
+        let (k_stats, _) = bench(1, 5, || {
+            engine
+                .rd_assign_chunk(&kw, &kf, 0.002, 1e-5, &table.cost)
+                .unwrap()
+        });
+        println!(
+            "pallas rd_assign chunk(16384): {:>7.2} ms ({:.2} Mw/s, interpret-mode CPU)",
+            k_stats.median_s * 1e3,
+            deepcabac::runtime::KERNEL_N as f64 / k_stats.median_s / 1e6
+        );
+    } else {
+        println!("\n(PJRT micro benches skipped: artifacts not built)");
+    }
+    Ok(())
+}

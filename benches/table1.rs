@@ -1,0 +1,111 @@
+//! Table I regeneration: compression ratio (percent of original size) at no
+//! accuracy loss (±0.5 pp) for DC-v1, DC-v2, weighted Lloyd and Uniform,
+//! across the model zoo — dense and sparse variants.
+//!
+//! Absolute ratios differ from the paper (scaled-down zoo on SynthVision-16,
+//! DESIGN.md §6); the *shape* must hold: DC ≥ Lloyd ≥ Uniform compression at
+//! iso-accuracy, with sparse models compressing several times further.
+//!
+//! ```bash
+//! cargo bench --offline --bench table1
+//! # subset: DCB_BENCH_MODELS=lenet5,lenet300 cargo bench --bench table1
+//! ```
+
+use deepcabac::benchutil::{artifacts_dir, artifacts_ready, bench_models, write_csv};
+use deepcabac::coordinator::{self, Method, SearchConfig};
+use deepcabac::metrics::Timer;
+use deepcabac::model::{read_nwf, Importance};
+use deepcabac::runtime::EvalService;
+
+const MODELS: &[&str] = &[
+    "lenet300",
+    "lenet5",
+    "smallvgg",
+    "mobilenet",
+    "lenet300_sparse",
+    "lenet5_sparse",
+    "smallvgg_sparse",
+    "mobilenet_sparse",
+];
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_ready() {
+        println!("table1: SKIP (run `make artifacts`)");
+        return Ok(());
+    }
+    let art = artifacts_dir();
+    let cfg = SearchConfig::default();
+    let host = EvalService::spawn(art.clone(), art.join("dataset.nds"), cfg.threads)?;
+    let methods = [
+        Method::DcV1,
+        Method::DcV2,
+        Method::Lloyd(Importance::Fisher),
+        Method::Uniform,
+    ];
+
+    println!("== Table I: percent of original size at <=0.5 pp accuracy loss ==");
+    println!(
+        "{:<18} {:>6} {:>9} | {:>15} {:>15} {:>15} {:>15}",
+        "model", "spars%", "orig-acc", "DC-v1", "DC-v2", "Lloyd", "Uniform"
+    );
+    let mut rows = Vec::new();
+    let mut dense_factors: Vec<f64> = Vec::new();
+    let mut sparse_factors: Vec<f64> = Vec::new();
+    for model in bench_models(MODELS) {
+        let net = read_nwf(art.join(format!("{model}.nwf")))?;
+        let t = Timer::start();
+        let mut cells = Vec::new();
+        let mut csv = format!("{model}");
+        let mut orig_acc = 0.0;
+        let mut best_dc_factor: f64 = 0.0;
+        for m in methods {
+            let o = coordinator::search(&net, m, &cfg, &host.handle)?;
+            orig_acc = o.original_accuracy;
+            match o.best_result() {
+                Some(b) => {
+                    cells.push(format!("{:6.2}% ({:5.2})", b.percent(), b.accuracy * 100.0));
+                    csv.push_str(&format!(",{:.4},{:.4}", b.percent(), b.accuracy * 100.0));
+                    if matches!(m, Method::DcV1 | Method::DcV2) {
+                        best_dc_factor = best_dc_factor.max(b.sizes.factor());
+                    }
+                }
+                None => {
+                    cells.push("        n/a    ".into());
+                    csv.push_str(",,");
+                }
+            }
+        }
+        println!(
+            "{:<18} {:>6.2} {:>8.2}% | {} {} {} {}   [{:.0}s]",
+            model,
+            net.nonzero_frac() * 100.0,
+            orig_acc * 100.0,
+            cells[0],
+            cells[1],
+            cells[2],
+            cells[3],
+            t.secs()
+        );
+        if model.ends_with("_sparse") {
+            sparse_factors.push(best_dc_factor);
+        } else {
+            dense_factors.push(best_dc_factor);
+        }
+        rows.push(csv);
+    }
+    if !dense_factors.is_empty() {
+        println!(
+            "\nheadline: avg DeepCABAC factor — dense x{:.1}, sparse x{:.1} \
+             (paper: x18.9 / x50.6 on its zoo)",
+            dense_factors.iter().sum::<f64>() / dense_factors.len().max(1) as f64,
+            sparse_factors.iter().sum::<f64>() / sparse_factors.len().max(1) as f64
+        );
+    }
+    let p = write_csv(
+        "table1",
+        "model,dc1_pct,dc1_acc,dc2_pct,dc2_acc,lloyd_pct,lloyd_acc,uniform_pct,uniform_acc",
+        &rows,
+    );
+    println!("csv -> {}", p.display());
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Coding anatomy: the paper's worked examples, executed.
+//!
+//!  * Fig. 7 — the DeepCABAC binarization of 1, -4 and 7 at n = 1.
+//!  * Fig. 2 — arithmetic-coding a 5-bin sequence and watching the stream.
+//!  * Fig. 6 — how the adaptive contexts learn a weight distribution:
+//!    per-symbol code length before vs after adaptation.
+//!
+//! ```bash
+//! cargo run --release --offline --example coding_anatomy
+//! ```
+
+use deepcabac::cabac::arith::{Context, Decoder, Encoder, PROB_ONE};
+use deepcabac::cabac::binarize::{binarize, binarize_to_string, encode_int};
+use deepcabac::cabac::context::{CodingConfig, SigHistory, WeightContexts};
+use deepcabac::cabac::estimator::estimate_int;
+use deepcabac::util::Pcg64;
+
+fn main() {
+    println!("== Fig. 7: binarization at n = 1 ==");
+    for v in [1i32, -4, 7, 0, 2, -11] {
+        println!("  {v:>4} -> {}", binarize_to_string(v, 1));
+    }
+    println!("  bins of 7: {:?}", binarize(7, 1));
+
+    println!("\n== Fig. 2: arithmetic-coding '10111' with p(0)=0.2 ==");
+    let fixed = Context {
+        p0: (PROB_ONE as f32 * 0.2) as u16,
+    };
+    let seq = [true, false, true, true, true];
+    let mut e = Encoder::new();
+    for &b in &seq {
+        let mut c = fixed;
+        e.encode(&mut c, b);
+    }
+    let bytes = e.finish();
+    println!(
+        "  -log2 P(seq) = {:.3} bits; emitted {} bytes: {:02x?}",
+        -(0.8f64 * 0.2 * 0.8 * 0.8 * 0.8).log2(),
+        bytes.len(),
+        bytes
+    );
+    let mut d = Decoder::new(&bytes);
+    let decoded: Vec<bool> = seq
+        .iter()
+        .map(|_| {
+            let mut c = fixed;
+            d.decode(&mut c)
+        })
+        .collect();
+    assert_eq!(decoded, seq);
+    println!("  decoded: {decoded:?} (matches)");
+
+    println!("\n== Fig. 6: context adaptation on a sparse-Laplacian layer ==");
+    let cfg = CodingConfig::default();
+    let fresh = WeightContexts::new(cfg);
+    let mut adapted = WeightContexts::new(cfg);
+    let mut hist = SigHistory::default();
+    let mut rng = Pcg64::new(66);
+    let symbols: Vec<i32> = (0..50_000)
+        .map(|_| {
+            if rng.next_f64() < 0.85 {
+                0
+            } else {
+                let m = 1 + (rng.next_f64() * rng.next_f64() * 8.0) as i32;
+                if rng.next_f64() < 0.35 {
+                    -m
+                } else {
+                    m
+                }
+            }
+        })
+        .collect();
+    let mut enc = Encoder::new();
+    for &s in &symbols {
+        encode_int(&mut enc, &mut adapted, &mut hist, s);
+    }
+    let stream = enc.finish();
+    println!(
+        "  coded 50k symbols in {} bytes = {:.3} bits/symbol",
+        stream.len(),
+        stream.len() as f64 * 8.0 / symbols.len() as f64
+    );
+    println!("  per-symbol estimate (bits): fresh ctx -> adapted ctx");
+    for v in [0i32, 1, -1, 2, -3, 5, -8] {
+        println!(
+            "    {v:>3}: {:>6.3} -> {:>6.3}",
+            estimate_int(&fresh, 0, v),
+            estimate_int(&adapted, hist.ctx_index(), v)
+        );
+    }
+    println!(
+        "  (the grey bins of Fig. 6/7 are exactly these context-coded\n\
+         positions; the remainder's fixed-length suffix stays at 1 bit/bin)"
+    );
+}

@@ -1,0 +1,87 @@
+//! End-to-end driver (DESIGN.md experiment P1): the complete DeepCABAC
+//! system on a real trained model — grid-search over β = (Δ, λ) / (S, λ)
+//! with PJRT accuracy evaluation in the loop, reporting the paper's
+//! headline metric: compression ratio at no accuracy loss (±0.5 pp).
+//!
+//! ```bash
+//! cargo run --release --offline --example full_pipeline [model] [tolerance_pp]
+//! # default: smallvgg_sparse 0.5
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md.
+
+use deepcabac::coordinator::{self, Method, SearchConfig};
+use deepcabac::metrics::Timer;
+use deepcabac::model::{read_nwf, Importance};
+use deepcabac::runtime::EvalService;
+
+fn main() -> anyhow::Result<()> {
+    let art = deepcabac::benchutil::artifacts_dir();
+    if !deepcabac::benchutil::artifacts_ready() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "smallvgg_sparse".into());
+    let tol_pp: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+
+    let net = read_nwf(art.join(format!("{model}.nwf")))?;
+    println!(
+        "== full DeepCABAC pipeline on {model}: {} params, nonzero {:.1}% ==",
+        net.param_count(),
+        net.nonzero_frac() * 100.0
+    );
+
+    let cfg = SearchConfig {
+        tolerance: tol_pp / 100.0,
+        ..SearchConfig::default()
+    };
+    let host = EvalService::spawn(art.clone(), art.join("dataset.nds"), cfg.threads)?;
+
+    let mut outcomes = Vec::new();
+    for method in [
+        Method::DcV1,
+        Method::DcV2,
+        Method::Lloyd(Importance::Fisher),
+        Method::Uniform,
+    ] {
+        let t = Timer::start();
+        let o = coordinator::search(&net, method, &cfg, &host.handle)?;
+        let n = o.results.len();
+        match o.best_result() {
+            Some(b) => println!(
+                "{:>9}: best {:.3}% of original (x{:.1}) at top-1 {:.2}% \
+                 [orig {:.2}%], {} candidates in {:.1}s via {}",
+                o.method_name,
+                b.percent(),
+                b.sizes.factor(),
+                b.accuracy * 100.0,
+                o.original_accuracy * 100.0,
+                n,
+                t.secs(),
+                b.backend
+            ),
+            None => println!(
+                "{:>9}: no candidate within {:.1} pp ({} tried, {:.1}s)",
+                o.method_name,
+                tol_pp,
+                n,
+                t.secs()
+            ),
+        }
+        // Pareto front for the log.
+        let front = o.pareto();
+        println!("           pareto front ({} pts):", front.len());
+        let mut pts: Vec<_> = front
+            .iter()
+            .map(|r| (r.percent(), r.accuracy * 100.0))
+            .collect();
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for (pct, acc) in pts.iter().take(8) {
+            println!("             {pct:>7.3}% -> {acc:.2}%");
+        }
+        outcomes.push(o);
+    }
+    println!("\n{}", coordinator::report::table1_row(&model, &outcomes));
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Rate–accuracy Pareto sweep: quantify the accuracy-vs-size plane of one
+//! model under DC-v2 across the full (Δ, λ) product, and print the Pareto
+//! front as CSV (plus write artifacts/bench_pareto.csv).
+//!
+//! ```bash
+//! cargo run --release --offline --example pareto_sweep [model]
+//! ```
+
+use deepcabac::coordinator::pipeline::run_candidate;
+use deepcabac::coordinator::{pareto, Candidate, Method, SearchConfig};
+use deepcabac::model::read_nwf;
+use deepcabac::quant::stepsize;
+use deepcabac::runtime::EvalService;
+
+fn main() -> anyhow::Result<()> {
+    let art = deepcabac::benchutil::artifacts_dir();
+    if !deepcabac::benchutil::artifacts_ready() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let model = std::env::args().nth(1).unwrap_or_else(|| "lenet300".into());
+    let net = read_nwf(art.join(format!("{model}.nwf")))?;
+    let cfg = SearchConfig::default();
+    let host = EvalService::spawn(art.clone(), art.join("dataset.nds"), cfg.threads)?;
+
+    let mut cands = Vec::new();
+    for &delta in stepsize::dc_v2_delta_grid(10, 4).iter() {
+        for lambda in stepsize::rd_lambda_grid(5) {
+            cands.push(Candidate {
+                method: Method::DcV2,
+                s: 0.0,
+                delta,
+                lambda,
+                clusters: 0,
+            });
+        }
+    }
+    eprintln!("sweeping {} candidates on {model} ...", cands.len());
+    let results = deepcabac::coordinator::parallel::parallel_map(&cands, cfg.threads, |c| {
+        run_candidate(&net, c, &cfg, &host.handle)
+    });
+    let results: Vec<_> = results.into_iter().collect::<Result<_, _>>()?;
+
+    let front = pareto::pareto_front(&results);
+    let mut rows: Vec<String> = front
+        .iter()
+        .map(|&i| {
+            let r = &results[i];
+            format!(
+                "{:.5},{:.5},{:.4},{:.4}",
+                r.candidate.delta,
+                r.candidate.lambda,
+                r.percent(),
+                r.accuracy * 100.0
+            )
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        let pa: f64 = a.split(',').nth(2).unwrap().parse().unwrap();
+        let pb: f64 = b.split(',').nth(2).unwrap().parse().unwrap();
+        pa.total_cmp(&pb)
+    });
+    println!("delta,lambda,percent_of_original,top1");
+    for r in &rows {
+        println!("{r}");
+    }
+    let path = deepcabac::benchutil::write_csv(
+        "pareto",
+        "delta,lambda,percent_of_original,top1",
+        &rows,
+    );
+    eprintln!(
+        "pareto front: {} of {} candidates -> {}",
+        front.len(),
+        results.len(),
+        path.display()
+    );
+    Ok(())
+}

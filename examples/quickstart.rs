@@ -1,0 +1,64 @@
+//! Quickstart: compress a trained network with DeepCABAC, decode it, and
+//! check the accuracy cost — the 60-second tour of the public API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use deepcabac::coordinator::pipeline::compress_dc;
+use deepcabac::coordinator::{Candidate, Method, SearchConfig};
+use deepcabac::model::{read_nwf, CompressedNetwork};
+use deepcabac::runtime::EvalService;
+
+fn main() -> anyhow::Result<()> {
+    let art = deepcabac::benchutil::artifacts_dir();
+    if !deepcabac::benchutil::artifacts_ready() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+
+    // 1. Load a trained model (weights + Fisher diagonals + biases).
+    let net = read_nwf(art.join("lenet300.nwf"))?;
+    println!(
+        "loaded {}: {} layers, {} params ({:.2} MB as f32)",
+        net.name,
+        net.layers.len(),
+        net.param_count(),
+        net.f32_size_bytes() as f64 / 1e6
+    );
+
+    // 2. Quantize with DeepCABAC's RDOQ (eq. 11) and entropy-code with
+    //    CABAC into a self-contained .dcb bitstream.
+    let cand = Candidate {
+        method: Method::DcV2,
+        s: 0.0,
+        delta: 0.02,  // step-size Δ
+        lambda: 1.0,  // rate pressure λ (Δ²-normalized)
+        clusters: 0,
+    };
+    let cfg = SearchConfig::default();
+    let bytes = compress_dc(&net, &cand, &cfg).to_bytes();
+    println!(
+        "compressed: {} -> {} bytes ({:.2}% of original, x{:.1})",
+        net.f32_size_bytes(),
+        bytes.len(),
+        100.0 * bytes.len() as f64 / net.f32_size_bytes() as f64,
+        net.f32_size_bytes() as f64 / bytes.len() as f64
+    );
+
+    // 3. Decode (anyone with the .dcb can do this — no side channels).
+    let decoded = CompressedNetwork::from_bytes(&bytes)?;
+    let recon = decoded.reconstruct(&net.name);
+
+    // 4. Score original vs decoded through the AOT eval graph (PJRT).
+    let host = EvalService::spawn(art.clone(), art.join("dataset.nds"), 2)?;
+    let acc0 = host.handle.accuracy(&net)?;
+    let acc1 = host.handle.accuracy(&recon)?;
+    println!(
+        "top-1: original {:.2}% -> compressed {:.2}% (Δ {:+.2} pp)",
+        acc0 * 100.0,
+        acc1 * 100.0,
+        (acc1 - acc0) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,197 @@
+"""AOT compile path: train the zoo, estimate importances, export artifacts.
+
+Run as ``python -m compile.aot --out ../artifacts`` (the `make artifacts`
+target).  Python runs ONCE here; the Rust coordinator is self-contained
+afterwards.
+
+Artifacts produced:
+  dataset.nds                 test split (accuracy oracle input)
+  <model>.nwf                 trained dense weights + fisher/hessian + biases
+  <model>_sparse.nwf          magnitude-pruned variant (same shapes)
+  eval_<model>.hlo.txt        (mats..., biases..., x[B,16,16,1]) -> logits
+  rd_assign.hlo.txt           Pallas RDOQ kernel, n=16384, K=1025
+  dequant.hlo.txt             Pallas dequant kernel, n=16384
+  MANIFEST.txt                provenance + integrity listing (written last —
+                              the Makefile's up-to-date sentinel)
+
+HLO is exported as TEXT (not serialized HloModuleProto): jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import fim as FIM
+from . import io_format as IO
+from . import models as M
+from . import train as T
+from .kernels import dequant as KD
+from .kernels import rd_assign as KR
+
+EVAL_BATCH = 256
+KERNEL_N = 16384
+KERNEL_K = 1025
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def export_eval_graph(name: str, layers, out_path: str) -> None:
+    """Lower (mats..., biases..., x) -> (logits,) for one architecture."""
+    mat_specs = [jax.ShapeDtypeStruct(
+        M.to_matrix(l["kind"], l["w"]).shape, jnp.float32) for l in layers]
+    bias_specs = [jax.ShapeDtypeStruct(l["b"].shape, jnp.float32)
+                  for l in layers]
+    x_spec = jax.ShapeDtypeStruct((EVAL_BATCH, D.IMG, D.IMG, 1), jnp.float32)
+    k = len(layers)
+
+    def fn(*args):
+        mats, biases, x = args[:k], args[k:2 * k], args[2 * k]
+        return (M.apply_with_matrices(name, mats, biases, x),)
+
+    lowered = jax.jit(fn).lower(*mat_specs, *bias_specs, x_spec)
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def export_kernels(out_dir: str) -> None:
+    w = jax.ShapeDtypeStruct((KERNEL_N,), jnp.float32)
+    fimv = jax.ShapeDtypeStruct((KERNEL_N,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((1,), jnp.float32)
+    cost = jax.ShapeDtypeStruct((KERNEL_K,), jnp.float32)
+    idx = jax.ShapeDtypeStruct((KERNEL_N,), jnp.int32)
+
+    lowered = jax.jit(
+        lambda *a: (KR.rd_assign(*a),)).lower(w, fimv, scalar, scalar, cost)
+    with open(os.path.join(out_dir, "rd_assign.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(lambda i, d: (KD.dequant(i, d),)).lower(idx, scalar)
+    with open(os.path.join(out_dir, "dequant.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def layers_to_nwf(layers, fisher, hessian):
+    out = []
+    for i, l in enumerate(layers):
+        mat = np.asarray(M.to_matrix(l["kind"], l["w"]))
+        fi = np.asarray(M.to_matrix(l["kind"], jnp.asarray(fisher[i]))) \
+            if fisher is not None else None
+        he = np.asarray(M.to_matrix(l["kind"], jnp.asarray(hessian[i]))) \
+            if hessian is not None else None
+        out.append(dict(name=l["name"], kind=l["kind"],
+                        shape=tuple(int(s) for s in l["w"].shape),
+                        mat=mat, fisher=fi, hessian=he,
+                        bias=np.asarray(l["b"])))
+    return out
+
+
+TRAIN_STEPS = {"lenet300": 700, "lenet5": 700, "smallvgg": 900,
+               "mobilenet": 900}
+FINETUNE_STEPS = {"lenet300": 250, "lenet5": 250, "smallvgg": 300,
+                  "mobilenet": 300}
+
+
+def build_model(name, xy_train, xy_test, out_dir, manifest):
+    (x_tr, y_tr), (x_te, y_te) = xy_train, xy_test
+    key = jax.random.PRNGKey(hash(name) % (2 ** 31))
+    init, _ = M.ZOO[name]
+    layers = init(key)
+    print(f"[aot] training {name} ({M.param_count(layers)} params)")
+    layers, acc = T.train(name, layers, x_tr, y_tr, x_te, y_te,
+                          steps=TRAIN_STEPS[name])
+
+    print(f"[aot] importance estimation for {name}")
+    fisher = FIM.fisher_diag(name, layers, x_te, y_te)
+    hessian = FIM.hessian_diag(name, layers, x_te, y_te)
+    IO.write_nwf(os.path.join(out_dir, f"{name}.nwf"),
+                 layers_to_nwf(layers, fisher, hessian))
+    manifest["models"][name] = dict(
+        params=M.param_count(layers), top1=float(acc),
+        layers=[l["name"] for l in layers])
+
+    print(f"[aot] sparsifying {name}")
+    sparse, sacc = T.magnitude_prune(
+        layers, M.SPARSE_KEEP[name], rounds=3, name=name,
+        xy_train=(x_tr, y_tr), xy_test=(x_te, y_te),
+        steps=FINETUNE_STEPS[name])
+    sf = FIM.fisher_diag(name, sparse, x_te, y_te)
+    sh = FIM.hessian_diag(name, sparse, x_te, y_te)
+    IO.write_nwf(os.path.join(out_dir, f"{name}_sparse.nwf"),
+                 layers_to_nwf(sparse, sf, sh))
+    nz = sum(float((np.asarray(l["w"]) != 0).sum()) for l in sparse)
+    tot = M.param_count(sparse)
+    manifest["models"][f"{name}_sparse"] = dict(
+        params=tot, top1=float(sacc), nonzero_frac=nz / tot,
+        layers=[l["name"] for l in sparse])
+
+    print(f"[aot] lowering eval graph for {name}")
+    export_eval_graph(name, layers,
+                      os.path.join(out_dir, f"eval_{name}.hlo.txt"))
+
+    # Golden logits on the first eval batch: the Rust runtime integration
+    # test executes eval_<name>.hlo.txt with the dense weights + this batch
+    # and must reproduce these values (rtol ~1e-5).
+    _, apply = M.ZOO[name]
+    logits = np.asarray(apply(layers, x_te[:EVAL_BATCH]), dtype="<f4")
+    logits.tofile(os.path.join(out_dir, f"golden_logits_{name}.bin"))
+    return layers
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="lenet300,lenet5,smallvgg,mobilenet")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+
+    manifest = {"models": {}, "eval_batch": EVAL_BATCH,
+                "kernel_n": KERNEL_N, "kernel_k": KERNEL_K}
+
+    print("[aot] generating SynthVision-16")
+    (x_tr, y_tr), (x_te, y_te) = D.load()
+    D.write_nds(os.path.join(args.out, "dataset.nds"), x_te, y_te)
+    x_tr_j, y_tr_j = jnp.asarray(x_tr), jnp.asarray(y_tr.astype(np.int32))
+    x_te_j, y_te_j = jnp.asarray(x_te), jnp.asarray(y_te.astype(np.int32))
+
+    for name in args.models.split(","):
+        build_model(name, (x_tr_j, y_tr_j), (x_te_j, y_te_j),
+                    args.out, manifest)
+
+    print("[aot] lowering Pallas kernels")
+    export_kernels(args.out)
+
+    # MANIFEST last: it is the Makefile's freshness sentinel.
+    files = sorted(f for f in os.listdir(args.out) if f != "MANIFEST.txt")
+    listing = []
+    for f in files:
+        p = os.path.join(args.out, f)
+        h = hashlib.sha256(open(p, "rb").read()).hexdigest()[:16]
+        listing.append(f"{f}  {os.path.getsize(p)}  {h}")
+    manifest["elapsed_sec"] = round(time.time() - t0, 1)
+    with open(os.path.join(args.out, "MANIFEST.txt"), "w") as f:
+        f.write(json.dumps(manifest, indent=2) + "\n")
+        f.write("\n".join(listing) + "\n")
+    print(f"[aot] done in {manifest['elapsed_sec']}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

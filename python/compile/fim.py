@@ -1,0 +1,79 @@
+"""Parameter-importance estimation (build time).
+
+Two estimators, both exported into the .nwf container per layer:
+
+  * ``fisher``  — empirical Fisher diagonal  F_i = E_data[(d/dw_i NLL)^2]
+                  averaged over many per-example gradients + damping.
+                  This is DC-v1's F_i (paper eq. 10/11; App. B argues
+                  sigma_i^2 ~ beta / F_i, we use sigma_i = 1/sqrt(F_i)).
+  * ``hessian`` — Hutchinson estimate of the loss-Hessian diagonal with few
+                  Rademacher probes (noisy, can go negative -> clipped).
+                  Used by the Fig. 8 ablation (Hessian- vs variance-weighted
+                  Lloyd): the contrast in stability comes precisely from this
+                  estimator's variance, as in [45] vs [26].
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import models as M
+from .train import loss_fn, _tree_of
+
+
+def _per_example_grad_sq(name, layers, x, y):
+    """Sum over the batch of squared per-example weight gradients."""
+    _, apply = M.ZOO[name]
+    tree = _tree_of(layers)
+
+    def single(tr, xi, yi):
+        return loss_fn(tr, layers, apply, xi[None], yi[None])
+
+    g = jax.vmap(jax.grad(single), in_axes=(None, 0, 0))(tree, x, y)
+    return [(jnp.sum(gw ** 2, axis=0), jnp.sum(gb ** 2, axis=0))
+            for gw, gb in g]
+
+
+def fisher_diag(name, layers, x, y, batch=64, max_samples=1024, damping=1e-8):
+    """Empirical Fisher diagonal per weight tensor (list of arrays)."""
+    n = min(x.shape[0], max_samples)
+    acc = None
+    fn = jax.jit(partial(_per_example_grad_sq, name, layers))
+    for i in range(0, n, batch):
+        part = fn(x[i:i + batch], y[i:i + batch])
+        if acc is None:
+            acc = part
+        else:
+            acc = [(aw + pw, ab + pb) for (aw, ab), (pw, pb) in zip(acc, part)]
+    return [np.asarray(aw / n) + damping for aw, _ in acc]
+
+
+def hessian_diag(name, layers, x, y, probes=8, batch=256, seed=7):
+    """Hutchinson diag(H) estimate: E[v * (H v)], v ~ Rademacher.
+
+    Deliberately few probes/batches -> high-variance estimate (reproduces the
+    instability the paper reports for Hessian-weighted Lloyd, Fig. 8)."""
+    _, apply = M.ZOO[name]
+    tree = _tree_of(layers)
+    xb, yb = x[:batch], y[:batch]
+
+    @jax.jit
+    def hvp(v, xb, yb):
+        grad_fn = jax.grad(lambda tr: loss_fn(tr, layers, apply, xb, yb))
+        return jax.jvp(grad_fn, (tree,), (v,))[1]
+
+    rng = np.random.default_rng(seed)
+    acc = [np.zeros(l["w"].shape, np.float64) for l in layers]
+    for _ in range(probes):
+        v = [(jnp.asarray(rng.choice([-1.0, 1.0], size=l["w"].shape)
+                          .astype(np.float32)),
+              jnp.zeros_like(l["b"])) for l in layers]
+        hv = hvp(v, xb, yb)
+        for i, ((vw, _), (hw, _)) in enumerate(zip(v, hv)):
+            acc[i] += np.asarray(vw * hw, np.float64)
+    # Clip negatives (H diag estimates can dip below 0): keep PSD-ish weights.
+    return [np.maximum(a / probes, 1e-10).astype(np.float32) for a in acc]

@@ -1,0 +1,116 @@
+"""Writers/readers for the .nwf network-weight container (DESIGN.md §4).
+
+Layout (all little-endian):
+
+  magic 'NWF1'
+  u32 n_layers
+  per layer:
+    u16 name_len | name bytes (utf-8)
+    u8  kind            (0=dense, 1=conv, 2=dwconv)
+    u8  n_dims          | u32 dims[n_dims]        -- compute-layout shape
+    u32 rows | u32 cols                           -- matrix scan form
+    u8  flags           (bit0: has fisher, bit1: has hessian, bit2: has bias)
+    f32 weights[rows*cols]   (matrix form, row-major == paper scan order)
+    f32 fisher[rows*cols]    (if flag)
+    f32 hessian[rows*cols]   (if flag)
+    u32 bias_len | f32 bias[bias_len]             (if flag)
+  u32 crc32 of everything after the magic
+
+The matrix form is rows = output channels, cols = kh*kw*cin (conv, im2col
+order per [22]) or cols = fan-in (dense) -- see models.to_matrix.
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+
+import numpy as np
+
+KIND_CODE = {"dense": 0, "conv": 1, "dwconv": 2}
+KIND_NAME = {v: k for k, v in KIND_CODE.items()}
+
+
+def write_nwf(path: str, layers: list[dict]) -> None:
+    """`layers`: list of dicts with keys name, kind, shape (tuple),
+    mat (2-D f32, matrix scan form), fisher (2-D or None),
+    hessian (2-D or None), bias (1-D or None)."""
+    body = bytearray()
+    body += struct.pack("<I", len(layers))
+    for l in layers:
+        name = l["name"].encode()
+        body += struct.pack("<H", len(name)) + name
+        body += struct.pack("<B", KIND_CODE[l["kind"]])
+        dims = l["shape"]
+        body += struct.pack("<B", len(dims))
+        body += struct.pack(f"<{len(dims)}I", *dims)
+        mat = np.ascontiguousarray(l["mat"], dtype="<f4")
+        rows, cols = mat.shape
+        body += struct.pack("<II", rows, cols)
+        flags = ((l.get("fisher") is not None) * 1
+                 | (l.get("hessian") is not None) * 2
+                 | (l.get("bias") is not None) * 4)
+        body += struct.pack("<B", flags)
+        body += mat.tobytes()
+        if l.get("fisher") is not None:
+            f = np.ascontiguousarray(l["fisher"], dtype="<f4")
+            assert f.shape == mat.shape
+            body += f.tobytes()
+        if l.get("hessian") is not None:
+            h = np.ascontiguousarray(l["hessian"], dtype="<f4")
+            assert h.shape == mat.shape
+            body += h.tobytes()
+        if l.get("bias") is not None:
+            b = np.ascontiguousarray(l["bias"], dtype="<f4").ravel()
+            body += struct.pack("<I", b.size) + b.tobytes()
+    crc = zlib.crc32(bytes(body)) & 0xFFFFFFFF
+    with open(path, "wb") as f:
+        f.write(b"NWF1")
+        f.write(body)
+        f.write(struct.pack("<I", crc))
+
+
+def read_nwf(path: str) -> list[dict]:
+    with open(path, "rb") as f:
+        raw = f.read()
+    assert raw[:4] == b"NWF1"
+    body, crc_stored = raw[4:-4], struct.unpack("<I", raw[-4:])[0]
+    assert zlib.crc32(body) & 0xFFFFFFFF == crc_stored, "nwf crc mismatch"
+    off = 0
+
+    def take(fmt):
+        nonlocal off
+        vals = struct.unpack_from("<" + fmt, body, off)
+        off += struct.calcsize("<" + fmt)
+        return vals
+
+    (n_layers,) = take("I")
+    layers = []
+    for _ in range(n_layers):
+        (name_len,) = take("H")
+        name = body[off:off + name_len].decode()
+        off += name_len
+        (kind_code,) = take("B")
+        (nd,) = take("B")
+        dims = take(f"{nd}I")
+        rows, cols = take("II")
+        (flags,) = take("B")
+        n = rows * cols
+
+        def arr(count):
+            nonlocal off
+            a = np.frombuffer(body, dtype="<f4", count=count, offset=off).copy()
+            off += 4 * count
+            return a
+
+        mat = arr(n).reshape(rows, cols)
+        fisher = arr(n).reshape(rows, cols) if flags & 1 else None
+        hessian = arr(n).reshape(rows, cols) if flags & 2 else None
+        bias = None
+        if flags & 4:
+            (blen,) = take("I")
+            bias = arr(blen)
+        layers.append(dict(name=name, kind=KIND_NAME[kind_code],
+                           shape=tuple(dims), mat=mat, fisher=fisher,
+                           hessian=hessian, bias=bias))
+    return layers

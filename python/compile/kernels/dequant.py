@@ -1,0 +1,36 @@
+"""Layer-1 Pallas kernel: dequantization q = delta * I (paper §III-C.1).
+
+Trivially bandwidth-bound; exists so the reconstruction map Q^{-1} lives in
+the same AOT artifact family as the assignment map Q, and so the L2 eval
+graph can consume quantized indices directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+
+def _dequant_kernel(delta_ref, idx_ref, out_ref):
+    out_ref[...] = idx_ref[...].astype(jnp.float32) * delta_ref[0]
+
+
+@jax.jit
+def dequant(idx, delta):
+    """idx: (n,) int32 (n % BLOCK == 0); delta: (1,) f32 -> (n,) f32."""
+    n = idx.shape[0]
+    assert n % BLOCK == 0, f"n={n} must be a multiple of {BLOCK}"
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(n // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(delta, idx)

@@ -1,0 +1,75 @@
+"""Layer-1 Pallas kernel: RDOQ assignment (paper eq. 11) — the quantization
+hot-spot of DeepCABAC.
+
+TPU mapping (DESIGN.md §1, Hardware-Adaptation): the weight vector is tiled
+into VMEM blocks over a 1-D grid; the bit-cost table ``cost[K]`` is small and
+re-fetched per block (it would be pinned in VMEM on real hardware via a
+constant BlockSpec).  The K-way argmin is elementwise/reduction work for the
+VPU — the MXU is intentionally idle, this kernel is VPU/bandwidth-bound.
+VMEM budget per block (BLOCK=512, K<=2049): 512*4 B (w) + 512*4 B (fim)
++ 2049*4 B (cost) + 512*4*(running best/obj) ≈ 16 KiB « 16 MiB VMEM.
+
+Lowered with ``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic
+custom-calls); numerics are identical to the TPU path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+
+def _rd_assign_kernel(delta_ref, lam_ref, w_ref, fim_ref, cost_ref, out_ref):
+    """One grid step: assign BLOCK weights against the full K-point grid.
+
+    Running-argmin over the K axis is materialized as a (BLOCK, K) objective
+    followed by an argmin reduction — on TPU this keeps a single VMEM-resident
+    tile and one pass over the cost table (K is small); see fori_loop variant
+    note in DESIGN.md §8.
+    """
+    w = w_ref[...]                      # (BLOCK,)
+    fim = fim_ref[...]                  # (BLOCK,)
+    cost = cost_ref[...]                # (K,)
+    delta = delta_ref[0]
+    lam = lam_ref[0]
+    k = cost.shape[0]
+    half = (k - 1) // 2
+    grid_idx = jax.lax.iota(jnp.int32, k) - half
+    q = delta * grid_idx.astype(jnp.float32)                    # (K,)
+    obj = fim[:, None] * (w[:, None] - q[None, :]) ** 2 + lam * cost[None, :]
+    out_ref[...] = jnp.argmin(obj, axis=1).astype(jnp.int32) - half
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rd_assign(w, fim, delta, lam, cost):
+    """Pallas RDOQ assignment.  Semantics == kernels.ref.rd_assign_ref.
+
+    Args:
+      w, fim: (n,) f32 with n % BLOCK == 0 (the AOT wrapper pads).
+      delta, lam: (1,) f32 scalars (SMEM-style prefetch operands).
+      cost: (k,) f32 bit-cost table, k odd.
+    Returns: (n,) int32 signed grid indices.
+    """
+    n = w.shape[0]
+    assert n % BLOCK == 0, f"n={n} must be a multiple of {BLOCK}"
+    k = cost.shape[0]
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _rd_assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),          # delta
+            pl.BlockSpec((1,), lambda i: (0,)),          # lam
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),      # w tile
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),      # fim tile
+            pl.BlockSpec((k,), lambda i: (0,)),          # cost (resident)
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(delta, lam, w, fim, cost)

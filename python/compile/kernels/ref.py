@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness references).
+
+These define the semantics; the Pallas kernels in rd_assign.py / dequant.py
+must match them bit-for-bit in f32 (pytest + hypothesis enforce this).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rd_assign_ref(w, fim, delta, lam, cost):
+    """RDOQ assignment, paper eq. (11).
+
+    Args:
+      w:     (n,) f32 weights.
+      fim:   (n,) f32 per-weight importance F_i (>= 0).
+      delta: scalar f32 step-size (> 0).
+      lam:   scalar f32 rate multiplier (>= 0).
+      cost:  (k,) f32 bit-cost of grid index I_j = j - (k-1)//2 as estimated
+             by CABAC (context-frozen table supplied by the Rust coordinator).
+
+    Returns:
+      (n,) int32 signed grid indices I in [-(k-1)//2, (k-1)//2] minimizing
+      F_i (w_i - delta*I)^2 + lam * cost[I].  Ties resolve to the smallest
+      grid position (argmin first-occurrence), matching the kernel and the
+      Rust reference implementation.
+    """
+    k = cost.shape[0]
+    half = (k - 1) // 2
+    idx = jnp.arange(k, dtype=jnp.int32) - half          # signed grid
+    q = delta * idx.astype(jnp.float32)                  # (k,)
+    dist = fim[:, None] * (w[:, None] - q[None, :]) ** 2  # (n,k)
+    obj = dist + lam * cost[None, :]
+    return jnp.argmin(obj, axis=1).astype(jnp.int32) - half
+
+
+def dequant_ref(idx, delta):
+    """Reconstruction map Q^{-1}: q = delta * I  (paper sec. III-C.1)."""
+    return idx.astype(jnp.float32) * delta

@@ -1,0 +1,3 @@
+"""Compatibility shim: the L2 model definitions live in models.py."""
+from .models import *  # noqa: F401,F403
+from .models import ZOO, apply_with_matrices, to_matrix, from_matrix  # noqa: F401

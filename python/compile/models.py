@@ -1,0 +1,234 @@
+"""Model zoo for the DeepCABAC reproduction (pure JAX, no flax).
+
+Four architectures mirroring the paper's zoo at laptop scale (DESIGN.md §5):
+
+  * ``lenet300``  — LeNet-300-100 MLP            (~107k params)
+  * ``lenet5``    — small conv net               (~36k  params)
+  * ``smallvgg``  — VGG-style conv stack         (~410k params, Table II/III)
+  * ``mobilenet`` — depthwise-separable conv net (~47k  params)
+
+Parameters live in an ordered list of layers.  Each layer is a dict with:
+  name   : str
+  kind   : 'dense' | 'conv' | 'dwconv'
+  w      : weight array in its *compute* layout
+             dense : (in, out)
+             conv  : (kh, kw, cin, cout)  (HWIO)
+             dwconv: (kh, kw, c, 1)
+  b      : bias (cout,) or None
+
+``to_matrix``/``from_matrix`` convert between the compute layout and the
+paper's matrix scan form (§III-A footnote 3): rows = output channels,
+columns = kh*kw*cin (im2col order, row-major scan).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+
+# ---------------------------------------------------------------------------
+# Layout helpers
+# ---------------------------------------------------------------------------
+
+
+def to_matrix(kind: str, w: jnp.ndarray) -> jnp.ndarray:
+    """Compute layout -> paper matrix form (rows = out channels)."""
+    if kind == "dense":
+        return w.T  # (out, in)
+    if kind in ("conv", "dwconv"):
+        kh, kw, cin, cout = w.shape
+        return w.reshape(kh * kw * cin, cout).T  # (cout, kh*kw*cin)
+    raise ValueError(kind)
+
+
+def from_matrix(kind: str, shape: tuple[int, ...], m: jnp.ndarray) -> jnp.ndarray:
+    """Paper matrix form -> compute layout with original `shape`."""
+    if kind == "dense":
+        return m.T.reshape(shape)
+    if kind in ("conv", "dwconv"):
+        kh, kw, cin, cout = shape
+        return m.T.reshape(kh, kw, cin, cout)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, name, nin, nout):
+    w = jax.random.normal(key, (nin, nout)) * np.sqrt(2.0 / nin)
+    return dict(name=name, kind="dense", w=w.astype(jnp.float32),
+                b=jnp.zeros((nout,), jnp.float32))
+
+
+def _conv(key, name, kh, kw, cin, cout):
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * np.sqrt(2.0 / (kh * kw * cin))
+    return dict(name=name, kind="conv", w=w.astype(jnp.float32),
+                b=jnp.zeros((cout,), jnp.float32))
+
+
+def _dwconv(key, name, kh, kw, c):
+    w = jax.random.normal(key, (kh, kw, c, 1)) * np.sqrt(2.0 / (kh * kw))
+    return dict(name=name, kind="dwconv", w=w.astype(jnp.float32),
+                b=jnp.zeros((c,), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Primitive ops
+# ---------------------------------------------------------------------------
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def conv2d(x, w, b, stride=1, groups=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=_DN, feature_group_count=groups)
+    return y + b
+
+
+def dwconv2d(x, w, b, stride=1):
+    c = x.shape[-1]
+    # depthwise: HWIO with I=1, feature_group_count=c expects (kh,kw,1,c)
+    wd = jnp.transpose(w, (0, 1, 3, 2))  # (kh,kw,1,c)
+    y = jax.lax.conv_general_dilated(
+        x, wd, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=_DN, feature_group_count=c)
+    return y + b
+
+
+def maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Architectures: init(key) -> layers, apply(layers, x) -> logits
+# ---------------------------------------------------------------------------
+
+
+def init_lenet300(key):
+    ks = jax.random.split(key, 3)
+    nin = D.IMG * D.IMG
+    return [
+        _dense(ks[0], "fc1", nin, 300),
+        _dense(ks[1], "fc2", 300, 100),
+        _dense(ks[2], "fc3", 100, D.N_CLASSES),
+    ]
+
+
+def apply_lenet300(layers, x):
+    h = x.reshape(x.shape[0], -1)
+    h = relu(h @ layers[0]["w"] + layers[0]["b"])
+    h = relu(h @ layers[1]["w"] + layers[1]["b"])
+    return h @ layers[2]["w"] + layers[2]["b"]
+
+
+def init_lenet5(key):
+    ks = jax.random.split(key, 4)
+    return [
+        _conv(ks[0], "conv1", 5, 5, 1, 8),
+        _conv(ks[1], "conv2", 5, 5, 8, 16),
+        _dense(ks[2], "fc1", 4 * 4 * 16, 64),
+        _dense(ks[3], "fc2", 64, D.N_CLASSES),
+    ]
+
+
+def apply_lenet5(layers, x):
+    h = maxpool(relu(conv2d(x, layers[0]["w"], layers[0]["b"])))      # 8x8x8
+    h = maxpool(relu(conv2d(h, layers[1]["w"], layers[1]["b"])))      # 4x4x16
+    h = h.reshape(h.shape[0], -1)
+    h = relu(h @ layers[2]["w"] + layers[2]["b"])
+    return h @ layers[3]["w"] + layers[3]["b"]
+
+
+def init_smallvgg(key):
+    ks = jax.random.split(key, 7)
+    return [
+        _conv(ks[0], "conv1_1", 3, 3, 1, 32),
+        _conv(ks[1], "conv1_2", 3, 3, 32, 32),
+        _conv(ks[2], "conv2_1", 3, 3, 32, 64),
+        _conv(ks[3], "conv2_2", 3, 3, 64, 64),
+        _conv(ks[4], "conv3_1", 3, 3, 64, 128),
+        _dense(ks[5], "fc1", 2 * 2 * 128, 512),
+        _dense(ks[6], "fc2", 512, D.N_CLASSES),
+    ]
+
+
+def apply_smallvgg(layers, x):
+    h = relu(conv2d(x, layers[0]["w"], layers[0]["b"]))
+    h = maxpool(relu(conv2d(h, layers[1]["w"], layers[1]["b"])))      # 8x8x32
+    h = relu(conv2d(h, layers[2]["w"], layers[2]["b"]))
+    h = maxpool(relu(conv2d(h, layers[3]["w"], layers[3]["b"])))      # 4x4x64
+    h = maxpool(relu(conv2d(h, layers[4]["w"], layers[4]["b"])))      # 2x2x128
+    h = h.reshape(h.shape[0], -1)
+    h = relu(h @ layers[5]["w"] + layers[5]["b"])
+    return h @ layers[6]["w"] + layers[6]["b"]
+
+
+def init_mobilenet(key):
+    ks = jax.random.split(key, 8)
+    return [
+        _conv(ks[0], "conv1", 3, 3, 1, 16),
+        _dwconv(ks[1], "dw1", 3, 3, 16),
+        _conv(ks[2], "pw1", 1, 1, 16, 64),
+        _dwconv(ks[3], "dw2", 3, 3, 64),
+        _conv(ks[4], "pw2", 1, 1, 64, 128),
+        _dwconv(ks[5], "dw3", 3, 3, 128),
+        _conv(ks[6], "pw3", 1, 1, 128, 256),
+        _dense(ks[7], "fc", 256, D.N_CLASSES),
+    ]
+
+
+def apply_mobilenet(layers, x):
+    h = relu(conv2d(x, layers[0]["w"], layers[0]["b"], stride=2))     # 8x8x16
+    h = relu(dwconv2d(h, layers[1]["w"], layers[1]["b"]))
+    h = relu(conv2d(h, layers[2]["w"], layers[2]["b"]))               # 8x8x64
+    h = relu(dwconv2d(h, layers[3]["w"], layers[3]["b"], stride=2))   # 4x4x64
+    h = relu(conv2d(h, layers[4]["w"], layers[4]["b"]))               # 4x4x128
+    h = relu(dwconv2d(h, layers[5]["w"], layers[5]["b"], stride=2))   # 2x2x128
+    h = relu(conv2d(h, layers[6]["w"], layers[6]["b"]))               # 2x2x256
+    h = h.mean(axis=(1, 2))                                           # GAP
+    return h @ layers[7]["w"] + layers[7]["b"]
+
+
+ZOO = {
+    "lenet300": (init_lenet300, apply_lenet300),
+    "lenet5": (init_lenet5, apply_lenet5),
+    "smallvgg": (init_smallvgg, apply_smallvgg),
+    "mobilenet": (init_mobilenet, apply_mobilenet),
+}
+
+# Target sparsities for the pruned variants (fraction of weights KEPT),
+# mirroring Table I's |w!=0|/|w| regime per architecture family.
+SPARSE_KEEP = {
+    "lenet300": 0.10,
+    "lenet5": 0.08,
+    "smallvgg": 0.10,
+    "mobilenet": 0.50,
+}
+
+
+def param_count(layers) -> int:
+    return int(sum(np.prod(l["w"].shape) for l in layers))
+
+
+def apply_with_matrices(name: str, mats, biases, x):
+    """Eval entrypoint used for AOT lowering: weights arrive in the paper's
+    matrix scan form (what the Rust coordinator holds) and are reshaped to
+    compute layout inside the graph, so Rust never needs layout logic."""
+    init, apply = ZOO[name]
+    template = init(jax.random.PRNGKey(0))
+    layers = []
+    for tpl, m, b in zip(template, mats, biases):
+        layers.append(dict(name=tpl["name"], kind=tpl["kind"],
+                           w=from_matrix(tpl["kind"], tpl["w"].shape, m), b=b))
+    return apply(layers, x)

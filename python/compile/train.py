@@ -1,0 +1,124 @@
+"""Build-time training for the model zoo (hand-rolled Adam, pure JAX).
+
+Runs once inside ``make artifacts``; nothing here is on the request path.
+Supports masked training for the magnitude-pruned sparse variants
+(the mask is re-applied after every update, standard iterative pruning).
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import models as M
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def _tree_of(layers):
+    return [(l["w"], l["b"]) for l in layers]
+
+
+def _layers_with(layers, tree):
+    out = []
+    for l, (w, b) in zip(layers, tree):
+        out.append(dict(l, w=w, b=b))
+    return out
+
+
+def loss_fn(tree, template, apply, x, y):
+    layers = _layers_with(template, tree)
+    return cross_entropy(apply(layers, x), y)
+
+
+def accuracy(layers, apply, x, y, batch=256):
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = apply(layers, x[i:i + batch])
+        correct += int((jnp.argmax(logits, axis=1) == y[i:i + batch]).sum())
+    return correct / x.shape[0]
+
+
+def train(name: str, layers, x_train, y_train, x_test, y_test, *,
+          steps=600, batch=128, lr=2e-3, masks=None, seed=0, log=print):
+    """Adam training loop; if `masks` is given (list of 0/1 arrays matching
+    each layer's weight), weights are re-masked after every step."""
+    _, apply = M.ZOO[name]
+    tree = _tree_of(layers)
+    m = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in tree]
+    v = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in tree]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    grad_fn = jax.jit(jax.value_and_grad(
+        partial(loss_fn, template=layers, apply=apply)))
+
+    @jax.jit
+    def step(tree, m, v, t, x, y, masks):
+        loss, g = jax.value_and_grad(
+            lambda tr: loss_fn(tr, layers, apply, x, y))(tree)
+        new_tree, new_m, new_v = [], [], []
+        for i, ((w, b), (gw, gb)) in enumerate(zip(tree, g)):
+            mw, mb = m[i]
+            vw, vb = v[i]
+            mw = b1 * mw + (1 - b1) * gw
+            mb = b1 * mb + (1 - b1) * gb
+            vw = b2 * vw + (1 - b2) * gw * gw
+            vb = b2 * vb + (1 - b2) * gb * gb
+            c1 = 1 - b1 ** t
+            c2 = 1 - b2 ** t
+            w = w - lr * (mw / c1) / (jnp.sqrt(vw / c2) + eps)
+            b = b - lr * (mb / c1) / (jnp.sqrt(vb / c2) + eps)
+            if masks is not None:
+                w = w * masks[i]
+            new_tree.append((w, b))
+            new_m.append((mw, mb))
+            new_v.append((vw, vb))
+        return loss, new_tree, new_m, new_v
+
+    rng = np.random.default_rng(seed)
+    n = x_train.shape[0]
+    t0 = time.time()
+    loss = float("nan")
+    for s in range(1, steps + 1):
+        idx = rng.integers(0, n, size=batch)
+        loss, tree, m, v = step(tree, m, v, jnp.float32(s),
+                                x_train[idx], y_train[idx], masks)
+        if s % 200 == 0 or s == steps:
+            log(f"  [{name}] step {s}/{steps} loss={float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)")
+    out = _layers_with(layers, tree)
+    acc = accuracy(out, apply, x_test, y_test)
+    log(f"  [{name}] test acc = {acc * 100:.2f}%")
+    return out, acc
+
+
+def magnitude_prune(layers, keep: float, rounds=3, **train_kw):
+    """Iterative global magnitude pruning to `keep` fraction of weights,
+    with fine-tuning between rounds (stand-in for variational dropout [26],
+    see DESIGN.md section 6)."""
+    name = train_kw.pop("name")
+    x_train, y_train = train_kw.pop("xy_train")
+    x_test, y_test = train_kw.pop("xy_test")
+    log = train_kw.get("log", print)
+    cur = layers
+    for r in range(1, rounds + 1):
+        frac = keep ** (r / rounds)  # geometric schedule
+        allw = np.concatenate([np.abs(np.asarray(l["w"]).ravel()) for l in cur])
+        thresh = np.quantile(allw, 1.0 - frac)
+        masks = [jnp.asarray((np.abs(np.asarray(l["w"])) > thresh)
+                             .astype(np.float32)) for l in cur]
+        cur = [dict(l, w=l["w"] * mk) for l, mk in zip(cur, masks)]
+        cur, acc = train(name, cur, x_train, y_train, x_test, y_test,
+                         masks=masks, **train_kw)
+        nz = sum(float(mk.sum()) for mk in masks)
+        tot = sum(mk.size for mk in masks)
+        log(f"  [{name}-sparse] round {r}: keep={nz / tot * 100:.2f}% "
+            f"acc={acc * 100:.2f}%")
+    return cur, acc

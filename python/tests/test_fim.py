@@ -1,0 +1,69 @@
+"""Importance estimators: shapes, positivity, signal checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import fim as F
+from compile import models as M
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def trained_lenet300():
+    (xtr, ytr) = D.make_split(640, 20)
+    (xte, yte) = D.make_split(256, 21)
+    xtr, ytr = jnp.asarray(xtr), jnp.asarray(ytr.astype(np.int32))
+    xte, yte = jnp.asarray(xte), jnp.asarray(yte.astype(np.int32))
+    init, _ = M.ZOO["lenet300"]
+    layers = init(jax.random.PRNGKey(0))
+    layers, _ = T.train("lenet300", layers, xtr, ytr, xte, yte,
+                        steps=120, log=lambda *a: None)
+    return layers, xte, yte
+
+
+def test_fisher_shapes_and_positivity(trained_lenet300):
+    layers, xte, yte = trained_lenet300
+    fish = F.fisher_diag("lenet300", layers, xte, yte, max_samples=128)
+    assert len(fish) == len(layers)
+    for l, f in zip(layers, fish):
+        assert f.shape == l["w"].shape
+        assert (f > 0).all()          # damping guarantees strict positivity
+        assert np.isfinite(f).all()
+
+
+def test_fisher_has_signal(trained_lenet300):
+    """Fisher must vary across weights (not a constant), spanning decades."""
+    layers, xte, yte = trained_lenet300
+    fish = F.fisher_diag("lenet300", layers, xte, yte, max_samples=128)
+    f0 = fish[0].ravel()
+    assert f0.max() / np.median(f0 + 1e-30) > 10
+
+
+def test_hessian_shapes(trained_lenet300):
+    layers, xte, yte = trained_lenet300
+    hess = F.hessian_diag("lenet300", layers, xte, yte, probes=2)
+    assert len(hess) == len(layers)
+    for l, h in zip(layers, hess):
+        assert h.shape == l["w"].shape
+        assert (h > 0).all()          # clipped at 1e-10
+        assert np.isfinite(h).all()
+
+
+def test_hessian_noisier_than_fisher(trained_lenet300):
+    """Few-probe Hutchinson is the noisy estimator (Fig. 8's premise):
+    two independent estimates disagree more than two Fisher estimates."""
+    layers, xte, yte = trained_lenet300
+    h1 = F.hessian_diag("lenet300", layers, xte, yte, probes=2, seed=1)
+    h2 = F.hessian_diag("lenet300", layers, xte, yte, probes=2, seed=2)
+    f1 = F.fisher_diag("lenet300", layers, xte, yte, max_samples=128)
+    f2 = F.fisher_diag("lenet300", layers, xte[128:], yte[128:],
+                       max_samples=128)
+
+    def rel_disagreement(a, b):
+        a, b = a[0].ravel(), b[0].ravel()
+        return float(np.mean(np.abs(a - b) / (np.abs(a) + np.abs(b) + 1e-12)))
+
+    assert rel_disagreement(h1, h2) > rel_disagreement(f1, f2)

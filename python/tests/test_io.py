@@ -1,0 +1,119 @@
+""".nwf container: python-side roundtrip + golden binary layout checks.
+
+The Rust reader has mirror tests against the same layout; byte-level goldens
+here pin the format so both sides cannot drift silently.
+"""
+
+import os
+import struct
+import tempfile
+import zlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import io_format as IO
+
+
+def _mk_layer(name="l0", kind="dense", rows=4, cols=6, fisher=True,
+              hessian=False, bias=True, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (cols, rows) if kind == "dense" else (1, 1, cols, rows)
+    return dict(
+        name=name, kind=kind, shape=shape,
+        mat=rng.normal(size=(rows, cols)).astype(np.float32),
+        fisher=rng.uniform(0, 1, (rows, cols)).astype(np.float32)
+        if fisher else None,
+        hessian=rng.uniform(0, 1, (rows, cols)).astype(np.float32)
+        if hessian else None,
+        bias=rng.normal(size=rows).astype(np.float32) if bias else None,
+    )
+
+
+def _roundtrip(layers):
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.nwf")
+        IO.write_nwf(p, layers)
+        return IO.read_nwf(p)
+
+
+def test_roundtrip_single():
+    layers = [_mk_layer()]
+    back = _roundtrip(layers)
+    assert back[0]["name"] == "l0"
+    assert back[0]["kind"] == "dense"
+    assert back[0]["shape"] == layers[0]["shape"]
+    np.testing.assert_array_equal(back[0]["mat"], layers[0]["mat"])
+    np.testing.assert_array_equal(back[0]["fisher"], layers[0]["fisher"])
+    assert back[0]["hessian"] is None
+    np.testing.assert_array_equal(back[0]["bias"], layers[0]["bias"])
+
+
+def test_roundtrip_multi_kinds():
+    layers = [
+        _mk_layer("d", "dense", 3, 5, seed=1),
+        _mk_layer("c", "conv", 8, 9, hessian=True, seed=2),
+        _mk_layer("dw", "dwconv", 4, 9, fisher=False, bias=False, seed=3),
+    ]
+    back = _roundtrip(layers)
+    assert [b["kind"] for b in back] == ["dense", "conv", "dwconv"]
+    for a, b in zip(layers, back):
+        np.testing.assert_array_equal(a["mat"], b["mat"])
+
+
+def test_crc_detects_corruption():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.nwf")
+        IO.write_nwf(p, [_mk_layer()])
+        raw = bytearray(open(p, "rb").read())
+        raw[20] ^= 0xFF
+        open(p, "wb").write(bytes(raw))
+        with pytest.raises(AssertionError):
+            IO.read_nwf(p)
+
+
+def test_golden_header_bytes():
+    """Pin the on-disk prefix: magic, count, name, kind, dims."""
+    layer = dict(name="ab", kind="conv", shape=(1, 2, 3, 4),
+                 mat=np.zeros((4, 6), np.float32), fisher=None,
+                 hessian=None, bias=None)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.nwf")
+        IO.write_nwf(p, [layer])
+        raw = open(p, "rb").read()
+    assert raw[:4] == b"NWF1"
+    assert struct.unpack_from("<I", raw, 4)[0] == 1          # n_layers
+    assert struct.unpack_from("<H", raw, 8)[0] == 2          # name len
+    assert raw[10:12] == b"ab"
+    assert raw[12] == 1                                      # kind=conv
+    assert raw[13] == 4                                      # n_dims
+    assert struct.unpack_from("<4I", raw, 14) == (1, 2, 3, 4)
+    rows, cols = struct.unpack_from("<II", raw, 30)
+    assert (rows, cols) == (4, 6)
+    assert raw[38] == 0                                      # flags
+    # crc over body
+    assert struct.unpack("<I", raw[-4:])[0] == zlib.crc32(raw[4:-4])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_layers=st.integers(1, 4),
+    rows=st.integers(1, 12),
+    cols=st.integers(1, 12),
+    flags=st.tuples(st.booleans(), st.booleans(), st.booleans()),
+    seed=st.integers(0, 1000),
+)
+def test_roundtrip_hypothesis(n_layers, rows, cols, flags, seed):
+    fisher, hessian, bias = flags
+    layers = [_mk_layer(f"l{i}", "dense", rows, cols, fisher, hessian,
+                        bias, seed + i) for i in range(n_layers)]
+    back = _roundtrip(layers)
+    assert len(back) == n_layers
+    for a, b in zip(layers, back):
+        np.testing.assert_array_equal(a["mat"], b["mat"])
+        for k in ("fisher", "hessian", "bias"):
+            if a[k] is None:
+                assert b[k] is None
+            else:
+                np.testing.assert_array_equal(a[k], b[k])

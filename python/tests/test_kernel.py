@@ -1,0 +1,145 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+The Pallas kernels (interpret=True) must match the pure-jnp oracles exactly
+(integer outputs -> bitwise; dequant is a single f32 multiply -> bitwise).
+Hypothesis sweeps shapes, dtypes-ranges and hyperparameters.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.rd_assign import rd_assign, BLOCK
+from compile.kernels.dequant import dequant
+from compile.kernels.ref import rd_assign_ref, dequant_ref
+
+
+def _mk_cost(k, slope, base=1.0):
+    half = k // 2
+    return ((np.abs(np.arange(k) - half) * slope) + base).astype(np.float32)
+
+
+def _run_pair(w, fim, delta, lam, cost):
+    out = np.asarray(rd_assign(jnp.asarray(w), jnp.asarray(fim),
+                               jnp.asarray([delta], jnp.float32),
+                               jnp.asarray([lam], jnp.float32),
+                               jnp.asarray(cost)))
+    ref = np.asarray(rd_assign_ref(jnp.asarray(w), jnp.asarray(fim),
+                                   delta, lam, jnp.asarray(cost)))
+    return out, ref
+
+
+class TestRdAssignBasics:
+    def test_zero_lambda_is_nearest_neighbor(self):
+        rng = np.random.default_rng(0)
+        w = rng.normal(0, 0.1, BLOCK).astype(np.float32)
+        fim = np.ones(BLOCK, np.float32)
+        delta = 0.02
+        out, ref = _run_pair(w, fim, delta, 0.0, _mk_cost(65, 0.0))
+        assert (out == ref).all()
+        # lam=0 and flat costs -> pure nearest neighbour
+        nn = np.clip(np.round(w / delta), -32, 32).astype(np.int32)
+        assert (out == nn).all()
+
+    def test_large_lambda_collapses_to_cheapest_symbol(self):
+        rng = np.random.default_rng(1)
+        w = rng.normal(0, 0.05, BLOCK).astype(np.float32)
+        fim = np.ones(BLOCK, np.float32)
+        cost = _mk_cost(33, 2.0)  # zero index cheapest
+        out, _ = _run_pair(w, fim, 0.01, 1e9, cost)
+        assert (out == 0).all()
+
+    def test_fim_zero_ignores_distortion(self):
+        w = np.full(BLOCK, 0.31, np.float32)
+        fim = np.zeros(BLOCK, np.float32)
+        cost = _mk_cost(33, 1.0)
+        out, ref = _run_pair(w, fim, 0.01, 1.0, cost)
+        assert (out == ref).all()
+        assert (out == 0).all()  # cheapest = zero symbol
+
+    def test_high_fim_pins_to_nearest(self):
+        rng = np.random.default_rng(2)
+        w = rng.normal(0, 0.1, BLOCK).astype(np.float32)
+        fim = np.full(BLOCK, 1e9, np.float32)
+        cost = _mk_cost(129, 3.0)
+        delta = 0.01
+        out, _ = _run_pair(w, fim, delta, 0.5, cost)
+        nn = np.clip(np.round(w / delta), -64, 64).astype(np.int32)
+        assert (out == nn).all()
+
+    def test_multi_block(self):
+        rng = np.random.default_rng(3)
+        n = 4 * BLOCK
+        w = rng.normal(0, 0.2, n).astype(np.float32)
+        fim = rng.uniform(0.01, 10, n).astype(np.float32)
+        out, ref = _run_pair(w, fim, 0.03, 0.02, _mk_cost(257, 1.2))
+        assert (out == ref).all()
+
+    def test_asymmetric_cost_table(self):
+        rng = np.random.default_rng(4)
+        w = rng.normal(0, 0.1, BLOCK).astype(np.float32)
+        fim = np.ones(BLOCK, np.float32)
+        k = 65
+        cost = _mk_cost(k, 1.0)
+        cost[: k // 2] += 0.7  # negatives dearer (sign-context asymmetry)
+        out, ref = _run_pair(w, fim, 0.02, 0.05, cost)
+        assert (out == ref).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    k=st.sampled_from([3, 9, 33, 129, 1025]),
+    delta=st.floats(1e-4, 0.5, allow_nan=False, allow_infinity=False),
+    lam=st.floats(0, 10.0, allow_nan=False, allow_infinity=False),
+    seed=st.integers(0, 2 ** 31 - 1),
+    scale=st.floats(1e-3, 2.0),
+)
+def test_rd_assign_matches_ref_hypothesis(blocks, k, delta, lam, seed, scale):
+    rng = np.random.default_rng(seed)
+    n = blocks * BLOCK
+    w = rng.normal(0, scale, n).astype(np.float32)
+    fim = rng.uniform(0, 5, n).astype(np.float32)
+    cost = (rng.uniform(0.5, 20, k)).astype(np.float32)
+    out, ref = _run_pair(w, fim, float(delta), float(lam), cost)
+    assert (out == ref).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 3),
+    delta=st.floats(1e-4, 1.0, allow_nan=False, allow_infinity=False),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_dequant_matches_ref_hypothesis(blocks, delta, seed):
+    rng = np.random.default_rng(seed)
+    n = blocks * BLOCK
+    idx = rng.integers(-512, 513, n).astype(np.int32)
+    out = np.asarray(dequant(jnp.asarray(idx),
+                             jnp.asarray([delta], jnp.float32)))
+    ref = np.asarray(dequant_ref(jnp.asarray(idx), np.float32(delta)))
+    assert (out == ref).all()
+
+
+def test_dequant_roundtrip_with_assignment():
+    """dequant(rd_assign(w)) approximates w within delta/2 when lam=0."""
+    rng = np.random.default_rng(7)
+    w = rng.uniform(-0.3, 0.3, BLOCK).astype(np.float32)
+    fim = np.ones(BLOCK, np.float32)
+    delta = 0.01
+    cost = _mk_cost(129, 0.0)
+    idx = rd_assign(jnp.asarray(w), jnp.asarray(fim),
+                    jnp.asarray([delta], jnp.float32),
+                    jnp.asarray([0.0], jnp.float32), jnp.asarray(cost))
+    q = np.asarray(dequant(idx, jnp.asarray([delta], jnp.float32)))
+    # inside the grid range, reconstruction error <= delta/2 (+eps)
+    inside = np.abs(w) <= 64 * delta
+    assert np.abs(q - w)[inside].max() <= delta / 2 + 1e-6
+
+
+def test_rd_assign_rejects_unaligned():
+    with pytest.raises(AssertionError):
+        rd_assign(jnp.zeros(BLOCK + 1), jnp.ones(BLOCK + 1),
+                  jnp.asarray([0.1], jnp.float32),
+                  jnp.asarray([0.0], jnp.float32), jnp.zeros(3))

@@ -1,0 +1,95 @@
+"""Model zoo: shapes, layouts, matrix-form roundtrips, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import models as M
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    (xtr, ytr), (xte, yte) = (D.make_split(640, 10), D.make_split(320, 11))
+    return (jnp.asarray(xtr), jnp.asarray(ytr.astype(np.int32)),
+            jnp.asarray(xte), jnp.asarray(yte.astype(np.int32)))
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_forward_shapes(name):
+    init, apply = M.ZOO[name]
+    layers = init(jax.random.PRNGKey(0))
+    x = jnp.zeros((4, D.IMG, D.IMG, 1))
+    logits = apply(layers, x)
+    assert logits.shape == (4, D.N_CLASSES)
+    assert jnp.isfinite(logits).all()
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_matrix_roundtrip(name):
+    init, _ = M.ZOO[name]
+    layers = init(jax.random.PRNGKey(1))
+    for l in layers:
+        mat = M.to_matrix(l["kind"], l["w"])
+        assert mat.ndim == 2
+        back = M.from_matrix(l["kind"], l["w"].shape, mat)
+        assert (back == l["w"]).all()
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_matrix_rows_are_output_channels(name):
+    init, _ = M.ZOO[name]
+    layers = init(jax.random.PRNGKey(2))
+    for l in layers:
+        mat = M.to_matrix(l["kind"], l["w"])
+        cout = l["w"].shape[-1] if l["kind"] != "dense" else l["w"].shape[1]
+        assert mat.shape[0] == cout
+
+
+@pytest.mark.parametrize("name", list(M.ZOO))
+def test_apply_with_matrices_equals_apply(name):
+    init, apply = M.ZOO[name]
+    layers = init(jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, D.IMG, D.IMG, 1))
+    mats = [M.to_matrix(l["kind"], l["w"]) for l in layers]
+    biases = [l["b"] for l in layers]
+    a = apply(layers, x)
+    b = M.apply_with_matrices(name, mats, biases, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_param_counts_in_expected_bands():
+    bands = {"lenet300": (90_000, 130_000), "lenet5": (15_000, 60_000),
+             "smallvgg": (300_000, 600_000), "mobilenet": (30_000, 80_000)}
+    for name, (lo, hi) in bands.items():
+        init, _ = M.ZOO[name]
+        n = M.param_count(init(jax.random.PRNGKey(0)))
+        assert lo <= n <= hi, (name, n)
+
+
+def test_training_reduces_loss(tiny_data):
+    xtr, ytr, xte, yte = tiny_data
+    init, apply = M.ZOO["lenet300"]
+    layers = init(jax.random.PRNGKey(5))
+    before = float(T.cross_entropy(apply(layers, xtr[:256]), ytr[:256]))
+    layers, acc = T.train("lenet300", layers, xtr, ytr, xte, yte,
+                          steps=120, log=lambda *a: None)
+    after = float(T.cross_entropy(apply(layers, xtr[:256]), ytr[:256]))
+    assert after < before * 0.5
+    assert acc > 0.5
+
+
+def test_magnitude_prune_hits_target(tiny_data):
+    xtr, ytr, xte, yte = tiny_data
+    init, _ = M.ZOO["lenet300"]
+    layers = init(jax.random.PRNGKey(6))
+    layers, _ = T.train("lenet300", layers, xtr, ytr, xte, yte,
+                        steps=80, log=lambda *a: None)
+    sparse, _ = T.magnitude_prune(layers, 0.2, rounds=2, name="lenet300",
+                                  xy_train=(xtr, ytr), xy_test=(xte, yte),
+                                  steps=40, log=lambda *a: None)
+    nz = sum(float((np.asarray(l["w"]) != 0).sum()) for l in sparse)
+    frac = nz / M.param_count(sparse)
+    assert 0.15 <= frac <= 0.25

@@ -1,0 +1,117 @@
+//! Shared helpers for the `benches/` harness (criterion is not in the
+//! offline vendor set; each bench is a `harness = false` binary using
+//! these primitives: warmup, repeated timing, median/mean reporting).
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn per_sec(&self, units_per_iter: usize) -> f64 {
+        units_per_iter as f64 / self.median_s
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs; returns stats and
+/// the last result (to keep the computation observable).
+pub fn bench<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> (Stats, R) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    let mut last = None;
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        last = Some(std::hint::black_box(f()));
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    let stats = Stats {
+        iters: times.len(),
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+        median_s: times[times.len() / 2],
+        min_s: times[0],
+        max_s: *times.last().unwrap(),
+    };
+    (stats, last.unwrap())
+}
+
+/// Artifacts directory lookup shared by bench binaries: honours
+/// `DCB_ARTIFACTS`, falls back to `<manifest>/artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("DCB_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// True when the AOT artifacts exist (benches print a skip note otherwise,
+/// matching the integration tests' behaviour).
+pub fn artifacts_ready() -> bool {
+    artifacts_dir().join("MANIFEST.txt").exists()
+}
+
+/// Model subset selection: `DCB_BENCH_MODELS=lenet5,smallvgg` filters the
+/// default list (useful to keep `cargo bench` iterations quick).
+pub fn bench_models(default: &[&'static str]) -> Vec<&'static str> {
+    match std::env::var("DCB_BENCH_MODELS") {
+        Ok(list) => {
+            let wanted: Vec<String> = list.split(',').map(|s| s.trim().to_string()).collect();
+            default
+                .iter()
+                .copied()
+                .filter(|m| wanted.iter().any(|w| w == m))
+                .collect()
+        }
+        Err(_) => default.to_vec(),
+    }
+}
+
+/// Write a CSV next to the bench outputs (artifacts/bench_<name>.csv) so
+/// figures can be re-plotted; returns the path.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> std::path::PathBuf {
+    let path = artifacts_dir().join(format!("bench_{name}.csv"));
+    let mut body = String::from(header);
+    body.push('\n');
+    for r in rows {
+        body.push_str(r);
+        body.push('\n');
+    }
+    let _ = std::fs::write(&path, body);
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_result_and_stats() {
+        let (stats, r) = bench(1, 5, || 2 + 2);
+        assert_eq!(r, 4);
+        assert_eq!(stats.iters, 5);
+        assert!(stats.min_s <= stats.median_s && stats.median_s <= stats.max_s);
+    }
+
+    #[test]
+    fn per_sec_scales() {
+        let (stats, _) = bench(0, 3, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        let rate = stats.per_sec(1000);
+        assert!(rate > 100.0 && rate < 1_500_000.0, "{rate}");
+    }
+
+    #[test]
+    fn model_filter() {
+        std::env::remove_var("DCB_BENCH_MODELS");
+        assert_eq!(bench_models(&["a", "b"]), vec!["a", "b"]);
+    }
+}

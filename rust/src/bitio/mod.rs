@@ -1,0 +1,170 @@
+//! Bit-level I/O: MSB-first bit writer/reader over byte buffers.
+//!
+//! Used by the Huffman-family codecs and the Exp-Golomb codec; the CABAC
+//! engine has its own byte-oriented renormalization and does not go through
+//! this layer.
+
+/// MSB-first bit writer into an owned `Vec<u8>`.
+#[derive(Default, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        self.cur = (self.cur << 1) | bit as u8;
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.buf.push(self.cur);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Write the lowest `n` bits of `v`, MSB first.
+    #[inline]
+    pub fn put_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        for i in (0..n).rev() {
+            self.put_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush (zero-padding the last byte) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.cur <<= 8 - self.nbits;
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    bit: u8,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0, bit: 0 }
+    }
+
+    /// Read one bit; reads past the end return `None`.
+    #[inline]
+    pub fn get_bit(&mut self) -> Option<bool> {
+        if self.pos >= self.buf.len() {
+            return None;
+        }
+        let b = (self.buf[self.pos] >> (7 - self.bit)) & 1 == 1;
+        self.bit += 1;
+        if self.bit == 8 {
+            self.bit = 0;
+            self.pos += 1;
+        }
+        Some(b)
+    }
+
+    /// Read `n` bits MSB-first into the low bits of a u64.
+    #[inline]
+    pub fn get_bits(&mut self, n: u32) -> Option<u64> {
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.get_bit()? as u64;
+        }
+        Some(v)
+    }
+
+    /// Bits consumed so far.
+    pub fn bit_pos(&self) -> usize {
+        self.pos * 8 + self.bit as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn single_bits_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.put_bit(b);
+        }
+        assert_eq!(w.bit_len(), 9);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), 2);
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.get_bit(), Some(b));
+        }
+    }
+
+    #[test]
+    fn multi_bit_roundtrip() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b1011, 4);
+        w.put_bits(0xDEADBEEF, 32);
+        w.put_bits(1, 1);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(4), Some(0b1011));
+        assert_eq!(r.get_bits(32), Some(0xDEADBEEF));
+        assert_eq!(r.get_bits(1), Some(1));
+    }
+
+    #[test]
+    fn eof_returns_none() {
+        let bytes = BitWriter::new().finish();
+        assert!(bytes.is_empty());
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bit(), None);
+    }
+
+    #[test]
+    fn randomized_roundtrip() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..50 {
+            let mut w = BitWriter::new();
+            let items: Vec<(u64, u32)> = (0..rng.below(200))
+                .map(|_| {
+                    let n = 1 + rng.below(40) as u32;
+                    let v = rng.next_u64() & ((1u128 << n) - 1) as u64;
+                    (v, n)
+                })
+                .collect();
+            for &(v, n) in &items {
+                w.put_bits(v, n);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &(v, n) in &items {
+                assert_eq!(r.get_bits(n), Some(v));
+            }
+        }
+    }
+
+    #[test]
+    fn bit_len_tracks() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.put_bits(0, 13);
+        assert_eq!(w.bit_len(), 13);
+    }
+}

@@ -1,0 +1,429 @@
+//! Binary arithmetic range coder with adaptive contexts.
+//!
+//! A carry-correct, multiplication-based binary range coder in the spirit of
+//! the CABAC M-coder [17], [21] (we use an LZMA-style 32-bit range / 64-bit
+//! low implementation instead of the table-driven M-coder: identical coding
+//! efficiency — within ~0.1% of the entropy — and simpler to verify; the
+//! table-driven variant trades multiplies for LUTs, which matters on 2003
+//! ASICs, not here).  Probabilities are 12-bit (`P0` in [1, 4095] is the
+//! probability of the **0** bin); adaptation is exponential with shift
+//! [`ADAPT_SHIFT`] as in §II-B.1's backward-adaptive context modelling.
+//!
+//! The paper's Fig. 2 walkthrough is reproduced in
+//! [`tests::fig2_interval_walkthrough`].
+
+/// Probability scale: probabilities live in [1, PROB_ONE - 1].
+pub const PROB_BITS: u32 = 12;
+pub const PROB_ONE: u16 = 1 << PROB_BITS;
+/// Initial state: p(0) = 0.5 (paper §III-B: context models start at 0.5).
+pub const PROB_INIT: u16 = PROB_ONE / 2;
+/// Adaptation rate (larger = slower adaptation).
+pub const ADAPT_SHIFT: u32 = 5;
+
+const TOP: u32 = 1 << 24;
+
+/// Adaptive binary context model: 12-bit probability of the 0 bin.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Context {
+    pub p0: u16,
+}
+
+impl Default for Context {
+    fn default() -> Self {
+        Self { p0: PROB_INIT }
+    }
+}
+
+impl Context {
+    #[inline]
+    pub fn update(&mut self, bit: bool) {
+        if bit {
+            self.p0 -= self.p0 >> ADAPT_SHIFT;
+        } else {
+            self.p0 += (PROB_ONE - self.p0) >> ADAPT_SHIFT;
+        }
+        debug_assert!(self.p0 >= 1 && self.p0 < PROB_ONE);
+    }
+
+    /// Ideal code length of coding `bit` in this state, in bits.
+    #[inline]
+    pub fn bits(&self, bit: bool) -> f32 {
+        let p = if bit {
+            (PROB_ONE - self.p0) as f32
+        } else {
+            self.p0 as f32
+        };
+        -(p / PROB_ONE as f32).log2()
+    }
+}
+
+/// Range encoder.  Emits a leading zero byte (cache priming) that the
+/// decoder skips; `finish` flushes 5 tail bytes.
+pub struct Encoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    /// Number of pending 0xFF bytes awaiting carry resolution.
+    pending: u64,
+    first: bool,
+    out: Vec<u8>,
+}
+
+impl Default for Encoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self {
+            low: 0,
+            range: u32::MAX,
+            cache: 0,
+            pending: 0,
+            first: true,
+            out: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn shift_low(&mut self) {
+        if (self.low as u32 as u64) < 0xFF00_0000 || (self.low >> 32) != 0 {
+            let carry = (self.low >> 32) as u8;
+            if !self.first {
+                self.out.push(self.cache.wrapping_add(carry));
+            } else {
+                // Prime with the cache byte anyway so the decoder can always
+                // skip exactly one byte.
+                self.out.push(carry); // cache==0 on first flush
+                self.first = false;
+            }
+            while self.pending > 0 {
+                self.out.push(0xFFu8.wrapping_add(carry));
+                self.pending -= 1;
+            }
+            self.cache = (self.low >> 24) as u8;
+        } else {
+            self.pending += 1;
+        }
+        self.low = (self.low << 8) & 0xFFFF_FFFF;
+    }
+
+    /// Encode one bin with an adaptive context.
+    #[inline]
+    pub fn encode(&mut self, ctx: &mut Context, bit: bool) {
+        let bound = (self.range >> PROB_BITS) * ctx.p0 as u32;
+        if bit {
+            self.low += bound as u64;
+            self.range -= bound;
+        } else {
+            self.range = bound;
+        }
+        ctx.update(bit);
+        while self.range < TOP {
+            self.range <<= 8;
+            self.shift_low();
+        }
+    }
+
+    /// Encode one equiprobable (bypass) bin.
+    #[inline]
+    pub fn encode_bypass(&mut self, bit: bool) {
+        self.range >>= 1;
+        if bit {
+            self.low += self.range as u64;
+        }
+        while self.range < TOP {
+            self.range <<= 8;
+            self.shift_low();
+        }
+    }
+
+    /// Bypass-encode the lowest `n` bits of `v`, MSB first.
+    #[inline]
+    pub fn encode_bypass_bits(&mut self, v: u64, n: u32) {
+        for i in (0..n).rev() {
+            self.encode_bypass((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Flush and return the bitstream.
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+
+    /// Bytes emitted so far (grows during encoding; final size after
+    /// `finish` adds the 5-byte tail).
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+}
+
+/// Range decoder over an encoded byte slice.
+pub struct Decoder<'a> {
+    code: u32,
+    range: u32,
+    input: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(input: &'a [u8]) -> Self {
+        let mut d = Self {
+            code: 0,
+            range: u32::MAX,
+            input,
+            pos: 1, // skip the priming byte
+        };
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte() as u32;
+        }
+        d
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u8 {
+        let b = self.input.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+
+    /// Decode one bin with an adaptive context.
+    #[inline]
+    pub fn decode(&mut self, ctx: &mut Context) -> bool {
+        let bound = (self.range >> PROB_BITS) * ctx.p0 as u32;
+        let bit = self.code >= bound;
+        if bit {
+            self.code -= bound;
+            self.range -= bound;
+        } else {
+            self.range = bound;
+        }
+        ctx.update(bit);
+        while self.range < TOP {
+            self.range <<= 8;
+            self.code = (self.code << 8) | self.next_byte() as u32;
+        }
+        bit
+    }
+
+    /// Decode one bypass bin.
+    #[inline]
+    pub fn decode_bypass(&mut self) -> bool {
+        self.range >>= 1;
+        let bit = self.code >= self.range;
+        if bit {
+            self.code -= self.range;
+        }
+        while self.range < TOP {
+            self.range <<= 8;
+            self.code = (self.code << 8) | self.next_byte() as u32;
+        }
+        bit
+    }
+
+    /// Decode `n` bypass bits MSB-first.
+    #[inline]
+    pub fn decode_bypass_bits(&mut self, n: u32) -> u64 {
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.decode_bypass() as u64;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn roundtrip_with_contexts(bits: &[bool], n_ctx: usize, pick: impl Fn(usize) -> usize) {
+        let mut encs = vec![Context::default(); n_ctx];
+        let mut e = Encoder::new();
+        for (i, &b) in bits.iter().enumerate() {
+            e.encode(&mut encs[pick(i)], b);
+        }
+        let bytes = e.finish();
+        let mut decs = vec![Context::default(); n_ctx];
+        let mut d = Decoder::new(&bytes);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(d.decode(&mut decs[pick(i)]), b, "bit {i}");
+        }
+        assert_eq!(encs, decs, "context states must track identically");
+    }
+
+    #[test]
+    fn roundtrip_simple() {
+        roundtrip_with_contexts(
+            &[true, false, true, true, true, false, false, true],
+            1,
+            |_| 0,
+        );
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        let e = Encoder::new();
+        let bytes = e.finish();
+        let _ = Decoder::new(&bytes); // must not panic
+    }
+
+    #[test]
+    fn roundtrip_long_skewed() {
+        // 99% zeros: exercises heavy renormalization + carry chains.
+        let mut rng = Pcg64::new(5);
+        let bits: Vec<bool> = (0..50_000).map(|_| rng.next_f64() < 0.01).collect();
+        roundtrip_with_contexts(&bits, 1, |_| 0);
+    }
+
+    #[test]
+    fn roundtrip_multi_context() {
+        let mut rng = Pcg64::new(6);
+        let bits: Vec<bool> = (0..20_000)
+            .enumerate()
+            .map(|(i, _)| rng.next_f64() < [0.02, 0.5, 0.93][i % 3])
+            .collect();
+        roundtrip_with_contexts(&bits, 3, |i| i % 3);
+    }
+
+    #[test]
+    fn roundtrip_bypass_mixed() {
+        let mut rng = Pcg64::new(7);
+        let mut ctx = Context::default();
+        let mut e = Encoder::new();
+        let plan: Vec<(bool, bool)> = (0..30_000)
+            .map(|_| (rng.next_f64() < 0.5, rng.next_f64() < 0.1))
+            .collect();
+        for &(bypass, bit) in &plan {
+            if bypass {
+                e.encode_bypass(bit);
+            } else {
+                e.encode(&mut ctx, bit);
+            }
+        }
+        let bytes = e.finish();
+        let mut ctx2 = Context::default();
+        let mut d = Decoder::new(&bytes);
+        for &(bypass, bit) in &plan {
+            let got = if bypass {
+                d.decode_bypass()
+            } else {
+                d.decode(&mut ctx2)
+            };
+            assert_eq!(got, bit);
+        }
+    }
+
+    #[test]
+    fn compression_approaches_entropy() {
+        // p(1) = 0.05 -> H = 0.2864 bits/bin. Adaptive coder from 0.5 start
+        // should land within ~5% + adaptation overhead on 200k bins.
+        let mut rng = Pcg64::new(8);
+        let n = 200_000;
+        let bits: Vec<bool> = (0..n).map(|_| rng.next_f64() < 0.05).collect();
+        let mut ctx = Context::default();
+        let mut e = Encoder::new();
+        for &b in &bits {
+            e.encode(&mut ctx, b);
+        }
+        let bytes = e.finish();
+        let bits_per_bin = bytes.len() as f64 * 8.0 / n as f64;
+        let h = -(0.05f64.log2() * 0.05 + 0.95f64.log2() * 0.95);
+        assert!(
+            bits_per_bin < h * 1.10,
+            "bits/bin {bits_per_bin:.4} vs entropy {h:.4}"
+        );
+    }
+
+    #[test]
+    fn bypass_costs_one_bit() {
+        let mut rng = Pcg64::new(9);
+        let n = 80_000;
+        let bits: Vec<bool> = (0..n).map(|_| rng.next_f64() < 0.5).collect();
+        let mut e = Encoder::new();
+        for &b in &bits {
+            e.encode_bypass(b);
+        }
+        let bytes = e.finish();
+        let per = bytes.len() as f64 * 8.0 / n as f64;
+        assert!((per - 1.0).abs() < 0.01, "{per}");
+    }
+
+    #[test]
+    fn context_update_direction() {
+        let mut c = Context::default();
+        c.update(false);
+        assert!(c.p0 > PROB_INIT);
+        let mut c = Context::default();
+        c.update(true);
+        assert!(c.p0 < PROB_INIT);
+    }
+
+    #[test]
+    fn context_never_saturates_out_of_range() {
+        let mut c = Context::default();
+        for _ in 0..10_000 {
+            c.update(false);
+        }
+        assert!(c.p0 < PROB_ONE);
+        for _ in 0..10_000 {
+            c.update(true);
+        }
+        assert!(c.p0 >= 1);
+    }
+
+    #[test]
+    fn estimated_bits_match_actual_size() {
+        // Sum of Context::bits() estimates must track the real bitstream
+        // length closely (this is what the RDOQ cost model relies on).
+        let mut rng = Pcg64::new(10);
+        let bits: Vec<bool> = (0..100_000).map(|_| rng.next_f64() < 0.12).collect();
+        let mut ctx = Context::default();
+        let mut est = 0f64;
+        let mut e = Encoder::new();
+        for &b in &bits {
+            est += ctx.bits(b) as f64;
+            e.encode(&mut ctx, b);
+        }
+        let actual = e.finish().len() as f64 * 8.0;
+        let rel = (actual - est).abs() / actual;
+        assert!(rel < 0.01, "est {est:.0} vs actual {actual:.0} rel {rel:.4}");
+    }
+
+    /// Paper Fig. 2: encoding '10111' of a binary source with the interval
+    /// subdivision shown there.  With fixed p(0)=0.2 / p(1)=0.8 at every
+    /// step (the figure's geometry), the code interval converges and the
+    /// decoder reconstructs the sequence from the emitted bytes.
+    #[test]
+    fn fig2_interval_walkthrough() {
+        let seq = [true, false, true, true, true];
+        // Non-adaptive: re-prime the context each bin to p0 = 0.2.
+        let fixed = Context {
+            p0: (PROB_ONE as f32 * 0.2) as u16,
+        };
+        let mut e = Encoder::new();
+        for &b in &seq {
+            let mut c = fixed;
+            e.encode(&mut c, b);
+        }
+        let bytes = e.finish();
+        // -log2 P(10111) = -log2(0.8*0.2*0.8^3) = ~3.97 bits -> eq. (5)
+        // guarantees <= ~6 bits of payload; with priming + tail the stream
+        // stays tiny.
+        assert!(bytes.len() <= 7, "stream unexpectedly long: {}", bytes.len());
+        let mut d = Decoder::new(&bytes);
+        for &b in &seq {
+            let mut c = fixed;
+            assert_eq!(d.decode(&mut c), b);
+        }
+    }
+}

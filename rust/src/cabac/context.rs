@@ -1,0 +1,113 @@
+//! Context model sets for DeepCABAC weight coding (paper §III-B).
+//!
+//! Contexts:
+//!  * `sig[3]`  — sigFlag, selected by the significance of the two previously
+//!    scanned weights (0, 1 or 2 of them non-zero): this is the "local
+//!    statistics" context derivation that lets CABAC exploit correlations
+//!    between neighbouring weights (and beat the i.i.d. entropy, Table III).
+//!  * `sign`    — signFlag (captures the asymmetry of Fig. 6).
+//!  * `gr[n]`   — AbsGr(i)Flags, one context per threshold i = 1..=n.
+//!  * `eg[m]`   — the unary prefix of the Exp-Golomb remainder, one context
+//!    per prefix position (capped at `m`, further positions bypass).
+//!
+//! The fixed-length suffix of the Exp-Golomb code is always bypass-coded
+//! (the paper's uniform-tail approximation, Fig. 6 blue).
+
+use super::arith::Context;
+
+/// Coding configuration shared by encoder, decoder and estimator.
+/// Both sides must agree; it is serialized in the `.dcb` header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CodingConfig {
+    /// Number of AbsGr(i) flags `n` (paper App. A-C uses 10).
+    pub max_abs_gr: u32,
+    /// Number of context-coded Exp-Golomb unary prefix positions.
+    pub eg_contexts: u32,
+}
+
+impl Default for CodingConfig {
+    fn default() -> Self {
+        Self {
+            max_abs_gr: 10,
+            eg_contexts: 16,
+        }
+    }
+}
+
+/// The full adaptive context state for one coded weight tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WeightContexts {
+    pub cfg: CodingConfig,
+    pub sig: [Context; 3],
+    pub sign: Context,
+    pub gr: Vec<Context>,
+    pub eg: Vec<Context>,
+}
+
+impl WeightContexts {
+    pub fn new(cfg: CodingConfig) -> Self {
+        Self {
+            cfg,
+            sig: [Context::default(); 3],
+            sign: Context::default(),
+            gr: vec![Context::default(); cfg.max_abs_gr as usize],
+            eg: vec![Context::default(); cfg.eg_contexts as usize],
+        }
+    }
+}
+
+/// Rolling significance history for sigFlag context selection.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SigHistory {
+    prev: [bool; 2],
+}
+
+impl SigHistory {
+    /// Context index = number of significant weights among the last two.
+    #[inline]
+    pub fn ctx_index(&self) -> usize {
+        self.prev[0] as usize + self.prev[1] as usize
+    }
+
+    #[inline]
+    pub fn push(&mut self, significant: bool) {
+        self.prev = [self.prev[1], significant];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config() {
+        let c = CodingConfig::default();
+        assert_eq!(c.max_abs_gr, 10);
+        assert_eq!(c.eg_contexts, 16);
+    }
+
+    #[test]
+    fn contexts_sized_by_config() {
+        let cfg = CodingConfig {
+            max_abs_gr: 4,
+            eg_contexts: 8,
+        };
+        let w = WeightContexts::new(cfg);
+        assert_eq!(w.gr.len(), 4);
+        assert_eq!(w.eg.len(), 8);
+    }
+
+    #[test]
+    fn sig_history_indexing() {
+        let mut h = SigHistory::default();
+        assert_eq!(h.ctx_index(), 0);
+        h.push(true);
+        assert_eq!(h.ctx_index(), 1);
+        h.push(true);
+        assert_eq!(h.ctx_index(), 2);
+        h.push(false);
+        assert_eq!(h.ctx_index(), 1);
+        h.push(false);
+        assert_eq!(h.ctx_index(), 0);
+    }
+}

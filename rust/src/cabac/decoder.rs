@@ -1,0 +1,73 @@
+//! Layer-level CABAC decoding (inverse of `encoder.rs`).
+
+use super::arith::Decoder;
+use super::binarize;
+use super::context::{CodingConfig, SigHistory, WeightContexts};
+use crate::util::{Error, Result};
+
+/// Decode `count` integers from a CABAC layer bitstream.
+pub fn decode_layer(bytes: &[u8], count: usize, cfg: CodingConfig) -> Result<Vec<i32>> {
+    let mut ctxs = WeightContexts::new(cfg);
+    let mut hist = SigHistory::default();
+    let mut d = Decoder::new(bytes);
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let v = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            binarize::decode_int(&mut d, &mut ctxs, &mut hist)
+        }))
+        .map_err(|_| Error::Decode(format!("corrupt CABAC stream at symbol {i}")))?;
+        out.push(v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cabac::encoder::encode_layer;
+
+    #[test]
+    fn decode_matches_encode() {
+        let values: Vec<i32> = vec![0, 3, -7, 0, 0, 12, -1, 1, 0, 255, -4096];
+        let cfg = CodingConfig::default();
+        let bytes = encode_layer(&values, cfg);
+        assert_eq!(decode_layer(&bytes, values.len(), cfg).unwrap(), values);
+    }
+
+    #[test]
+    fn truncated_stream_decodes_gracefully() {
+        // A truncated stream must not panic the process: it either returns
+        // garbage values (acceptable: CRC catches it upstream) or Err.
+        let values: Vec<i32> = (0..500).map(|i| (i % 17) - 8).collect();
+        let cfg = CodingConfig::default();
+        let bytes = encode_layer(&values, cfg);
+        let cut = &bytes[..bytes.len() / 2];
+        let _ = decode_layer(cut, values.len(), cfg); // no panic
+    }
+
+    #[test]
+    fn config_mismatch_is_detected_by_content() {
+        // Decoding with a different AbsGr budget must yield different values
+        // (the .dcb container stores the config precisely to avoid this).
+        let values: Vec<i32> = vec![5, -12, 9, 0, 2, 88, -3, 0, 41];
+        let bytes = encode_layer(
+            &values,
+            CodingConfig {
+                max_abs_gr: 10,
+                eg_contexts: 16,
+            },
+        );
+        let wrong = decode_layer(
+            &bytes,
+            values.len(),
+            CodingConfig {
+                max_abs_gr: 2,
+                eg_contexts: 16,
+            },
+        );
+        match wrong {
+            Ok(decoded) => assert_ne!(decoded, values),
+            Err(_) => {}
+        }
+    }
+}

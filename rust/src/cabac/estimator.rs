@@ -1,0 +1,312 @@
+//! CABAC code-length estimation — the `L_ik` term of the RDOQ objective
+//! (paper eq. 11: "the code-length of the quantization point q_k at the
+//! weight w_i *as estimated by CABAC*").
+//!
+//! The estimator walks the binarization of a candidate integer and sums the
+//! ideal code length of each bin under the **current** adaptive context
+//! states (without mutating them).  Context-coded bins cost
+//! `-log2 p(bin)`; bypass bins cost exactly 1.
+//!
+//! Two access patterns:
+//!  * [`estimate_int`] — exact per-candidate cost (used by the sequential
+//!    Rust RDOQ, which re-reads the adapting contexts as it codes).
+//!  * [`CostTable`] — a frozen snapshot of per-grid-index costs, the form
+//!    consumed by the Pallas `rd_assign` kernel (contexts adapt slowly, so a
+//!    periodically refreshed table loses almost nothing — validated by the
+//!    `table_close_to_exact` test and the ablation bench).
+
+use super::binarize::{binarize, BinKind};
+use super::context::WeightContexts;
+
+/// Exact code length (bits) of integer `v` under context snapshot `ctxs`,
+/// with the sigFlag read from context index `sig_idx`.
+pub fn estimate_int(ctxs: &WeightContexts, sig_idx: usize, v: i32) -> f32 {
+    let mut bits = 0f32;
+    for (kind, bit) in binarize(v, ctxs.cfg.max_abs_gr) {
+        bits += match kind {
+            BinKind::Sig => ctxs.sig[sig_idx].bits(bit),
+            BinKind::Sign => ctxs.sign.bits(bit),
+            BinKind::Gr(i) => ctxs.gr[(i - 1) as usize].bits(bit),
+            BinKind::EgPrefix(p) => {
+                if (p as usize) < ctxs.eg.len() {
+                    ctxs.eg[p as usize].bits(bit)
+                } else {
+                    1.0
+                }
+            }
+            BinKind::EgSuffix => 1.0,
+        };
+    }
+    bits
+}
+
+/// Frozen per-grid-index cost table: `cost[j]` is the estimated bits for the
+/// signed grid index `I = j - half`.  This is exactly the `cost` operand of
+/// the Pallas kernel (`python/compile/kernels/rd_assign.py`).
+#[derive(Clone, Debug)]
+pub struct CostTable {
+    pub cost: Vec<f32>,
+    pub half: i32,
+}
+
+impl CostTable {
+    /// Build a (2*half+1)-entry table from the current context states.
+    /// `sig_idx` picks which sigFlag context the snapshot assumes; the
+    /// neutral choice for block-level tables is the running history's index
+    /// at build time.
+    pub fn build(ctxs: &WeightContexts, sig_idx: usize, half: i32) -> Self {
+        assert!(half >= 0);
+        let cost = (-half..=half)
+            .map(|i| estimate_int(ctxs, sig_idx, i))
+            .collect();
+        Self { cost, half }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cost.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cost.is_empty()
+    }
+
+    /// Cost of signed index `i` (clamped into the table range).
+    #[inline]
+    pub fn bits(&self, i: i32) -> f32 {
+        let j = (i.clamp(-self.half, self.half) + self.half) as usize;
+        self.cost[j]
+    }
+}
+
+/// Build all three sig-context cost tables in one pass (perf-critical: the
+/// RDOQ refreshes tables every block; the naive per-index `estimate_int`
+/// walk is O(K · bins), this is O(K) with shared prefix sums — see
+/// EXPERIMENTS.md §Perf).
+///
+/// Decomposition per signed index i:
+///   cost(i) = sig_bits(ctx, i != 0) + [i != 0] * (sign_bits(i<0) + abs_part(|i|))
+///   abs_part(a) = Σ_{j<min(a,n+1), j>=1} gr_j(1)   (prefix sum)
+///               + [a <= n] gr_a(0)
+///               + [a >  n] EG(a - n)   with EG(u) = egp_cum[k] + eg0[k] + k,
+///                 k = floor(log2 u) — all terms precomputable.
+pub fn build_cost_tables(ctxs: &WeightContexts, half: i32) -> [CostTable; 3] {
+    assert!(half >= 0);
+    let half_u = half as usize;
+    let n = ctxs.cfg.max_abs_gr as usize;
+    let m = ctxs.eg.len();
+
+    // gr(1) prefix sums and gr(0) terminators.
+    let mut gr_true_cum = vec![0f32; n + 1]; // gr_true_cum[j] = Σ_{t<j} gr_t(1)
+    for j in 1..=n {
+        gr_true_cum[j] = gr_true_cum[j - 1] + ctxs.gr[j - 1].bits(true);
+    }
+    // EG prefix-one cumulative costs up to the largest k we can need.
+    let max_u = (half_u.saturating_sub(n)).max(1) as u32;
+    let max_k = (31 - max_u.leading_zeros()) as usize;
+    let mut egp_cum = vec![0f32; max_k + 2];
+    for p in 0..=max_k {
+        let bit_cost = if p < m { ctxs.eg[p].bits(true) } else { 1.0 };
+        egp_cum[p + 1] = egp_cum[p] + bit_cost;
+    }
+    let eg_zero = |k: usize| -> f32 {
+        if k < m {
+            ctxs.eg[k].bits(false)
+        } else {
+            1.0
+        }
+    };
+
+    // abs_part for a = 1..=half.
+    let mut abs_part = vec![0f32; half_u + 1];
+    for a in 1..=half_u {
+        abs_part[a] = if a <= n {
+            gr_true_cum[a - 1] + ctxs.gr[a - 1].bits(false)
+        } else {
+            let u = (a - n) as u32;
+            let k = (31 - u.leading_zeros()) as usize;
+            gr_true_cum[n] + egp_cum[k] + eg_zero(k) + k as f32
+        };
+    }
+
+    let sign_pos = ctxs.sign.bits(false);
+    let sign_neg = ctxs.sign.bits(true);
+    std::array::from_fn(|sig_idx| {
+        let sig0 = ctxs.sig[sig_idx].bits(false);
+        let sig1 = ctxs.sig[sig_idx].bits(true);
+        let mut cost = vec![0f32; 2 * half_u + 1];
+        for a in 1..=half_u {
+            cost[half_u - a] = sig1 + sign_neg + abs_part[a];
+            cost[half_u + a] = sig1 + sign_pos + abs_part[a];
+        }
+        cost[half_u] = sig0;
+        CostTable { cost, half }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cabac::arith::Encoder;
+    use crate::cabac::binarize::encode_int;
+    use crate::cabac::context::{CodingConfig, SigHistory, WeightContexts};
+    use crate::util::Pcg64;
+
+    fn fresh() -> WeightContexts {
+        WeightContexts::new(CodingConfig::default())
+    }
+
+    #[test]
+    fn zero_costs_one_bit_at_init() {
+        // p(sig)=0.5 at init -> coding 0 costs exactly 1 bit.
+        let c = fresh();
+        assert!((estimate_int(&c, 0, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn monotone_in_magnitude_at_init() {
+        let c = fresh();
+        let costs: Vec<f32> = (0..100).map(|v| estimate_int(&c, 0, v)).collect();
+        for w in costs.windows(2) {
+            assert!(w[1] >= w[0] - 1e-6, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn symmetric_at_init() {
+        // Fresh sign context is 0.5 -> +v and -v cost the same.
+        let c = fresh();
+        for v in 1..50 {
+            assert!((estimate_int(&c, 0, v) - estimate_int(&c, 0, -v)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn estimate_tracks_real_encoder() {
+        // Encode a stream, accumulating the *pre-update* estimates; the sum
+        // must match the actual stream size within ~2%.
+        let mut rng = Pcg64::new(31);
+        let values: Vec<i32> = (0..30_000)
+            .map(|_| {
+                if rng.next_f64() < 0.7 {
+                    0
+                } else {
+                    let m = (rng.next_f64() * rng.next_f64() * 40.0) as i32 + 1;
+                    if rng.next_f64() < 0.4 {
+                        -m
+                    } else {
+                        m
+                    }
+                }
+            })
+            .collect();
+        let mut ctxs = fresh();
+        let mut hist = SigHistory::default();
+        let mut e = Encoder::new();
+        let mut est = 0f64;
+        for &v in &values {
+            est += estimate_int(&ctxs, hist.ctx_index(), v) as f64;
+            encode_int(&mut e, &mut ctxs, &mut hist, v);
+        }
+        let actual = e.finish().len() as f64 * 8.0;
+        let rel = (actual - est).abs() / actual;
+        assert!(rel < 0.02, "est {est:.0} actual {actual:.0} rel {rel:.3}");
+    }
+
+    #[test]
+    fn cost_table_matches_pointwise() {
+        let mut ctxs = fresh();
+        // Warm up the contexts a little so the table is non-trivial.
+        let mut hist = SigHistory::default();
+        let mut e = Encoder::new();
+        for v in [0, 0, 3, 0, -1, 2, 0, 0, 0, 5] {
+            encode_int(&mut e, &mut ctxs, &mut hist, v);
+        }
+        let t = CostTable::build(&ctxs, hist.ctx_index(), 64);
+        assert_eq!(t.len(), 129);
+        for i in -64..=64 {
+            let direct = estimate_int(&ctxs, hist.ctx_index(), i);
+            assert!((t.bits(i) - direct).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cost_table_clamps() {
+        let c = fresh();
+        let t = CostTable::build(&c, 0, 8);
+        assert_eq!(t.bits(100), t.bits(8));
+        assert_eq!(t.bits(-100), t.bits(-8));
+    }
+
+    #[test]
+    fn fast_table_set_matches_pointwise_build() {
+        // The O(K) build must agree with the O(K·bins) reference exactly,
+        // on fresh AND adapted contexts, for every sig index.
+        let mut ctxs = fresh();
+        let mut hist = SigHistory::default();
+        let mut e = Encoder::new();
+        let check = |ctxs: &WeightContexts| {
+            let fast = build_cost_tables(ctxs, 300);
+            for (sig_idx, table) in fast.iter().enumerate() {
+                for i in -300..=300 {
+                    let slow = estimate_int(ctxs, sig_idx, i);
+                    assert!(
+                        (table.bits(i) - slow).abs() < 1e-4,
+                        "sig={sig_idx} i={i}: fast {} vs slow {slow}",
+                        table.bits(i)
+                    );
+                }
+            }
+        };
+        check(&ctxs);
+        let mut rng = crate::util::Pcg64::new(55);
+        for _ in 0..5000 {
+            let v = if rng.next_f64() < 0.6 {
+                0
+            } else {
+                rng.below(600) as i32 - 300
+            };
+            encode_int(&mut e, &mut ctxs, &mut hist, v);
+        }
+        check(&ctxs);
+    }
+
+    #[test]
+    fn fast_table_handles_degenerate_configs() {
+        for cfg in [
+            CodingConfig {
+                max_abs_gr: 1,
+                eg_contexts: 1,
+            },
+            CodingConfig {
+                max_abs_gr: 20,
+                eg_contexts: 2,
+            },
+        ] {
+            let ctxs = WeightContexts::new(cfg);
+            let tables = build_cost_tables(&ctxs, 64);
+            for i in -64..=64 {
+                let slow = estimate_int(&ctxs, 0, i);
+                assert!((tables[0].bits(i) - slow).abs() < 1e-4, "i={i}");
+            }
+            // half = 0: only the zero symbol
+            let t0 = build_cost_tables(&ctxs, 0);
+            assert_eq!(t0[0].len(), 1);
+        }
+    }
+
+    #[test]
+    fn adapted_contexts_cheapen_frequent_symbols() {
+        // After seeing many zeros, coding another zero must cost < 1 bit and
+        // a non-zero must cost > 1 bit (backward adaptation, §II-B).
+        let mut ctxs = fresh();
+        let mut hist = SigHistory::default();
+        let mut e = Encoder::new();
+        for _ in 0..500 {
+            encode_int(&mut e, &mut ctxs, &mut hist, 0);
+        }
+        let idx = hist.ctx_index();
+        assert!(estimate_int(&ctxs, idx, 0) < 0.2);
+        assert!(estimate_int(&ctxs, idx, 1) > 4.0);
+    }
+}

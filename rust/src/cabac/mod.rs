@@ -1,0 +1,23 @@
+//! DeepCABAC's lossless engine: context-based adaptive binary arithmetic
+//! coding over quantized weight tensors (paper §II-B.1, §III-B).
+//!
+//! Module map:
+//!  * [`arith`]     — the binary arithmetic range coder + adaptive contexts.
+//!  * [`context`]   — context sets & sigFlag context derivation.
+//!  * [`binarize`]  — sig/sign/AbsGr(n)/Exp-Golomb binarization (Fig. 7).
+//!  * [`encoder`] / [`decoder`] — layer-level coding of integer tensors.
+//!  * [`estimator`] — RDOQ code-length estimation (the `L_ik` of eq. 11).
+
+pub mod arith;
+pub mod binarize;
+pub mod context;
+pub mod decoder;
+pub mod encoder;
+pub mod estimator;
+pub mod slices;
+
+pub use arith::{Context, Decoder, Encoder};
+pub use context::{CodingConfig, SigHistory, WeightContexts};
+pub use decoder::decode_layer;
+pub use encoder::{encode_layer, encode_layer_with_size};
+pub use estimator::{estimate_int, CostTable};

@@ -1,0 +1,261 @@
+//! Compressed Sparse Row representation + CSR-Huffman (paper §IV-B.3, [38]).
+//!
+//! CSR stores a sparse integer matrix as (row_ptr, col_delta, values).
+//! Following Deep Compression [38], the column positions are stored as
+//! *deltas* within a row (bounded, better-skewed alphabet) and CSR-Huffman
+//! applies a scalar Huffman code to the delta array and the value array
+//! separately.  Both the plain-CSR and CSR-Huffman byte sizes are what
+//! Table I/III's "CSR-Huffman" column reports.
+
+use crate::codecs::huffman;
+use crate::util::{Error, Result};
+
+/// CSR form of an integer matrix (zeros removed).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    /// Column *delta* within each row (first entry in a row = absolute col).
+    pub col_delta: Vec<u32>,
+    pub values: Vec<i32>,
+}
+
+impl Csr {
+    /// Build from a dense row-major integer matrix.
+    pub fn from_dense(dense: &[i32], rows: usize, cols: usize) -> Self {
+        assert_eq!(dense.len(), rows * cols);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_delta = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            let mut prev_col = 0usize;
+            let mut first = true;
+            for c in 0..cols {
+                let v = dense[r * cols + c];
+                if v != 0 {
+                    let delta = if first { c } else { c - prev_col };
+                    col_delta.push(delta as u32);
+                    values.push(v);
+                    prev_col = c;
+                    first = false;
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        Self {
+            rows,
+            cols,
+            row_ptr,
+            col_delta,
+            values,
+        }
+    }
+
+    /// Reconstruct the dense matrix.
+    pub fn to_dense(&self) -> Vec<i32> {
+        let mut dense = vec![0i32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            let mut col = 0usize;
+            for i in s..e {
+                col += self.col_delta[i] as usize;
+                if i == s {
+                    col = self.col_delta[i] as usize;
+                }
+                dense[r * self.cols + col] = self.values[i];
+            }
+        }
+        dense
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Plain-CSR size in bytes with minimal fixed-width fields:
+    /// row_ptr as u32, col deltas at the tightest uniform bit-width,
+    /// values at the tightest uniform bit-width (paper §IV-B.1 style).
+    pub fn plain_bytes(&self) -> usize {
+        let col_bits = bits_for(self.col_delta.iter().copied().max().unwrap_or(0) as u64);
+        let val_bits = self
+            .values
+            .iter()
+            .map(|&v| bits_for(zigzag(v)))
+            .max()
+            .unwrap_or(1);
+        let header = 12; // rows, cols, nnz
+        header
+            + self.row_ptr.len() * 4
+            + (self.col_delta.len() * col_bits as usize).div_ceil(8)
+            + (self.values.len() * val_bits as usize).div_ceil(8)
+    }
+
+    /// CSR-Huffman total size in bytes: Huffman-coded deltas + values
+    /// (tables included), u32 row_ptr.
+    pub fn csr_huffman_bytes(&self) -> Result<usize> {
+        let deltas_i32: Vec<i32> = self.col_delta.iter().map(|&d| d as i32).collect();
+        let header = 12 + self.row_ptr.len() * 4;
+        let d_bits = if deltas_i32.is_empty() {
+            0
+        } else {
+            let code = huffman::HuffmanCode::build(&deltas_i32);
+            code.table_bytes() * 8 + code.encoded_bits(&deltas_i32)?
+        };
+        let v_bits = if self.values.is_empty() {
+            0
+        } else {
+            let code = huffman::HuffmanCode::build(&self.values);
+            code.table_bytes() * 8 + code.encoded_bits(&self.values)?
+        };
+        Ok(header + d_bits.div_ceil(8) + v_bits.div_ceil(8))
+    }
+
+    /// Full serialization (CSR-Huffman): decodable container.
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        out.extend((self.rows as u32).to_le_bytes());
+        out.extend((self.cols as u32).to_le_bytes());
+        out.extend((self.nnz() as u32).to_le_bytes());
+        for &p in &self.row_ptr {
+            out.extend(p.to_le_bytes());
+        }
+        let deltas_i32: Vec<i32> = self.col_delta.iter().map(|&d| d as i32).collect();
+        let (_, d_stream) = huffman::encode_two_part(&deltas_i32)?;
+        out.extend((d_stream.len() as u32).to_le_bytes());
+        out.extend(d_stream);
+        let (_, v_stream) = huffman::encode_two_part(&self.values)?;
+        out.extend((v_stream.len() as u32).to_le_bytes());
+        out.extend(v_stream);
+        Ok(out)
+    }
+
+    pub fn decode(raw: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > raw.len() {
+                return Err(Error::Format("csr stream truncated".into()));
+            }
+            let s = &raw[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let rows = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let cols = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let nnz = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        for _ in 0..=rows {
+            row_ptr.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()));
+        }
+        let dlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let d_stream = take(&mut pos, dlen)?;
+        let col_delta: Vec<u32> = huffman::decode_two_part(d_stream)?
+            .into_iter()
+            .map(|d| d as u32)
+            .collect();
+        let vlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let v_stream = take(&mut pos, vlen)?;
+        let values = huffman::decode_two_part(v_stream)?;
+        if col_delta.len() != nnz || values.len() != nnz {
+            return Err(Error::Format("csr nnz mismatch".into()));
+        }
+        Ok(Self {
+            rows,
+            cols,
+            row_ptr,
+            col_delta,
+            values,
+        })
+    }
+}
+
+#[inline]
+fn zigzag(v: i32) -> u64 {
+    ((v << 1) ^ (v >> 31)) as u32 as u64
+}
+
+#[inline]
+fn bits_for(v: u64) -> u32 {
+    64 - v.leading_zeros().min(63)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn sparse_matrix(rows: usize, cols: usize, nz_frac: f64, seed: u64) -> Vec<i32> {
+        let mut rng = Pcg64::new(seed);
+        (0..rows * cols)
+            .map(|_| {
+                if rng.next_f64() < nz_frac {
+                    rng.below(31) as i32 - 15
+                } else {
+                    0
+                }
+            })
+            .map(|v| if v == 0 && false { 1 } else { v })
+            .collect()
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = sparse_matrix(17, 29, 0.15, 110);
+        let csr = Csr::from_dense(&m, 17, 29);
+        assert_eq!(csr.to_dense(), m);
+    }
+
+    #[test]
+    fn all_zero_matrix() {
+        let m = vec![0i32; 50];
+        let csr = Csr::from_dense(&m, 5, 10);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.to_dense(), m);
+    }
+
+    #[test]
+    fn fully_dense_matrix() {
+        let m: Vec<i32> = (1..=20).collect();
+        let csr = Csr::from_dense(&m, 4, 5);
+        assert_eq!(csr.nnz(), 20);
+        assert_eq!(csr.to_dense(), m);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let m = sparse_matrix(40, 60, 0.1, 111);
+        let csr = Csr::from_dense(&m, 40, 60);
+        let raw = csr.encode().unwrap();
+        let back = Csr::decode(&raw).unwrap();
+        assert_eq!(back, csr);
+        assert_eq!(back.to_dense(), m);
+    }
+
+    #[test]
+    fn csr_beats_dense_on_sparse() {
+        let m = sparse_matrix(100, 100, 0.05, 112);
+        let csr = Csr::from_dense(&m, 100, 100);
+        // dense at 1 byte/symbol = 10000
+        assert!(csr.csr_huffman_bytes().unwrap() < 4000);
+    }
+
+    #[test]
+    fn huffman_variant_not_larger_than_plain() {
+        let m = sparse_matrix(80, 80, 0.08, 113);
+        let csr = Csr::from_dense(&m, 80, 80);
+        // With a skewed value distribution Huffman coding the arrays wins.
+        let plain = csr.plain_bytes();
+        let hm = csr.csr_huffman_bytes().unwrap();
+        // Not a theorem for tiny inputs (table overhead), but holds at this
+        // size with this distribution.
+        assert!(hm < plain * 2, "plain {plain} vs huffman {hm}");
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let m = sparse_matrix(10, 10, 0.3, 114);
+        let raw = Csr::from_dense(&m, 10, 10).encode().unwrap();
+        assert!(Csr::decode(&raw[..raw.len() / 2]).is_err());
+    }
+}

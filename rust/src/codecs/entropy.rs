@@ -1,0 +1,109 @@
+//! Empirical probability mass distribution (EPMD) entropy — the `H` rows of
+//! Tables II/III: the information-theoretic floor for any lossless code
+//! that treats the symbols as i.i.d. (paper eq. 2).  CABAC can go *below*
+//! this because its contexts exploit inter-symbol correlations (§V-C).
+
+use std::collections::HashMap;
+
+/// EPMD over the symbol stream.
+pub fn epmd(symbols: &[i32]) -> HashMap<i32, f64> {
+    let mut counts: HashMap<i32, usize> = HashMap::new();
+    for &s in symbols {
+        *counts.entry(s).or_insert(0) += 1;
+    }
+    let n = symbols.len().max(1) as f64;
+    counts
+        .into_iter()
+        .map(|(k, c)| (k, c as f64 / n))
+        .collect()
+}
+
+/// Shannon entropy of the EPMD, bits/symbol.
+pub fn entropy_bits_per_symbol(symbols: &[i32]) -> f64 {
+    epmd(symbols)
+        .values()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| -p * p.log2())
+        .sum()
+}
+
+/// Total EPMD-entropy bits of the stream.
+pub fn entropy_bits_total(symbols: &[i32]) -> f64 {
+    entropy_bits_per_symbol(symbols) * symbols.len() as f64
+}
+
+/// Cross-entropy of `symbols` under a decoder model `q` (bits/symbol);
+/// symbols with q = 0 get the `escape_bits` penalty (universal-coding bound,
+/// paper §II-B).
+pub fn cross_entropy_bits_per_symbol(
+    symbols: &[i32],
+    q: &HashMap<i32, f64>,
+    escape_bits: f64,
+) -> f64 {
+    if symbols.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = symbols
+        .iter()
+        .map(|s| match q.get(s) {
+            Some(&p) if p > 0.0 => -p.log2(),
+            _ => escape_bits,
+        })
+        .sum();
+    total / symbols.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_four_symbols() {
+        let s = [0, 1, 2, 3].repeat(100);
+        assert!((entropy_bits_per_symbol(&s) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_stream_zero_entropy() {
+        assert_eq!(entropy_bits_per_symbol(&[7; 500]), 0.0);
+    }
+
+    #[test]
+    fn empty_stream() {
+        assert_eq!(entropy_bits_per_symbol(&[]), 0.0);
+        assert_eq!(entropy_bits_total(&[]), 0.0);
+    }
+
+    #[test]
+    fn skewed_matches_formula() {
+        // 90/10 binary: H = -(0.9 log 0.9 + 0.1 log 0.1) = 0.469 bits.
+        let mut s = vec![0; 900];
+        s.extend(vec![1; 100]);
+        let h = entropy_bits_per_symbol(&s);
+        assert!((h - 0.46899559).abs() < 1e-6, "{h}");
+    }
+
+    #[test]
+    fn cross_entropy_geq_entropy() {
+        let s: Vec<i32> = (0..1000).map(|i| (i % 7) - 3).collect();
+        let p = epmd(&s);
+        let h = entropy_bits_per_symbol(&s);
+        // mismatched model
+        let mut q = p.clone();
+        for v in q.values_mut() {
+            *v = (*v + 0.05) / 1.35;
+        }
+        let ce = cross_entropy_bits_per_symbol(&s, &q, 32.0);
+        assert!(ce >= h - 1e-9, "ce {ce} < h {h}");
+        // matched model achieves entropy
+        let ce_match = cross_entropy_bits_per_symbol(&s, &p, 32.0);
+        assert!((ce_match - h).abs() < 1e-9);
+    }
+
+    #[test]
+    fn epmd_sums_to_one() {
+        let s: Vec<i32> = (0..999).map(|i| i % 13).collect();
+        let total: f64 = epmd(&s).values().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

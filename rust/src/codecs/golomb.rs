@@ -1,0 +1,159 @@
+//! Standalone Exp-Golomb codec (order-k) over unsigned/signed integers [23].
+//!
+//! Inside DeepCABAC the Exp-Golomb structure is context-coded bin-by-bin
+//! (see `cabac::binarize`); this standalone bit-level version exists as a
+//! baseline "fixed-structure" code and for tests that cross-check the bin
+//! layout against the paper's footnote-4 definition.
+
+use crate::bitio::{BitReader, BitWriter};
+use crate::util::{Error, Result};
+
+/// Encode unsigned `v` with order-`k` Exp-Golomb.
+pub fn put_ue(w: &mut BitWriter, v: u64, k: u32) {
+    let u = (v >> k) + 1;
+    let nbits = 63 - u.leading_zeros() as u32; // floor(log2(u))
+    // unary prefix: nbits ones then a zero
+    for _ in 0..nbits {
+        w.put_bit(true);
+    }
+    w.put_bit(false);
+    // suffix: nbits bits of u - 2^nbits, then k raw low bits of v
+    w.put_bits(u - (1 << nbits), nbits);
+    w.put_bits(v & ((1u64 << k) - 1).max(0), k);
+}
+
+/// Decode unsigned order-`k` Exp-Golomb.
+pub fn get_ue(r: &mut BitReader, k: u32) -> Result<u64> {
+    let mut nbits = 0u32;
+    loop {
+        match r.get_bit() {
+            Some(true) => nbits += 1,
+            Some(false) => break,
+            None => return Err(Error::Decode("eg stream truncated".into())),
+        }
+        if nbits > 63 {
+            return Err(Error::Decode("eg prefix overflow".into()));
+        }
+    }
+    let suffix = r
+        .get_bits(nbits)
+        .ok_or_else(|| Error::Decode("eg suffix truncated".into()))?;
+    let u = (1u64 << nbits) + suffix;
+    let low = r
+        .get_bits(k)
+        .ok_or_else(|| Error::Decode("eg low bits truncated".into()))?;
+    Ok(((u - 1) << k) | low)
+}
+
+/// Signed mapping (zigzag) + order-k EG.
+pub fn put_se(w: &mut BitWriter, v: i64, k: u32) {
+    let z = ((v << 1) ^ (v >> 63)) as u64;
+    put_ue(w, z, k);
+}
+
+pub fn get_se(r: &mut BitReader, k: u32) -> Result<i64> {
+    let z = get_ue(r, k)?;
+    Ok(((z >> 1) as i64) ^ -((z & 1) as i64))
+}
+
+/// Whole-stream helpers: encode a symbol plane with order-k EG.
+pub fn encode_stream(symbols: &[i32], k: u32) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    for &s in symbols {
+        put_se(&mut w, s as i64, k);
+    }
+    w.finish()
+}
+
+pub fn decode_stream(raw: &[u8], count: usize, k: u32) -> Result<Vec<i32>> {
+    let mut r = BitReader::new(raw);
+    (0..count).map(|_| get_se(&mut r, k).map(|v| v as i32)).collect()
+}
+
+/// Bit cost of order-k EG for unsigned v: 2*floor(log2(v/2^k + 1)) + 1 + k.
+pub fn ue_bits(v: u64, k: u32) -> u32 {
+    let u = (v >> k) + 1;
+    let nbits = 63 - u.leading_zeros();
+    2 * nbits + 1 + k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn eg0_known_codewords() {
+        // v=0 -> "0"; v=1 -> "100"; v=2 -> "101"; v=5 -> "11010"
+        let mut w = BitWriter::new();
+        put_ue(&mut w, 0, 0);
+        assert_eq!(w.bit_len(), 1);
+        let mut w = BitWriter::new();
+        put_ue(&mut w, 1, 0);
+        let bytes = w.finish();
+        assert_eq!(bytes[0] >> 5, 0b100);
+        let mut w = BitWriter::new();
+        put_ue(&mut w, 5, 0);
+        let bytes = w.finish();
+        assert_eq!(bytes[0] >> 3, 0b11010);
+    }
+
+    #[test]
+    fn paper_footnote4_structure() {
+        // EG encodes 2^k < i <= 2^{k+1} with exponent unary + remainder FL;
+        // our u = v+1 convention reproduces exactly the cabac::binarize
+        // remainder layout: cost = 2*floor(log2(v+1)) + 1 for k=0.
+        for v in 0..100u64 {
+            let nbits = 63 - (v + 1).leading_zeros();
+            assert_eq!(ue_bits(v, 0), 2 * nbits + 1);
+        }
+    }
+
+    #[test]
+    fn roundtrip_unsigned_orders() {
+        let mut rng = Pcg64::new(120);
+        for k in 0..6 {
+            let vals: Vec<u64> = (0..2000).map(|_| rng.below(100_000)).collect();
+            let mut w = BitWriter::new();
+            for &v in &vals {
+                put_ue(&mut w, v, k);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &v in &vals {
+                assert_eq!(get_ue(&mut r, k).unwrap(), v);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_signed_stream() {
+        let mut rng = Pcg64::new(121);
+        let vals: Vec<i32> = (0..5000).map(|_| rng.below(2000) as i32 - 1000).collect();
+        for k in 0..4 {
+            let raw = encode_stream(&vals, k);
+            assert_eq!(decode_stream(&raw, vals.len(), k).unwrap(), vals);
+        }
+    }
+
+    #[test]
+    fn bits_match_written() {
+        let mut rng = Pcg64::new(122);
+        for k in 0..5 {
+            let mut w = BitWriter::new();
+            let mut expect = 0usize;
+            for _ in 0..500 {
+                let v = rng.below(10_000);
+                expect += ue_bits(v, k) as usize;
+                put_ue(&mut w, v, k);
+            }
+            assert_eq!(w.bit_len(), expect);
+        }
+    }
+
+    #[test]
+    fn truncated_errors() {
+        let raw = encode_stream(&[100, 200, 300], 0);
+        assert!(decode_stream(&raw[..1], 3, 0).is_err());
+    }
+}

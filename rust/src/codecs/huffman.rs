@@ -1,0 +1,348 @@
+//! Scalar Huffman codec (paper Algs. 1–3, §II-A.1) with canonical codes.
+//!
+//! The paper's "scalar Huffman" baseline: a per-symbol prefix code built
+//! from the EPMD.  Carries up to 1 bit/symbol of redundancy vs the entropy
+//! (eq. 3 per-scalar) — the gap CABAC closes in Table III.
+//!
+//! The serialized form is a *two-part code* (§II-B): canonical code-length
+//! table first, then the payload — `encode_with_table` reports both parts so
+//! benchmarks can account for the model cost explicitly.
+
+use std::collections::HashMap;
+
+use crate::bitio::{BitReader, BitWriter};
+use crate::util::{Error, Result};
+
+/// A canonical Huffman code over i32 symbols.
+#[derive(Clone, Debug)]
+pub struct HuffmanCode {
+    /// symbol -> (code bits, length)
+    enc: HashMap<i32, (u64, u32)>,
+    /// Sorted (length, symbol) pairs for canonical reconstruction.
+    lengths: Vec<(u32, i32)>,
+}
+
+impl HuffmanCode {
+    /// Build from symbol frequencies (Alg. 3) and canonicalize.
+    pub fn build(symbols: &[i32]) -> Self {
+        let mut counts: HashMap<i32, u64> = HashMap::new();
+        for &s in symbols {
+            *counts.entry(s).or_insert(0) += 1;
+        }
+        Self::from_counts(&counts)
+    }
+
+    pub fn from_counts(counts: &HashMap<i32, u64>) -> Self {
+        let mut lengths = code_lengths(counts);
+        // canonical order: (length asc, symbol asc)
+        lengths.sort();
+        let enc = assign_canonical(&lengths);
+        Self { enc, lengths }
+    }
+
+    /// Average code length under the build distribution.
+    pub fn avg_bits(&self, symbols: &[i32]) -> f64 {
+        if symbols.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = symbols
+            .iter()
+            .map(|s| self.enc.get(s).map(|&(_, l)| l as u64).unwrap_or(0))
+            .sum();
+        total as f64 / symbols.len() as f64
+    }
+
+    /// Encode the payload (Alg. 1). Fails on symbols outside the alphabet.
+    pub fn encode(&self, symbols: &[i32]) -> Result<Vec<u8>> {
+        let mut w = BitWriter::new();
+        for s in symbols {
+            let &(code, len) = self
+                .enc
+                .get(s)
+                .ok_or_else(|| Error::Format(format!("symbol {s} not in alphabet")))?;
+            w.put_bits(code, len);
+        }
+        Ok(w.finish())
+    }
+
+    /// Payload size in bits without materializing the stream.
+    pub fn encoded_bits(&self, symbols: &[i32]) -> Result<usize> {
+        let mut total = 0usize;
+        for s in symbols {
+            let &(_, len) = self
+                .enc
+                .get(s)
+                .ok_or_else(|| Error::Format(format!("symbol {s} not in alphabet")))?;
+            total += len as usize;
+        }
+        Ok(total)
+    }
+
+    /// Decode `count` symbols (Alg. 2, via canonical tree walk).
+    pub fn decode(&self, bytes: &[u8], count: usize) -> Result<Vec<i32>> {
+        // Build decode map: (len, code) -> symbol.
+        let mut dec: HashMap<(u32, u64), i32> = HashMap::new();
+        for (&sym, &(code, len)) in &self.enc {
+            dec.insert((len, code), sym);
+        }
+        // Degenerate single-symbol alphabet: zero-length codes.
+        if self.lengths.len() == 1 {
+            return Ok(vec![self.lengths[0].1; count]);
+        }
+        let mut r = BitReader::new(bytes);
+        let max_len = self.lengths.last().map(|&(l, _)| l).unwrap_or(0);
+        let mut out = Vec::with_capacity(count);
+        for i in 0..count {
+            let mut code = 0u64;
+            let mut len = 0u32;
+            loop {
+                let bit = r
+                    .get_bit()
+                    .ok_or_else(|| Error::Decode(format!("huffman stream ended at {i}")))?;
+                code = (code << 1) | bit as u64;
+                len += 1;
+                if let Some(&sym) = dec.get(&(len, code)) {
+                    out.push(sym);
+                    break;
+                }
+                if len > max_len {
+                    return Err(Error::Decode("invalid huffman code".into()));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Serialize the code table (symbol + length pairs) — the "first part"
+    /// of the two-part code.  Returns the table size in bytes.
+    pub fn table_bytes(&self) -> usize {
+        // 4 bytes count + 5 bytes per entry (i32 symbol + u8 length)
+        4 + self.lengths.len() * 5
+    }
+
+    pub fn serialize_table(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.table_bytes());
+        out.extend((self.lengths.len() as u32).to_le_bytes());
+        for &(len, sym) in &self.lengths {
+            out.extend(sym.to_le_bytes());
+            out.push(len as u8);
+        }
+        out
+    }
+
+    pub fn deserialize_table(raw: &[u8]) -> Result<Self> {
+        if raw.len() < 4 {
+            return Err(Error::Format("huffman table truncated".into()));
+        }
+        let n = u32::from_le_bytes(raw[..4].try_into().unwrap()) as usize;
+        if raw.len() < 4 + n * 5 {
+            return Err(Error::Format("huffman table truncated".into()));
+        }
+        let mut lengths = Vec::with_capacity(n);
+        for i in 0..n {
+            let off = 4 + i * 5;
+            let sym = i32::from_le_bytes(raw[off..off + 4].try_into().unwrap());
+            let len = raw[off + 4] as u32;
+            lengths.push((len, sym));
+        }
+        lengths.sort();
+        let enc = assign_canonical(&lengths);
+        Ok(Self { enc, lengths })
+    }
+
+    pub fn alphabet_size(&self) -> usize {
+        self.lengths.len()
+    }
+
+    pub fn max_len(&self) -> u32 {
+        self.lengths.last().map(|&(l, _)| l).unwrap_or(0)
+    }
+}
+
+/// Package-deal helpers: build + encode, reporting total size including the
+/// transmitted table (what Table I/III charge the Huffman baselines).
+pub fn encode_two_part(symbols: &[i32]) -> Result<(HuffmanCode, Vec<u8>)> {
+    let code = HuffmanCode::build(symbols);
+    let mut out = code.serialize_table();
+    out.extend((symbols.len() as u32).to_le_bytes());
+    out.extend(code.encode(symbols)?);
+    Ok((code, out))
+}
+
+pub fn decode_two_part(raw: &[u8]) -> Result<Vec<i32>> {
+    let code = HuffmanCode::deserialize_table(raw)?;
+    let toff = code.table_bytes();
+    if raw.len() < toff + 4 {
+        return Err(Error::Format("two-part stream truncated".into()));
+    }
+    let count = u32::from_le_bytes(raw[toff..toff + 4].try_into().unwrap()) as usize;
+    code.decode(&raw[toff + 4..], count)
+}
+
+/// Huffman code lengths via the classic two-queue merge (Alg. 3), without
+/// materializing an explicit tree.
+fn code_lengths(counts: &HashMap<i32, u64>) -> Vec<(u32, i32)> {
+    #[derive(Debug)]
+    enum Node {
+        Leaf(i32),
+        Internal(usize, usize),
+    }
+    if counts.is_empty() {
+        return vec![];
+    }
+    if counts.len() == 1 {
+        return vec![(0, *counts.keys().next().unwrap())];
+    }
+    let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>> =
+        std::collections::BinaryHeap::new();
+    let mut nodes: Vec<Node> = Vec::with_capacity(counts.len() * 2);
+    // Deterministic tie-breaking: sort symbols first.
+    let mut syms: Vec<(&i32, &u64)> = counts.iter().collect();
+    syms.sort();
+    for (&s, &c) in syms {
+        nodes.push(Node::Leaf(s));
+        heap.push(std::cmp::Reverse((c, nodes.len() - 1)));
+    }
+    while heap.len() > 1 {
+        let std::cmp::Reverse((c1, i1)) = heap.pop().unwrap();
+        let std::cmp::Reverse((c2, i2)) = heap.pop().unwrap();
+        nodes.push(Node::Internal(i1, i2));
+        heap.push(std::cmp::Reverse((c1 + c2, nodes.len() - 1)));
+    }
+    let std::cmp::Reverse((_, root)) = heap.pop().unwrap();
+    // BFS depth assignment.
+    let mut lengths = Vec::with_capacity(counts.len());
+    let mut stack = vec![(root, 0u32)];
+    while let Some((i, d)) = stack.pop() {
+        match nodes[i] {
+            Node::Leaf(s) => lengths.push((d.max(1), s)),
+            Node::Internal(l, r) => {
+                stack.push((l, d + 1));
+                stack.push((r, d + 1));
+            }
+        }
+    }
+    lengths
+}
+
+/// Canonical code assignment from sorted (length, symbol) pairs.
+fn assign_canonical(lengths: &[(u32, i32)]) -> HashMap<i32, (u64, u32)> {
+    let mut enc = HashMap::with_capacity(lengths.len());
+    let mut code = 0u64;
+    let mut prev_len = 0u32;
+    for &(len, sym) in lengths {
+        code <<= len - prev_len;
+        enc.insert(sym, (code, len));
+        code += 1;
+        prev_len = len;
+    }
+    enc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::entropy::entropy_bits_per_symbol;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_basic() {
+        let s = vec![0, 0, 0, 1, 1, 2, -5, 0, 2, 2, 2, 2];
+        let code = HuffmanCode::build(&s);
+        let bytes = code.encode(&s).unwrap();
+        assert_eq!(code.decode(&bytes, s.len()).unwrap(), s);
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let s = vec![42; 100];
+        let code = HuffmanCode::build(&s);
+        let bytes = code.encode(&s).unwrap();
+        assert_eq!(code.decode(&bytes, 100).unwrap(), s);
+    }
+
+    #[test]
+    fn within_one_bit_of_entropy() {
+        // Scalar Huffman redundancy bound: H <= L < H + 1 (paper eq. 3).
+        let mut rng = Pcg64::new(100);
+        let s: Vec<i32> = (0..50_000)
+            .map(|_| {
+                let r = rng.next_f64();
+                if r < 0.7 {
+                    0
+                } else if r < 0.85 {
+                    1
+                } else if r < 0.93 {
+                    -1
+                } else {
+                    (rng.below(20) + 2) as i32
+                }
+            })
+            .collect();
+        let h = entropy_bits_per_symbol(&s);
+        let code = HuffmanCode::build(&s);
+        let avg = code.avg_bits(&s);
+        assert!(avg >= h - 1e-9, "avg {avg} < H {h}");
+        assert!(avg < h + 1.0, "avg {avg} >= H+1 {h}");
+    }
+
+    #[test]
+    fn optimality_on_dyadic_distribution() {
+        // p = 1/2, 1/4, 1/8, 1/8 -> Huffman achieves entropy exactly.
+        let mut s = vec![0; 4000];
+        s.extend(vec![1; 2000]);
+        s.extend(vec![2; 1000]);
+        s.extend(vec![3; 1000]);
+        let code = HuffmanCode::build(&s);
+        let avg = code.avg_bits(&s);
+        let h = entropy_bits_per_symbol(&s);
+        assert!((avg - h).abs() < 1e-9, "avg {avg} h {h}");
+    }
+
+    #[test]
+    fn two_part_roundtrip() {
+        let mut rng = Pcg64::new(101);
+        let s: Vec<i32> = (0..5000).map(|_| rng.below(30) as i32 - 15).collect();
+        let (_, raw) = encode_two_part(&s).unwrap();
+        assert_eq!(decode_two_part(&raw).unwrap(), s);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let s = vec![5, -3, 5, 5, 8, -3, 0, 0, 0, 0, 0];
+        let code = HuffmanCode::build(&s);
+        let raw = code.serialize_table();
+        let back = HuffmanCode::deserialize_table(&raw).unwrap();
+        let payload = code.encode(&s).unwrap();
+        assert_eq!(back.decode(&payload, s.len()).unwrap(), s);
+    }
+
+    #[test]
+    fn unknown_symbol_errors() {
+        let code = HuffmanCode::build(&[1, 2, 3]);
+        assert!(code.encode(&[99]).is_err());
+    }
+
+    #[test]
+    fn corrupt_payload_errors_or_differs() {
+        let s: Vec<i32> = (0..200).map(|i| i % 5).collect();
+        let code = HuffmanCode::build(&s);
+        let mut bytes = code.encode(&s).unwrap();
+        bytes.truncate(bytes.len() / 4);
+        assert!(code.decode(&bytes, s.len()).is_err());
+    }
+
+    #[test]
+    fn fuzz_roundtrip() {
+        let mut rng = Pcg64::new(102);
+        for _ in 0..20 {
+            let n = 1 + rng.below(3000) as usize;
+            let alpha = 1 + rng.below(200) as i64;
+            let s: Vec<i32> = (0..n)
+                .map(|_| (rng.below(alpha as u64) as i32) - (alpha / 2) as i32)
+                .collect();
+            let (_, raw) = encode_two_part(&s).unwrap();
+            assert_eq!(decode_two_part(&raw).unwrap(), s);
+        }
+    }
+}

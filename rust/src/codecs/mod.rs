@@ -1,0 +1,140 @@
+//! Lossless baseline codecs the paper compares DeepCABAC against
+//! (Tables I & III), plus the EPMD entropy floor.
+//!
+//!  * [`huffman`] — scalar Huffman (Algs. 1–3) incl. the two-part form.
+//!  * [`csr`]     — CSR + CSR-Huffman sparse-matrix representation [38].
+//!  * [`external`] — bzip2 [56], zstd, deflate over packed symbol planes.
+//!  * [`golomb`]  — standalone order-k Exp-Golomb.
+//!  * [`entropy`] — EPMD entropy / cross-entropy (the `H` rows).
+
+pub mod csr;
+pub mod cer;
+pub mod entropy;
+pub mod external;
+pub mod golomb;
+pub mod huffman;
+
+use crate::util::Result;
+
+/// Which lossless back-end compressed a symbol plane — used uniformly by
+/// benches and the pipeline report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LosslessCoder {
+    ScalarHuffman,
+    CsrHuffman,
+    Bzip2,
+    Zstd,
+    Deflate,
+    Cabac,
+}
+
+impl LosslessCoder {
+    pub const ALL: [LosslessCoder; 6] = [
+        LosslessCoder::ScalarHuffman,
+        LosslessCoder::CsrHuffman,
+        LosslessCoder::Bzip2,
+        LosslessCoder::Zstd,
+        LosslessCoder::Deflate,
+        LosslessCoder::Cabac,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LosslessCoder::ScalarHuffman => "scalar-Huffman",
+            LosslessCoder::CsrHuffman => "CSR-Huffman",
+            LosslessCoder::Bzip2 => "bzip2",
+            LosslessCoder::Zstd => "zstd",
+            LosslessCoder::Deflate => "deflate",
+            LosslessCoder::Cabac => "CABAC",
+        }
+    }
+
+    /// Compressed size in bytes of one quantized layer plane (rows × cols
+    /// signed symbols).  Sizes include each coder's own side info (Huffman
+    /// tables, CSR row pointers, container headers).
+    pub fn size_bytes(
+        self,
+        symbols: &[i32],
+        rows: usize,
+        cols: usize,
+        cfg: crate::cabac::CodingConfig,
+    ) -> Result<usize> {
+        Ok(match self {
+            LosslessCoder::ScalarHuffman => {
+                let (_, raw) = huffman::encode_two_part(symbols)?;
+                raw.len()
+            }
+            LosslessCoder::CsrHuffman => {
+                csr::Csr::from_dense(symbols, rows, cols).csr_huffman_bytes()?
+            }
+            LosslessCoder::Bzip2 => external::bzip2_symbol_bytes(symbols)?,
+            LosslessCoder::Zstd => {
+                let (_, packed) = external::pack_symbols(symbols);
+                external::zstd_compress(&packed)?.len()
+            }
+            LosslessCoder::Deflate => {
+                let (_, packed) = external::pack_symbols(symbols);
+                external::deflate_compress(&packed)?.len()
+            }
+            LosslessCoder::Cabac => crate::cabac::encode_layer(symbols, cfg).len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cabac::CodingConfig;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn all_coders_produce_sizes() {
+        let mut rng = Pcg64::new(140);
+        let rows = 64;
+        let cols = 100;
+        let symbols: Vec<i32> = (0..rows * cols)
+            .map(|_| if rng.next_f64() < 0.8 { 0 } else { rng.below(21) as i32 - 10 })
+            .collect();
+        for coder in LosslessCoder::ALL {
+            let sz = coder
+                .size_bytes(&symbols, rows, cols, CodingConfig::default())
+                .unwrap();
+            assert!(sz > 0, "{}", coder.name());
+            assert!(sz < rows * cols * 4, "{} didn't compress", coder.name());
+        }
+    }
+
+    #[test]
+    fn cabac_wins_on_sparse_plane() {
+        // The Table III headline: CABAC <= every Huffman-family coder.
+        let mut rng = Pcg64::new(141);
+        let rows = 128;
+        let cols = 128;
+        let symbols: Vec<i32> = (0..rows * cols)
+            .map(|_| {
+                if rng.next_f64() < 0.9 {
+                    0
+                } else {
+                    let m = (rng.next_f64() * rng.next_f64() * 12.0) as i32 + 1;
+                    if rng.next_f64() < 0.5 {
+                        -m
+                    } else {
+                        m
+                    }
+                }
+            })
+            .collect();
+        let cfg = CodingConfig::default();
+        let cabac = LosslessCoder::Cabac
+            .size_bytes(&symbols, rows, cols, cfg)
+            .unwrap();
+        for coder in [LosslessCoder::ScalarHuffman, LosslessCoder::CsrHuffman] {
+            let other = coder.size_bytes(&symbols, rows, cols, cfg).unwrap();
+            assert!(
+                cabac <= other,
+                "CABAC {cabac} vs {} {other}",
+                coder.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Coordinator configuration: methods, hyper-parameter grids, budgets.
+
+use crate::cabac::CodingConfig;
+use crate::model::Importance;
+
+/// Which compression method a run uses (the four Table I columns).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// DeepCABAC v1: per-layer Δ via eq. (12), Fisher-weighted RDOQ.
+    DcV1,
+    /// DeepCABAC v2: global Δ grid, unweighted RDOQ.
+    DcV2,
+    /// Weighted Lloyd (Alg. 4) + best-of lossless back-ends.
+    Lloyd(Importance),
+    /// Per-layer uniform / nearest-neighbour + best-of lossless back-ends.
+    Uniform,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::DcV1 => "DC-v1",
+            Method::DcV2 => "DC-v2",
+            Method::Lloyd(Importance::Ones) => "Lloyd",
+            Method::Lloyd(Importance::Fisher) => "Lloyd-var",
+            Method::Lloyd(Importance::Hessian) => "Lloyd-hess",
+            Method::Uniform => "Uniform",
+        }
+    }
+}
+
+/// One hyper-parameter point β on a method's grid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Candidate {
+    pub method: Method,
+    /// DC-v1 coarseness S (eq. 12).
+    pub s: f32,
+    /// Global step-size Δ (DC-v2) — ignored by DC-v1.
+    pub delta: f32,
+    /// Rate multiplier λ.
+    pub lambda: f32,
+    /// Cluster count (Lloyd/Uniform).
+    pub clusters: usize,
+}
+
+/// Grid-search budget knobs (defaults sized for the bench harness; the
+/// full-paper grids from App. A-D/E are available by raising these).
+#[derive(Clone, Copy, Debug)]
+pub struct SearchConfig {
+    pub coding: CodingConfig,
+    /// Worker threads for candidate processing.
+    pub threads: usize,
+    /// Accuracy tolerance vs original, in fraction (paper: 0.005 = 0.5 pp).
+    pub tolerance: f64,
+    /// DC-v1: number of λ points (S grid is fixed at the paper's 11).
+    pub dc1_lambdas: usize,
+    /// DC-v2: number of Δ points in round 1 (NN feasibility scan).
+    pub dc2_deltas: usize,
+    /// DC-v2: Δ points kept for round 2, and λ points per Δ.
+    pub dc2_keep: usize,
+    pub dc2_lambdas: usize,
+    /// Lloyd: λ sweep points and cluster counts.
+    pub lloyd_lambdas: usize,
+    pub lloyd_clusters: &'static [usize],
+    pub lloyd_max_iter: usize,
+    /// Uniform: cluster counts swept (paper doubles from 256 / 32).
+    pub uniform_clusters: &'static [usize],
+    /// Cap on the RDOQ grid half-width (Rust path; the Pallas kernel
+    /// artifact supports up to 512).
+    pub max_half: i32,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            coding: CodingConfig::default(),
+            threads: default_threads(),
+            tolerance: 0.005,
+            dc1_lambdas: 6,
+            dc2_deltas: 24,
+            dc2_keep: 5,
+            dc2_lambdas: 6,
+            lloyd_lambdas: 6,
+            lloyd_clusters: &[64, 256],
+            lloyd_max_iter: 25,
+            uniform_clusters: &[32, 64, 128, 256, 512, 1024],
+            max_half: 2048,
+        }
+    }
+}
+
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names() {
+        assert_eq!(Method::DcV1.name(), "DC-v1");
+        assert_eq!(Method::Lloyd(Importance::Fisher).name(), "Lloyd-var");
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = SearchConfig::default();
+        assert!(c.threads >= 1);
+        assert!(c.tolerance > 0.0);
+        assert!(!c.uniform_clusters.is_empty());
+    }
+}

@@ -1,0 +1,21 @@
+//! Layer-3 coordinator — the paper's system loop (Fig. 5): scan → select β
+//! → quantize (eq. 11) → CABAC-encode → decode → reconstruct → evaluate →
+//! repeat over the β grid until the desired accuracy-vs-size trade-off.
+//!
+//!  * [`config`]      — methods (DC-v1/DC-v2/Lloyd/Uniform), grids, budgets.
+//!  * [`pipeline`]    — one candidate end to end (true decode path).
+//!  * [`grid_search`] — β-grid fan-out over the worker pool.
+//!  * [`pareto`]      — accuracy-vs-size front + tolerance selection.
+//!  * [`parallel`]    — the thread-pool primitive (offline tokio stand-in).
+//!  * [`report`]      — table-shaped rendering for EXPERIMENTS.md.
+
+pub mod config;
+pub mod grid_search;
+pub mod parallel;
+pub mod pareto;
+pub mod pipeline;
+pub mod report;
+
+pub use config::{Candidate, Method, SearchConfig};
+pub use grid_search::{search, SearchOutcome};
+pub use pipeline::{run_candidate, CandidateResult};

@@ -1,0 +1,81 @@
+//! Minimal work-stealing-ish parallel map over a candidate list.
+//!
+//! (tokio/rayon are not in the offline vendor set — DESIGN.md §6.  A shared
+//! atomic cursor over an immutable slice gives the same load-balancing
+//! behaviour for our coarse-grained candidates.)
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Apply `f` to every item on `threads` OS threads; results keep item order.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    let cursor = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                out.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker panicked before storing result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread() {
+        let out = parallel_map(&[1, 2, 3], 1, |&x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = parallel_map(&[] as &[i32], 4, |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = parallel_map(&[5], 16, |&x| x);
+        assert_eq!(out, vec![5]);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // All threads must make progress concurrently: with 4 threads and
+        // 4 barrier-waiting items, completion implies true parallelism.
+        use std::sync::Barrier;
+        let barrier = Barrier::new(4);
+        let items = [0; 4];
+        let out = parallel_map(&items, 4, |_| {
+            barrier.wait();
+            1
+        });
+        assert_eq!(out.iter().sum::<i32>(), 4);
+    }
+}

@@ -1,0 +1,102 @@
+//! Pareto-front extraction on the accuracy-vs-size plane (paper §III-A:
+//! "select the desired pareto-optimal solutions").
+
+use super::pipeline::CandidateResult;
+
+/// Indices of the Pareto-optimal results: no other point has both
+/// (accuracy >=, size <=) with at least one strict.
+pub fn pareto_front(results: &[CandidateResult]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, a) in results.iter().enumerate() {
+        for (j, b) in results.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let dominates = b.accuracy >= a.accuracy
+                && b.sizes.compressed_weights <= a.sizes.compressed_weights
+                && (b.accuracy > a.accuracy
+                    || b.sizes.compressed_weights < a.sizes.compressed_weights);
+            if dominates {
+                continue 'outer;
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+/// Best (smallest) result whose accuracy is within `tolerance` of
+/// `reference_acc` — the Table I selection rule ("no loss of accuracy"
+/// = within ±0.5 pp of the original).
+pub fn best_within_tolerance(
+    results: &[CandidateResult],
+    reference_acc: f64,
+    tolerance: f64,
+) -> Option<&CandidateResult> {
+    results
+        .iter()
+        .filter(|r| r.accuracy >= reference_acc - tolerance)
+        .min_by(|a, b| {
+            a.sizes
+                .compressed_weights
+                .cmp(&b.sizes.compressed_weights)
+                .then(b.accuracy.total_cmp(&a.accuracy))
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{Candidate, Method};
+    use crate::metrics::Sizes;
+
+    fn res(acc: f64, size: usize) -> CandidateResult {
+        CandidateResult {
+            candidate: Candidate {
+                method: Method::DcV2,
+                s: 0.0,
+                delta: 0.01,
+                lambda: 0.0,
+                clusters: 0,
+            },
+            sizes: Sizes {
+                original_weights: 1000,
+                bias: 0,
+                compressed_weights: size,
+            },
+            accuracy: acc,
+            backend: "CABAC",
+        }
+    }
+
+    #[test]
+    fn front_excludes_dominated() {
+        let rs = vec![res(0.9, 100), res(0.8, 200), res(0.95, 50)];
+        // (0.95, 50) dominates both others.
+        assert_eq!(pareto_front(&rs), vec![2]);
+    }
+
+    #[test]
+    fn front_keeps_tradeoffs() {
+        let rs = vec![res(0.9, 100), res(0.95, 200), res(0.99, 400)];
+        assert_eq!(pareto_front(&rs), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn tolerance_selection() {
+        let rs = vec![res(0.96, 100), res(0.94, 40), res(0.90, 10)];
+        let best = best_within_tolerance(&rs, 0.95, 0.015).unwrap();
+        assert_eq!(best.sizes.compressed_weights, 40);
+        // Tighter tolerance forces the bigger model.
+        let best = best_within_tolerance(&rs, 0.95, 0.005).unwrap();
+        assert_eq!(best.sizes.compressed_weights, 100);
+        // Impossible tolerance -> none.
+        assert!(best_within_tolerance(&rs, 0.99, 0.001).is_none());
+    }
+
+    #[test]
+    fn empty_results() {
+        assert!(pareto_front(&[]).is_empty());
+        assert!(best_within_tolerance(&[], 0.9, 0.01).is_none());
+    }
+}

@@ -1,0 +1,99 @@
+//! Human-readable reporting for search outcomes (table-shaped, matching the
+//! paper's layout so EXPERIMENTS.md diffs are eyeball-able).
+
+use super::grid_search::SearchOutcome;
+
+/// One Table I-style row: method → percent-of-original (accuracy).
+pub fn table1_row(model: &str, outcomes: &[SearchOutcome]) -> String {
+    let mut s = format!("{model:<18}");
+    for o in outcomes {
+        match o.best_result() {
+            Some(b) => s.push_str(&format!(
+                " | {:>9}: {:>6.2}% ({:.2})",
+                o.method_name,
+                b.percent(),
+                b.accuracy * 100.0
+            )),
+            None => s.push_str(&format!(" | {:>9}:    n/a", o.method_name)),
+        }
+    }
+    s
+}
+
+/// Render a full outcome (all candidates + Pareto front) for logs.
+pub fn outcome_details(o: &SearchOutcome) -> String {
+    let mut s = format!(
+        "method {} (orig acc {:.2}%), {} candidates:\n",
+        o.method_name,
+        o.original_accuracy * 100.0,
+        o.results.len()
+    );
+    for (i, r) in o.results.iter().enumerate() {
+        let mark = if Some(i) == o.best { " <= best" } else { "" };
+        s.push_str(&format!(
+            "  β(s={:.0}, Δ={:.5}, λ={:.5}, k={}) -> {:.3}% of orig, acc {:.2}%, via {}{}\n",
+            r.candidate.s,
+            r.candidate.delta,
+            r.candidate.lambda,
+            r.candidate.clusters,
+            r.percent(),
+            r.accuracy * 100.0,
+            r.backend,
+            mark
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{Candidate, Method};
+    use crate::coordinator::pipeline::CandidateResult;
+    use crate::metrics::Sizes;
+
+    fn outcome() -> SearchOutcome {
+        SearchOutcome {
+            method_name: "DC-v2",
+            original_accuracy: 0.95,
+            results: vec![CandidateResult {
+                candidate: Candidate {
+                    method: Method::DcV2,
+                    s: 0.0,
+                    delta: 0.01,
+                    lambda: 0.02,
+                    clusters: 0,
+                },
+                sizes: Sizes {
+                    original_weights: 1000,
+                    bias: 0,
+                    compressed_weights: 42,
+                },
+                accuracy: 0.948,
+                backend: "CABAC",
+            }],
+            best: Some(0),
+        }
+    }
+
+    #[test]
+    fn row_renders() {
+        let row = table1_row("lenet300", &[outcome()]);
+        assert!(row.contains("lenet300"));
+        assert!(row.contains("DC-v2"));
+        assert!(row.contains("4.20%"));
+    }
+
+    #[test]
+    fn details_mark_best() {
+        let d = outcome_details(&outcome());
+        assert!(d.contains("<= best"));
+    }
+
+    #[test]
+    fn missing_best_renders_na() {
+        let mut o = outcome();
+        o.best = None;
+        assert!(table1_row("m", &[o]).contains("n/a"));
+    }
+}

@@ -1,0 +1,134 @@
+//! `.nds` dataset loader (SynthVision-16 test split; DESIGN.md §4/§5).
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::util::{Error, Result};
+
+/// An evaluation dataset: images NHWC f32 + labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub classes: usize,
+    /// Row-major NHWC.
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut raw = Vec::new();
+        std::fs::File::open(path.as_ref())?.read_to_end(&mut raw)?;
+        if raw.len() < 24 || &raw[..4] != b"NDS1" {
+            return Err(Error::Format("bad nds magic".into()));
+        }
+        let u = |i: usize| {
+            u32::from_le_bytes(raw[4 + i * 4..8 + i * 4].try_into().unwrap()) as usize
+        };
+        let (n, h, w, c, classes) = (u(0), u(1), u(2), u(3), u(4));
+        let img_bytes = n * h * w * c * 4;
+        let expect = 24 + img_bytes + n;
+        if raw.len() != expect {
+            return Err(Error::Format(format!(
+                "nds size mismatch: {} != {expect}",
+                raw.len()
+            )));
+        }
+        let images: Vec<f32> = raw[24..24 + img_bytes]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        let labels = raw[24 + img_bytes..].to_vec();
+        if labels.iter().any(|&l| l as usize >= classes) {
+            return Err(Error::Format("nds label out of range".into()));
+        }
+        Ok(Self {
+            n,
+            h,
+            w,
+            c,
+            classes,
+            images,
+            labels,
+        })
+    }
+
+    /// Image slice for batch `[start, start+len)` (row-major NHWC).
+    pub fn batch_images(&self, start: usize, len: usize) -> &[f32] {
+        let stride = self.h * self.w * self.c;
+        &self.images[start * stride..(start + len) * stride]
+    }
+
+    pub fn batch_labels(&self, start: usize, len: usize) -> &[u8] {
+        &self.labels[start..start + len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tiny(path: &std::path::Path, n: usize) {
+        let (h, w, c, classes) = (2usize, 2, 1, 10);
+        let mut raw = Vec::new();
+        raw.extend(b"NDS1");
+        for v in [n, h, w, c, classes] {
+            raw.extend((v as u32).to_le_bytes());
+        }
+        for i in 0..n * h * w * c {
+            raw.extend((i as f32).to_le_bytes());
+        }
+        for i in 0..n {
+            raw.push((i % classes) as u8);
+        }
+        std::fs::write(path, raw).unwrap();
+    }
+
+    #[test]
+    fn load_tiny() {
+        let dir = std::env::temp_dir().join("dcb_nds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.nds");
+        write_tiny(&p, 6);
+        let d = Dataset::load(&p).unwrap();
+        assert_eq!((d.n, d.h, d.w, d.c, d.classes), (6, 2, 2, 1, 10));
+        assert_eq!(d.batch_images(1, 2).len(), 8);
+        assert_eq!(d.batch_images(1, 1)[0], 4.0);
+        assert_eq!(d.batch_labels(2, 3), &[2, 3, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("dcb_nds_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.nds");
+        std::fs::write(&p, b"XXXXXXXXXXXXXXXXXXXXXXXXXXXX").unwrap();
+        assert!(Dataset::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let dir = std::env::temp_dir().join("dcb_nds_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.nds");
+        write_tiny(&p, 6);
+        let raw = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &raw[..raw.len() - 3]).unwrap();
+        assert!(Dataset::load(&p).is_err());
+    }
+
+    /// Real artifact smoke (skipped when artifacts aren't built).
+    #[test]
+    fn load_real_artifact_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/dataset.nds");
+        if !p.exists() {
+            return;
+        }
+        let d = Dataset::load(&p).unwrap();
+        assert_eq!((d.h, d.w, d.c, d.classes), (16, 16, 1, 10));
+        assert_eq!(d.n, 1024);
+    }
+}

@@ -1,0 +1,22 @@
+//! # deepcabac
+//!
+//! A production-grade reimplementation of **DeepCABAC** (Wiedemann et al.,
+//! 2019): universal compression for deep neural networks via context-based
+//! adaptive binary arithmetic coding + rate-distortion-optimal quantization.
+//!
+//! Three-layer architecture (see DESIGN.md): this crate is Layer 3 — the
+//! Rust coordinator owning the full compress -> decode -> evaluate request
+//! path; Layers 2 (JAX model graphs) and 1 (Pallas RDOQ kernel) are AOT
+//! compiled to HLO text at build time and executed through [`runtime`].
+pub mod benchutil;
+pub mod bitio;
+pub mod cabac;
+pub mod data;
+pub mod codecs;
+pub mod coordinator;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod testutil;
+pub mod util;

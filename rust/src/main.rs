@@ -1,0 +1,282 @@
+//! `deepcabac` CLI — the leader entrypoint.
+//!
+//! Verbs:
+//!   compress   <model.nwf> [-o out.dcb] [--method dc-v1|dc-v2] [--delta D]
+//!              [--lambda L] [--s S]          one-shot compression
+//!   decompress <model.dcb> [-o out.nwf]      decode + reconstruct
+//!   eval       <model.nwf|model.dcb>         top-1 accuracy via PJRT
+//!   search     <model.nwf> [--method M]...   grid-search (Fig. 5 loop)
+//!   info       <model.nwf|model.dcb>         container inspection
+//!
+//! Global flags: --artifacts DIR (default ./artifacts), --threads N.
+//! (clap is not in the offline vendor set; this is a small hand-rolled
+//! parser with the same UX for our verbs.)
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use deepcabac::coordinator::{self, Method, SearchConfig};
+use deepcabac::model::{read_nwf, write_nwf, CompressedNetwork, Importance, Network};
+use deepcabac::runtime::EvalService;
+use deepcabac::util::Result;
+
+struct Args {
+    verb: String,
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Option<Args> {
+    let mut it = std::env::args().skip(1);
+    let verb = it.next()?;
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut key: Option<String> = None;
+    for a in it {
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some(k) = key.take() {
+                flags.insert(k, "true".into());
+            }
+            key = Some(stripped.to_string());
+        } else if a.starts_with('-') && a.len() == 2 {
+            if let Some(k) = key.take() {
+                flags.insert(k, "true".into());
+            }
+            key = Some(a[1..].to_string());
+        } else if let Some(k) = key.take() {
+            flags.insert(k, a);
+        } else {
+            positional.push(a);
+        }
+    }
+    if let Some(k) = key.take() {
+        flags.insert(k, "true".into());
+    }
+    Some(Args {
+        verb,
+        positional,
+        flags,
+    })
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: deepcabac <verb> [args]\n\
+         verbs:\n\
+           compress   <model.nwf> [-o out.dcb] [--method dc-v1|dc-v2] [--delta D] [--lambda L] [--s S]\n\
+           decompress <model.dcb> [-o out.nwf]\n\
+           eval       <model.nwf|.dcb> [--artifacts DIR]\n\
+           search     <model.nwf> [--method dc-v1|dc-v2|lloyd|uniform|all] [--threads N] [--tolerance PP]\n\
+           info       <model.nwf|.dcb>\n"
+    );
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let Some(args) = parse_args() else {
+        return usage();
+    };
+    let r = match args.verb.as_str() {
+        "compress" => cmd_compress(&args),
+        "decompress" => cmd_decompress(&args),
+        "eval" => cmd_eval(&args),
+        "search" => cmd_search(&args),
+        "info" => cmd_info(&args),
+        _ => return usage(),
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn flag_f32(args: &Args, key: &str, default: f32) -> f32 {
+    args.flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn load_network(path: &str) -> Result<Network> {
+    read_nwf(path)
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let input = args
+        .positional
+        .first()
+        .ok_or_else(|| deepcabac::util::Error::Config("missing input .nwf".into()))?;
+    let net = load_network(input)?;
+    let method = match args.flags.get("method").map(String::as_str) {
+        Some("dc-v1") => Method::DcV1,
+        _ => Method::DcV2,
+    };
+    let cand = coordinator::Candidate {
+        method,
+        s: flag_f32(args, "s", 64.0),
+        delta: flag_f32(args, "delta", 0.01),
+        lambda: flag_f32(args, "lambda", 1.0),
+        clusters: 0,
+    };
+    let cfg = SearchConfig::default();
+    let compressed = coordinator::pipeline::compress_dc(&net, &cand, &cfg);
+    let bytes = compressed.to_bytes();
+    let out = args
+        .flags
+        .get("o")
+        .cloned()
+        .unwrap_or_else(|| format!("{input}.dcb"));
+    std::fs::write(&out, &bytes)?;
+    let orig = net.f32_size_bytes() + net.bias_size_bytes();
+    println!(
+        "{input} -> {out}: {} -> {} bytes ({:.2}% of original, x{:.1})",
+        orig,
+        bytes.len(),
+        100.0 * bytes.len() as f64 / orig as f64,
+        orig as f64 / bytes.len() as f64
+    );
+    Ok(())
+}
+
+fn cmd_decompress(args: &Args) -> Result<()> {
+    let input = args
+        .positional
+        .first()
+        .ok_or_else(|| deepcabac::util::Error::Config("missing input .dcb".into()))?;
+    let raw = std::fs::read(input)?;
+    let compressed = CompressedNetwork::from_bytes(&raw)?;
+    let net = compressed.reconstruct_named();
+    let out = args
+        .flags
+        .get("o")
+        .cloned()
+        .unwrap_or_else(|| format!("{input}.nwf"));
+    write_nwf(&out, &net)?;
+    println!(
+        "{input} -> {out}: {} layers, {} params",
+        net.layers.len(),
+        net.param_count()
+    );
+    Ok(())
+}
+
+fn spawn_service(args: &Args) -> Result<deepcabac::runtime::EvalServiceHost> {
+    let art = artifacts_dir(args);
+    EvalService::spawn(art.clone(), art.join("dataset.nds"), 4)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let input = args
+        .positional
+        .first()
+        .ok_or_else(|| deepcabac::util::Error::Config("missing input model".into()))?;
+    let net = if input.ends_with(".dcb") {
+        let raw = std::fs::read(input)?;
+        CompressedNetwork::from_bytes(&raw)?.reconstruct_named()
+    } else {
+        load_network(input)?
+    };
+    let host = spawn_service(args)?;
+    let acc = host.handle.accuracy(&net)?;
+    println!("{input}: top-1 = {:.2}%", acc * 100.0);
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let input = args
+        .positional
+        .first()
+        .ok_or_else(|| deepcabac::util::Error::Config("missing input .nwf".into()))?;
+    let net = load_network(input)?;
+    let mut cfg = SearchConfig::default();
+    if let Some(t) = args.flags.get("threads").and_then(|v| v.parse().ok()) {
+        cfg.threads = t;
+    }
+    if let Some(t) = args.flags.get("tolerance").and_then(|v| v.parse::<f64>().ok()) {
+        cfg.tolerance = t / 100.0; // CLI takes percentage points
+    }
+    let methods: Vec<Method> = match args.flags.get("method").map(String::as_str) {
+        Some("dc-v1") => vec![Method::DcV1],
+        Some("dc-v2") => vec![Method::DcV2],
+        Some("lloyd") => vec![Method::Lloyd(Importance::Fisher)],
+        Some("uniform") => vec![Method::Uniform],
+        _ => vec![
+            Method::DcV1,
+            Method::DcV2,
+            Method::Lloyd(Importance::Fisher),
+            Method::Uniform,
+        ],
+    };
+    let host = spawn_service(args)?;
+    let mut outcomes = Vec::new();
+    for m in methods {
+        eprintln!("[search] {} on {} ...", m.name(), net.name);
+        let o = coordinator::search(&net, m, &cfg, &host.handle)?;
+        eprintln!("{}", coordinator::report::outcome_details(&o));
+        outcomes.push(o);
+    }
+    println!("{}", coordinator::report::table1_row(&net.name, &outcomes));
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let input = args
+        .positional
+        .first()
+        .ok_or_else(|| deepcabac::util::Error::Config("missing input".into()))?;
+    if input.ends_with(".dcb") {
+        let raw = std::fs::read(input)?;
+        let c = CompressedNetwork::from_bytes(&raw)?;
+        println!(
+            "{input}: dcb v1, coding(n={}, eg_ctx={}), {} layers, {} params, {} bytes",
+            c.cfg.max_abs_gr,
+            c.cfg.eg_contexts,
+            c.layers.len(),
+            c.param_count(),
+            raw.len()
+        );
+        for l in &c.layers {
+            let nz = l.ints.iter().filter(|&&i| i != 0).count();
+            println!(
+                "  {:<12} {:>4}x{:<6} Δ={:<10.6} nz={:.1}%",
+                l.name,
+                l.rows,
+                l.cols,
+                l.delta,
+                100.0 * nz as f64 / l.ints.len().max(1) as f64
+            );
+        }
+    } else {
+        let net = load_network(input)?;
+        println!(
+            "{input}: nwf, {} layers, {} params, {:.2} MB f32, nonzero {:.1}%",
+            net.layers.len(),
+            net.param_count(),
+            net.f32_size_bytes() as f64 / 1e6,
+            net.nonzero_frac() * 100.0
+        );
+        for l in &net.layers {
+            println!(
+                "  {:<12} {:?} {:>4}x{:<6} fisher={} hessian={} bias={}",
+                l.name,
+                l.kind,
+                l.rows,
+                l.cols,
+                l.fisher.is_some(),
+                l.hessian.is_some(),
+                l.bias.is_some()
+            );
+        }
+    }
+    Ok(())
+}

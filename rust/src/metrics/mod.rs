@@ -1,0 +1,107 @@
+//! Measurement plumbing: sizes, ratios, timers.
+
+use std::time::Instant;
+
+/// Size accounting for one compression result (paper Table I columns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sizes {
+    /// Original weight bytes at f32.
+    pub original_weights: usize,
+    /// Bias bytes (added, uncompressed, to both sides — paper App. A-A).
+    pub bias: usize,
+    /// Compressed payload bytes (weights), incl. coder side info.
+    pub compressed_weights: usize,
+}
+
+impl Sizes {
+    /// Compressed size as percent of original (the Table I number).
+    pub fn percent(&self) -> f64 {
+        100.0 * (self.compressed_weights + self.bias) as f64
+            / (self.original_weights + self.bias).max(1) as f64
+    }
+
+    /// Compression factor "×N".
+    pub fn factor(&self) -> f64 {
+        (self.original_weights + self.bias) as f64
+            / (self.compressed_weights + self.bias).max(1) as f64
+    }
+
+    /// Bits per weight parameter (Table II metric; weights only).
+    pub fn bits_per_param(&self, params: usize) -> f64 {
+        self.compressed_weights as f64 * 8.0 / params.max(1) as f64
+    }
+}
+
+/// Wall-clock scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Throughput helper: mega-units per second.
+pub fn mops(units: usize, secs: f64) -> f64 {
+    units as f64 / secs.max(1e-12) / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percent_and_factor() {
+        let s = Sizes {
+            original_weights: 1000,
+            bias: 0,
+            compressed_weights: 50,
+        };
+        assert!((s.percent() - 5.0).abs() < 1e-12);
+        assert!((s.factor() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bias_counted_on_both_sides() {
+        let s = Sizes {
+            original_weights: 1000,
+            bias: 100,
+            compressed_weights: 10,
+        };
+        assert!((s.percent() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bits_per_param() {
+        let s = Sizes {
+            original_weights: 400,
+            bias: 0,
+            compressed_weights: 25,
+        };
+        assert!((s.bits_per_param(100) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let s = Sizes::default();
+        assert!(s.percent().is_finite());
+        assert!(s.factor().is_finite());
+    }
+
+    #[test]
+    fn mops_sane() {
+        assert!((mops(2_000_000, 1.0) - 2.0).abs() < 1e-9);
+    }
+}

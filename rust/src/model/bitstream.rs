@@ -1,0 +1,308 @@
+//! `.dcb` — the DeepCABAC compressed-network bitstream (DESIGN.md §4).
+//!
+//! Fully self-contained: the decoder needs nothing but this stream to
+//! reconstruct the quantized network (weights = Δ · I per layer, biases as
+//! uncompressed side info) and hand it to the PJRT eval graph.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic 'DCB1' | u8 version | u16 name_len | model name (utf-8)
+//! | u32 max_abs_gr | u32 eg_contexts | u32 n_layers
+//! per layer:
+//!   u16 name_len | name | u8 kind | u8 n_dims | u32 dims[] | u32 rows | u32 cols
+//!   | f32 delta | u8 has_bias | [u32 blen | f32 bias[]] | u32 payload_len
+//!   | CABAC payload
+//! u32 crc32 (over everything after the magic)
+//! ```
+
+use super::network::{Kind, Layer, Network};
+use crate::cabac::{decode_layer, encode_layer, CodingConfig};
+use crate::util::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"DCB1";
+const VERSION: u8 = 1;
+
+/// One quantized layer: signed grid indices + the reconstruction step-size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedLayer {
+    pub name: String,
+    pub kind: Kind,
+    pub shape: Vec<usize>,
+    pub rows: usize,
+    pub cols: usize,
+    /// Signed grid indices I_i (the assignment map Q's output).
+    pub ints: Vec<i32>,
+    /// Step-size Δ: reconstruction is w_i = Δ · I_i (paper §III-C.1).
+    pub delta: f32,
+    pub bias: Option<Vec<f32>>,
+}
+
+impl QuantizedLayer {
+    /// Apply the reconstruction map Q^{-1}.
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.ints.iter().map(|&i| i as f32 * self.delta).collect()
+    }
+
+    /// Rebuild a [`Layer`] with dequantized weights (importances dropped —
+    /// they are an encoder-side aid, not part of the model).
+    pub fn to_layer(&self) -> Layer {
+        Layer {
+            name: self.name.clone(),
+            kind: self.kind,
+            shape: self.shape.clone(),
+            rows: self.rows,
+            cols: self.cols,
+            weights: self.dequantize(),
+            fisher: None,
+            hessian: None,
+            bias: self.bias.clone(),
+        }
+    }
+}
+
+/// A compressed network: coding config + quantized layers.
+#[derive(Clone, Debug)]
+pub struct CompressedNetwork {
+    /// Architecture name (selects the eval graph; `reconstruct()` default).
+    pub name: String,
+    pub cfg: CodingConfig,
+    pub layers: Vec<QuantizedLayer>,
+}
+
+impl CompressedNetwork {
+    /// Serialize: CABAC-encode every layer and assemble the container.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        body.push(VERSION);
+        body.extend((self.name.len() as u16).to_le_bytes());
+        body.extend(self.name.as_bytes());
+        body.extend(self.cfg.max_abs_gr.to_le_bytes());
+        body.extend(self.cfg.eg_contexts.to_le_bytes());
+        body.extend((self.layers.len() as u32).to_le_bytes());
+        for l in &self.layers {
+            body.extend((l.name.len() as u16).to_le_bytes());
+            body.extend(l.name.as_bytes());
+            body.push(l.kind.code());
+            body.push(l.shape.len() as u8);
+            for &d in &l.shape {
+                body.extend((d as u32).to_le_bytes());
+            }
+            body.extend((l.rows as u32).to_le_bytes());
+            body.extend((l.cols as u32).to_le_bytes());
+            body.extend(l.delta.to_le_bytes());
+            body.push(l.bias.is_some() as u8);
+            if let Some(b) = &l.bias {
+                body.extend((b.len() as u32).to_le_bytes());
+                for &x in b {
+                    body.extend(x.to_le_bytes());
+                }
+            }
+            let payload = encode_layer(&l.ints, self.cfg);
+            body.extend((payload.len() as u32).to_le_bytes());
+            body.extend(payload);
+        }
+        let mut out = Vec::with_capacity(body.len() + 8);
+        out.extend(MAGIC);
+        out.extend(&body);
+        out.extend(crc32fast::hash(&body).to_le_bytes());
+        out
+    }
+
+    /// Deserialize + CABAC-decode.
+    pub fn from_bytes(raw: &[u8]) -> Result<Self> {
+        if raw.len() < 8 || &raw[..4] != MAGIC {
+            return Err(Error::Format("bad dcb magic".into()));
+        }
+        let body = &raw[4..raw.len() - 4];
+        let crc_stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+        if crc32fast::hash(body) != crc_stored {
+            return Err(Error::Format("dcb crc mismatch".into()));
+        }
+        let mut pos = 0usize;
+        macro_rules! take {
+            ($n:expr) => {{
+                if pos + $n > body.len() {
+                    return Err(Error::Format("dcb truncated".into()));
+                }
+                let s = &body[pos..pos + $n];
+                pos += $n;
+                s
+            }};
+        }
+        macro_rules! u32le {
+            () => {
+                u32::from_le_bytes(take!(4).try_into().unwrap())
+            };
+        }
+        let version = take!(1)[0];
+        if version != VERSION {
+            return Err(Error::Format(format!("dcb version {version} unsupported")));
+        }
+        let model_name_len = u16::from_le_bytes(take!(2).try_into().unwrap()) as usize;
+        let model_name = String::from_utf8(take!(model_name_len).to_vec())
+            .map_err(|e| Error::Format(format!("bad model name: {e}")))?;
+        let cfg = CodingConfig {
+            max_abs_gr: u32le!(),
+            eg_contexts: u32le!(),
+        };
+        if cfg.max_abs_gr == 0 || cfg.max_abs_gr > 64 || cfg.eg_contexts > 64 {
+            return Err(Error::Format("dcb implausible coding config".into()));
+        }
+        let n_layers = u32le!() as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let name_len = u16::from_le_bytes(take!(2).try_into().unwrap()) as usize;
+            let name = String::from_utf8(take!(name_len).to_vec())
+                .map_err(|e| Error::Format(format!("bad name: {e}")))?;
+            let kind = Kind::from_code(take!(1)[0])?;
+            let nd = take!(1)[0] as usize;
+            let mut shape = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                shape.push(u32le!() as usize);
+            }
+            let rows = u32le!() as usize;
+            let cols = u32le!() as usize;
+            let delta = f32::from_le_bytes(take!(4).try_into().unwrap());
+            let has_bias = take!(1)[0] != 0;
+            let bias = if has_bias {
+                let blen = u32le!() as usize;
+                let raw = take!(blen * 4);
+                Some(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            let plen = u32le!() as usize;
+            let payload = take!(plen);
+            let ints = decode_layer(payload, rows * cols, cfg)?;
+            layers.push(QuantizedLayer {
+                name,
+                kind,
+                shape,
+                rows,
+                cols,
+                ints,
+                delta,
+                bias,
+            });
+        }
+        Ok(Self {
+            name: model_name,
+            cfg,
+            layers,
+        })
+    }
+
+    /// Rebuild the dequantized [`Network`] using the embedded name.
+    pub fn reconstruct_named(&self) -> Network {
+        self.reconstruct(&self.name)
+    }
+
+    /// Rebuild the dequantized [`Network`] for evaluation.
+    pub fn reconstruct(&self, name: &str) -> Network {
+        Network {
+            name: name.into(),
+            layers: self.layers.iter().map(QuantizedLayer::to_layer).collect(),
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.ints.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn sample() -> CompressedNetwork {
+        let mut rng = Pcg64::new(60);
+        let mk = |name: &str, rows: usize, cols: usize, delta: f32, rng: &mut Pcg64| {
+            QuantizedLayer {
+                name: name.into(),
+                kind: Kind::Dense,
+                shape: vec![cols, rows],
+                rows,
+                cols,
+                ints: (0..rows * cols)
+                    .map(|_| {
+                        if rng.next_f64() < 0.6 {
+                            0
+                        } else {
+                            rng.below(41) as i32 - 20
+                        }
+                    })
+                    .collect(),
+                delta,
+                bias: Some(rng.normal_vec(rows, 0.01)),
+            }
+        };
+        CompressedNetwork {
+            name: "sample_arch".into(),
+            cfg: CodingConfig::default(),
+            layers: vec![
+                mk("fc1", 30, 25, 0.02, &mut rng),
+                mk("fc2", 10, 30, 0.013, &mut rng),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let net = sample();
+        let bytes = net.to_bytes();
+        let back = CompressedNetwork::from_bytes(&bytes).unwrap();
+        assert_eq!(back.name, "sample_arch");
+        assert_eq!(back.cfg, net.cfg);
+        assert_eq!(back.layers, net.layers);
+    }
+
+    #[test]
+    fn reconstruct_dequantizes() {
+        let net = sample();
+        let rec = net.reconstruct("m");
+        for (ql, l) in net.layers.iter().zip(&rec.layers) {
+            for (&i, &w) in ql.ints.iter().zip(&l.weights) {
+                assert_eq!(w, i as f32 * ql.delta);
+            }
+        }
+    }
+
+    #[test]
+    fn crc_detects_flip() {
+        let mut bytes = sample().to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        assert!(CompressedNetwork::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(CompressedNetwork::from_bytes(b"nonsense").is_err());
+        assert!(CompressedNetwork::from_bytes(b"").is_err());
+    }
+
+    #[test]
+    fn compressed_size_reasonable() {
+        let net = sample();
+        let bytes = net.to_bytes();
+        // 1050 ints, ~40% nonzero of magnitude <=20 -> must beat 4 B/weight
+        // f32 by a wide margin.
+        assert!(bytes.len() < net.param_count() * 2, "{}", bytes.len());
+    }
+
+    #[test]
+    fn empty_network() {
+        let net = CompressedNetwork {
+            name: String::new(),
+            cfg: CodingConfig::default(),
+            layers: vec![],
+        };
+        let back = CompressedNetwork::from_bytes(&net.to_bytes()).unwrap();
+        assert!(back.layers.is_empty());
+    }
+}

@@ -1,0 +1,12 @@
+//! Network/tensor containers, the `.nwf` weight format, and the `.dcb`
+//! compressed-network bitstream (DESIGN.md §4).
+
+pub mod bitstream;
+pub mod network;
+pub mod nwf;
+pub mod scan;
+
+pub use bitstream::{CompressedNetwork, QuantizedLayer};
+pub use network::{Importance, Kind, Layer, Network};
+pub use nwf::{read_nwf, write_nwf};
+pub use scan::ScanOrder;

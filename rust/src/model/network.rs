@@ -1,0 +1,276 @@
+//! In-memory network container.
+//!
+//! A [`Layer`] holds one weight tensor in the paper's matrix scan form
+//! (rows = output channels, cols = fan-in / im2col; §III-A footnotes 2–3),
+//! plus optional per-weight importance arrays and the (unquantized) bias.
+//! A [`Network`] is the ordered list of layers of one model.
+
+use crate::util::{Error, Result};
+
+/// Layer kind — mirrors `python/compile/models.py`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Dense,
+    Conv,
+    DwConv,
+}
+
+impl Kind {
+    pub fn from_code(c: u8) -> Result<Self> {
+        match c {
+            0 => Ok(Kind::Dense),
+            1 => Ok(Kind::Conv),
+            2 => Ok(Kind::DwConv),
+            _ => Err(Error::Format(format!("unknown layer kind code {c}"))),
+        }
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            Kind::Dense => 0,
+            Kind::Conv => 1,
+            Kind::DwConv => 2,
+        }
+    }
+}
+
+/// One weight tensor in matrix scan form.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: Kind,
+    /// Original compute-layout shape (dense: (in,out); conv: HWIO).
+    pub shape: Vec<usize>,
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major weights, `rows * cols` values — the paper's scan order.
+    pub weights: Vec<f32>,
+    /// Empirical-Fisher diagonal, same length (optional).
+    pub fisher: Option<Vec<f32>>,
+    /// Hutchinson Hessian-diagonal estimate, same length (optional).
+    pub hessian: Option<Vec<f32>>,
+    /// Bias, kept uncompressed as side info (paper App. A-A).
+    pub bias: Option<Vec<f32>>,
+}
+
+impl Layer {
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    /// Largest |w| in the layer (0 for an all-zero layer).
+    pub fn max_abs(&self) -> f32 {
+        self.weights.iter().fold(0f32, |m, &w| m.max(w.abs()))
+    }
+
+    /// Fraction of non-zero weights.
+    pub fn nonzero_frac(&self) -> f64 {
+        if self.weights.is_empty() {
+            return 0.0;
+        }
+        self.weights.iter().filter(|&&w| w != 0.0).count() as f64
+            / self.weights.len() as f64
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let n = self.rows * self.cols;
+        if self.weights.len() != n {
+            return Err(Error::Format(format!(
+                "layer {}: weights len {} != rows*cols {}",
+                self.name,
+                self.weights.len(),
+                n
+            )));
+        }
+        for (tag, arr) in [("fisher", &self.fisher), ("hessian", &self.hessian)] {
+            if let Some(a) = arr {
+                if a.len() != n {
+                    return Err(Error::Format(format!(
+                        "layer {}: {tag} len {} != {}",
+                        self.name,
+                        a.len(),
+                        n
+                    )));
+                }
+            }
+        }
+        let expected: usize = self.shape.iter().product();
+        if expected != n {
+            return Err(Error::Format(format!(
+                "layer {}: shape {:?} product != {}",
+                self.name, self.shape, n
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// An ordered list of layers (one model).
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(Layer::len).sum()
+    }
+
+    /// Uncompressed size in bytes at f32 (weights only — the paper's
+    /// "original size" column counts weights; biases are side info added to
+    /// *both* sides by the benchmark harness).
+    pub fn f32_size_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    pub fn bias_size_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.bias.as_ref().map_or(0, |b| b.len() * 4))
+            .sum()
+    }
+
+    pub fn nonzero_frac(&self) -> f64 {
+        let nz: usize = self
+            .layers
+            .iter()
+            .map(|l| l.weights.iter().filter(|&&w| w != 0.0).count())
+            .sum();
+        nz as f64 / self.param_count().max(1) as f64
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for l in &self.layers {
+            l.validate()?;
+        }
+        Ok(())
+    }
+
+    /// All weights concatenated in scan order (for whole-network quantizers
+    /// like weighted Lloyd, Alg. 4).
+    pub fn flat_weights(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.param_count());
+        for l in &self.layers {
+            v.extend_from_slice(&l.weights);
+        }
+        v
+    }
+
+    /// Importance arrays concatenated; `Ones` fallback when missing.
+    pub fn flat_importance(&self, which: Importance) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.param_count());
+        for l in &self.layers {
+            match which {
+                Importance::Ones => v.extend(std::iter::repeat(1.0).take(l.len())),
+                Importance::Fisher => match &l.fisher {
+                    Some(f) => v.extend_from_slice(f),
+                    None => v.extend(std::iter::repeat(1.0).take(l.len())),
+                },
+                Importance::Hessian => match &l.hessian {
+                    Some(h) => v.extend_from_slice(h),
+                    None => v.extend(std::iter::repeat(1.0).take(l.len())),
+                },
+            }
+        }
+        v
+    }
+}
+
+/// Which per-weight importance measure a quantizer should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Importance {
+    /// F_i = 1 (plain rate-distortion; DC-v2, uniform, unweighted Lloyd).
+    Ones,
+    /// Empirical-Fisher diagonal (DC-v1; variance-weighted Lloyd, Fig. 8).
+    Fisher,
+    /// Hessian-diagonal estimate (Hessian-weighted Lloyd, Fig. 8 / [45]).
+    Hessian,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn test_layer(name: &str, rows: usize, cols: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: Kind::Dense,
+            shape: vec![cols, rows],
+            rows,
+            cols,
+            weights: (0..rows * cols).map(|i| i as f32 * 0.01).collect(),
+            fisher: Some(vec![1.0; rows * cols]),
+            hessian: None,
+            bias: Some(vec![0.0; rows]),
+        }
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(test_layer("a", 3, 4).validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_len_mismatch() {
+        let mut l = test_layer("a", 3, 4);
+        l.weights.pop();
+        assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_shape_mismatch() {
+        let mut l = test_layer("a", 3, 4);
+        l.shape = vec![5, 5];
+        assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn network_stats() {
+        let net = Network {
+            name: "t".into(),
+            layers: vec![test_layer("a", 2, 3), test_layer("b", 4, 5)],
+        };
+        assert_eq!(net.param_count(), 26);
+        assert_eq!(net.f32_size_bytes(), 104);
+        assert_eq!(net.bias_size_bytes(), (2 + 4) * 4);
+        assert_eq!(net.flat_weights().len(), 26);
+    }
+
+    #[test]
+    fn nonzero_frac() {
+        let mut l = test_layer("a", 1, 10);
+        l.weights = vec![0.0, 1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        assert!((l.nonzero_frac() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn importance_fallback_to_ones() {
+        let mut l = test_layer("a", 2, 2);
+        l.fisher = None;
+        let net = Network {
+            name: "t".into(),
+            layers: vec![l],
+        };
+        assert_eq!(net.flat_importance(Importance::Fisher), vec![1.0; 4]);
+    }
+
+    #[test]
+    fn max_abs() {
+        let mut l = test_layer("a", 1, 3);
+        l.weights = vec![-5.0, 2.0, 4.0];
+        assert_eq!(l.max_abs(), 5.0);
+    }
+
+    #[test]
+    fn kind_codes_roundtrip() {
+        for k in [Kind::Dense, Kind::Conv, Kind::DwConv] {
+            assert_eq!(Kind::from_code(k.code()).unwrap(), k);
+        }
+        assert!(Kind::from_code(9).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! `.nwf` network-weight container reader/writer (DESIGN.md §4).
+//!
+//! Byte-compatible with `python/compile/io_format.py`; the Python test suite
+//! pins the layout with golden bytes, the Rust tests roundtrip through this
+//! implementation, and the integration tests read actual Python-written
+//! artifacts.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::network::{Kind, Layer, Network};
+use crate::util::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"NWF1";
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Format("nwf truncated".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Read a `.nwf` file into a [`Network`] (name = file stem).
+pub fn read_nwf(path: impl AsRef<Path>) -> Result<Network> {
+    let path = path.as_ref();
+    let mut raw = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut raw)?;
+    if raw.len() < 12 || &raw[..4] != MAGIC {
+        return Err(Error::Format(format!("{}: bad nwf magic", path.display())));
+    }
+    let body = &raw[4..raw.len() - 4];
+    let crc_stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+    let crc = crc32fast::hash(body);
+    if crc != crc_stored {
+        return Err(Error::Format(format!(
+            "{}: crc mismatch (stored {crc_stored:08x}, computed {crc:08x})",
+            path.display()
+        )));
+    }
+    let mut c = Cursor { buf: body, pos: 0 };
+    let n_layers = c.u32()? as usize;
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let name_len = c.u16()? as usize;
+        let name = String::from_utf8(c.take(name_len)?.to_vec())
+            .map_err(|e| Error::Format(format!("bad layer name: {e}")))?;
+        let kind = Kind::from_code(c.u8()?)?;
+        let nd = c.u8()? as usize;
+        let mut shape = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            shape.push(c.u32()? as usize);
+        }
+        let rows = c.u32()? as usize;
+        let cols = c.u32()? as usize;
+        let flags = c.u8()?;
+        let n = rows * cols;
+        let weights = c.f32_vec(n)?;
+        let fisher = if flags & 1 != 0 { Some(c.f32_vec(n)?) } else { None };
+        let hessian = if flags & 2 != 0 { Some(c.f32_vec(n)?) } else { None };
+        let bias = if flags & 4 != 0 {
+            let blen = c.u32()? as usize;
+            Some(c.f32_vec(blen)?)
+        } else {
+            None
+        };
+        let layer = Layer {
+            name,
+            kind,
+            shape,
+            rows,
+            cols,
+            weights,
+            fisher,
+            hessian,
+            bias,
+        };
+        layer.validate()?;
+        layers.push(layer);
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    Ok(Network { name, layers })
+}
+
+/// Write a [`Network`] to `.nwf` (used by tests and the `export` CLI verb).
+pub fn write_nwf(path: impl AsRef<Path>, net: &Network) -> Result<()> {
+    net.validate()?;
+    let mut body = Vec::new();
+    body.extend((net.layers.len() as u32).to_le_bytes());
+    for l in &net.layers {
+        body.extend((l.name.len() as u16).to_le_bytes());
+        body.extend(l.name.as_bytes());
+        body.push(l.kind.code());
+        body.push(l.shape.len() as u8);
+        for &d in &l.shape {
+            body.extend((d as u32).to_le_bytes());
+        }
+        body.extend((l.rows as u32).to_le_bytes());
+        body.extend((l.cols as u32).to_le_bytes());
+        let flags = (l.fisher.is_some() as u8)
+            | ((l.hessian.is_some() as u8) << 1)
+            | ((l.bias.is_some() as u8) << 2);
+        body.push(flags);
+        for &w in &l.weights {
+            body.extend(w.to_le_bytes());
+        }
+        if let Some(f) = &l.fisher {
+            for &x in f {
+                body.extend(x.to_le_bytes());
+            }
+        }
+        if let Some(h) = &l.hessian {
+            for &x in h {
+                body.extend(x.to_le_bytes());
+            }
+        }
+        if let Some(b) = &l.bias {
+            body.extend((b.len() as u32).to_le_bytes());
+            for &x in b {
+                body.extend(x.to_le_bytes());
+            }
+        }
+    }
+    let crc = crc32fast::hash(&body);
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&body)?;
+    f.write_all(&crc.to_le_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn sample_net() -> Network {
+        let mut rng = Pcg64::new(50);
+        let mk = |name: &str, kind: Kind, shape: Vec<usize>, rows, cols, rng: &mut Pcg64| Layer {
+            name: name.into(),
+            kind,
+            shape,
+            rows,
+            cols,
+            weights: rng.normal_vec(rows * cols, 0.1),
+            fisher: Some(rng.normal_vec(rows * cols, 1.0).iter().map(|x| x.abs()).collect()),
+            hessian: None,
+            bias: Some(rng.normal_vec(rows, 0.01)),
+        };
+        Network {
+            name: "sample".into(),
+            layers: vec![
+                mk("conv1", Kind::Conv, vec![3, 3, 1, 8], 8, 9, &mut rng),
+                mk("fc1", Kind::Dense, vec![72, 16], 16, 72, &mut rng),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("dcb_nwf_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sample.nwf");
+        let net = sample_net();
+        write_nwf(&p, &net).unwrap();
+        let back = read_nwf(&p).unwrap();
+        assert_eq!(back.name, "sample");
+        assert_eq!(back.layers.len(), 2);
+        for (a, b) in net.layers.iter().zip(&back.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.fisher, b.fisher);
+            assert_eq!(a.hessian, b.hessian);
+            assert_eq!(a.bias, b.bias);
+        }
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let dir = std::env::temp_dir().join("dcb_nwf_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.nwf");
+        write_nwf(&p, &sample_net()).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        raw[30] ^= 0x40;
+        std::fs::write(&p, &raw).unwrap();
+        assert!(matches!(read_nwf(&p), Err(Error::Format(_))));
+    }
+
+    #[test]
+    fn bad_magic() {
+        let dir = std::env::temp_dir().join("dcb_nwf_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.nwf");
+        std::fs::write(&p, b"XXXX0123456789").unwrap();
+        assert!(read_nwf(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_file() {
+        let dir = std::env::temp_dir().join("dcb_nwf_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.nwf");
+        write_nwf(&p, &sample_net()).unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &raw[..raw.len() / 2]).unwrap();
+        assert!(read_nwf(&p).is_err());
+    }
+}

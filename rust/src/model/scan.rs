@@ -1,0 +1,162 @@
+//! Scan-order transforms for weight matrices (paper §III-A scans row-major;
+//! this module provides the alternatives the ablation bench compares —
+//! CABAC's sig-context looks at the previous 2 symbols, so the scan order
+//! determines which "neighbours" the context sees).
+
+/// Supported scan orders over a rows×cols matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScanOrder {
+    /// Left-to-right, top-to-bottom (the paper's order).
+    RowMajor,
+    /// Top-to-bottom, left-to-right.
+    ColMajor,
+    /// Boustrophedon rows (alternate rows reversed — keeps spatial
+    /// adjacency at row boundaries).
+    Snake,
+    /// Anti-diagonal zig-zag (the JPEG/H.264 coefficient order).
+    Diagonal,
+}
+
+impl ScanOrder {
+    pub const ALL: [ScanOrder; 4] = [
+        ScanOrder::RowMajor,
+        ScanOrder::ColMajor,
+        ScanOrder::Snake,
+        ScanOrder::Diagonal,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScanOrder::RowMajor => "row-major",
+            ScanOrder::ColMajor => "col-major",
+            ScanOrder::Snake => "snake",
+            ScanOrder::Diagonal => "diagonal",
+        }
+    }
+
+    /// The permutation: output position k holds input index `perm[k]`
+    /// (input is row-major).
+    pub fn permutation(self, rows: usize, cols: usize) -> Vec<usize> {
+        let n = rows * cols;
+        match self {
+            ScanOrder::RowMajor => (0..n).collect(),
+            ScanOrder::ColMajor => {
+                let mut p = Vec::with_capacity(n);
+                for c in 0..cols {
+                    for r in 0..rows {
+                        p.push(r * cols + c);
+                    }
+                }
+                p
+            }
+            ScanOrder::Snake => {
+                let mut p = Vec::with_capacity(n);
+                for r in 0..rows {
+                    if r % 2 == 0 {
+                        for c in 0..cols {
+                            p.push(r * cols + c);
+                        }
+                    } else {
+                        for c in (0..cols).rev() {
+                            p.push(r * cols + c);
+                        }
+                    }
+                }
+                p
+            }
+            ScanOrder::Diagonal => {
+                let mut p = Vec::with_capacity(n);
+                for d in 0..rows + cols - 1 {
+                    // alternate direction per diagonal
+                    let cells: Vec<usize> = (0..rows)
+                        .filter_map(|r| {
+                            let c = d.checked_sub(r)?;
+                            (c < cols).then_some(r * cols + c)
+                        })
+                        .collect();
+                    if d % 2 == 0 {
+                        p.extend(cells.iter().rev());
+                    } else {
+                        p.extend(cells);
+                    }
+                }
+                p
+            }
+        }
+    }
+
+    /// Apply the scan: row-major data -> scan-ordered stream.
+    pub fn apply<T: Copy>(self, data: &[T], rows: usize, cols: usize) -> Vec<T> {
+        self.permutation(rows, cols)
+            .into_iter()
+            .map(|i| data[i])
+            .collect()
+    }
+
+    /// Invert the scan: scan-ordered stream -> row-major data.
+    pub fn invert<T: Copy + Default>(self, scanned: &[T], rows: usize, cols: usize) -> Vec<T> {
+        let perm = self.permutation(rows, cols);
+        let mut out = vec![T::default(); scanned.len()];
+        for (k, &i) in perm.iter().enumerate() {
+            out[i] = scanned[k];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn permutations_are_bijections() {
+        for order in ScanOrder::ALL {
+            for (r, c) in [(1, 1), (3, 5), (7, 2), (8, 8)] {
+                let mut p = order.permutation(r, c);
+                p.sort();
+                assert_eq!(p, (0..r * c).collect::<Vec<_>>(), "{order:?} {r}x{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_invert_roundtrip() {
+        let mut rng = Pcg64::new(9);
+        for order in ScanOrder::ALL {
+            let (r, c) = (13, 17);
+            let data: Vec<i32> = (0..r * c).map(|_| rng.below(100) as i32).collect();
+            let scanned = order.apply(&data, r, c);
+            assert_eq!(order.invert(&scanned, r, c), data, "{order:?}");
+        }
+    }
+
+    #[test]
+    fn row_major_is_identity() {
+        let data = vec![1, 2, 3, 4, 5, 6];
+        assert_eq!(ScanOrder::RowMajor.apply(&data, 2, 3), data);
+    }
+
+    #[test]
+    fn col_major_transposes() {
+        let data = vec![1, 2, 3, 4, 5, 6]; // 2x3
+        assert_eq!(ScanOrder::ColMajor.apply(&data, 2, 3), vec![1, 4, 2, 5, 3, 6]);
+    }
+
+    #[test]
+    fn snake_reverses_odd_rows() {
+        let data = vec![1, 2, 3, 4, 5, 6]; // 2x3
+        assert_eq!(ScanOrder::Snake.apply(&data, 2, 3), vec![1, 2, 3, 6, 5, 4]);
+    }
+
+    #[test]
+    fn diagonal_visits_adjacent_diagonals() {
+        let data: Vec<i32> = (0..9).collect(); // 3x3
+        let scanned = ScanOrder::Diagonal.apply(&data, 3, 3);
+        assert_eq!(scanned[0], 0);
+        // all 9 cells present
+        let mut s = scanned.clone();
+        s.sort();
+        assert_eq!(s, data);
+    }
+}

@@ -1,0 +1,437 @@
+//! Weighted (entropy-penalized) Lloyd algorithm — paper Alg. 4, §II-C.1.
+//!
+//! Quantizes the network *as a whole* (all layers share one codebook, unlike
+//! uniform quantization which is layer-wise — App. A-A).  The assignment
+//! step minimizes `F_i (w_i - C_j)^2 - λ log2 P_j` where P_j is the EPMD of
+//! the clusters; the update step recomputes importance-weighted centroids;
+//! empty clusters are re-seeded at 0 (Alg. 4 lines 14–16).
+
+use crate::model::{Importance, Network};
+
+/// Result of a Lloyd run: codebook + per-weight assignment.
+#[derive(Clone, Debug)]
+pub struct LloydResult {
+    pub centers: Vec<f32>,
+    /// Cluster index per weight, flat scan order.
+    pub assignment: Vec<u32>,
+    /// EPMD of the clusters at convergence.
+    pub probs: Vec<f64>,
+    /// Final Lagrangian objective J_λ.
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+/// Run weighted Lloyd over flat weights/importances.
+///
+/// `k` clusters, Lagrange multiplier `lambda`, stops when the objective
+/// improves by < `tol` (relative) or after `max_iter` iterations.
+pub fn weighted_lloyd(
+    weights: &[f32],
+    importance: &[f32],
+    k: usize,
+    lambda: f64,
+    max_iter: usize,
+    tol: f64,
+) -> LloydResult {
+    assert_eq!(weights.len(), importance.len());
+    assert!(k >= 2);
+    let n = weights.len();
+    if n == 0 {
+        return LloydResult {
+            centers: vec![0.0; k],
+            assignment: vec![],
+            probs: vec![1.0 / k as f64; k],
+            objective: 0.0,
+            iterations: 0,
+        };
+    }
+
+    // Init: uniform spread over the range, with one center pinned at 0
+    // (weight EPMDs peak at 0, Fig. 6 — this also makes sparse models
+    // converge much faster).
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &w in weights {
+        lo = lo.min(w);
+        hi = hi.max(w);
+    }
+    if !(lo.is_finite() && hi.is_finite()) || lo == hi {
+        lo = -1.0;
+        hi = 1.0;
+    }
+    let mut centers: Vec<f32> = (0..k)
+        .map(|j| lo + (hi - lo) * j as f32 / (k - 1) as f32)
+        .collect();
+    // Pin the center nearest zero to exactly zero.
+    let zi = nearest_center(&centers, 0.0);
+    centers[zi] = 0.0;
+
+    let mut probs = vec![1.0 / k as f64; k];
+    let mut assignment = vec![0u32; n];
+    let mut prev_obj = f64::INFINITY;
+    let mut iterations = 0;
+
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // --- assignment step ---
+        let rate_cost: Vec<f64> = probs
+            .iter()
+            .map(|&p| -lambda * p.max(1e-12).log2())
+            .collect();
+        let mut obj = 0f64;
+        for i in 0..n {
+            let (w, f) = (weights[i] as f64, importance[i] as f64);
+            let mut best = f64::INFINITY;
+            let mut best_j = 0usize;
+            for (j, &c) in centers.iter().enumerate() {
+                let d = w - c as f64;
+                let cost = f * d * d + rate_cost[j];
+                if cost < best {
+                    best = cost;
+                    best_j = j;
+                }
+            }
+            assignment[i] = best_j as u32;
+            obj += best;
+        }
+        // --- update step ---
+        let mut wsum = vec![0f64; k];
+        let mut fsum = vec![0f64; k];
+        let mut count = vec![0usize; k];
+        for i in 0..n {
+            let j = assignment[i] as usize;
+            wsum[j] += importance[i] as f64 * weights[i] as f64;
+            fsum[j] += importance[i] as f64;
+            count[j] += 1;
+        }
+        for j in 0..k {
+            if count[j] == 0 {
+                centers[j] = 0.0; // Alg. 4: re-seed empty cluster at 0
+            } else if fsum[j] > 0.0 {
+                centers[j] = (wsum[j] / fsum[j]) as f32;
+            }
+            probs[j] = count[j] as f64 / n as f64;
+        }
+        // Keep an exact-zero representative (sparse models' pruned weights
+        // must survive roundtrip exactly; an all-weighted centroid can
+        // drift off 0 by float dust).
+        let zi = nearest_center(&centers, 0.0);
+        if centers[zi].abs() < 1e-3 {
+            centers[zi] = 0.0;
+        }
+
+        let converged = (prev_obj - obj).abs() <= tol * prev_obj.abs().max(1e-12);
+        prev_obj = obj;
+        if converged {
+            break;
+        }
+    }
+
+    // Final assignment against the *final* centers/probs (the loop updates
+    // centers after assigning, so the last assignment would otherwise be
+    // stale w.r.t. the returned codebook).
+    {
+        let rate_cost: Vec<f64> = probs
+            .iter()
+            .map(|&p| -lambda * p.max(1e-12).log2())
+            .collect();
+        let mut obj = 0f64;
+        for i in 0..n {
+            let (w, f) = (weights[i] as f64, importance[i] as f64);
+            let mut best = f64::INFINITY;
+            let mut best_j = 0usize;
+            for (j, &c) in centers.iter().enumerate() {
+                let d = w - c as f64;
+                let cost = f * d * d + rate_cost[j];
+                if cost < best {
+                    best = cost;
+                    best_j = j;
+                }
+            }
+            assignment[i] = best_j as u32;
+            obj += best;
+        }
+        prev_obj = obj;
+    }
+
+    LloydResult {
+        centers,
+        assignment,
+        probs,
+        objective: prev_obj,
+        iterations,
+    }
+}
+
+fn nearest_center(centers: &[f32], x: f32) -> usize {
+    let mut best = 0usize;
+    let mut bd = f32::INFINITY;
+    for (j, &c) in centers.iter().enumerate() {
+        let d = (c - x).abs();
+        if d < bd {
+            bd = d;
+            best = j;
+        }
+    }
+    best
+}
+
+/// Quantize a network with weighted Lloyd and produce per-layer quantized
+/// views whose "ints" are **signed codebook symbols** (centers sorted by
+/// value, index relative to the zero-nearest center).  This lets the same
+/// CABAC/Huffman/bzip2 lossless back-ends consume Lloyd output (Table III);
+/// reconstruction uses the explicit codebook, not Δ·I.
+pub struct LloydQuantizedNetwork {
+    pub result: LloydResult,
+    /// Signed symbol per weight (flat scan order).
+    pub symbols: Vec<i32>,
+    /// Sorted codebook; `symbol s` maps to `sorted_centers[(s + zero_idx)]`.
+    pub sorted_centers: Vec<f32>,
+    pub zero_idx: usize,
+}
+
+pub fn lloyd_quantize_network(
+    net: &Network,
+    importance: Importance,
+    k: usize,
+    lambda: f64,
+) -> LloydQuantizedNetwork {
+    let f = net.flat_importance(importance);
+    lloyd_quantize_network_custom(net, f, k, lambda)
+}
+
+/// Like [`lloyd_quantize_network`] but with an explicit importance vector,
+/// normalized to mean 1 — this makes one lambda grid comparable across
+/// importance measures whose raw scales differ by orders of magnitude
+/// (the Fig. 8 protocol: curves are compared in (rate, accuracy) space).
+pub fn lloyd_quantize_network_custom(
+    net: &Network,
+    mut f: Vec<f32>,
+    k: usize,
+    lambda: f64,
+) -> LloydQuantizedNetwork {
+    let w = net.flat_weights();
+    let mean = (f.iter().map(|&x| x as f64).sum::<f64>() / f.len().max(1) as f64) as f32;
+    if mean > 0.0 {
+        for x in &mut f {
+            *x /= mean;
+        }
+    }
+    let result = weighted_lloyd(&w, &f, k, lambda, 60, 1e-5);
+
+    // Sort + DEDUPLICATE centers (empty-cluster reseeding leaves several
+    // exact-0 centers; without merging, identical values would get distinct
+    // symbols and the dominant zero mass would land off symbol 0, wrecking
+    // every entropy coder downstream), then remap assignments to signed
+    // symbols around the zero-nearest center.
+    let mut order: Vec<usize> = (0..result.centers.len()).collect();
+    order.sort_by(|&a, &b| result.centers[a].total_cmp(&result.centers[b]));
+    let mut sorted_centers: Vec<f32> = Vec::with_capacity(order.len());
+    let mut rank = vec![0usize; result.centers.len()];
+    for &j in &order {
+        let c = result.centers[j];
+        if sorted_centers.last() != Some(&c) {
+            sorted_centers.push(c);
+        }
+        rank[j] = sorted_centers.len() - 1;
+    }
+    let zero_idx = nearest_center(&sorted_centers, 0.0);
+    let symbols: Vec<i32> = result
+        .assignment
+        .iter()
+        .map(|&a| rank[a as usize] as i32 - zero_idx as i32)
+        .collect();
+    LloydQuantizedNetwork {
+        result,
+        symbols,
+        sorted_centers,
+        zero_idx,
+    }
+}
+
+impl LloydQuantizedNetwork {
+    /// Dequantize the flat weight vector.
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.symbols
+            .iter()
+            .map(|&s| self.sorted_centers[(s + self.zero_idx as i32) as usize])
+            .collect()
+    }
+
+    /// Split the flat symbol stream back into per-layer [`QuantizedLayer`]s
+    /// carrying a synthetic Δ=1 (reconstruction must use the codebook; these
+    /// views exist so the lossless coders can consume per-layer streams).
+    pub fn per_layer_symbols(&self, net: &Network) -> Vec<Vec<i32>> {
+        let mut out = Vec::with_capacity(net.layers.len());
+        let mut off = 0usize;
+        for l in &net.layers {
+            out.push(self.symbols[off..off + l.len()].to_vec());
+            off += l.len();
+        }
+        out
+    }
+
+    /// Reconstruct a dequantized network (for accuracy evaluation).
+    pub fn reconstruct(&self, net: &Network) -> Network {
+        let deq = self.dequantize();
+        let mut layers = Vec::with_capacity(net.layers.len());
+        let mut off = 0usize;
+        for l in &net.layers {
+            let mut nl = l.clone();
+            nl.weights = deq[off..off + l.len()].to_vec();
+            nl.fisher = None;
+            nl.hessian = None;
+            off += l.len();
+            layers.push(nl);
+        }
+        Network {
+            name: net.name.clone(),
+            layers,
+        }
+    }
+
+    /// Codebook side-info size in bytes (centers as f32 + count).
+    pub fn codebook_bytes(&self) -> usize {
+        4 + self.sorted_centers.len() * 4
+    }
+
+    /// Turn into per-layer `QuantizedLayer`s for .dcb container storage is
+    /// intentionally NOT provided: .dcb is the uniform-grid format. Lloyd
+    /// output ships as codebook + symbol planes in benchmarks.
+    pub fn entropy_bits(&self) -> f64 {
+        crate::codecs::entropy::entropy_bits_per_symbol(&self.symbols)
+            * self.symbols.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn converges_on_mixture() {
+        // Three clear value clusters -> Lloyd with k=3 must find them.
+        let mut rng = Pcg64::new(80);
+        let mut w = Vec::new();
+        for &c in &[-0.5f32, 0.0, 0.7] {
+            for _ in 0..500 {
+                w.push(c + (rng.normal() as f32) * 0.01);
+            }
+        }
+        let f = vec![1.0f32; w.len()];
+        let r = weighted_lloyd(&w, &f, 3, 0.0, 50, 1e-7);
+        let mut c = r.centers.clone();
+        c.sort_by(f32::total_cmp);
+        assert!((c[0] + 0.5).abs() < 0.02, "{c:?}");
+        assert!(c[1].abs() < 0.02, "{c:?}");
+        assert!((c[2] - 0.7).abs() < 0.02, "{c:?}");
+    }
+
+    #[test]
+    fn lambda_shrinks_entropy() {
+        // Higher λ must not increase the assignment entropy (rate pressure
+        // concentrates mass on popular clusters).
+        let mut rng = Pcg64::new(81);
+        let w = rng.sparse_laplace_vec(20_000, 0.05, 0.5);
+        let f = vec![1.0f32; w.len()];
+        let h = |lambda: f64| {
+            let r = weighted_lloyd(&w, &f, 33, lambda, 40, 1e-6);
+            -r.probs
+                .iter()
+                .filter(|&&p| p > 0.0)
+                .map(|&p| p * p.log2())
+                .sum::<f64>()
+        };
+        let h0 = h(0.0);
+        let h1 = h(0.5);
+        assert!(h1 <= h0 + 1e-9, "H(λ=0)={h0} H(λ=0.5)={h1}");
+    }
+
+    #[test]
+    fn importance_pulls_centroids() {
+        // Two value groups; massively upweighting one must place a centroid
+        // (k=2) almost exactly on it.
+        let w = vec![0.1f32; 100]
+            .into_iter()
+            .chain(vec![0.2f32; 100])
+            .collect::<Vec<_>>();
+        let mut f = vec![1.0f32; 100];
+        f.extend(vec![10_000.0f32; 100]);
+        let r = weighted_lloyd(&w, &f, 2, 0.0, 50, 1e-9);
+        let mut c = r.centers.clone();
+        c.sort_by(f32::total_cmp);
+        assert!((c[1] - 0.2).abs() < 1e-4, "{c:?}");
+    }
+
+    #[test]
+    fn empty_input() {
+        let r = weighted_lloyd(&[], &[], 4, 0.1, 10, 1e-6);
+        assert!(r.assignment.is_empty());
+    }
+
+    #[test]
+    fn zero_center_preserved_for_sparse() {
+        let mut rng = Pcg64::new(82);
+        let w = rng.sparse_laplace_vec(10_000, 0.08, 0.9);
+        let f = vec![1.0f32; w.len()];
+        // At lambda=0 (pure distortion) every pruned zero must land on an
+        // exact-zero center (several can exist: empty clusters re-seed at 0,
+        // Alg. 4 lines 14-16).  With lambda>0 the rate term may prefer a
+        // near-zero popular center — that is RD-correct, so we only check
+        // the strict invariant at lambda=0.
+        let r = weighted_lloyd(&w, &f, 17, 0.0, 40, 1e-6);
+        assert!(r.centers.iter().any(|&c| c == 0.0), "no exact-zero center");
+        for (i, &wi) in w.iter().enumerate() {
+            if wi == 0.0 {
+                assert_eq!(r.centers[r.assignment[i] as usize], 0.0);
+            }
+        }
+        // lambda>0: zeros stay within codebook dust of zero.
+        let r = weighted_lloyd(&w, &f, 17, 0.01, 40, 1e-6);
+        for (i, &wi) in w.iter().enumerate() {
+            if wi == 0.0 {
+                assert!(r.centers[r.assignment[i] as usize].abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn network_symbol_roundtrip() {
+        use crate::model::{Kind, Layer};
+        let mut rng = Pcg64::new(83);
+        let weights = rng.sparse_laplace_vec(4000, 0.05, 0.6);
+        let net = Network {
+            name: "t".into(),
+            layers: vec![Layer {
+                name: "fc".into(),
+                kind: Kind::Dense,
+                shape: vec![80, 50],
+                rows: 50,
+                cols: 80,
+                weights: weights.clone(),
+                fisher: None,
+                hessian: None,
+                bias: None,
+            }],
+        };
+        let q = lloyd_quantize_network(&net, Importance::Ones, 33, 0.002);
+        let deq = q.dequantize();
+        assert_eq!(deq.len(), weights.len());
+        // Every dequantized value must be a codebook entry, and the
+        // per-layer split must re-concatenate to the flat stream.
+        for &v in &deq {
+            assert!(q.sorted_centers.iter().any(|&c| c == v));
+        }
+        let per = q.per_layer_symbols(&net);
+        assert_eq!(per.len(), 1);
+        assert_eq!(per[0], q.symbols);
+        // MSE bounded by codebook resolution.
+        let mse: f64 = weights
+            .iter()
+            .zip(&deq)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / weights.len() as f64;
+        assert!(mse < 1e-3, "{mse}");
+    }
+}

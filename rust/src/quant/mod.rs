@@ -1,0 +1,16 @@
+//! Lossy quantization (paper §II-C, §III-C): the assignment map Q and
+//! reconstruction map Q^{-1} family.
+//!
+//!  * [`uniform`]  — nearest-neighbour onto a per-layer uniform grid (Alg. 5).
+//!  * [`lloyd`]    — weighted, entropy-penalized Lloyd (Alg. 4).
+//!  * [`rd`]       — DeepCABAC's RDOQ under the CABAC bit estimator (eq. 11).
+//!  * [`stepsize`] — DC-v1 (eq. 12) / DC-v2 step-size rules and search grids.
+
+pub mod lloyd;
+pub mod rd;
+pub mod stepsize;
+pub mod uniform;
+
+pub use lloyd::{lloyd_quantize_network, weighted_lloyd, LloydResult};
+pub use rd::{rd_quantize_layer, rd_quantize_network, RdParams};
+pub use stepsize::{dc_v1_delta, dc_v1_importance, dc_v2_delta_grid};

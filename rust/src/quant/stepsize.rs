@@ -1,0 +1,191 @@
+//! Step-size selection: DC-v1 (paper eq. 12) and DC-v2 (App. A-E grids).
+//!
+//! * **DC-v1** derives a *per-layer* Δ from the layer's weight range and the
+//!   minimum robustness σ_min = min_i 1/sqrt(F_i), controlled by one global
+//!   coarseness hyper-parameter S (eq. 12).  Quantization then weights
+//!   distortion by F_i = 1/σ_i².
+//! * **DC-v2** searches one *global* Δ from a log-spaced candidate grid
+//!   (App. A-E), with F_i = 1 — cheaper (no FIM estimation) and able to
+//!   explore a larger Δ range, which is why it often wins on dense nets
+//!   (paper §V-B).
+
+use crate::model::Layer;
+
+/// The S grid from paper App. A-D.
+pub const DC_V1_S_GRID: &[f32] = &[
+    0.0, 8.0, 16.0, 32.0, 64.0, 96.0, 128.0, 160.0, 172.0, 192.0, 256.0,
+];
+
+/// λ grid for DC-v1 (App. A-D): 0.0001 · 2^(log2(100) · i/100), i = 0..99 —
+/// we subsample to keep the default sweep tractable (full grid available
+/// via [`dc_v1_lambda_grid`]).
+pub fn dc_v1_lambda_grid(points: usize) -> Vec<f32> {
+    let n = points.max(2);
+    (0..n)
+        .map(|i| 1e-4 * 2f32.powf(100f32.log2() * i as f32 / (n - 1) as f32))
+        .collect()
+}
+
+/// λ grid for DC-v2 (App. A-E): 0.01 + 0.001·i, i = 0..=20.
+pub fn dc_v2_lambda_grid(points: usize) -> Vec<f32> {
+    let n = points.max(2);
+    (0..n)
+        .map(|i| 0.01 + 0.02 * i as f32 / (n - 1) as f32)
+        .collect()
+}
+
+/// Δ candidate grid for DC-v2 (App. A-E): log-spaced 0.001..0.15 plus the
+/// linear top-up band 0.064..0.128.
+pub fn dc_v2_delta_grid(log_points: usize, lin_points: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..log_points.max(2))
+        .map(|i| {
+            0.001
+                * 2f32.powf(
+                    (0.15f32 / 0.001).log2() * i as f32 / (log_points.max(2) - 1) as f32,
+                )
+        })
+        .collect();
+    v.extend((0..lin_points.max(2)).map(|i| {
+        0.064
+            * 2f32.powf((0.128f32 / 0.064).log2() * i as f32 / (lin_points.max(2) - 1) as f32)
+    }));
+    v.sort_by(f32::total_cmp);
+    v.dedup();
+    v
+}
+
+/// The Δ²-normalized λ grid the coordinator sweeps for both DC methods
+/// (see `quant::rd::rd_quantize_network` for the normalization rationale):
+/// 0 plus a log sweep covering gentle borderline-shifting (λ·Δ² ≈ mild)
+/// through aggressive RD sparsification.
+pub fn rd_lambda_grid(points: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32];
+    let n = points.max(2) - 1;
+    for i in 0..n {
+        // log-spaced 0.125 .. 16 (beyond ~16 the accuracy collapses on
+        // every model in the zoo; below 0.125 the rate term is inert)
+        v.push(0.125 * 2f32.powf(7.0 * i as f32 / (n.max(2) - 1) as f32));
+    }
+    v
+}
+
+/// σ_min of a layer from its Fisher diagonal: σ_i = 1/sqrt(F_i).
+pub fn sigma_min(fisher: &[f32]) -> f32 {
+    let f_max = fisher.iter().fold(0f32, |m, &f| m.max(f));
+    if f_max <= 0.0 {
+        1.0
+    } else {
+        1.0 / f_max.sqrt()
+    }
+}
+
+/// DC-v1 per-layer step-size, eq. (12):
+/// Δ = 2|w_max| / (2|w_max|/σ_min + S).
+pub fn dc_v1_delta(layer: &Layer, s: f32) -> f32 {
+    let w_max = layer.max_abs();
+    if w_max == 0.0 {
+        return 1.0;
+    }
+    let sig_min = layer
+        .fisher
+        .as_deref()
+        .map(sigma_min)
+        .unwrap_or(w_max / 128.0);
+    2.0 * w_max / (2.0 * w_max / sig_min + s)
+}
+
+/// Per-weight F_i for DC-v1: the Fisher diagonal itself, normalized so the
+/// *median* F is 1 — eq. (11) is scale-invariant in (F, λ) jointly, and
+/// normalizing makes one λ grid work across layers/models.
+pub fn dc_v1_importance(layer: &Layer) -> Vec<f32> {
+    match &layer.fisher {
+        None => vec![1.0; layer.len()],
+        Some(f) => {
+            let mut sorted: Vec<f32> = f.iter().copied().filter(|x| x.is_finite()).collect();
+            if sorted.is_empty() {
+                return vec![1.0; layer.len()];
+            }
+            sorted.sort_by(f32::total_cmp);
+            let med = sorted[sorted.len() / 2].max(1e-20);
+            f.iter().map(|&x| (x / med).clamp(1e-6, 1e6)).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Kind;
+
+    fn layer_with(fisher: Option<Vec<f32>>, weights: Vec<f32>) -> Layer {
+        let n = weights.len();
+        Layer {
+            name: "t".into(),
+            kind: Kind::Dense,
+            shape: vec![n, 1],
+            rows: 1,
+            cols: n,
+            weights,
+            fisher,
+            hessian: None,
+            bias: None,
+        }
+    }
+
+    #[test]
+    fn eq12_matches_hand_computation() {
+        // w_max = 0.5, F = [4, 1] -> sigma = [0.5, 1] -> sigma_min = 0.5.
+        // S = 16: delta = 1.0 / (1/0.5 + 16) = 1/18.
+        let l = layer_with(Some(vec![4.0, 1.0]), vec![0.5, -0.1]);
+        let d = dc_v1_delta(&l, 16.0);
+        assert!((d - 1.0 / 18.0).abs() < 1e-6, "{d}");
+    }
+
+    #[test]
+    fn s_zero_gives_sigma_bound() {
+        // S=0 -> delta = sigma_min: quantization step within the least
+        // robust parameter's standard deviation (paper's design point).
+        let l = layer_with(Some(vec![4.0, 1.0]), vec![0.5, -0.1]);
+        assert!((dc_v1_delta(&l, 0.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn larger_s_means_finer_grid() {
+        let l = layer_with(Some(vec![100.0, 1.0]), vec![0.3, -0.2]);
+        let mut prev = f32::INFINITY;
+        for &s in DC_V1_S_GRID {
+            let d = dc_v1_delta(&l, s);
+            assert!(d <= prev);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn grids_are_sane() {
+        let lam1 = dc_v1_lambda_grid(10);
+        assert_eq!(lam1.len(), 10);
+        assert!((lam1[0] - 1e-4).abs() < 1e-9);
+        assert!((lam1[9] - 1e-2).abs() < 1e-6);
+        let lam2 = dc_v2_lambda_grid(21);
+        assert!((lam2[0] - 0.01).abs() < 1e-9);
+        assert!((lam2[20] - 0.03).abs() < 1e-7);
+        let d = dc_v2_delta_grid(20, 8);
+        assert!(d.windows(2).all(|w| w[0] < w[1]));
+        assert!(d[0] >= 0.0009 && *d.last().unwrap() <= 0.151);
+    }
+
+    #[test]
+    fn importance_normalized_median_one() {
+        let l = layer_with(Some(vec![0.1, 1.0, 10.0, 100.0, 1000.0]), vec![0.0; 5]);
+        let imp = dc_v1_importance(&l);
+        let mut s = imp.clone();
+        s.sort_by(f32::total_cmp);
+        assert!((s[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn importance_fallback_without_fisher() {
+        let l = layer_with(None, vec![0.1, 0.2]);
+        assert_eq!(dc_v1_importance(&l), vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Uniform (nearest-neighbour) quantization — paper Alg. 5 / App. A-A.
+//!
+//! K quantization points spread uniformly over the *per-layer* value range,
+//! then nearest-neighbour assignment.  This is the paper's "Uniform"
+//! baseline column (Tables I–III): no importance weighting, no rate term,
+//! quantized layer-wise (unlike weighted Lloyd, which is whole-network).
+
+use crate::model::{Network, QuantizedLayer};
+
+/// Step-size that spreads `clusters` points over [-max_abs, +max_abs]
+/// (clusters is rounded up to the next odd count so 0 is representable —
+/// trained weight distributions peak at 0, Fig. 6).
+pub fn delta_for_clusters(max_abs: f32, clusters: u32) -> f32 {
+    let k = clusters.max(3);
+    let half = (k - 1) / 2; // points: -half..=half
+    if max_abs == 0.0 {
+        return 1.0; // degenerate all-zero layer; any delta works
+    }
+    max_abs / half as f32
+}
+
+/// Nearest-neighbour assignment of one layer onto the grid Δ·I, |I| ≤ half.
+pub fn assign_nearest(weights: &[f32], delta: f32, half: i32) -> Vec<i32> {
+    weights
+        .iter()
+        .map(|&w| {
+            let i = (w / delta).round() as i64;
+            i.clamp(-(half as i64), half as i64) as i32
+        })
+        .collect()
+}
+
+/// Quantize a whole network layer-wise with `clusters` points per layer.
+pub fn quantize_network(net: &Network, clusters: u32) -> Vec<QuantizedLayer> {
+    net.layers
+        .iter()
+        .map(|l| {
+            let delta = delta_for_clusters(l.max_abs(), clusters);
+            let half = ((clusters.max(3) - 1) / 2) as i32;
+            QuantizedLayer {
+                name: l.name.clone(),
+                kind: l.kind,
+                shape: l.shape.clone(),
+                rows: l.rows,
+                cols: l.cols,
+                ints: assign_nearest(&l.weights, delta, half),
+                delta,
+                bias: l.bias.clone(),
+            }
+        })
+        .collect()
+}
+
+/// Quantize with an explicit global step-size (Table II protocol).
+pub fn quantize_network_with_delta(net: &Network, delta: f32, half: i32) -> Vec<QuantizedLayer> {
+    net.layers
+        .iter()
+        .map(|l| QuantizedLayer {
+            name: l.name.clone(),
+            kind: l.kind,
+            shape: l.shape.clone(),
+            rows: l.rows,
+            cols: l.cols,
+            ints: assign_nearest(&l.weights, delta, half),
+            delta,
+            bias: l.bias.clone(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Kind;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn delta_covers_range() {
+        let d = delta_for_clusters(1.0, 255);
+        assert!((d - 1.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn zero_layer_degenerate() {
+        assert_eq!(delta_for_clusters(0.0, 255), 1.0);
+    }
+
+    #[test]
+    fn nearest_assignment_error_bounded() {
+        let mut rng = Pcg64::new(70);
+        let w = rng.normal_vec(10_000, 0.1);
+        let max_abs = w.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let delta = delta_for_clusters(max_abs, 255);
+        let ints = assign_nearest(&w, delta, 127);
+        for (&wi, &ii) in w.iter().zip(&ints) {
+            let q = ii as f32 * delta;
+            assert!(
+                (wi - q).abs() <= delta / 2.0 + 1e-6,
+                "w={wi} q={q} delta={delta}"
+            );
+        }
+    }
+
+    #[test]
+    fn clamps_outliers() {
+        let ints = assign_nearest(&[100.0, -100.0], 0.1, 7);
+        assert_eq!(ints, vec![7, -7]);
+    }
+
+    #[test]
+    fn exact_zero_maps_to_zero() {
+        // Sparse models: pruned zeros must stay exactly zero.
+        let ints = assign_nearest(&[0.0, 0.0, 0.049, -0.049], 0.1, 127);
+        assert_eq!(ints, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn per_layer_deltas_differ() {
+        let mk = |name: &str, scale: f32| crate::model::Layer {
+            name: name.into(),
+            kind: Kind::Dense,
+            shape: vec![4, 2],
+            rows: 2,
+            cols: 4,
+            weights: vec![scale, -scale, scale / 2.0, 0.0, 0.1 * scale, 0.0, 0.0, 0.0],
+            fisher: None,
+            hessian: None,
+            bias: None,
+        };
+        let net = Network {
+            name: "t".into(),
+            layers: vec![mk("a", 1.0), mk("b", 0.01)],
+        };
+        let q = quantize_network(&net, 255);
+        assert!(q[0].delta > q[1].delta * 50.0);
+    }
+}

@@ -1,0 +1,98 @@
+//! Accuracy evaluation of (possibly quantized) networks through the AOT
+//! eval graphs — the paper's accuracy oracle (§III-A step 5).
+
+use super::pjrt::{Engine, EVAL_BATCH};
+use crate::data::Dataset;
+use crate::model::Network;
+use crate::util::{Error, Result};
+
+/// Engine + dataset bundled into an accuracy oracle.
+pub struct Evaluator {
+    pub engine: Engine,
+    pub dataset: Dataset,
+}
+
+impl Evaluator {
+    pub fn new(engine: Engine, dataset: Dataset) -> Self {
+        Self { engine, dataset }
+    }
+
+    /// Top-1 accuracy of `net` (its `name` selects the eval graph family —
+    /// a `<arch>_sparse` network evaluates through `eval_<arch>`).
+    pub fn accuracy(&self, net: &Network) -> Result<f64> {
+        let arch = net.name.trim_end_matches("_sparse");
+        let mats: Vec<(&[f32], usize, usize)> = net
+            .layers
+            .iter()
+            .map(|l| (l.weights.as_slice(), l.rows, l.cols))
+            .collect();
+        let biases: Vec<&[f32]> = net
+            .layers
+            .iter()
+            .map(|l| {
+                l.bias
+                    .as_deref()
+                    .ok_or_else(|| Error::Config(format!("layer {} missing bias", l.name)))
+            })
+            .collect::<Result<_>>()?;
+        let d = &self.dataset;
+        if d.n % EVAL_BATCH != 0 {
+            return Err(Error::Config(format!(
+                "dataset size {} not a multiple of eval batch {EVAL_BATCH}",
+                d.n
+            )));
+        }
+        let mut correct = 0usize;
+        for b in 0..d.n / EVAL_BATCH {
+            let x = d.batch_images(b * EVAL_BATCH, EVAL_BATCH);
+            let logits =
+                self.engine
+                    .eval_logits(arch, &mats, &biases, x, (d.h, d.w, d.c))?;
+            let labels = d.batch_labels(b * EVAL_BATCH, EVAL_BATCH);
+            correct += count_correct(&logits, labels, d.classes);
+        }
+        Ok(correct as f64 / d.n as f64)
+    }
+}
+
+/// Top-1 matches in a flat logits buffer.
+pub fn count_correct(logits: &[f32], labels: &[u8], classes: usize) -> usize {
+    logits
+        .chunks_exact(classes)
+        .zip(labels)
+        .filter(|(row, &y)| {
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            best == y as usize
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_correct_basic() {
+        // 3 samples, 4 classes
+        let logits = vec![
+            0.1, 0.9, 0.0, 0.0, // -> 1
+            5.0, 1.0, 2.0, 3.0, // -> 0
+            0.0, 0.0, 0.1, 0.2, // -> 3
+        ];
+        assert_eq!(count_correct(&logits, &[1, 0, 3], 4), 3);
+        assert_eq!(count_correct(&logits, &[1, 1, 1], 4), 1);
+        assert_eq!(count_correct(&logits, &[0, 1, 2], 4), 0);
+    }
+
+    #[test]
+    fn count_correct_tie_prefers_first() {
+        let logits = vec![0.5, 0.5];
+        assert_eq!(count_correct(&logits, &[0], 2), 1);
+        assert_eq!(count_correct(&logits, &[1], 2), 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT HLO-text artifacts (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`), evaluate
+//! network accuracy, and run the Pallas RDOQ kernel from the Rust hot path.
+//!
+//!  * [`pjrt`]    — the engine + compile cache (thread-pinned).
+//!  * [`eval`]    — the accuracy oracle over the `.nds` dataset.
+//!  * [`service`] — channel-fronted runtime thread for multi-threaded
+//!    coordinators (the engine is not `Send`).
+
+pub mod eval;
+pub mod pjrt;
+pub mod service;
+
+pub use eval::Evaluator;
+pub use pjrt::{Engine, EVAL_BATCH, KERNEL_HALF, KERNEL_K, KERNEL_N};
+pub use service::{EvalService, EvalServiceHost};

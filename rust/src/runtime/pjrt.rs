@@ -1,0 +1,173 @@
+//! PJRT engine: loads AOT HLO-text artifacts, compiles them once on the CPU
+//! client, and executes them from the Rust hot path.
+//!
+//! Interchange is HLO **text** (`eval_<model>.hlo.txt`, `rd_assign.hlo.txt`,
+//! `dequant.hlo.txt`): jax >= 0.5 emits serialized protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so an [`Engine`] is pinned to
+//! one thread; multi-threaded callers go through
+//! [`super::service::EvalService`].
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::util::{Error, Result};
+
+/// Grid half-width supported by the AOT rd_assign kernel (K = 1025).
+pub const KERNEL_K: usize = 1025;
+pub const KERNEL_HALF: i32 = (KERNEL_K as i32 - 1) / 2;
+/// Chunk length the kernel was lowered for.
+pub const KERNEL_N: usize = 16384;
+/// Eval graph batch size (must match python/compile/aot.py EVAL_BATCH).
+pub const EVAL_BATCH: usize = 256;
+
+/// One-thread PJRT engine with a compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine rooted at the artifacts directory.
+    pub fn new(artifacts: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            artifacts: artifacts.as_ref().to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (cached) an HLO text artifact by file stem.
+    pub fn executable(&self, stem: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(stem) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts.join(format!("{stem}.hlo.txt"));
+        if !path.exists() {
+            return Err(Error::Config(format!(
+                "artifact {} not found — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Config("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(stem.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute the eval graph of `model`: `mats` are (data, rows, cols) in
+    /// scan order, `biases` per layer, `x` one NHWC batch of EVAL_BATCH
+    /// images.  Returns the flat logits (EVAL_BATCH × classes).
+    pub fn eval_logits(
+        &self,
+        model: &str,
+        mats: &[(&[f32], usize, usize)],
+        biases: &[&[f32]],
+        x: &[f32],
+        img_hw: (usize, usize, usize),
+    ) -> Result<Vec<f32>> {
+        let exe = self.executable(&format!("eval_{model}"))?;
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(mats.len() * 2 + 1);
+        for &(data, rows, cols) in mats {
+            debug_assert_eq!(data.len(), rows * cols);
+            args.push(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?);
+        }
+        for &b in biases {
+            args.push(xla::Literal::vec1(b));
+        }
+        let (h, w, c) = img_hw;
+        debug_assert_eq!(x.len(), EVAL_BATCH * h * w * c);
+        args.push(xla::Literal::vec1(x).reshape(&[
+            EVAL_BATCH as i64,
+            h as i64,
+            w as i64,
+            c as i64,
+        ])?);
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let logits = result.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+
+    /// Execute the AOT Pallas RDOQ kernel on one padded chunk
+    /// (length KERNEL_N; cost table length KERNEL_K).
+    pub fn rd_assign_chunk(
+        &self,
+        w: &[f32],
+        fim: &[f32],
+        delta: f32,
+        lambda: f32,
+        cost: &[f32],
+    ) -> Result<Vec<i32>> {
+        if w.len() != KERNEL_N || fim.len() != KERNEL_N || cost.len() != KERNEL_K {
+            return Err(Error::Config(format!(
+                "rd_assign_chunk expects n={KERNEL_N}, k={KERNEL_K}; got n={} k={}",
+                w.len(),
+                cost.len()
+            )));
+        }
+        let exe = self.executable("rd_assign")?;
+        let args = [
+            xla::Literal::vec1(w),
+            xla::Literal::vec1(fim),
+            xla::Literal::vec1(&[delta]),
+            xla::Literal::vec1(&[lambda]),
+            xla::Literal::vec1(cost),
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<i32>()?)
+    }
+
+    /// Execute the AOT dequant kernel on one padded chunk.
+    pub fn dequant_chunk(&self, idx: &[i32], delta: f32) -> Result<Vec<f32>> {
+        if idx.len() != KERNEL_N {
+            return Err(Error::Config(format!(
+                "dequant_chunk expects n={KERNEL_N}, got {}",
+                idx.len()
+            )));
+        }
+        let exe = self.executable("dequant")?;
+        let args = [xla::Literal::vec1(idx), xla::Literal::vec1(&[delta])];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// RDOQ an arbitrary-length weight vector through the device kernel,
+    /// padding the tail chunk (pad weights quantize to 0 and are dropped).
+    pub fn rd_assign(
+        &self,
+        w: &[f32],
+        fim: &[f32],
+        delta: f32,
+        lambda: f32,
+        cost: &[f32],
+    ) -> Result<Vec<i32>> {
+        let mut out = Vec::with_capacity(w.len());
+        for (wc, fc) in w.chunks(KERNEL_N).zip(fim.chunks(KERNEL_N)) {
+            if wc.len() == KERNEL_N {
+                out.extend(self.rd_assign_chunk(wc, fc, delta, lambda, cost)?);
+            } else {
+                let mut wp = wc.to_vec();
+                let mut fp = fc.to_vec();
+                wp.resize(KERNEL_N, 0.0);
+                fp.resize(KERNEL_N, 0.0);
+                let chunk = self.rd_assign_chunk(&wp, &fp, delta, lambda, cost)?;
+                out.extend(&chunk[..wc.len()]);
+            }
+        }
+        Ok(out)
+    }
+}

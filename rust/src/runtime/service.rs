@@ -1,0 +1,150 @@
+//! Evaluation service: a dedicated runtime thread owning the (non-`Send`)
+//! PJRT engine, fronted by a cloneable channel handle.
+//!
+//! This is the leader/worker split of the coordinator: grid-search workers
+//! (pure Rust, CPU-parallel) quantize + encode candidates, then submit
+//! reconstructed networks here for accuracy scoring.  The request channel is
+//! bounded — quantizers naturally outpace the eval graph, and the bound
+//! provides backpressure instead of unbounded queue growth.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::eval::Evaluator;
+use super::pjrt::Engine;
+use crate::data::Dataset;
+use crate::model::Network;
+use crate::util::{Error, Result};
+
+enum Request {
+    Accuracy {
+        net: Box<Network>,
+        reply: mpsc::Sender<Result<f64>>,
+    },
+    RdAssign {
+        w: Vec<f32>,
+        fim: Vec<f32>,
+        delta: f32,
+        lambda: f32,
+        cost: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<i32>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the runtime thread.
+#[derive(Clone)]
+pub struct EvalService {
+    tx: mpsc::SyncSender<Request>,
+}
+
+/// Owns the runtime thread; dropping it shuts the thread down.
+pub struct EvalServiceHost {
+    pub handle: EvalService,
+    join: Option<JoinHandle<()>>,
+    tx: mpsc::SyncSender<Request>,
+}
+
+impl EvalService {
+    /// Spawn the runtime thread.  `queue` bounds in-flight requests
+    /// (backpressure for the grid search).
+    pub fn spawn(artifacts: PathBuf, dataset_path: PathBuf, queue: usize) -> Result<EvalServiceHost> {
+        let (tx, rx) = mpsc::sync_channel::<Request>(queue.max(1));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-eval".into())
+            .spawn(move || {
+                let built: Result<Evaluator> = (|| {
+                    let engine = Engine::new(&artifacts)?;
+                    let dataset = Dataset::load(&dataset_path)?;
+                    Ok(Evaluator::new(engine, dataset))
+                })();
+                let evaluator = match built {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Accuracy { net, reply } => {
+                            let _ = reply.send(evaluator.accuracy(&net));
+                        }
+                        Request::RdAssign {
+                            w,
+                            fim,
+                            delta,
+                            lambda,
+                            cost,
+                            reply,
+                        } => {
+                            let _ = reply.send(
+                                evaluator.engine.rd_assign(&w, &fim, delta, lambda, &cost),
+                            );
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Config(format!("spawn eval thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Config("eval thread died during init".into()))??;
+        Ok(EvalServiceHost {
+            handle: EvalService { tx: tx.clone() },
+            join: Some(join),
+            tx,
+        })
+    }
+
+    /// Blocking accuracy request.
+    pub fn accuracy(&self, net: &Network) -> Result<f64> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Accuracy {
+                net: Box::new(net.clone()),
+                reply,
+            })
+            .map_err(|_| Error::Config("eval service down".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Config("eval service dropped reply".into()))?
+    }
+
+    /// Blocking device-kernel RDOQ request (Pallas rd_assign via PJRT).
+    pub fn rd_assign(
+        &self,
+        w: &[f32],
+        fim: &[f32],
+        delta: f32,
+        lambda: f32,
+        cost: &[f32],
+    ) -> Result<Vec<i32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::RdAssign {
+                w: w.to_vec(),
+                fim: fim.to_vec(),
+                delta,
+                lambda,
+                cost: cost.to_vec(),
+                reply,
+            })
+            .map_err(|_| Error::Config("eval service down".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Config("eval service dropped reply".into()))?
+    }
+}
+
+impl Drop for EvalServiceHost {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

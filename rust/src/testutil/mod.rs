@@ -1,0 +1,224 @@
+//! Mini property-testing framework (offline stand-in for proptest —
+//! DESIGN.md §6): seeded random generation, configurable case counts, and
+//! greedy input shrinking on failure.
+//!
+//! ```ignore
+//! testutil::check(200, gen_symbols, |case| prop_roundtrip(case));
+//! ```
+//! On failure the framework re-runs the predicate on progressively smaller
+//! inputs (halving slices) and panics with the smallest failing case's seed
+//! + length so the case can be replayed deterministically.
+
+use crate::util::Pcg64;
+
+/// Configuration for one property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 100,
+            seed: 0xDEC0DE,
+        }
+    }
+}
+
+/// Run `prop` on `cases` random inputs from `gen`.  Panics on the first
+/// failure with a replayable seed, after shrinking.
+pub fn check<T, G, P>(cfg: Config, mut gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: Fn(&T) -> bool,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg64::new(case_seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}): {:?}",
+                Summary(&input)
+            );
+        }
+    }
+}
+
+/// Like [`check`] but for slice-valued cases, with greedy shrinking: on
+/// failure, tries prefixes/suffixes/halves to find a minimal failing slice.
+pub fn check_slice<T, G, P>(cfg: Config, mut gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> Vec<T>,
+    P: Fn(&[T]) -> bool,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg64::new(case_seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink(&input, &prop);
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}), shrunk {} -> {} elems: {:?}",
+                input.len(),
+                minimal.len(),
+                &minimal[..minimal.len().min(32)]
+            );
+        }
+    }
+}
+
+/// Greedy bisection shrink: repeatedly drop halves/quarters while the
+/// property still fails.
+pub fn shrink<T: Clone, P: Fn(&[T]) -> bool>(input: &[T], prop: &P) -> Vec<T> {
+    let mut cur = input.to_vec();
+    loop {
+        let n = cur.len();
+        if n <= 1 {
+            return cur;
+        }
+        let mut improved = false;
+        // try dropping chunks of size n/2, n/4, ... 1
+        let mut chunk = n / 2;
+        while chunk >= 1 {
+            let mut start = 0;
+            while start < cur.len() {
+                let mut candidate = Vec::with_capacity(cur.len().saturating_sub(chunk));
+                candidate.extend_from_slice(&cur[..start]);
+                candidate.extend_from_slice(&cur[(start + chunk).min(cur.len())..]);
+                if candidate.len() < cur.len() && !prop(&candidate) {
+                    cur = candidate;
+                    improved = true;
+                    break;
+                }
+                start += chunk;
+            }
+            if improved {
+                break;
+            }
+            chunk /= 2;
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+struct Summary<'a, T>(&'a T);
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Summary<'_, T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = format!("{:?}", self.0);
+        if s.len() > 400 {
+            write!(f, "{}… ({} chars)", &s[..400], s.len())
+        } else {
+            write!(f, "{s}")
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::util::Pcg64;
+
+    /// Sparse integer symbol plane, DeepCABAC's working distribution.
+    pub fn sparse_symbols(rng: &mut Pcg64) -> Vec<i32> {
+        let n = rng.below(3000) as usize;
+        let zero_p = rng.uniform(0.2, 0.95);
+        let mag = 1 + rng.below(100) as i32;
+        (0..n)
+            .map(|_| {
+                if rng.next_f64() < zero_p {
+                    0
+                } else {
+                    let m = 1 + (rng.next_f64() * rng.next_f64() * mag as f64) as i32;
+                    if rng.next_f64() < 0.5 {
+                        -m
+                    } else {
+                        m
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Arbitrary (including extreme) integer streams.
+    pub fn wild_symbols(rng: &mut Pcg64) -> Vec<i32> {
+        let n = rng.below(800) as usize;
+        (0..n)
+            .map(|_| match rng.below(5) {
+                0 => 0,
+                1 => rng.below(10) as i32 - 5,
+                2 => rng.below(1000) as i32 - 500,
+                3 => rng.below(1_000_000) as i32 - 500_000,
+                _ => (rng.next_u32() as i32) / 4, // avoid i32::MIN overflow on abs
+            })
+            .collect()
+    }
+
+    /// Realistic weight vectors (sparse Laplacian).
+    pub fn weights(rng: &mut Pcg64) -> Vec<f32> {
+        let n = 1 + rng.below(4000) as usize;
+        let scale = rng.uniform(0.005, 0.3) as f32;
+        let zf = rng.uniform(0.0, 0.9);
+        rng.sparse_laplace_vec(n, scale, zf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check(
+            Config {
+                cases: 50,
+                seed: 1,
+            },
+            |rng| rng.below(100),
+            |&x| x < 100,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            Config {
+                cases: 50,
+                seed: 2,
+            },
+            |rng| rng.below(100),
+            |&x| x < 50,
+        );
+    }
+
+    #[test]
+    fn shrink_finds_small_case() {
+        // property: "no element equals 7" — shrink must reduce to [7].
+        let input: Vec<i32> = (0..100).collect();
+        let minimal = shrink(&input, &|s: &[i32]| !s.contains(&7));
+        assert_eq!(minimal, vec![7]);
+    }
+
+    #[test]
+    fn shrink_keeps_failing_invariant() {
+        // property fails iff sum > 50
+        let input = vec![10i32; 20];
+        let minimal = shrink(&input, &|s: &[i32]| s.iter().sum::<i32>() <= 50);
+        assert!(minimal.iter().sum::<i32>() > 50);
+        assert_eq!(minimal.len(), 6); // smallest multiple of 10 over 50
+    }
+
+    #[test]
+    fn generators_honour_seed() {
+        let mut a = Pcg64::new(99);
+        let mut b = Pcg64::new(99);
+        assert_eq!(gen::sparse_symbols(&mut a), gen::sparse_symbols(&mut b));
+    }
+}

@@ -1,0 +1,46 @@
+//! Small shared utilities: deterministic RNG, error type, math helpers.
+
+pub mod rng;
+
+pub use rng::Pcg64;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("format error: {0}")]
+    Format(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("decode error: {0}")]
+    Decode(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// log2 of a probability given as a fraction `num / den` — used by entropy
+/// calculations throughout; returns 0 contribution guards upstream.
+#[inline]
+pub fn log2(x: f64) -> f64 {
+    x.log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display() {
+        let e = Error::Format("bad magic".into());
+        assert!(e.to_string().contains("bad magic"));
+    }
+}

@@ -1,0 +1,165 @@
+//! Deterministic PCG-family RNG (no external crates; offline vendor set has
+//! no `rand`).  Used by tests, the property-test framework, and workload
+//! generators in benches.  Not cryptographic.
+
+/// PCG-XSH-RR 64/32 with 64-bit state extension via two streams (enough for
+/// our synthetic workloads; passes basic equidistribution sanity tests).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        let mut s = Self {
+            state: 0,
+            inc: (seed << 1) | 1,
+        };
+        s.next_u32();
+        s.state = s.state.wrapping_add(seed ^ 0x9E37_79B9_7F4A_7C15);
+        s.next_u32();
+        s
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's method without bias correction is fine for tests; add the
+        // rejection step anyway since it is cheap.
+        let mut x = self.next_u64();
+        let mut m = (x as u128 * n as u128) >> 64;
+        let mut l = x.wrapping_mul(n);
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128 * n as u128) >> 64;
+                l = x.wrapping_mul(n);
+            }
+        }
+        m as u64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.next_f64()).max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// A vector of N(0, sigma) f32 samples — synthetic "weight tensors".
+    pub fn normal_vec(&mut self, n: usize, sigma: f32) -> Vec<f32> {
+        (0..n).map(|_| (self.normal() as f32) * sigma).collect()
+    }
+
+    /// Laplacian-ish sparse weights: fraction `zero_frac` exact zeros, rest
+    /// double-exponential — mimics trained+pruned layer statistics (Fig. 6).
+    pub fn sparse_laplace_vec(&mut self, n: usize, scale: f32, zero_frac: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if self.next_f64() < zero_frac {
+                    0.0
+                } else {
+                    let u = self.next_f64() - 0.5;
+                    let mag = -(1.0 - 2.0 * u.abs()).max(1e-12).ln() as f32 * scale;
+                    if u < 0.0 {
+                        -mag
+                    } else {
+                        mag
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u32()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u32()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Pcg64::new(7);
+        let m: f64 = (0..10_000).map(|_| r.next_f64()).sum::<f64>() / 10_000.0;
+        assert!((m - 0.5).abs() < 0.02, "{m}");
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut r = Pcg64::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(11);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn sparse_laplace_zero_fraction() {
+        let mut r = Pcg64::new(13);
+        let v = r.sparse_laplace_vec(20_000, 0.1, 0.7);
+        let z = v.iter().filter(|&&x| x == 0.0).count() as f64 / v.len() as f64;
+        assert!((z - 0.7).abs() < 0.02, "{z}");
+    }
+}

@@ -1,0 +1,130 @@
+//! CLI integration: exercise the `deepcabac` binary end to end through
+//! std::process (compress → info → decompress → eval), the UX a downstream
+//! user actually touches.  Skipped when artifacts are absent.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> PathBuf {
+    // target/<profile>/deepcabac next to the test executable
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // profile dir
+    p.join("deepcabac")
+}
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("MANIFEST.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, _, err) = run(&[]);
+    assert!(!ok);
+    assert!(err.contains("usage"));
+}
+
+#[test]
+fn unknown_verb_fails() {
+    let (ok, _, err) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(err.contains("usage"));
+}
+
+#[test]
+fn missing_file_is_clean_error() {
+    let (ok, _, err) = run(&["info", "/nonexistent/model.nwf"]);
+    assert!(!ok);
+    assert!(err.contains("error:"));
+}
+
+#[test]
+fn compress_info_decompress_eval_roundtrip() {
+    let Some(art) = artifacts() else { return };
+    let dir = std::env::temp_dir().join("dcb_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let dcb = dir.join("m.dcb");
+    let nwf_out = dir.join("m_back.nwf");
+
+    let (ok, out, err) = run(&[
+        "compress",
+        art.join("lenet5.nwf").to_str().unwrap(),
+        "-o",
+        dcb.to_str().unwrap(),
+        "--delta",
+        "0.01",
+        "--lambda",
+        "1.0",
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("% of original"), "{out}");
+
+    let (ok, out, _) = run(&["info", dcb.to_str().unwrap()]);
+    assert!(ok);
+    assert!(out.contains("dcb v1"));
+    assert!(out.contains("conv1"));
+
+    let (ok, out, err) = run(&[
+        "decompress",
+        dcb.to_str().unwrap(),
+        "-o",
+        nwf_out.to_str().unwrap(),
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("4 layers"));
+
+    // Decompressed .nwf loads and matches the dcb's dequantized weights.
+    let net = deepcabac::model::read_nwf(&nwf_out).unwrap();
+    let raw = std::fs::read(&dcb).unwrap();
+    let comp = deepcabac::model::CompressedNetwork::from_bytes(&raw).unwrap();
+    for (l, q) in net.layers.iter().zip(&comp.layers) {
+        assert_eq!(l.weights, q.dequantize());
+    }
+
+    let (ok, out, err) = run(&[
+        "eval",
+        dcb.to_str().unwrap(),
+        "--artifacts",
+        art.to_str().unwrap(),
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("top-1"), "{out}");
+}
+
+#[test]
+fn eval_original_model() {
+    let Some(art) = artifacts() else { return };
+    let (ok, out, err) = run(&[
+        "eval",
+        art.join("lenet300.nwf").to_str().unwrap(),
+        "--artifacts",
+        art.to_str().unwrap(),
+    ]);
+    assert!(ok, "{err}");
+    // lenet300 trained to ~95%
+    let pct: f64 = out
+        .split("= ")
+        .nth(1)
+        .and_then(|s| s.trim_end().trim_end_matches('%').parse().ok())
+        .unwrap_or(0.0);
+    assert!(pct > 90.0, "{out}");
+}

@@ -1,0 +1,225 @@
+//! Property tests over the codec stack: roundtrip identity, size
+//! consistency, entropy bounds — the invariants every lossless coder must
+//! hold for arbitrary quantized planes.
+
+use deepcabac::cabac::{self, CodingConfig};
+use deepcabac::codecs::{csr::Csr, entropy, external, golomb, huffman};
+use deepcabac::testutil::{check_slice, gen, Config};
+
+fn cfg() -> Config {
+    Config {
+        cases: 120,
+        seed: 0xC0DEC,
+    }
+}
+
+#[test]
+fn prop_cabac_roundtrip_sparse() {
+    check_slice(cfg(), gen::sparse_symbols, |s| {
+        let coding = CodingConfig::default();
+        let bytes = cabac::encode_layer(s, coding);
+        cabac::decode_layer(&bytes, s.len(), coding)
+            .map(|d| d == s)
+            .unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_cabac_roundtrip_wild() {
+    check_slice(cfg(), gen::wild_symbols, |s| {
+        let coding = CodingConfig::default();
+        let bytes = cabac::encode_layer(s, coding);
+        cabac::decode_layer(&bytes, s.len(), coding)
+            .map(|d| d == s)
+            .unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_cabac_roundtrip_small_configs() {
+    check_slice(
+        Config {
+            cases: 60,
+            seed: 0xA1,
+        },
+        gen::sparse_symbols,
+        |s| {
+            for n in [1u32, 2, 5] {
+                let coding = CodingConfig {
+                    max_abs_gr: n,
+                    eg_contexts: n,
+                };
+                let bytes = cabac::encode_layer(s, coding);
+                match cabac::decode_layer(&bytes, s.len(), coding) {
+                    Ok(d) if d == s => {}
+                    _ => return false,
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_huffman_two_part_roundtrip() {
+    check_slice(cfg(), gen::sparse_symbols, |s| {
+        if s.is_empty() {
+            return true;
+        }
+        huffman::encode_two_part(s)
+            .and_then(|(_, raw)| huffman::decode_two_part(&raw))
+            .map(|d| d == s)
+            .unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_huffman_within_entropy_plus_one() {
+    check_slice(cfg(), gen::sparse_symbols, |s| {
+        if s.len() < 100 {
+            return true; // bound is per-symbol, tables need some mass
+        }
+        let h = entropy::entropy_bits_per_symbol(s);
+        let code = huffman::HuffmanCode::build(s);
+        let avg = code.avg_bits(s);
+        avg >= h - 1e-9 && avg < h + 1.0
+    });
+}
+
+#[test]
+fn prop_csr_roundtrip() {
+    check_slice(cfg(), gen::sparse_symbols, |s| {
+        // shape the plane into a pseudo-matrix
+        let cols = (s.len() as f64).sqrt().ceil() as usize;
+        if cols == 0 {
+            return true;
+        }
+        let rows = s.len().div_ceil(cols);
+        let mut dense = s.to_vec();
+        dense.resize(rows * cols, 0);
+        let csr = Csr::from_dense(&dense, rows, cols);
+        if csr.to_dense() != dense {
+            return false;
+        }
+        csr.encode()
+            .and_then(|raw| Csr::decode(&raw))
+            .map(|back| back.to_dense() == dense)
+            .unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_golomb_roundtrip_all_orders() {
+    check_slice(cfg(), gen::wild_symbols, |s| {
+        (0..4).all(|k| {
+            let raw = golomb::encode_stream(s, k);
+            golomb::decode_stream(&raw, s.len(), k)
+                .map(|d| d == s)
+                .unwrap_or(false)
+        })
+    });
+}
+
+#[test]
+fn prop_external_coders_roundtrip() {
+    check_slice(
+        Config {
+            cases: 40,
+            seed: 0xB2,
+        },
+        gen::sparse_symbols,
+        |s| {
+            let (p, packed) = external::pack_symbols(s);
+            if external::unpack_symbols(p, &packed) != s {
+                return false;
+            }
+            let bz = external::bzip2_compress(&packed).unwrap();
+            if external::bzip2_decompress(&bz).unwrap() != packed {
+                return false;
+            }
+            let zs = external::zstd_compress(&packed).unwrap();
+            external::zstd_decompress(&zs, packed.len().max(1)).unwrap() == packed
+        },
+    );
+}
+
+#[test]
+fn prop_cabac_never_catastrophically_expands() {
+    // Even on adversarial (high-entropy) planes, the CABAC stream must stay
+    // within a small constant factor of the raw 4-byte representation.
+    check_slice(cfg(), gen::wild_symbols, |s| {
+        let bytes = cabac::encode_layer(s, CodingConfig::default());
+        bytes.len() <= s.len() * 6 + 64
+    });
+}
+
+#[test]
+fn prop_cabac_beats_huffman_family_on_sparse_planes() {
+    // The Table III ordering, as a property over random sparse planes large
+    // enough for adaptation to settle.
+    check_slice(
+        Config {
+            cases: 30,
+            seed: 0xD3,
+        },
+        |rng| {
+            let n = 20_000 + rng.below(20_000) as usize;
+            let zero_p = rng.uniform(0.6, 0.95);
+            (0..n)
+                .map(|_| {
+                    if rng.next_f64() < zero_p {
+                        0
+                    } else {
+                        let m = 1 + (rng.next_f64() * rng.next_f64() * 20.0) as i32;
+                        if rng.next_f64() < 0.5 {
+                            -m
+                        } else {
+                            m
+                        }
+                    }
+                })
+                .collect::<Vec<i32>>()
+        },
+        |s| {
+            let coding = CodingConfig::default();
+            let cabac_sz = cabac::encode_layer(s, coding).len();
+            let (_, huff) = huffman::encode_two_part(s).unwrap();
+            cabac_sz <= huff.len()
+        },
+    );
+}
+
+#[test]
+fn prop_dcb_container_roundtrip() {
+    use deepcabac::model::{CompressedNetwork, Kind, QuantizedLayer};
+    check_slice(
+        Config {
+            cases: 60,
+            seed: 0xE4,
+        },
+        gen::sparse_symbols,
+        |s| {
+            let cols = (s.len() as f64).sqrt().ceil().max(1.0) as usize;
+            let rows = s.len().div_ceil(cols).max(1);
+            let mut ints = s.to_vec();
+            ints.resize(rows * cols, 0);
+            let net = CompressedNetwork {
+                name: "prop".into(),
+                cfg: CodingConfig::default(),
+                layers: vec![QuantizedLayer {
+                    name: "l".into(),
+                    kind: Kind::Dense,
+                    shape: vec![cols, rows],
+                    rows,
+                    cols,
+                    ints: ints.clone(),
+                    delta: 0.0123,
+                    bias: Some(vec![0.5; rows]),
+                }],
+            };
+            CompressedNetwork::from_bytes(&net.to_bytes())
+                .map(|b| b.layers[0].ints == ints)
+                .unwrap_or(false)
+        },
+    );
+}

@@ -1,0 +1,256 @@
+//! Property tests on coordinator invariants: quantizer monotonicity, RDOQ
+//! optimality vs NN, Pareto-front correctness, Lloyd objective descent.
+
+use deepcabac::cabac::context::{CodingConfig, WeightContexts};
+use deepcabac::cabac::estimator::CostTable;
+use deepcabac::coordinator::config::{Candidate, Method};
+use deepcabac::coordinator::pareto::{best_within_tolerance, pareto_front};
+use deepcabac::coordinator::pipeline::CandidateResult;
+use deepcabac::metrics::Sizes;
+use deepcabac::quant::rd::{argmin_rd, rd_quantize_layer, RdParams};
+use deepcabac::quant::uniform;
+use deepcabac::quant::weighted_lloyd;
+use deepcabac::testutil::{check, check_slice, gen, Config};
+use deepcabac::util::Pcg64;
+
+#[test]
+fn prop_rdoq_objective_never_worse_than_nn() {
+    // For any weight/importance/λ, the RDOQ pick's objective under the same
+    // cost table must be <= the nearest-neighbour pick's.
+    check(
+        Config {
+            cases: 300,
+            seed: 0xF1,
+        },
+        |rng: &mut Pcg64| {
+            (
+                rng.uniform(-1.0, 1.0) as f32,
+                rng.uniform(0.0, 10.0) as f32,
+                rng.uniform(1e-4, 0.2) as f32,
+                rng.uniform(0.0, 0.1) as f32,
+            )
+        },
+        |&(w, f, delta, lambda)| {
+            let ctxs = WeightContexts::new(CodingConfig::default());
+            let table = CostTable::build(&ctxs, 0, 256);
+            let pick = argmin_rd(w, f, delta, lambda, &table);
+            let nn = ((w / delta).round() as i32).clamp(-256, 256);
+            let obj = |i: i32| {
+                let d = w - delta * i as f32;
+                f * d * d + lambda * table.bits(i)
+            };
+            obj(pick) <= obj(nn) + 1e-5
+        },
+    );
+}
+
+#[test]
+fn prop_rdoq_lambda_monotone_sparsity() {
+    // More rate pressure never decreases the number of zeros (on the same
+    // weights, same Δ, frozen-table mode).
+    check_slice(
+        Config {
+            cases: 40,
+            seed: 0xF2,
+        },
+        gen::weights,
+        |w| {
+            if w.is_empty() {
+                return true;
+            }
+            let max_abs = w.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            if max_abs == 0.0 {
+                return true;
+            }
+            let delta = max_abs / 64.0;
+            let zeros = |lambda: f32| {
+                let mut p = RdParams::new(delta, lambda, 128);
+                p.refresh = usize::MAX; // frozen table: isolates the λ effect
+                rd_quantize_layer(w, &[], &p)
+                    .iter()
+                    .filter(|&&i| i == 0)
+                    .count()
+            };
+            let z0 = zeros(0.0);
+            let z1 = zeros(delta * delta * 4.0);
+            let z2 = zeros(delta * delta * 64.0);
+            z0 <= z1 && z1 <= z2
+        },
+    );
+}
+
+#[test]
+fn prop_uniform_reconstruction_error_bounded() {
+    check_slice(
+        Config {
+            cases: 80,
+            seed: 0xF3,
+        },
+        gen::weights,
+        |w| {
+            if w.is_empty() {
+                return true;
+            }
+            let max_abs = w.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let delta = uniform::delta_for_clusters(max_abs, 255);
+            let ints = uniform::assign_nearest(w, delta, 127);
+            w.iter().zip(&ints).all(|(&wi, &ii)| {
+                let q = ii as f32 * delta;
+                (wi - q).abs() <= delta / 2.0 + max_abs * 1e-5
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_lloyd_objective_decreases_with_iterations() {
+    check_slice(
+        Config {
+            cases: 20,
+            seed: 0xF4,
+        },
+        gen::weights,
+        |w| {
+            if w.len() < 64 {
+                return true;
+            }
+            let f = vec![1.0f32; w.len()];
+            // 2 iterations vs 12: more iterations never worsen J_λ.
+            let a = weighted_lloyd(w, &f, 16, 0.01, 2, 0.0);
+            let b = weighted_lloyd(w, &f, 16, 0.01, 12, 0.0);
+            b.objective <= a.objective + 1e-6 * a.objective.abs().max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_pareto_front_sound_and_complete() {
+    check(
+        Config {
+            cases: 100,
+            seed: 0xF5,
+        },
+        |rng: &mut Pcg64| {
+            let n = 1 + rng.below(40) as usize;
+            (0..n)
+                .map(|_| (rng.next_f64(), rng.below(100_000) as usize))
+                .collect::<Vec<(f64, usize)>>()
+        },
+        |points| {
+            let results: Vec<CandidateResult> = points
+                .iter()
+                .map(|&(acc, size)| CandidateResult {
+                    candidate: Candidate {
+                        method: Method::DcV2,
+                        s: 0.0,
+                        delta: 0.01,
+                        lambda: 0.0,
+                        clusters: 0,
+                    },
+                    sizes: Sizes {
+                        original_weights: 1_000_000,
+                        bias: 0,
+                        compressed_weights: size,
+                    },
+                    accuracy: acc,
+                    backend: "CABAC",
+                })
+                .collect();
+            let front = pareto_front(&results);
+            // soundness: no front member dominated by any point
+            for &i in &front {
+                for (j, b) in results.iter().enumerate() {
+                    if i == j {
+                        continue;
+                    }
+                    let a = &results[i];
+                    let dominates = b.accuracy >= a.accuracy
+                        && b.sizes.compressed_weights <= a.sizes.compressed_weights
+                        && (b.accuracy > a.accuracy
+                            || b.sizes.compressed_weights < a.sizes.compressed_weights);
+                    if dominates {
+                        return false;
+                    }
+                }
+            }
+            // completeness: every non-front point is dominated by someone
+            for (i, a) in results.iter().enumerate() {
+                if front.contains(&i) {
+                    continue;
+                }
+                let dominated = results.iter().enumerate().any(|(j, b)| {
+                    i != j
+                        && b.accuracy >= a.accuracy
+                        && b.sizes.compressed_weights <= a.sizes.compressed_weights
+                        && (b.accuracy > a.accuracy
+                            || b.sizes.compressed_weights < a.sizes.compressed_weights)
+                });
+                if !dominated {
+                    return false;
+                }
+            }
+            // tolerance pick is feasible + minimal
+            if let Some(best) = best_within_tolerance(&results, 0.5, 0.1) {
+                if best.accuracy < 0.4 {
+                    return false;
+                }
+                for r in &results {
+                    if r.accuracy >= 0.4
+                        && r.sizes.compressed_weights < best.sizes.compressed_weights
+                    {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_map_equals_serial() {
+    use deepcabac::coordinator::parallel::parallel_map;
+    check_slice(
+        Config {
+            cases: 40,
+            seed: 0xF6,
+        },
+        gen::sparse_symbols,
+        |s| {
+            let par = parallel_map(s, 7, |&x| x as i64 * 3 - 1);
+            let ser: Vec<i64> = s.iter().map(|&x| x as i64 * 3 - 1).collect();
+            par == ser
+        },
+    );
+}
+
+#[test]
+fn prop_quantize_encode_decode_identity() {
+    // The L3 pipeline's core invariant: for any weights and any sane (Δ, λ),
+    // encode(quantize(w)) decodes to exactly the quantized ints.
+    use deepcabac::cabac;
+    check_slice(
+        Config {
+            cases: 50,
+            seed: 0xF7,
+        },
+        gen::weights,
+        |w| {
+            if w.is_empty() {
+                return true;
+            }
+            let max_abs = w.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            if max_abs == 0.0 {
+                return true;
+            }
+            let delta = max_abs / 100.0;
+            let p = RdParams::new(delta, delta * delta, 128);
+            let ints = rd_quantize_layer(w, &[], &p);
+            let coding = CodingConfig::default();
+            let bytes = cabac::encode_layer(&ints, coding);
+            cabac::decode_layer(&bytes, ints.len(), coding)
+                .map(|d| d == ints)
+                .unwrap_or(false)
+        },
+    );
+}

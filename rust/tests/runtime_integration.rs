@@ -1,0 +1,150 @@
+//! Integration: the Rust PJRT runtime must reproduce the Python-side golden
+//! logits from the AOT eval graphs, and the Pallas rd_assign kernel (via
+//! PJRT) must agree with the Rust RDOQ argmin on identical inputs.
+//!
+//! These tests require `make artifacts`; they are skipped (not failed) when
+//! the artifacts directory is absent so `cargo test` works pre-build.
+
+use std::path::PathBuf;
+
+use deepcabac::cabac::context::{CodingConfig, WeightContexts};
+use deepcabac::cabac::estimator::CostTable;
+use deepcabac::data::Dataset;
+use deepcabac::model::read_nwf;
+use deepcabac::quant::rd::argmin_rd;
+use deepcabac::runtime::{Engine, Evaluator, EVAL_BATCH, KERNEL_HALF, KERNEL_K};
+use deepcabac::util::Pcg64;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("MANIFEST.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn read_golden(path: &PathBuf) -> Vec<f32> {
+    std::fs::read(path)
+        .unwrap()
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+#[test]
+fn eval_graphs_reproduce_golden_logits() {
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::new(&art).unwrap();
+    let data = Dataset::load(art.join("dataset.nds")).unwrap();
+    for model in ["lenet300", "lenet5", "smallvgg", "mobilenet"] {
+        let net = read_nwf(art.join(format!("{model}.nwf"))).unwrap();
+        let mats: Vec<(&[f32], usize, usize)> = net
+            .layers
+            .iter()
+            .map(|l| (l.weights.as_slice(), l.rows, l.cols))
+            .collect();
+        let biases: Vec<&[f32]> = net
+            .layers
+            .iter()
+            .map(|l| l.bias.as_deref().unwrap())
+            .collect();
+        let x = data.batch_images(0, EVAL_BATCH);
+        let logits = engine
+            .eval_logits(model, &mats, &biases, x, (data.h, data.w, data.c))
+            .unwrap();
+        let golden = read_golden(&art.join(format!("golden_logits_{model}.bin")));
+        assert_eq!(logits.len(), golden.len(), "{model}");
+        let mut max_rel = 0f32;
+        for (&a, &b) in logits.iter().zip(&golden) {
+            let rel = (a - b).abs() / b.abs().max(1e-3);
+            max_rel = max_rel.max(rel);
+        }
+        assert!(max_rel < 1e-3, "{model}: max rel err {max_rel}");
+    }
+}
+
+#[test]
+fn trained_models_hit_reported_accuracy() {
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::new(&art).unwrap();
+    let data = Dataset::load(art.join("dataset.nds")).unwrap();
+    let ev = Evaluator::new(engine, data);
+    // MANIFEST top1 figures were computed by python; rust must agree.
+    let manifest = std::fs::read_to_string(art.join("MANIFEST.txt")).unwrap();
+    for model in ["lenet300", "lenet5", "smallvgg", "mobilenet"] {
+        let net = read_nwf(art.join(format!("{model}.nwf"))).unwrap();
+        let acc = ev.accuracy(&net).unwrap();
+        // Parse `"top1": 0.9521` style values for this model block.
+        let key = format!("\"{model}\": {{");
+        let blk = &manifest[manifest.find(&key).unwrap()..];
+        let t = &blk[blk.find("\"top1\":").unwrap() + 7..];
+        let reported: f64 = t[..t.find(',').unwrap()].trim().parse().unwrap();
+        assert!(
+            (acc - reported).abs() < 0.005,
+            "{model}: rust {acc} vs python {reported}"
+        );
+        assert!(acc > 0.90, "{model} accuracy {acc}");
+    }
+}
+
+#[test]
+fn pallas_kernel_matches_rust_rdoq() {
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::new(&art).unwrap();
+    let mut rng = Pcg64::new(777);
+    let n = 20_000; // exercises full chunks + padded tail
+    let w: Vec<f32> = rng.normal_vec(n, 0.08);
+    let fim: Vec<f32> = (0..n).map(|_| rng.uniform(0.01, 5.0) as f32).collect();
+    let ctxs = WeightContexts::new(CodingConfig::default());
+    let table = CostTable::build(&ctxs, 0, KERNEL_HALF);
+    assert_eq!(table.len(), KERNEL_K);
+    let (delta, lambda) = (0.004f32, 0.015f32);
+    let device = engine
+        .rd_assign(&w, &fim, delta, lambda, &table.cost)
+        .unwrap();
+    for i in 0..n {
+        let host = argmin_rd(w[i], fim[i], delta, lambda, &table);
+        assert_eq!(device[i], host, "weight {i}: w={} fim={}", w[i], fim[i]);
+    }
+}
+
+#[test]
+fn dequant_kernel_matches_host() {
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::new(&art).unwrap();
+    let mut rng = Pcg64::new(778);
+    let idx: Vec<i32> = (0..deepcabac::runtime::KERNEL_N)
+        .map(|_| rng.below(1025) as i32 - 512)
+        .collect();
+    let delta = 0.0137f32;
+    let out = engine.dequant_chunk(&idx, delta).unwrap();
+    for (&i, &q) in idx.iter().zip(&out) {
+        assert_eq!(q, i as f32 * delta);
+    }
+}
+
+#[test]
+fn quantized_network_keeps_accuracy_at_fine_grid() {
+    // End-to-end lossy sanity: 8-bit-ish uniform quantization must not move
+    // top-1 by more than half a point (the paper's working regime).
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::new(&art).unwrap();
+    let data = Dataset::load(art.join("dataset.nds")).unwrap();
+    let ev = Evaluator::new(engine, data);
+    let net = read_nwf(art.join("lenet300.nwf")).unwrap();
+    let base = ev.accuracy(&net).unwrap();
+    let q = deepcabac::quant::uniform::quantize_network(&net, 255);
+    let recon = deepcabac::model::CompressedNetwork {
+        name: "lenet300".into(),
+        cfg: CodingConfig::default(),
+        layers: q,
+    }
+    .reconstruct_named();
+    let qacc = ev.accuracy(&recon).unwrap();
+    assert!(
+        (base - qacc).abs() < 0.005,
+        "8-bit uniform moved accuracy {base} -> {qacc}"
+    );
+}
