@@ -20,7 +20,7 @@ use deepcabac::model::{read_nwf, ScanOrder};
 use deepcabac::quant::uniform;
 use deepcabac::util::Pcg64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !artifacts_ready() {
         println!("ablation: SKIP (run `make artifacts`)");
         return Ok(());

@@ -1,0 +1,184 @@
+//! DCB2 container throughput bench: monolithic v1 vs sliced v2
+//! serialization of a multi-million-parameter network, decode fan-out at
+//! 1/2/4 threads, and the size overhead slicing costs.
+//!
+//! Emits `BENCH_dcb2.json` (workspace root) for the perf trajectory; the
+//! CI bench-smoke job runs it with `--smoke` (smaller network, fewer
+//! iterations) and uploads the JSON as an artifact.
+//!
+//! ```bash
+//! cargo bench --bench dcb2            # full: ~1.25M params
+//! cargo bench --bench dcb2 -- --smoke # CI-sized
+//! ```
+
+use deepcabac::benchutil::bench;
+use deepcabac::cabac::CodingConfig;
+use deepcabac::model::{
+    CompressedNetwork, ContainerPolicy, Kind, QuantizedLayer, DEFAULT_SLICE_LEN,
+};
+use deepcabac::util::Pcg64;
+
+fn sparse_ints(n: usize, rng: &mut Pcg64) -> Vec<i32> {
+    (0..n)
+        .map(|_| {
+            if rng.next_f64() < 0.8 {
+                0
+            } else {
+                let m = 1 + (rng.next_f64() * rng.next_f64() * 30.0) as i32;
+                if rng.next_f64() < 0.5 {
+                    -m
+                } else {
+                    m
+                }
+            }
+        })
+        .collect()
+}
+
+/// Synthetic network shaped like a mid-size vision model (~1.25M params).
+fn synth_network() -> CompressedNetwork {
+    let mut rng = Pcg64::new(0xDCB2);
+    let dims: [(usize, usize); 4] = [(400, 800), (500, 1000), (512, 512), (430, 400)];
+    let layers = dims
+        .iter()
+        .enumerate()
+        .map(|(i, &(rows, cols))| QuantizedLayer {
+            name: format!("fc{}", i + 1),
+            kind: Kind::Dense,
+            shape: vec![cols, rows],
+            rows,
+            cols,
+            ints: sparse_ints(rows * cols, &mut rng),
+            delta: 0.01,
+            bias: None,
+        })
+        .collect();
+    CompressedNetwork {
+        name: "dcb2_bench".into(),
+        cfg: CodingConfig::default(),
+        layers,
+    }
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("DCB_BENCH_SMOKE").is_ok();
+    // full: (400*800 + 500*1000 + 512*512 + 430*400) = ~1.25M params
+    let (warmup, iters) = if smoke { (0, 2) } else { (1, 5) };
+    let net = if smoke {
+        // ~125k params: same shape, 10x fewer rows per layer
+        let mut n = synth_network();
+        for l in &mut n.layers {
+            l.rows /= 10;
+            l.ints.truncate(l.rows * l.cols);
+            l.shape = vec![l.cols, l.rows];
+        }
+        n
+    } else {
+        synth_network()
+    };
+    let params = net.param_count();
+    let slice_len = DEFAULT_SLICE_LEN;
+    println!(
+        "== dcb2: {} params over {} layers (slice_len {slice_len}{}) ==",
+        params,
+        net.layers.len(),
+        if smoke { ", smoke" } else { "" }
+    );
+
+    // --- serialize: monolithic v1 (single-thread baseline) vs sliced v2 ---
+    let v1_policy = ContainerPolicy {
+        version: deepcabac::model::VERSION_V1,
+        slice_len: 0,
+        threads: 1,
+    };
+    let (enc_v1, v1_bytes) = bench(warmup, iters, || net.to_bytes_with(v1_policy));
+    let (enc_v2_t1, _) =
+        bench(warmup, iters, || net.to_bytes_with(ContainerPolicy::v2(slice_len, 1)));
+    let (enc_v2_t4, v2_bytes) =
+        bench(warmup, iters, || net.to_bytes_with(ContainerPolicy::v2(slice_len, 4)));
+    let overhead_pct =
+        100.0 * (v2_bytes.len() as f64 - v1_bytes.len() as f64) / v1_bytes.len() as f64;
+    println!(
+        "size: v1 {} B | v2 {} B ({overhead_pct:+.2}% slicing overhead)",
+        v1_bytes.len(),
+        v2_bytes.len()
+    );
+    println!(
+        "encode: v1@1t {:.3}s | v2@1t {:.3}s | v2@4t {:.3}s ({:.2}x vs v1@1t)",
+        enc_v1.median_s,
+        enc_v2_t1.median_s,
+        enc_v2_t4.median_s,
+        enc_v1.median_s / enc_v2_t4.median_s
+    );
+
+    // --- correctness guard: both containers decode to the same layers ---
+    let back_v1 = CompressedNetwork::from_bytes_with(&v1_bytes, 1)?;
+    let back_v2 = CompressedNetwork::from_bytes_with(&v2_bytes, 4)?;
+    assert_eq!(back_v1.layers, net.layers, "v1 roundtrip");
+    assert_eq!(back_v2.layers, net.layers, "v2 roundtrip");
+
+    // --- decode: the headline numbers ---
+    let (dec_v1, _) = bench(warmup, iters, || {
+        CompressedNetwork::from_bytes_with(&v1_bytes, 1).unwrap()
+    });
+    let mut dec_v2 = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let (s, _) = bench(warmup, iters, || {
+            CompressedNetwork::from_bytes_with(&v2_bytes, threads).unwrap()
+        });
+        println!(
+            "decode: v2@{threads}t {:>7.1} ms ({:.2} Msym/s, {:.2}x vs v1@1t)",
+            s.median_s * 1e3,
+            params as f64 / s.median_s / 1e6,
+            dec_v1.median_s / s.median_s
+        );
+        dec_v2.push((threads, s));
+    }
+    println!(
+        "decode: v1@1t {:>7.1} ms ({:.2} Msym/s, baseline)",
+        dec_v1.median_s * 1e3,
+        params as f64 / dec_v1.median_s / 1e6
+    );
+    let speedup_4t = dec_v1.median_s
+        / dec_v2
+            .iter()
+            .find(|(t, _)| *t == 4)
+            .map(|(_, s)| s.median_s)
+            .unwrap();
+    println!("headline: v2@4t decode speedup vs monolithic v1 = {speedup_4t:.2}x");
+
+    // --- JSON for the perf trajectory ---
+    let mut dec_fields = String::new();
+    for (t, s) in &dec_v2 {
+        dec_fields.push_str(&format!(
+            ", \"v2_t{t}_s\": {:.6}, \"v2_t{t}_msym_s\": {:.3}",
+            s.median_s,
+            params as f64 / s.median_s / 1e6
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"dcb2\",\n  \"mode\": \"{}\",\n  \"params\": {},\n  \
+         \"layers\": {},\n  \"slice_len\": {},\n  \"v1_bytes\": {},\n  \"v2_bytes\": {},\n  \
+         \"size_overhead_pct\": {:.4},\n  \"encode\": {{\"v1_t1_s\": {:.6}, \
+         \"v2_t1_s\": {:.6}, \"v2_t4_s\": {:.6}}},\n  \"decode\": {{\"v1_t1_s\": {:.6}, \
+         \"v1_t1_msym_s\": {:.3}{}}},\n  \"decode_speedup_v2_t4_vs_v1_t1\": {:.4}\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        params,
+        net.layers.len(),
+        slice_len,
+        v1_bytes.len(),
+        v2_bytes.len(),
+        overhead_pct,
+        enc_v1.median_s,
+        enc_v2_t1.median_s,
+        enc_v2_t4.median_s,
+        dec_v1.median_s,
+        params as f64 / dec_v1.median_s / 1e6,
+        dec_fields,
+        speedup_4t
+    );
+    std::fs::write("BENCH_dcb2.json", &json)?;
+    println!("wrote BENCH_dcb2.json");
+    Ok(())
+}

@@ -20,7 +20,7 @@ use deepcabac::cabac::estimator::estimate_int;
 use deepcabac::model::read_nwf;
 use deepcabac::quant::uniform;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !artifacts_ready() {
         println!("fig6: SKIP (run `make artifacts`)");
         return Ok(());

@@ -20,7 +20,7 @@ use deepcabac::runtime::EvalService;
 const LAMBDAS: &[f64] = &[0.0, 1e-4, 4e-4, 1.6e-3, 6.4e-3, 2.56e-2, 1e-1];
 const CLUSTERS: usize = 33;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !artifacts_ready() {
         println!("fig8: SKIP (run `make artifacts`)");
         return Ok(());

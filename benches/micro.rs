@@ -35,7 +35,7 @@ fn sparse_symbols(n: usize, seed: u64) -> Vec<i32> {
         .collect()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 1_000_000;
     let symbols = sparse_symbols(n, 7);
     let coding = CodingConfig::default();

@@ -73,7 +73,7 @@ fn mse_of(a: &Network, b: &Network) -> f64 {
         / wa.len() as f64
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !artifacts_ready() {
         println!("table2: SKIP (run `make artifacts`)");
         return Ok(());

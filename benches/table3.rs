@@ -106,7 +106,7 @@ fn quantize_three_ways(net: &Network) -> Vec<(&'static str, Planes)> {
     ]
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !artifacts_ready() {
         println!("table3: SKIP (run `make artifacts`)");
         return Ok(());

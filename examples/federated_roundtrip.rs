@@ -20,7 +20,7 @@ use deepcabac::quant::rd::{rd_quantize_layer, required_half, RdParams};
 use deepcabac::runtime::EvalService;
 use deepcabac::util::Pcg64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let art = deepcabac::benchutil::artifacts_dir();
     if !deepcabac::benchutil::artifacts_ready() {
         eprintln!("artifacts missing — run `make artifacts` first");

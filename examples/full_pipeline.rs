@@ -15,7 +15,7 @@ use deepcabac::metrics::Timer;
 use deepcabac::model::{read_nwf, Importance};
 use deepcabac::runtime::EvalService;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let art = deepcabac::benchutil::artifacts_dir();
     if !deepcabac::benchutil::artifacts_ready() {
         eprintln!("artifacts missing — run `make artifacts` first");

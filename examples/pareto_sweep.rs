@@ -12,7 +12,7 @@ use deepcabac::model::read_nwf;
 use deepcabac::quant::stepsize;
 use deepcabac::runtime::EvalService;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let art = deepcabac::benchutil::artifacts_dir();
     if !deepcabac::benchutil::artifacts_ready() {
         eprintln!("artifacts missing — run `make artifacts` first");

@@ -10,7 +10,7 @@ use deepcabac::coordinator::{Candidate, Method, SearchConfig};
 use deepcabac::model::{read_nwf, CompressedNetwork};
 use deepcabac::runtime::EvalService;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let art = deepcabac::benchutil::artifacts_dir();
     if !deepcabac::benchutil::artifacts_ready() {
         eprintln!("artifacts missing — run `make artifacts` first");

@@ -74,10 +74,18 @@ mod tests {
             })
             .collect();
         let (bytes, _) = encode_layer_with_size(&values, CodingConfig::default());
-        // 10% non-zeros of magnitude <= 15: entropy ~ 0.72 bits/val;
-        // CABAC should get well under 1 bit/val.
+        // 10% non-zeros, uniform magnitude 1..=15, random sign:
+        // H = H(0.1) + 0.1 * (1 + log2 15) ~= 0.96 bits/val.  The coder
+        // actually lands at ~0.99-1.01 bits/val depending on the seed, so
+        // the original flat `< 1.0` bound was a coin flip (its comment
+        // miscomputed H as 0.72); assert against the real entropy with the
+        // same 10% adaptation allowance the arith-level test uses.
+        let h = {
+            let p = 0.1f64;
+            -(1.0 - p) * (1.0 - p).log2() - p * p.log2() + p * (1.0 + 15f64.log2())
+        };
         let bpv = bytes.len() as f64 * 8.0 / values.len() as f64;
-        assert!(bpv < 1.0, "bits/val = {bpv}");
+        assert!(bpv < h * 1.10, "bits/val = {bpv:.4} vs entropy {h:.4}");
         assert!(roundtrip_verify(&values, CodingConfig::default()));
     }
 

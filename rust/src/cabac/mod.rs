@@ -7,6 +7,8 @@
 //!  * [`binarize`]  — sig/sign/AbsGr(n)/Exp-Golomb binarization (Fig. 7).
 //!  * [`encoder`] / [`decoder`] — layer-level coding of integer tensors.
 //!  * [`estimator`] — RDOQ code-length estimation (the `L_ik` of eq. 11).
+//!  * [`slices`]    — independently coded slices for parallel (de)coding
+//!    (the DCB2 container's payload format).
 
 pub mod arith;
 pub mod binarize;
@@ -21,3 +23,4 @@ pub use context::{CodingConfig, SigHistory, WeightContexts};
 pub use decoder::decode_layer;
 pub use encoder::{encode_layer, encode_layer_with_size};
 pub use estimator::{estimate_int, CostTable};
+pub use slices::{decode_layer_sliced, encode_layer_sliced, encode_layer_sliced_parallel};

@@ -1,0 +1,210 @@
+//! Self-contained general-purpose byte compressor backing the "external"
+//! baselines (`codecs::external`).
+//!
+//! The real bzip2/zstd/deflate crates link C code and are not in the
+//! offline vendor set, so the baseline rows are produced by this in-tree
+//! coder instead: an order-1 context-modelled adaptive binary arithmetic
+//! coder (the same range coder as the CABAC engine, `cabac::arith`).
+//!
+//! Model, per previous byte `c`:
+//!  * a "hit" context coding whether the next byte equals the last byte
+//!    seen after `c` (an MTF-0 prediction — this is what lets highly
+//!    repetitive inputs approach the coder's ~0.01 bit/bin floor), and
+//!  * on a miss, an adaptive binary tree over the 8 bits of the byte
+//!    (255 contexts per previous-byte state).
+//!
+//! On the sparse quantized-weight planes these baselines are measured on,
+//! this lands within a few percent of bzip2 itself (order-1 conditional
+//! entropy + prediction) while staying pure Rust and dependency-free.
+//!
+//! Wire format: `u32 n` (decoded length, LE) | range-coder stream
+//! | `u32 crc32` (over length + stream).  The CRC stands in for the
+//! container validation real bzip2/zstd streams carry: truncated or
+//! bit-flipped input is rejected before any decoding work.
+
+use crate::cabac::arith::{Context, Decoder, Encoder};
+use crate::util::{Error, Result};
+
+/// Hard plausibility bound on the claimed decoded length: the coder's
+/// cheapest byte is one ~0.011-bit hit bin, so genuine streams never
+/// expand by more than ~750x.  1024x rejects forged headers (e.g. a
+/// 4 GiB claim in an 8-byte stream) before allocating.
+const MAX_EXPANSION: usize = 1024;
+
+/// Adaptive model state shared by compressor and decompressor.
+struct Model {
+    /// Last byte observed after each previous-byte context.
+    predicted: [u8; 256],
+    /// "next byte == predicted" flag, one context per previous byte.
+    hit: Vec<Context>,
+    /// Bit-tree contexts: 255 internal nodes per previous-byte context.
+    tree: Vec<Context>,
+}
+
+impl Model {
+    fn new() -> Self {
+        Self {
+            predicted: [0; 256],
+            hit: vec![Context::default(); 256],
+            tree: vec![Context::default(); 256 * 255],
+        }
+    }
+
+    #[inline]
+    fn tree_ctx(&mut self, prev: u8, node: usize) -> &mut Context {
+        &mut self.tree[prev as usize * 255 + (node - 1)]
+    }
+}
+
+/// Compress a byte slice.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut m = Model::new();
+    let mut e = Encoder::new();
+    let mut prev = 0u8;
+    for &b in data {
+        let pred = m.predicted[prev as usize];
+        let hit = b == pred;
+        e.encode(&mut m.hit[prev as usize], hit);
+        if !hit {
+            let mut node = 1usize;
+            for i in (0..8).rev() {
+                let bit = (b >> i) & 1 == 1;
+                e.encode(m.tree_ctx(prev, node), bit);
+                node = (node << 1) | bit as usize;
+            }
+        }
+        m.predicted[prev as usize] = b;
+        prev = b;
+    }
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    out.extend((data.len() as u32).to_le_bytes());
+    out.extend(e.finish());
+    out.extend(crc32fast::hash(&out).to_le_bytes());
+    out
+}
+
+/// Decompress; `cap` bounds the decoded length (rejects implausible
+/// headers before allocating).
+pub fn decompress_capped(raw: &[u8], cap: usize) -> Result<Vec<u8>> {
+    if raw.len() < 8 {
+        return Err(Error::Format("bytecoder stream truncated".into()));
+    }
+    let body = &raw[..raw.len() - 4];
+    let crc_stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+    if crc32fast::hash(body) != crc_stored {
+        return Err(Error::Format("bytecoder stream corrupt (crc mismatch)".into()));
+    }
+    let n = u32::from_le_bytes(body[..4].try_into().unwrap()) as usize;
+    if n > cap || n > raw.len().saturating_mul(MAX_EXPANSION) {
+        return Err(Error::Format(format!(
+            "bytecoder stream claims {n} bytes, cap is {cap}"
+        )));
+    }
+    let mut m = Model::new();
+    let mut d = Decoder::new(&body[4..]);
+    let mut out = Vec::with_capacity(n);
+    let mut prev = 0u8;
+    for _ in 0..n {
+        let pred = m.predicted[prev as usize];
+        let b = if d.decode(&mut m.hit[prev as usize]) {
+            pred
+        } else {
+            let mut node = 1usize;
+            for _ in 0..8 {
+                let bit = d.decode(m.tree_ctx(prev, node));
+                node = (node << 1) | bit as usize;
+            }
+            (node & 0xFF) as u8
+        };
+        m.predicted[prev as usize] = b;
+        prev = b;
+        out.push(b);
+    }
+    Ok(out)
+}
+
+/// Decompress with only the header's own length claim as the bound.
+pub fn decompress(raw: &[u8]) -> Result<Vec<u8>> {
+    decompress_capped(raw, usize::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_empty() {
+        let c = compress(&[]);
+        assert_eq!(decompress(&c).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Pcg64::new(501);
+        let data: Vec<u8> = (0..20_000).map(|_| rng.below(256) as u8).collect();
+        assert_eq!(decompress(&compress(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn repetitive_input_compresses_hard() {
+        let data = b"abcabcabcabc".repeat(1000);
+        let c = compress(&data);
+        assert!(c.len() < 150, "{} bytes for periodic input", c.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn sparse_input_beats_two_bits_per_byte() {
+        let mut rng = Pcg64::new(502);
+        let data: Vec<u8> = (0..60_000)
+            .map(|_| {
+                if rng.next_f64() < 0.9 {
+                    0
+                } else {
+                    rng.below(9) as u8
+                }
+            })
+            .collect();
+        let c = compress(&data);
+        assert!((c.len() * 8) as f64 / data.len() as f64 < 2.0);
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn cap_rejects_oversized_claim() {
+        let c = compress(&[1, 2, 3, 4, 5]);
+        assert!(decompress_capped(&c, 2).is_err());
+        assert!(decompress_capped(&c, 5).is_ok());
+    }
+
+    #[test]
+    fn truncated_header_rejected() {
+        assert!(decompress(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn truncation_and_bit_flips_rejected() {
+        let data: Vec<u8> = (0..2000u32).map(|i| (i % 7) as u8).collect();
+        let c = compress(&data);
+        assert!(decompress(&c[..c.len() - 5]).is_err());
+        assert!(decompress(&c[..c.len() / 2]).is_err());
+        for pos in [1usize, c.len() / 2, c.len() - 1] {
+            let mut bad = c.clone();
+            bad[pos] ^= 0x40;
+            assert!(decompress(&bad).is_err(), "flip at {pos}");
+        }
+    }
+
+    #[test]
+    fn forged_giant_length_rejected_before_allocating() {
+        let mut forged = Vec::new();
+        forged.extend(u32::MAX.to_le_bytes());
+        forged.extend([0u8; 8]);
+        let crc = crc32fast::hash(&forged);
+        forged.extend(crc.to_le_bytes());
+        // CRC is valid, but the claimed 4 GiB output is implausible for a
+        // 16-byte stream — must be rejected without allocating.
+        assert!(decompress(&forged).is_err());
+    }
+}

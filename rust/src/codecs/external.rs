@@ -5,10 +5,16 @@
 //! byte representation first (1/2/4 bytes as needed) — matching how the
 //! paper's pipelines hand fixed-length representations to bzip2 — then run
 //! the byte-oriented compressor.
+//!
+//! The C-linked bzip2/zstd/flate2 crates are not in the offline vendor
+//! set, so all three entry points are backed by the in-tree
+//! [`super::bytecoder`] (order-1 adaptive arithmetic coding over bytes)
+//! standing in for the originals.  Function names and signatures are
+//! unchanged so benches, examples and the pipeline report the same
+//! baseline rows.
 
-use std::io::{Read, Write};
-
-use crate::util::{Error, Result};
+use super::bytecoder;
+use crate::util::Result;
 
 /// Fixed-width byte packing for i32 symbol planes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,42 +87,31 @@ pub fn unpack_symbols(pack: Pack, raw: &[u8]) -> Vec<i32> {
     }
 }
 
-/// bzip2 (BWT + MTF + RLE + Huffman) — the paper's [56] baseline.
+/// bzip2 stand-in (the paper's [56] baseline row).
 pub fn bzip2_compress(data: &[u8]) -> Result<Vec<u8>> {
-    let mut enc = bzip2::write::BzEncoder::new(Vec::new(), bzip2::Compression::best());
-    enc.write_all(data)?;
-    enc.finish().map_err(Error::from)
+    Ok(bytecoder::compress(data))
 }
 
 pub fn bzip2_decompress(data: &[u8]) -> Result<Vec<u8>> {
-    let mut dec = bzip2::read::BzDecoder::new(data);
-    let mut out = Vec::new();
-    dec.read_to_end(&mut out)?;
-    Ok(out)
+    bytecoder::decompress(data)
 }
 
-/// zstd (modern reference point, not in the paper).
+/// zstd stand-in (modern reference point, not in the paper).
 pub fn zstd_compress(data: &[u8]) -> Result<Vec<u8>> {
-    zstd::bulk::compress(data, 19).map_err(Error::from)
+    Ok(bytecoder::compress(data))
 }
 
 pub fn zstd_decompress(data: &[u8], cap: usize) -> Result<Vec<u8>> {
-    zstd::bulk::decompress(data, cap).map_err(Error::from)
+    bytecoder::decompress_capped(data, cap)
 }
 
-/// DEFLATE (gzip family) — extra reference point.
+/// DEFLATE stand-in (gzip family) — extra reference point.
 pub fn deflate_compress(data: &[u8]) -> Result<Vec<u8>> {
-    let mut enc =
-        flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::best());
-    enc.write_all(data)?;
-    enc.finish().map_err(Error::from)
+    Ok(bytecoder::compress(data))
 }
 
 pub fn deflate_decompress(data: &[u8]) -> Result<Vec<u8>> {
-    let mut dec = flate2::read::DeflateDecoder::new(data);
-    let mut out = Vec::new();
-    dec.read_to_end(&mut out)?;
-    Ok(out)
+    bytecoder::decompress(data)
 }
 
 /// bzip2 size of a symbol plane (bytes), the Table I/III measurement.

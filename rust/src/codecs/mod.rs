@@ -7,6 +7,7 @@
 //!  * [`golomb`]  — standalone order-k Exp-Golomb.
 //!  * [`entropy`] — EPMD entropy / cross-entropy (the `H` rows).
 
+pub mod bytecoder;
 pub mod csr;
 pub mod cer;
 pub mod entropy;

@@ -1,7 +1,7 @@
 //! Coordinator configuration: methods, hyper-parameter grids, budgets.
 
 use crate::cabac::CodingConfig;
-use crate::model::Importance;
+use crate::model::{ContainerPolicy, Importance};
 
 /// Which compression method a run uses (the four Table I columns).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -48,6 +48,9 @@ pub struct Candidate {
 #[derive(Clone, Copy, Debug)]
 pub struct SearchConfig {
     pub coding: CodingConfig,
+    /// `.dcb` container policy: version, slice length and (de)coder
+    /// fan-out for the bitstreams the pipeline emits and measures.
+    pub container: ContainerPolicy,
     /// Worker threads for candidate processing.
     pub threads: usize,
     /// Accuracy tolerance vs original, in fraction (paper: 0.005 = 0.5 pp).
@@ -74,6 +77,7 @@ impl Default for SearchConfig {
     fn default() -> Self {
         Self {
             coding: CodingConfig::default(),
+            container: ContainerPolicy::default(),
             threads: default_threads(),
             tolerance: 0.005,
             dc1_lambdas: 6,
@@ -89,12 +93,7 @@ impl Default for SearchConfig {
     }
 }
 
-pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(16)
-}
+pub use crate::util::parallel::default_threads;
 
 #[cfg(test)]
 mod tests {
@@ -112,5 +111,8 @@ mod tests {
         assert!(c.threads >= 1);
         assert!(c.tolerance > 0.0);
         assert!(!c.uniform_clusters.is_empty());
+        assert_eq!(c.container.version, crate::model::VERSION_V2);
+        assert!(c.container.slice_len >= 1);
+        assert!(c.container.threads >= 1);
     }
 }

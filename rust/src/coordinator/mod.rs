@@ -6,15 +6,17 @@
 //!  * [`pipeline`]    — one candidate end to end (true decode path).
 //!  * [`grid_search`] — β-grid fan-out over the worker pool.
 //!  * [`pareto`]      — accuracy-vs-size front + tolerance selection.
-//!  * [`parallel`]    — the thread-pool primitive (offline tokio stand-in).
+//!  * [`parallel`]    — the thread-pool primitive (offline tokio stand-in;
+//!    lives in `util::parallel`, re-exported here for path stability).
 //!  * [`report`]      — table-shaped rendering for EXPERIMENTS.md.
 
 pub mod config;
 pub mod grid_search;
-pub mod parallel;
 pub mod pareto;
 pub mod pipeline;
 pub mod report;
+
+pub use crate::util::parallel;
 
 pub use config::{Candidate, Method, SearchConfig};
 pub use grid_search::{search, SearchOutcome};

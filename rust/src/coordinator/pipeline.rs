@@ -55,9 +55,10 @@ pub fn run_candidate(
     match cand.method {
         Method::DcV1 | Method::DcV2 => {
             let compressed = compress_dc(net, cand, cfg);
-            let bytes = compressed.to_bytes();
-            // True decode path: parse + CABAC-decode + dequantize.
-            let decoded = CompressedNetwork::from_bytes(&bytes)?;
+            let bytes = compressed.to_bytes_with(cfg.container);
+            // True decode path: parse + CABAC-decode + dequantize, under
+            // the same container policy (v2 fans slices out over threads).
+            let decoded = CompressedNetwork::from_bytes_with(&bytes, cfg.container.threads)?;
             let recon = decoded.reconstruct(&net.name);
             let accuracy = service.accuracy(&recon)?;
             // .dcb embeds the (uncompressed) biases; count weights-only

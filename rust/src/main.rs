@@ -2,11 +2,12 @@
 //!
 //! Verbs:
 //!   compress   <model.nwf> [-o out.dcb] [--method dc-v1|dc-v2] [--delta D]
-//!              [--lambda L] [--s S]          one-shot compression
-//!   decompress <model.dcb> [-o out.nwf]      decode + reconstruct
+//!              [--lambda L] [--s S] [--container v1|v2]
+//!              [--slice-len N] [--threads N]  one-shot compression
+//!   decompress <model.dcb> [-o out.nwf] [--threads N]  decode + reconstruct
 //!   eval       <model.nwf|model.dcb>         top-1 accuracy via PJRT
 //!   search     <model.nwf> [--method M]...   grid-search (Fig. 5 loop)
-//!   info       <model.nwf|model.dcb>         container inspection
+//!   info       <model.nwf|model.dcb> [--threads N]  container inspection
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --threads N.
 //! (clap is not in the offline vendor set; this is a small hand-rolled
@@ -16,7 +17,9 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use deepcabac::coordinator::{self, Method, SearchConfig};
-use deepcabac::model::{read_nwf, write_nwf, CompressedNetwork, Importance, Network};
+use deepcabac::model::{
+    self, read_nwf, write_nwf, CompressedNetwork, ContainerPolicy, Importance, Network,
+};
 use deepcabac::runtime::EvalService;
 use deepcabac::util::Result;
 
@@ -64,10 +67,12 @@ fn usage() -> ExitCode {
         "usage: deepcabac <verb> [args]\n\
          verbs:\n\
            compress   <model.nwf> [-o out.dcb] [--method dc-v1|dc-v2] [--delta D] [--lambda L] [--s S]\n\
-           decompress <model.dcb> [-o out.nwf]\n\
+                      [--container v1|v2] [--slice-len N] [--threads N]\n\
+           decompress <model.dcb> [-o out.nwf] [--threads N]\n\
            eval       <model.nwf|.dcb> [--artifacts DIR]\n\
            search     <model.nwf> [--method dc-v1|dc-v2|lloyd|uniform|all] [--threads N] [--tolerance PP]\n\
-           info       <model.nwf|.dcb>\n"
+                      [--container v1|v2] [--slice-len N]\n\
+           info       <model.nwf|.dcb> [--threads N]\n"
     );
     ExitCode::from(2)
 }
@@ -107,6 +112,32 @@ fn flag_f32(args: &Args, key: &str, default: f32) -> f32 {
         .unwrap_or(default)
 }
 
+fn flag_usize(args: &Args, key: &str) -> Option<usize> {
+    args.flags.get(key).and_then(|v| v.parse().ok())
+}
+
+/// Build the `.dcb` container policy from `--container`, `--slice-len` and
+/// `--threads` (defaults: v2, DEFAULT_SLICE_LEN, all cores).
+fn container_policy(args: &Args) -> Result<ContainerPolicy> {
+    let mut policy = ContainerPolicy::default();
+    match args.flags.get("container").map(String::as_str) {
+        Some("v1") | Some("1") => policy.version = model::VERSION_V1,
+        Some("v2") | Some("2") | None => policy.version = model::VERSION_V2,
+        Some(other) => {
+            return Err(deepcabac::util::Error::Config(format!(
+                "unknown container version '{other}' (expected v1 or v2)"
+            )))
+        }
+    }
+    if let Some(s) = flag_usize(args, "slice-len") {
+        policy.slice_len = s.max(1);
+    }
+    if let Some(t) = flag_usize(args, "threads") {
+        policy.threads = t.max(1);
+    }
+    Ok(policy)
+}
+
 fn load_network(path: &str) -> Result<Network> {
     read_nwf(path)
 }
@@ -128,9 +159,12 @@ fn cmd_compress(args: &Args) -> Result<()> {
         lambda: flag_f32(args, "lambda", 1.0),
         clusters: 0,
     };
-    let cfg = SearchConfig::default();
+    let cfg = SearchConfig {
+        container: container_policy(args)?,
+        ..SearchConfig::default()
+    };
     let compressed = coordinator::pipeline::compress_dc(&net, &cand, &cfg);
-    let bytes = compressed.to_bytes();
+    let bytes = compressed.to_bytes_with(cfg.container);
     let out = args
         .flags
         .get("o")
@@ -139,11 +173,12 @@ fn cmd_compress(args: &Args) -> Result<()> {
     std::fs::write(&out, &bytes)?;
     let orig = net.f32_size_bytes() + net.bias_size_bytes();
     println!(
-        "{input} -> {out}: {} -> {} bytes ({:.2}% of original, x{:.1})",
+        "{input} -> {out}: {} -> {} bytes ({:.2}% of original, x{:.1}, dcb v{})",
         orig,
         bytes.len(),
         100.0 * bytes.len() as f64 / orig as f64,
-        orig as f64 / bytes.len() as f64
+        orig as f64 / bytes.len() as f64,
+        cfg.container.version
     );
     Ok(())
 }
@@ -154,7 +189,10 @@ fn cmd_decompress(args: &Args) -> Result<()> {
         .first()
         .ok_or_else(|| deepcabac::util::Error::Config("missing input .dcb".into()))?;
     let raw = std::fs::read(input)?;
-    let compressed = CompressedNetwork::from_bytes(&raw)?;
+    let threads = flag_usize(args, "threads")
+        .unwrap_or_else(coordinator::config::default_threads)
+        .max(1);
+    let compressed = CompressedNetwork::from_bytes_with(&raw, threads)?;
     let net = compressed.reconstruct_named();
     let out = args
         .flags
@@ -198,7 +236,10 @@ fn cmd_search(args: &Args) -> Result<()> {
         .first()
         .ok_or_else(|| deepcabac::util::Error::Config("missing input .nwf".into()))?;
     let net = load_network(input)?;
-    let mut cfg = SearchConfig::default();
+    let mut cfg = SearchConfig {
+        container: container_policy(args)?,
+        ..SearchConfig::default()
+    };
     if let Some(t) = args.flags.get("threads").and_then(|v| v.parse().ok()) {
         cfg.threads = t;
     }
@@ -236,24 +277,32 @@ fn cmd_info(args: &Args) -> Result<()> {
         .ok_or_else(|| deepcabac::util::Error::Config("missing input".into()))?;
     if input.ends_with(".dcb") {
         let raw = std::fs::read(input)?;
-        let c = CompressedNetwork::from_bytes(&raw)?;
+        let header = model::probe(&raw)?;
+        let threads = flag_usize(args, "threads")
+            .unwrap_or_else(coordinator::config::default_threads)
+            .max(1);
+        let c = CompressedNetwork::from_bytes_with(&raw, threads)?;
         println!(
-            "{input}: dcb v1, coding(n={}, eg_ctx={}), {} layers, {} params, {} bytes",
+            "{input}: dcb v{}, coding(n={}, eg_ctx={}), {} layers, {} params, {} slices, {} bytes",
+            header.version,
             c.cfg.max_abs_gr,
             c.cfg.eg_contexts,
             c.layers.len(),
             c.param_count(),
+            header.total_slices(),
             raw.len()
         );
-        for l in &c.layers {
+        for (l, p) in c.layers.iter().zip(&header.layers) {
             let nz = l.ints.iter().filter(|&&i| i != 0).count();
             println!(
-                "  {:<12} {:>4}x{:<6} Δ={:<10.6} nz={:.1}%",
+                "  {:<12} {:>4}x{:<6} Δ={:<10.6} nz={:.1}% slices={} payload={}B",
                 l.name,
                 l.rows,
                 l.cols,
                 l.delta,
-                100.0 * nz as f64 / l.ints.len().max(1) as f64
+                100.0 * nz as f64 / l.ints.len().max(1) as f64,
+                p.n_slices,
+                p.payload_bytes
             );
         }
     } else {

@@ -4,23 +4,79 @@
 //! reconstruct the quantized network (weights = Δ · I per layer, biases as
 //! uncompressed side info) and hand it to the PJRT eval graph.
 //!
-//! Layout (little-endian):
+//! Two container versions share one layout; only the per-layer payload
+//! differs (little-endian throughout):
 //! ```text
-//! magic 'DCB1' | u8 version | u16 name_len | model name (utf-8)
+//! magic 'DCB1' | u8 version (1|2) | u16 name_len | model name (utf-8)
 //! | u32 max_abs_gr | u32 eg_contexts | u32 n_layers
 //! per layer:
 //!   u16 name_len | name | u8 kind | u8 n_dims | u32 dims[] | u32 rows | u32 cols
 //!   | f32 delta | u8 has_bias | [u32 blen | f32 bias[]] | u32 payload_len
-//!   | CABAC payload
+//!   | payload
 //! u32 crc32 (over everything after the magic)
 //! ```
+//! *Version 1* payloads are one monolithic CABAC stream per layer.
+//! *Version 2* (DCB2) payloads are **sliced**: `u32 slice_len (symbols) |
+//! u32 n_slices | { u32 byte_len | CABAC slice }*` — each slice restarts
+//! the arithmetic coder and contexts, so slices (across *all* layers) are
+//! fanned out over worker threads on both encode and decode, trading <3%
+//! size for decoder throughput that scales with cores (the paper's §III
+//! "high decoder throughput" desideratum).  Decoding dispatches on the
+//! version byte, so v1 streams remain first-class.
 
 use super::network::{Kind, Layer, Network};
+use crate::cabac::slices::{assemble_sliced, parse_sliced, slice_count};
 use crate::cabac::{decode_layer, encode_layer, CodingConfig};
+use crate::util::parallel::{default_threads, parallel_map};
 use crate::util::{Error, Result};
 
 const MAGIC: &[u8; 4] = b"DCB1";
-const VERSION: u8 = 1;
+/// Legacy monolithic container.
+pub const VERSION_V1: u8 = 1;
+/// Sliced parallel container (DCB2).
+pub const VERSION_V2: u8 = 2;
+/// Default symbols per slice for v2 payloads: small enough that a
+/// million-parameter layer fans out over ~60 slices, large enough that the
+/// per-slice cost (context restart + coder tail + 4-byte length) stays
+/// well under 1% of typical payloads.
+pub const DEFAULT_SLICE_LEN: usize = 16_384;
+
+/// Container coding policy: which version to emit and how wide to fan out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ContainerPolicy {
+    /// `VERSION_V1` or `VERSION_V2`.
+    pub version: u8,
+    /// Symbols per slice (v2 only; clamped to >= 1).
+    pub slice_len: usize,
+    /// Worker threads for encode/decode fan-out (clamped to >= 1).
+    pub threads: usize,
+}
+
+impl ContainerPolicy {
+    /// Legacy monolithic v1 container.
+    pub fn v1() -> Self {
+        Self {
+            version: VERSION_V1,
+            slice_len: 0,
+            threads: default_threads(),
+        }
+    }
+
+    /// Sliced v2 container with explicit knobs.
+    pub fn v2(slice_len: usize, threads: usize) -> Self {
+        Self {
+            version: VERSION_V2,
+            slice_len: slice_len.max(1),
+            threads: threads.max(1),
+        }
+    }
+}
+
+impl Default for ContainerPolicy {
+    fn default() -> Self {
+        Self::v2(DEFAULT_SLICE_LEN, default_threads())
+    }
+}
 
 /// One quantized layer: signed grid indices + the reconstruction step-size.
 #[derive(Clone, Debug, PartialEq)]
@@ -69,17 +125,221 @@ pub struct CompressedNetwork {
     pub layers: Vec<QuantizedLayer>,
 }
 
+/// Header-only view of one layer in a `.dcb` stream (no CABAC decode).
+#[derive(Clone, Debug)]
+pub struct LayerProbe {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub n_slices: usize,
+    pub payload_bytes: usize,
+}
+
+/// Header-only view of a `.dcb` stream: version, coding config and the
+/// per-layer slice structure — what `deepcabac info` reports without
+/// paying for a full decode.
+#[derive(Clone, Debug)]
+pub struct ContainerProbe {
+    pub version: u8,
+    pub name: String,
+    pub cfg: CodingConfig,
+    pub layers: Vec<LayerProbe>,
+}
+
+impl ContainerProbe {
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.rows * l.cols).sum()
+    }
+
+    pub fn total_slices(&self) -> usize {
+        self.layers.iter().map(|l| l.n_slices).sum()
+    }
+}
+
+/// Parsed-but-not-decoded layer: headers plus the raw payload slice.
+struct RawLayer<'a> {
+    name: String,
+    kind: Kind,
+    shape: Vec<usize>,
+    rows: usize,
+    cols: usize,
+    delta: f32,
+    bias: Option<Vec<f32>>,
+    payload: &'a [u8],
+}
+
+/// Parsed container: everything except the CABAC payload decode.
+struct ParsedContainer<'a> {
+    version: u8,
+    name: String,
+    cfg: CodingConfig,
+    layers: Vec<RawLayer<'a>>,
+}
+
+/// Validate magic + CRC and walk every header field.
+fn parse_container(raw: &[u8]) -> Result<ParsedContainer<'_>> {
+    if raw.len() < 8 || &raw[..4] != MAGIC {
+        return Err(Error::Format("bad dcb magic".into()));
+    }
+    let body = &raw[4..raw.len() - 4];
+    let crc_stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+    if crc32fast::hash(body) != crc_stored {
+        return Err(Error::Format("dcb crc mismatch".into()));
+    }
+    let mut pos = 0usize;
+    macro_rules! take {
+        ($n:expr) => {{
+            if pos + $n > body.len() {
+                return Err(Error::Format("dcb truncated".into()));
+            }
+            let s = &body[pos..pos + $n];
+            pos += $n;
+            s
+        }};
+    }
+    macro_rules! u32le {
+        () => {
+            u32::from_le_bytes(take!(4).try_into().unwrap())
+        };
+    }
+    let version = take!(1)[0];
+    if version != VERSION_V1 && version != VERSION_V2 {
+        return Err(Error::Format(format!("dcb version {version} unsupported")));
+    }
+    let model_name_len = u16::from_le_bytes(take!(2).try_into().unwrap()) as usize;
+    let model_name = String::from_utf8(take!(model_name_len).to_vec())
+        .map_err(|e| Error::Format(format!("bad model name: {e}")))?;
+    let cfg = CodingConfig {
+        max_abs_gr: u32le!(),
+        eg_contexts: u32le!(),
+    };
+    if cfg.max_abs_gr == 0 || cfg.max_abs_gr > 64 || cfg.eg_contexts > 64 {
+        return Err(Error::Format("dcb implausible coding config".into()));
+    }
+    let n_layers = u32le!() as usize;
+    let mut layers = Vec::with_capacity(n_layers.min(4096));
+    for _ in 0..n_layers {
+        let name_len = u16::from_le_bytes(take!(2).try_into().unwrap()) as usize;
+        let name = String::from_utf8(take!(name_len).to_vec())
+            .map_err(|e| Error::Format(format!("bad name: {e}")))?;
+        let kind = Kind::from_code(take!(1)[0])?;
+        let nd = take!(1)[0] as usize;
+        let mut shape = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            shape.push(u32le!() as usize);
+        }
+        let rows = u32le!() as usize;
+        let cols = u32le!() as usize;
+        let delta = f32::from_le_bytes(take!(4).try_into().unwrap());
+        let has_bias = take!(1)[0] != 0;
+        let bias = if has_bias {
+            let blen = u32le!() as usize;
+            let raw = take!(blen.saturating_mul(4));
+            Some(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let plen = u32le!() as usize;
+        let payload = take!(plen);
+        layers.push(RawLayer {
+            name,
+            kind,
+            shape,
+            rows,
+            cols,
+            delta,
+            bias,
+            payload,
+        });
+    }
+    if pos != body.len() {
+        return Err(Error::Format("dcb trailing garbage".into()));
+    }
+    Ok(ParsedContainer {
+        version,
+        name: model_name,
+        cfg,
+        layers,
+    })
+}
+
+/// Inspect a `.dcb` stream's headers without decoding any payload.
+pub fn probe(raw: &[u8]) -> Result<ContainerProbe> {
+    let parsed = parse_container(raw)?;
+    let mut layers = Vec::with_capacity(parsed.layers.len());
+    for l in &parsed.layers {
+        let n_slices = match parsed.version {
+            VERSION_V1 => usize::from(l.rows * l.cols > 0),
+            _ => parse_sliced(l.payload, l.rows * l.cols)?.1.len(),
+        };
+        layers.push(LayerProbe {
+            name: l.name.clone(),
+            rows: l.rows,
+            cols: l.cols,
+            n_slices,
+            payload_bytes: l.payload.len(),
+        });
+    }
+    Ok(ContainerProbe {
+        version: parsed.version,
+        name: parsed.name,
+        cfg: parsed.cfg,
+        layers,
+    })
+}
+
 impl CompressedNetwork {
-    /// Serialize: CABAC-encode every layer and assemble the container.
-    pub fn to_bytes(&self) -> Vec<u8> {
+    /// CABAC-encode every layer payload under `policy` (slices and layers
+    /// fan out over `policy.threads` workers; output bytes are independent
+    /// of the thread count).
+    fn layer_payloads(&self, policy: ContainerPolicy) -> Vec<Vec<u8>> {
+        match policy.version {
+            VERSION_V1 => {
+                let items: Vec<&[i32]> = self.layers.iter().map(|l| l.ints.as_slice()).collect();
+                parallel_map(&items, policy.threads, |ints| encode_layer(ints, self.cfg))
+            }
+            _ => {
+                let slice_len = policy.slice_len.max(1);
+                let mut chunks: Vec<&[i32]> = Vec::new();
+                let mut per_layer = Vec::with_capacity(self.layers.len());
+                for l in &self.layers {
+                    let before = chunks.len();
+                    chunks.extend(l.ints.chunks(slice_len));
+                    per_layer.push(chunks.len() - before);
+                }
+                let coded = parallel_map(&chunks, policy.threads, |s| encode_layer(s, self.cfg));
+                let mut it = coded.into_iter();
+                per_layer
+                    .into_iter()
+                    .map(|n| {
+                        let payloads: Vec<Vec<u8>> = it.by_ref().take(n).collect();
+                        assemble_sliced(slice_len, &payloads)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Serialize under an explicit [`ContainerPolicy`].
+    pub fn to_bytes_with(&self, policy: ContainerPolicy) -> Vec<u8> {
+        let version = if policy.version == VERSION_V1 {
+            VERSION_V1
+        } else {
+            VERSION_V2
+        };
+        let payloads = self.layer_payloads(ContainerPolicy { version, ..policy });
         let mut body = Vec::new();
-        body.push(VERSION);
+        body.push(version);
         body.extend((self.name.len() as u16).to_le_bytes());
         body.extend(self.name.as_bytes());
         body.extend(self.cfg.max_abs_gr.to_le_bytes());
         body.extend(self.cfg.eg_contexts.to_le_bytes());
         body.extend((self.layers.len() as u32).to_le_bytes());
-        for l in &self.layers {
+        for (l, payload) in self.layers.iter().zip(&payloads) {
             body.extend((l.name.len() as u16).to_le_bytes());
             body.extend(l.name.as_bytes());
             body.push(l.kind.code());
@@ -97,7 +357,6 @@ impl CompressedNetwork {
                     body.extend(x.to_le_bytes());
                 }
             }
-            let payload = encode_layer(&l.ints, self.cfg);
             body.extend((payload.len() as u32).to_le_bytes());
             body.extend(payload);
         }
@@ -108,92 +367,89 @@ impl CompressedNetwork {
         out
     }
 
-    /// Deserialize + CABAC-decode.
-    pub fn from_bytes(raw: &[u8]) -> Result<Self> {
-        if raw.len() < 8 || &raw[..4] != MAGIC {
-            return Err(Error::Format("bad dcb magic".into()));
-        }
-        let body = &raw[4..raw.len() - 4];
-        let crc_stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
-        if crc32fast::hash(body) != crc_stored {
-            return Err(Error::Format("dcb crc mismatch".into()));
-        }
-        let mut pos = 0usize;
-        macro_rules! take {
-            ($n:expr) => {{
-                if pos + $n > body.len() {
-                    return Err(Error::Format("dcb truncated".into()));
-                }
-                let s = &body[pos..pos + $n];
-                pos += $n;
-                s
-            }};
-        }
-        macro_rules! u32le {
-            () => {
-                u32::from_le_bytes(take!(4).try_into().unwrap())
-            };
-        }
-        let version = take!(1)[0];
-        if version != VERSION {
-            return Err(Error::Format(format!("dcb version {version} unsupported")));
-        }
-        let model_name_len = u16::from_le_bytes(take!(2).try_into().unwrap()) as usize;
-        let model_name = String::from_utf8(take!(model_name_len).to_vec())
-            .map_err(|e| Error::Format(format!("bad model name: {e}")))?;
-        let cfg = CodingConfig {
-            max_abs_gr: u32le!(),
-            eg_contexts: u32le!(),
-        };
-        if cfg.max_abs_gr == 0 || cfg.max_abs_gr > 64 || cfg.eg_contexts > 64 {
-            return Err(Error::Format("dcb implausible coding config".into()));
-        }
-        let n_layers = u32le!() as usize;
-        let mut layers = Vec::with_capacity(n_layers);
-        for _ in 0..n_layers {
-            let name_len = u16::from_le_bytes(take!(2).try_into().unwrap()) as usize;
-            let name = String::from_utf8(take!(name_len).to_vec())
-                .map_err(|e| Error::Format(format!("bad name: {e}")))?;
-            let kind = Kind::from_code(take!(1)[0])?;
-            let nd = take!(1)[0] as usize;
-            let mut shape = Vec::with_capacity(nd);
-            for _ in 0..nd {
-                shape.push(u32le!() as usize);
+    /// Serialize as a legacy v1 container (monolithic per-layer payloads).
+    /// Kept as the default for byte-stability of existing streams; new
+    /// callers wanting parallel decode pass a v2 policy to
+    /// [`Self::to_bytes_with`].
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_bytes_with(ContainerPolicy::v1())
+    }
+
+    /// Deserialize + CABAC-decode with an explicit decoder thread count.
+    /// Dispatches on the container's version byte: v1 fans out per layer,
+    /// v2 fans out per slice across all layers.
+    pub fn from_bytes_with(raw: &[u8], threads: usize) -> Result<Self> {
+        let parsed = parse_container(raw)?;
+        let cfg = parsed.cfg;
+        let ints_per_layer: Vec<Result<Vec<i32>>> = match parsed.version {
+            VERSION_V1 => {
+                let items: Vec<(&[u8], usize)> = parsed
+                    .layers
+                    .iter()
+                    .map(|l| (l.payload, l.rows * l.cols))
+                    .collect();
+                parallel_map(&items, threads, |&(bytes, n)| decode_layer(bytes, n, cfg))
             }
-            let rows = u32le!() as usize;
-            let cols = u32le!() as usize;
-            let delta = f32::from_le_bytes(take!(4).try_into().unwrap());
-            let has_bias = take!(1)[0] != 0;
-            let bias = if has_bias {
-                let blen = u32le!() as usize;
-                let raw = take!(blen * 4);
-                Some(
-                    raw.chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect(),
-                )
-            } else {
-                None
-            };
-            let plen = u32le!() as usize;
-            let payload = take!(plen);
-            let ints = decode_layer(payload, rows * cols, cfg)?;
-            layers.push(QuantizedLayer {
-                name,
-                kind,
-                shape,
-                rows,
-                cols,
-                ints,
-                delta,
-                bias,
-            });
-        }
+            _ => {
+                let mut per_layer: Vec<Vec<(&[u8], usize)>> =
+                    Vec::with_capacity(parsed.layers.len());
+                for l in &parsed.layers {
+                    per_layer.push(parse_sliced(l.payload, l.rows * l.cols)?.1);
+                }
+                let flat: Vec<(&[u8], usize)> =
+                    per_layer.iter().flat_map(|v| v.iter().copied()).collect();
+                let decoded = parallel_map(&flat, threads, |&(bytes, n)| {
+                    decode_layer(bytes, n, cfg)
+                });
+                let mut it = decoded.into_iter();
+                per_layer
+                    .iter()
+                    .map(|slices| {
+                        let mut acc: Vec<i32> = Vec::new();
+                        let mut first_err = None;
+                        for _ in 0..slices.len() {
+                            match it.next().expect("slice count mismatch") {
+                                Ok(mut s) if first_err.is_none() => acc.append(&mut s),
+                                Ok(_) => {}
+                                Err(e) if first_err.is_none() => first_err = Some(e),
+                                Err(_) => {}
+                            }
+                        }
+                        match first_err {
+                            Some(e) => Err(e),
+                            None => Ok(acc),
+                        }
+                    })
+                    .collect()
+            }
+        };
+        let layers = parsed
+            .layers
+            .into_iter()
+            .zip(ints_per_layer)
+            .map(|(l, ints)| {
+                Ok(QuantizedLayer {
+                    name: l.name,
+                    kind: l.kind,
+                    shape: l.shape,
+                    rows: l.rows,
+                    cols: l.cols,
+                    ints: ints?,
+                    delta: l.delta,
+                    bias: l.bias,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
         Ok(Self {
-            name: model_name,
+            name: parsed.name,
             cfg,
             layers,
         })
+    }
+
+    /// Deserialize + CABAC-decode (default decoder fan-out).
+    pub fn from_bytes(raw: &[u8]) -> Result<Self> {
+        Self::from_bytes_with(raw, default_threads())
     }
 
     /// Rebuild the dequantized [`Network`] using the embedded name.
@@ -211,6 +467,14 @@ impl CompressedNetwork {
 
     pub fn param_count(&self) -> usize {
         self.layers.iter().map(|l| l.ints.len()).sum()
+    }
+
+    /// Slice count per layer a v2 serialization of this network would use.
+    pub fn planned_slices(&self, slice_len: usize) -> Vec<usize> {
+        self.layers
+            .iter()
+            .map(|l| slice_count(l.ints.len(), slice_len))
+            .collect()
     }
 }
 
@@ -304,5 +568,108 @@ mod tests {
         };
         let back = CompressedNetwork::from_bytes(&net.to_bytes()).unwrap();
         assert!(back.layers.is_empty());
+        let v2 = net.to_bytes_with(ContainerPolicy::default());
+        let back2 = CompressedNetwork::from_bytes(&v2).unwrap();
+        assert!(back2.layers.is_empty());
+    }
+
+    #[test]
+    fn v2_roundtrip_various_policies() {
+        let net = sample();
+        for slice_len in [1usize, 100, DEFAULT_SLICE_LEN] {
+            for threads in [1usize, 4] {
+                let bytes = net.to_bytes_with(ContainerPolicy::v2(slice_len, threads));
+                let back = CompressedNetwork::from_bytes_with(&bytes, threads).unwrap();
+                assert_eq!(back.layers, net.layers, "slice_len={slice_len}");
+                assert_eq!(back.name, net.name);
+            }
+        }
+    }
+
+    #[test]
+    fn v2_bytes_independent_of_thread_count() {
+        let net = sample();
+        let a = net.to_bytes_with(ContainerPolicy::v2(128, 1));
+        let b = net.to_bytes_with(ContainerPolicy::v2(128, 8));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn v1_and_v2_decode_to_identical_layers() {
+        let net = sample();
+        let v1 = CompressedNetwork::from_bytes(&net.to_bytes()).unwrap();
+        let v2 = CompressedNetwork::from_bytes(
+            &net.to_bytes_with(ContainerPolicy::v2(200, 2)),
+        )
+        .unwrap();
+        assert_eq!(v1.layers, v2.layers);
+    }
+
+    #[test]
+    fn probe_reports_versions_and_slices() {
+        let net = sample();
+        let p1 = probe(&net.to_bytes()).unwrap();
+        assert_eq!(p1.version, VERSION_V1);
+        assert_eq!(p1.layers.len(), 2);
+        assert!(p1.layers.iter().all(|l| l.n_slices == 1));
+        assert_eq!(p1.param_count(), net.param_count());
+
+        let p2 = probe(&net.to_bytes_with(ContainerPolicy::v2(100, 1))).unwrap();
+        assert_eq!(p2.version, VERSION_V2);
+        assert_eq!(
+            p2.layers.iter().map(|l| l.n_slices).collect::<Vec<_>>(),
+            net.planned_slices(100)
+        );
+        assert!(p2.total_slices() >= p1.total_slices());
+    }
+
+    #[test]
+    fn unsupported_version_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes[4] = 9; // version byte lives right after the magic
+        let body_len = bytes.len() - 8;
+        let crc = crate::util::crc32(&bytes[4..4 + body_len]);
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = CompressedNetwork::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn v2_overhead_is_small_at_default_slice_len() {
+        // One 120k-parameter layer: the v2 container at the default slice
+        // length must cost < 3% over monolithic v1.
+        let mut rng = Pcg64::new(61);
+        let ints: Vec<i32> = (0..120_000)
+            .map(|_| {
+                if rng.next_f64() < 0.8 {
+                    0
+                } else {
+                    rng.below(31) as i32 - 15
+                }
+            })
+            .collect();
+        let net = CompressedNetwork {
+            name: "big".into(),
+            cfg: CodingConfig::default(),
+            layers: vec![QuantizedLayer {
+                name: "fc".into(),
+                kind: Kind::Dense,
+                shape: vec![400, 300],
+                rows: 300,
+                cols: 400,
+                ints,
+                delta: 0.01,
+                bias: None,
+            }],
+        };
+        let v1 = net.to_bytes().len();
+        let v2 = net
+            .to_bytes_with(ContainerPolicy::v2(DEFAULT_SLICE_LEN, 4))
+            .len();
+        assert!(
+            (v2 as f64) < v1 as f64 * 1.03,
+            "v2 {v2} vs v1 {v1} exceeds 3% overhead"
+        );
     }
 }

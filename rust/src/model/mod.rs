@@ -6,7 +6,10 @@ pub mod network;
 pub mod nwf;
 pub mod scan;
 
-pub use bitstream::{CompressedNetwork, QuantizedLayer};
+pub use bitstream::{
+    probe, CompressedNetwork, ContainerPolicy, ContainerProbe, LayerProbe, QuantizedLayer,
+    DEFAULT_SLICE_LEN, VERSION_V1, VERSION_V2,
+};
 pub use network::{Importance, Kind, Layer, Network};
 pub use nwf::{read_nwf, write_nwf};
 pub use scan::ScanOrder;

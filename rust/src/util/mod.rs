@@ -1,22 +1,48 @@
-//! Small shared utilities: deterministic RNG, error type, math helpers.
+//! Small shared utilities: deterministic RNG, error type, parallel map,
+//! math helpers.
 
+pub mod parallel;
 pub mod rng;
 
+pub use parallel::{default_threads, parallel_map};
 pub use rng::Pcg64;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type.  (Display/Error are hand-implemented — proc-macro
+/// helper crates are not in the offline vendor set.)
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("format error: {0}")]
+    Io(std::io::Error),
     Format(String),
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("decode error: {0}")]
     Decode(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Format(m) => write!(f, "format error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Decode(m) => write!(f, "decode error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -26,6 +52,12 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+/// CRC-32 (IEEE) over a byte slice — re-exported so integration tests and
+/// tools can recompute container checksums without a direct dependency.
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32fast::hash(data)
+}
 
 /// log2 of a probability given as a fraction `num / den` — used by entropy
 /// calculations throughout; returns 0 contribution guards upstream.

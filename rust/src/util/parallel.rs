@@ -1,11 +1,24 @@
-//! Minimal work-stealing-ish parallel map over a candidate list.
+//! Minimal work-stealing-ish parallel map over an item list.
 //!
 //! (tokio/rayon are not in the offline vendor set — DESIGN.md §6.  A shared
 //! atomic cursor over an immutable slice gives the same load-balancing
-//! behaviour for our coarse-grained candidates.)
+//! behaviour for our coarse-grained items: grid-search candidates, DCB2
+//! container slices, per-layer payloads.)
+//!
+//! Lives in `util` so both `cabac`/`model` (slice fan-out) and
+//! `coordinator` (candidate fan-out) can use it without a layering cycle;
+//! `coordinator::parallel` re-exports this module for path stability.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// Default worker-thread count: all cores, capped at 16.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
 
 /// Apply `f` to every item on `threads` OS threads; results keep item order.
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>

@@ -80,8 +80,30 @@ fn compress_info_decompress_eval_roundtrip() {
 
     let (ok, out, _) = run(&["info", dcb.to_str().unwrap()]);
     assert!(ok);
-    assert!(out.contains("dcb v1"));
+    // compress defaults to the sliced v2 container; info reports the
+    // version and per-layer slice structure
+    assert!(out.contains("dcb v2"), "{out}");
+    assert!(out.contains("slices="), "{out}");
     assert!(out.contains("conv1"));
+
+    // legacy v1 container still round-trips through the same verbs
+    let dcb1 = dir.join("m_v1.dcb");
+    let (ok, _, err) = run(&[
+        "compress",
+        art.join("lenet5.nwf").to_str().unwrap(),
+        "-o",
+        dcb1.to_str().unwrap(),
+        "--container",
+        "v1",
+        "--delta",
+        "0.01",
+        "--lambda",
+        "1.0",
+    ]);
+    assert!(ok, "{err}");
+    let (ok, out, _) = run(&["info", dcb1.to_str().unwrap()]);
+    assert!(ok);
+    assert!(out.contains("dcb v1"), "{out}");
 
     let (ok, out, err) = run(&[
         "decompress",

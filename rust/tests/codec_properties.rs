@@ -189,6 +189,37 @@ fn prop_cabac_beats_huffman_family_on_sparse_planes() {
     );
 }
 
+/// Shape a symbol plane into a one-layer [`CompressedNetwork`].
+fn plane_network(s: &[i32]) -> deepcabac::model::CompressedNetwork {
+    use deepcabac::model::{CompressedNetwork, Kind, QuantizedLayer};
+    let cols = (s.len() as f64).sqrt().ceil().max(1.0) as usize;
+    let rows = s.len().div_ceil(cols).max(1);
+    let mut ints = s.to_vec();
+    ints.resize(rows * cols, 0);
+    CompressedNetwork {
+        name: "prop".into(),
+        cfg: CodingConfig::default(),
+        layers: vec![QuantizedLayer {
+            name: "l".into(),
+            kind: Kind::Dense,
+            shape: vec![cols, rows],
+            rows,
+            cols,
+            ints,
+            delta: 0.0123,
+            bias: Some(vec![0.5; rows]),
+        }],
+    }
+}
+
+/// Recompute the container CRC after tampering with the body, so the
+/// tamper reaches the header/slice validation instead of the CRC check.
+fn refix_crc(bytes: &mut [u8]) {
+    let n = bytes.len();
+    let crc = deepcabac::util::crc32(&bytes[4..n - 4]);
+    bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+}
+
 #[test]
 fn prop_dcb_container_roundtrip() {
     use deepcabac::model::{CompressedNetwork, Kind, QuantizedLayer};
@@ -222,4 +253,164 @@ fn prop_dcb_container_roundtrip() {
                 .unwrap_or(false)
         },
     );
+}
+
+#[test]
+fn prop_dcb2_container_roundtrip() {
+    use deepcabac::model::{CompressedNetwork, ContainerPolicy};
+    check_slice(
+        Config {
+            cases: 60,
+            seed: 0xE5,
+        },
+        gen::sparse_symbols,
+        |s| {
+            let net = plane_network(s);
+            // Exercise slice boundaries around the plane size.
+            for slice_len in [1usize, 97, s.len().max(1)] {
+                for threads in [1usize, 4] {
+                    let bytes = net.to_bytes_with(ContainerPolicy::v2(slice_len, threads));
+                    let ok = CompressedNetwork::from_bytes_with(&bytes, threads)
+                        .map(|b| b.layers == net.layers)
+                        .unwrap_or(false);
+                    if !ok {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_dcb_v1_streams_decode_byte_exact_under_dispatcher() {
+    // v1 streams must keep decoding after the v2 dispatch was added, and
+    // re-encoding the decoded network as v1 must reproduce the bytes.
+    use deepcabac::model::CompressedNetwork;
+    check_slice(
+        Config {
+            cases: 40,
+            seed: 0xE6,
+        },
+        gen::sparse_symbols,
+        |s| {
+            let net = plane_network(s);
+            let v1 = net.to_bytes();
+            let Ok(back) = CompressedNetwork::from_bytes(&v1) else {
+                return false;
+            };
+            back.layers == net.layers && back.to_bytes() == v1
+        },
+    );
+}
+
+#[test]
+fn dcb_v1_and_v2_decode_identically_across_thread_counts() {
+    use deepcabac::model::{CompressedNetwork, ContainerPolicy};
+    let mut rng = deepcabac::util::Pcg64::new(0xE7);
+    let s: Vec<i32> = (0..40_000)
+        .map(|_| {
+            if rng.next_f64() < 0.85 {
+                0
+            } else {
+                rng.below(25) as i32 - 12
+            }
+        })
+        .collect();
+    let net = plane_network(&s);
+    let v1 = net.to_bytes();
+    let v2 = net.to_bytes_with(ContainerPolicy::v2(4096, 4));
+    let d1 = CompressedNetwork::from_bytes_with(&v1, 1).unwrap();
+    for threads in [1usize, 2, 8] {
+        let dv1 = CompressedNetwork::from_bytes_with(&v1, threads).unwrap();
+        let dv2 = CompressedNetwork::from_bytes_with(&v2, threads).unwrap();
+        assert_eq!(dv1.layers, d1.layers, "v1 threads={threads}");
+        assert_eq!(dv2.layers, d1.layers, "v2 threads={threads}");
+    }
+}
+
+#[test]
+fn dcb2_rejects_truncation() {
+    use deepcabac::model::{CompressedNetwork, ContainerPolicy};
+    let mut rng = deepcabac::util::Pcg64::new(0xE8);
+    let s: Vec<i32> = (0..5000).map(|_| rng.below(7) as i32 - 3).collect();
+    let bytes = plane_network(&s).to_bytes_with(ContainerPolicy::v2(512, 2));
+    for cut in [0, 3, 8, bytes.len() / 4, bytes.len() / 2, bytes.len() - 5] {
+        assert!(
+            CompressedNetwork::from_bytes(&bytes[..cut]).is_err(),
+            "cut={cut}"
+        );
+    }
+}
+
+#[test]
+fn dcb2_rejects_crc_flips() {
+    use deepcabac::model::{CompressedNetwork, ContainerPolicy};
+    let mut rng = deepcabac::util::Pcg64::new(0xE9);
+    let s: Vec<i32> = (0..3000).map(|_| rng.below(11) as i32 - 5).collect();
+    let clean = plane_network(&s).to_bytes_with(ContainerPolicy::v2(256, 2));
+    assert!(CompressedNetwork::from_bytes(&clean).is_ok());
+    for pos in [5, clean.len() / 3, clean.len() / 2, clean.len() - 1] {
+        let mut bytes = clean.clone();
+        bytes[pos] ^= 0x10;
+        assert!(CompressedNetwork::from_bytes(&bytes).is_err(), "pos={pos}");
+    }
+}
+
+#[test]
+fn dcb2_rejects_implausible_slice_headers() {
+    use deepcabac::model::{CompressedNetwork, ContainerPolicy};
+    let mut rng = deepcabac::util::Pcg64::new(0xEA);
+    let s: Vec<i32> = (0..4000).map(|_| rng.below(9) as i32 - 4).collect();
+    let net = plane_network(&s);
+    let l = &net.layers[0];
+    let clean = net.to_bytes_with(ContainerPolicy::v2(500, 1));
+    // Offset of the first layer's payload (which starts with u32
+    // slice_len), per the wire layout in model/bitstream.rs:
+    let payload_off = 4 + 1                      // magic | version
+        + 2 + net.name.len()                     // model name
+        + 4 + 4                                  // coding config
+        + 4                                      // n_layers
+        + 2 + l.name.len()                       // layer name
+        + 1 + 1 + 4 * l.shape.len()              // kind | n_dims | dims
+        + 4 + 4 + 4 + 1                          // rows | cols | delta | has_bias
+        + 4 + 4 * l.bias.as_ref().unwrap().len() // blen | bias
+        + 4; //                                     payload_len
+    // sanity: the clean stream really has slice_len == 500 there
+    assert_eq!(
+        u32::from_le_bytes(clean[payload_off..payload_off + 4].try_into().unwrap()),
+        500
+    );
+    // slice_len = 0 -> header implausible
+    let mut zero_len = clean.clone();
+    zero_len[payload_off..payload_off + 4].copy_from_slice(&0u32.to_le_bytes());
+    refix_crc(&mut zero_len);
+    assert!(CompressedNetwork::from_bytes(&zero_len).is_err());
+    // slice_len inconsistent with the slice count -> rejected
+    let mut wrong_len = clean.clone();
+    wrong_len[payload_off..payload_off + 4].copy_from_slice(&50u32.to_le_bytes());
+    refix_crc(&mut wrong_len);
+    assert!(CompressedNetwork::from_bytes(&wrong_len).is_err());
+    // absurd slice count -> rejected
+    let mut wrong_n = clean;
+    wrong_n[payload_off + 4..payload_off + 8]
+        .copy_from_slice(&0xFFFF_FFu32.to_le_bytes());
+    refix_crc(&mut wrong_n);
+    assert!(CompressedNetwork::from_bytes(&wrong_n).is_err());
+}
+
+#[test]
+fn dcb_probe_reports_container_structure() {
+    use deepcabac::model::{probe, ContainerPolicy, VERSION_V1, VERSION_V2};
+    let mut rng = deepcabac::util::Pcg64::new(0xEB);
+    let s: Vec<i32> = (0..2500).map(|_| rng.below(5) as i32 - 2).collect();
+    let net = plane_network(&s);
+    let p1 = probe(&net.to_bytes()).unwrap();
+    assert_eq!(p1.version, VERSION_V1);
+    assert_eq!(p1.total_slices(), 1);
+    let p2 = probe(&net.to_bytes_with(ContainerPolicy::v2(300, 2))).unwrap();
+    assert_eq!(p2.version, VERSION_V2);
+    assert_eq!(p2.layers[0].n_slices, net.layers[0].ints.len().div_ceil(300));
+    assert_eq!(p2.param_count(), net.param_count());
 }
