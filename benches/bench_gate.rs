@@ -1,0 +1,66 @@
+//! CI perf-regression gate over the `BENCH_dcb2.json` artifacts.
+//!
+//! Compares a freshly produced `BENCH_dcb2.json` (run `cargo bench --bench
+//! dcb2 -- --smoke` first) against the committed baseline and exits
+//! non-zero when the decode throughput regresses past the baseline's
+//! thresholds — see `deepcabac::benchutil::bench_gate` for the exact
+//! rules and the bootstrap-baseline escape hatch.
+//!
+//! ```bash
+//! cargo bench --bench dcb2 -- --smoke
+//! cargo bench --bench bench_gate -- \
+//!     --baseline benches/baseline/BENCH_dcb2.json --current BENCH_dcb2.json
+//! ```
+
+use std::process::ExitCode;
+
+use deepcabac::benchutil::bench_gate;
+
+fn arg_value(args: &[String], key: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let baseline_path =
+        arg_value(&args, "--baseline").unwrap_or_else(|| "benches/baseline/BENCH_dcb2.json".into());
+    let current_path = arg_value(&args, "--current").unwrap_or_else(|| "BENCH_dcb2.json".into());
+    // A missing *current* file just means the dcb2 bench has not run in
+    // this invocation (e.g. a plain `cargo bench` executing targets
+    // alphabetically): skip like the artifact-gated benches do.  In CI the
+    // gate step runs right after dcb2, so the file exists whenever there
+    // is something to judge.  A missing *baseline* is repo breakage and
+    // fails hard.
+    let current = match std::fs::read_to_string(&current_path) {
+        Ok(s) => s,
+        Err(_) => {
+            println!(
+                "bench_gate: SKIP — {current_path} not found; run \
+                 `cargo bench --bench dcb2 -- --smoke` first"
+            );
+            return ExitCode::SUCCESS;
+        }
+    };
+    let baseline = match std::fs::read_to_string(&baseline_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bench_gate: cannot read committed baseline {baseline_path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let report = bench_gate(&baseline, &current);
+    println!("== bench_gate: {current_path} vs {baseline_path} ==");
+    for line in &report.lines {
+        println!("  {line}");
+    }
+    if report.pass {
+        println!("bench_gate: PASS");
+        ExitCode::SUCCESS
+    } else {
+        println!("bench_gate: FAIL (see README 'Perf gate & re-baselining')");
+        ExitCode::FAILURE
+    }
+}

@@ -76,6 +76,121 @@ pub fn bench_models(default: &[&'static str]) -> Vec<&'static str> {
     }
 }
 
+/// Extract the first numeric value for `"key": <number>` from a flat-ish
+/// JSON document (serde is not in the offline vendor set; the bench JSONs
+/// are emitted by our own harness, so a scanning parser is sufficient and
+/// keeps the gate dependency-free).
+pub fn json_num(doc: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\"");
+    let mut from = 0;
+    // Scan successive occurrences: the key name may legitimately appear
+    // inside an earlier string value (e.g. the baseline's "note" text), so
+    // only a match followed by ':' counts as the field itself.
+    while let Some(at) = doc[from..].find(&needle) {
+        let after = from + at + needle.len();
+        from = after;
+        let rest = doc[after..].trim_start();
+        let Some(rest) = rest.strip_prefix(':') else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let end = rest
+            .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+            .unwrap_or(rest.len());
+        return rest[..end].parse().ok();
+    }
+    None
+}
+
+/// Verdict of one perf-gate comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GateReport {
+    pub pass: bool,
+    /// Human-readable per-check lines (printed by the `bench_gate` bench).
+    pub lines: Vec<String>,
+}
+
+/// Compare a current `BENCH_dcb2.json` against the committed baseline.
+///
+/// Two checks, both read their thresholds from the *baseline* file so
+/// re-baselining never needs a code change:
+///
+/// 1. **Absolute regression** — `v3_t1_msym_s` (single-thread decode
+///    throughput) must not drop more than `max_regress_pct` (default 15)
+///    below the baseline's value.  Skipped while the baseline is a
+///    bootstrap placeholder (`"bootstrap": 1`, no committed throughput):
+///    absolute numbers only transfer within one runner class, so the
+///    placeholder is armed by committing a real runner's artifact.
+/// 2. **Self-relative floor** — `decode_speedup_v3_t1_vs_seed_t1`, the
+///    same-run ratio of the v3 fast path over the bench's reconstruction
+///    of the *seed* decode loop (legacy bins + per-symbol panic guard +
+///    push collection), must stay >= `min_self_speedup` (default 2).
+///    This one is machine-independent and guards the whole hot-path
+///    overhaul even in bootstrap mode.  (The v3-vs-v1 ratio printed in
+///    the JSON is informational only: both of those legs run the *new*
+///    decoder, so it isolates just the bin-format delta, which Amdahl
+///    caps near 1.1x on sparse planes.)
+pub fn bench_gate(baseline: &str, current: &str) -> GateReport {
+    let mut lines = Vec::new();
+    let mut pass = true;
+    let max_regress_pct = json_num(baseline, "max_regress_pct").unwrap_or(15.0);
+    let min_self_speedup = json_num(baseline, "min_self_speedup").unwrap_or(2.0);
+    let bootstrap = json_num(baseline, "bootstrap").unwrap_or(0.0) != 0.0;
+
+    let cur = json_num(current, "v3_t1_msym_s");
+    let base = json_num(baseline, "v3_t1_msym_s");
+    match (cur, base) {
+        (None, _) => {
+            pass = false;
+            lines.push("FAIL current BENCH_dcb2.json has no v3_t1_msym_s field".into());
+        }
+        (Some(c), _) if bootstrap => lines.push(format!(
+            "SKIP absolute check: bootstrap baseline (current decode v3@1t {c:.3} Msym/s; \
+             commit a runner-produced BENCH_dcb2.json to benches/baseline/ to arm it)"
+        )),
+        (Some(_), None) => {
+            // A baseline without the field AND without the explicit
+            // bootstrap flag is a broken/stale baseline (e.g. an old-schema
+            // artifact), not an intentional escape hatch: fail loudly
+            // rather than silently disarming the regression check.
+            pass = false;
+            lines.push(
+                "FAIL baseline has no v3_t1_msym_s field and no \"bootstrap\": 1 flag — \
+                 re-baseline with a current-schema BENCH_dcb2.json"
+                    .into(),
+            );
+        }
+        (Some(c), Some(b)) => {
+            let regress_pct = 100.0 * (b - c) / b;
+            let ok = regress_pct <= max_regress_pct;
+            pass &= ok;
+            lines.push(format!(
+                "{} decode v3@1t {c:.3} Msym/s vs baseline {b:.3} ({regress_pct:+.1}% \
+                 regression, limit {max_regress_pct}%)",
+                if ok { "PASS" } else { "FAIL" }
+            ));
+        }
+    }
+
+    match json_num(current, "decode_speedup_v3_t1_vs_seed_t1") {
+        Some(r) => {
+            let ok = r >= min_self_speedup;
+            pass &= ok;
+            lines.push(format!(
+                "{} same-run overhaul speedup v3@1t/seed@1t = {r:.2}x \
+                 (floor {min_self_speedup}x)",
+                if ok { "PASS" } else { "FAIL" }
+            ));
+        }
+        None => {
+            pass = false;
+            lines
+                .push("FAIL current BENCH_dcb2.json has no decode_speedup_v3_t1_vs_seed_t1".into());
+        }
+    }
+    GateReport { pass, lines }
+}
+
 /// Write a CSV next to the bench outputs (artifacts/bench_<name>.csv) so
 /// figures can be re-plotted; returns the path.
 pub fn write_csv(name: &str, header: &str, rows: &[String]) -> std::path::PathBuf {
@@ -113,5 +228,88 @@ mod tests {
     fn model_filter() {
         std::env::remove_var("DCB_BENCH_MODELS");
         assert_eq!(bench_models(&["a", "b"]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn json_num_extracts_values() {
+        let doc = "{\n  \"a\": 1.5,\n  \"nested\": {\"b\": -2e3},\n  \"c\": 7\n}";
+        assert_eq!(json_num(doc, "a"), Some(1.5));
+        assert_eq!(json_num(doc, "b"), Some(-2000.0));
+        assert_eq!(json_num(doc, "c"), Some(7.0));
+        assert_eq!(json_num(doc, "missing"), None);
+        assert_eq!(json_num("{\"s\": \"text\"}", "s"), None);
+    }
+
+    #[test]
+    fn json_num_skips_key_mentions_inside_string_values() {
+        // An earlier occurrence of the quoted key that is not a field
+        // (string-list element, not followed by ':') must not shadow the
+        // real field later in the document.
+        let doc = "{\"gated_keys\": [\"speed\"], \"speed\": 4.5}";
+        assert_eq!(json_num(doc, "speed"), Some(4.5));
+        // ...and a mention with no real field stays None.
+        assert_eq!(json_num("{\"gated_keys\": [\"speed\"]}", "speed"), None);
+    }
+
+    fn bench_json(msym: f64, speedup: f64) -> String {
+        format!(
+            "{{\"bench\": \"dcb2\", \"v3_t1_msym_s\": {msym}, \
+             \"decode_speedup_v3_t1_vs_seed_t1\": {speedup}}}"
+        )
+    }
+
+    #[test]
+    fn gate_passes_within_threshold() {
+        let baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&baseline, &bench_json(9.0, 2.3)); // -10% < 15%
+        assert!(r.pass, "{:?}", r.lines);
+    }
+
+    #[test]
+    fn gate_fails_on_large_regression() {
+        let baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&baseline, &bench_json(8.0, 2.3)); // -20% > 15%
+        assert!(!r.pass, "{:?}", r.lines);
+    }
+
+    #[test]
+    fn gate_fails_when_self_speedup_collapses() {
+        let baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&baseline, &bench_json(10.5, 1.2));
+        assert!(!r.pass, "{:?}", r.lines);
+    }
+
+    #[test]
+    fn gate_bootstrap_baseline_skips_absolute_check() {
+        let baseline = "{\"bootstrap\": 1, \"min_self_speedup\": 2.0}";
+        let good = bench_gate(baseline, &bench_json(0.5, 2.2));
+        assert!(good.pass, "{:?}", good.lines);
+        assert!(good.lines.iter().any(|l| l.starts_with("SKIP")), "{:?}", good.lines);
+        let bad = bench_gate(baseline, &bench_json(0.5, 1.5));
+        assert!(!bad.pass, "{:?}", bad.lines);
+    }
+
+    #[test]
+    fn gate_fails_on_stale_baseline_without_bootstrap_flag() {
+        // Old-schema baseline (no v3 field) and no explicit bootstrap flag:
+        // the absolute check must FAIL, not silently disarm.
+        let stale = "{\"v2_t4_msym_s\": 9.0, \"min_self_speedup\": 2.0}";
+        let r = bench_gate(stale, &bench_json(10.0, 2.4));
+        assert!(!r.pass, "{:?}", r.lines);
+        assert!(r.lines.iter().any(|l| l.contains("re-baseline")), "{:?}", r.lines);
+    }
+
+    #[test]
+    fn gate_custom_thresholds_come_from_baseline() {
+        let baseline = "{\"v3_t1_msym_s\": 10.0, \"max_regress_pct\": 50.0, \
+                        \"min_self_speedup\": 1.0}";
+        let r = bench_gate(baseline, &bench_json(6.0, 1.1)); // -40% < 50%
+        assert!(r.pass, "{:?}", r.lines);
+    }
+
+    #[test]
+    fn gate_rejects_missing_fields() {
+        let r = bench_gate(&bench_json(10.0, 2.4), "{}");
+        assert!(!r.pass);
     }
 }

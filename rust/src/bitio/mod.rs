@@ -3,13 +3,21 @@
 //! Used by the Huffman-family codecs and the Exp-Golomb codec; the CABAC
 //! engine has its own byte-oriented renormalization and does not go through
 //! this layer.
+//!
+//! Both sides are buffered: bits accumulate in a 64-bit register and move
+//! to/from the byte buffer a 32-bit word at a time, instead of the seed's
+//! bit-by-bit shifting.  The wire format is unchanged (plain MSB-first
+//! bitstream, final byte zero-padded) — only the access pattern differs.
 
 /// MSB-first bit writer into an owned `Vec<u8>`.
 #[derive(Default, Debug)]
 pub struct BitWriter {
     buf: Vec<u8>,
-    cur: u8,
-    nbits: u8,
+    /// Pending bits, right-aligned: the low `nbits` bits of `acc` are the
+    /// newest output, oldest at the high end.  Invariant: `nbits < 32`
+    /// between chunks, so a ≤32-bit chunk always fits the register.
+    acc: u64,
+    nbits: u32,
 }
 
 impl BitWriter {
@@ -17,23 +25,34 @@ impl BitWriter {
         Self::default()
     }
 
+    /// Append up to 32 bits already masked to width `n` (`nbits < 32` on
+    /// entry, so `acc` never holds more than 63 bits before flushing).
+    #[inline]
+    fn push_chunk(&mut self, v: u64, n: u32) {
+        self.acc = (self.acc << n) | v;
+        self.nbits += n;
+        if self.nbits >= 32 {
+            self.nbits -= 32;
+            let word = (self.acc >> self.nbits) as u32;
+            self.buf.extend_from_slice(&word.to_be_bytes());
+        }
+    }
+
     #[inline]
     pub fn put_bit(&mut self, bit: bool) {
-        self.cur = (self.cur << 1) | bit as u8;
-        self.nbits += 1;
-        if self.nbits == 8 {
-            self.buf.push(self.cur);
-            self.cur = 0;
-            self.nbits = 0;
-        }
+        self.push_chunk(bit as u64, 1);
     }
 
     /// Write the lowest `n` bits of `v`, MSB first.
     #[inline]
     pub fn put_bits(&mut self, v: u64, n: u32) {
         debug_assert!(n <= 64);
-        for i in (0..n).rev() {
-            self.put_bit((v >> i) & 1 == 1);
+        if n > 32 {
+            self.push_chunk((v >> 32) & ((1u64 << (n - 32)) - 1), n - 32);
+            self.push_chunk(v & 0xFFFF_FFFF, 32);
+        } else if n > 0 {
+            let mask = if n == 32 { u32::MAX as u64 } else { (1u64 << n) - 1 };
+            self.push_chunk(v & mask, n);
         }
     }
 
@@ -44,9 +63,13 @@ impl BitWriter {
 
     /// Flush (zero-padding the last byte) and return the buffer.
     pub fn finish(mut self) -> Vec<u8> {
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.buf.push((self.acc >> self.nbits) as u8);
+        }
         if self.nbits > 0 {
-            self.cur <<= 8 - self.nbits;
-            self.buf.push(self.cur);
+            let tail = ((self.acc << (8 - self.nbits)) & 0xFF) as u8;
+            self.buf.push(tail);
         }
         self.buf
     }
@@ -55,43 +78,90 @@ impl BitWriter {
 /// MSB-first bit reader over a byte slice.
 pub struct BitReader<'a> {
     buf: &'a [u8],
+    /// Next unread byte offset (everything before it is in `acc`).
     pos: usize,
-    bit: u8,
+    /// Refill register: the low `have` bits of `acc` are unconsumed input,
+    /// oldest at the high end.
+    acc: u64,
+    have: u32,
 }
 
 impl<'a> BitReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        Self { buf, pos: 0, bit: 0 }
+        Self {
+            buf,
+            pos: 0,
+            acc: 0,
+            have: 0,
+        }
+    }
+
+    /// Top the register up to > 56 bits (or to end of input), pulling
+    /// 32-bit words while they fit.
+    #[inline]
+    fn refill(&mut self) {
+        while self.have <= 56 && self.pos < self.buf.len() {
+            if self.have <= 32 && self.pos + 4 <= self.buf.len() {
+                let word =
+                    u32::from_be_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+                self.acc = (self.acc << 32) | word as u64;
+                self.have += 32;
+                self.pos += 4;
+            } else {
+                self.acc = (self.acc << 8) | self.buf[self.pos] as u64;
+                self.have += 8;
+                self.pos += 1;
+            }
+        }
+    }
+
+    #[inline]
+    fn remaining_bits(&self) -> usize {
+        (self.buf.len() - self.pos) * 8 + self.have as usize
     }
 
     /// Read one bit; reads past the end return `None`.
     #[inline]
     pub fn get_bit(&mut self) -> Option<bool> {
-        if self.pos >= self.buf.len() {
-            return None;
+        if self.have == 0 {
+            self.refill();
+            if self.have == 0 {
+                return None;
+            }
         }
-        let b = (self.buf[self.pos] >> (7 - self.bit)) & 1 == 1;
-        self.bit += 1;
-        if self.bit == 8 {
-            self.bit = 0;
-            self.pos += 1;
-        }
-        Some(b)
+        self.have -= 1;
+        Some((self.acc >> self.have) & 1 == 1)
     }
 
-    /// Read `n` bits MSB-first into the low bits of a u64.
+    /// Read `n` bits MSB-first into the low bits of a u64.  A read past the
+    /// end returns `None` and exhausts the reader.
     #[inline]
     pub fn get_bits(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 64);
+        if self.remaining_bits() < n as usize {
+            // Match the seed semantics: a failed multi-bit read consumes
+            // the tail, so every later read also reports end-of-stream.
+            self.pos = self.buf.len();
+            self.have = 0;
+            return None;
+        }
         let mut v = 0u64;
-        for _ in 0..n {
-            v = (v << 1) | self.get_bit()? as u64;
+        let mut need = n;
+        while need > 0 {
+            if self.have == 0 {
+                self.refill();
+            }
+            let take = need.min(self.have).min(32);
+            self.have -= take;
+            v = (v << take) | ((self.acc >> self.have) & ((1u64 << take) - 1));
+            need -= take;
         }
         Some(v)
     }
 
     /// Bits consumed so far.
     pub fn bit_pos(&self) -> usize {
-        self.pos * 8 + self.bit as usize
+        self.pos * 8 - self.have as usize
     }
 }
 
@@ -166,5 +236,53 @@ mod tests {
         assert_eq!(w.bit_len(), 0);
         w.put_bits(0, 13);
         assert_eq!(w.bit_len(), 13);
+    }
+
+    #[test]
+    fn full_width_64_bit_writes() {
+        let mut w = BitWriter::new();
+        w.put_bits(u64::MAX, 64);
+        w.put_bits(0x0123_4567_89AB_CDEF, 64);
+        w.put_bit(true);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(64), Some(u64::MAX));
+        assert_eq!(r.get_bits(64), Some(0x0123_4567_89AB_CDEF));
+        assert_eq!(r.get_bit(), Some(true));
+    }
+
+    #[test]
+    fn wire_format_is_plain_msb_first() {
+        // The buffered writer must keep the seed's byte layout: bits land
+        // MSB-first, last byte zero-padded.
+        let mut w = BitWriter::new();
+        w.put_bits(0b1, 1);
+        w.put_bits(0b0110, 4);
+        w.put_bits(0b101, 3);
+        w.put_bits(0xAB, 8);
+        w.put_bit(true);
+        assert_eq!(w.finish(), vec![0b1011_0101, 0xAB, 0b1000_0000]);
+    }
+
+    #[test]
+    fn failed_read_exhausts_reader() {
+        let bytes = vec![0xFF];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(4), Some(0xF));
+        assert_eq!(r.get_bits(16), None); // only 4 bits left
+        assert_eq!(r.get_bit(), None);
+    }
+
+    #[test]
+    fn bit_pos_counts_through_refills() {
+        let bytes: Vec<u8> = (0..16).collect();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.bit_pos(), 0);
+        r.get_bits(7).unwrap();
+        assert_eq!(r.bit_pos(), 7);
+        r.get_bits(64).unwrap();
+        assert_eq!(r.bit_pos(), 71);
+        r.get_bit().unwrap();
+        assert_eq!(r.bit_pos(), 72);
     }
 }

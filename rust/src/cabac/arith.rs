@@ -9,8 +9,15 @@
 //! probability of the **0** bin); adaptation is exponential with shift
 //! [`ADAPT_SHIFT`] as in §II-B.1's backward-adaptive context modelling.
 //!
-//! The paper's Fig. 2 walkthrough is reproduced in
-//! [`tests::fig2_interval_walkthrough`].
+//! Bypass (equiprobable) bins take a dedicated fast path: no probability
+//! multiply, no context update, and — in the batched
+//! [`Encoder::encode_bypass_bits`] / [`Decoder::decode_bypass_bits`] API —
+//! up to [`BYPASS_CHUNK`] bins per range shift + renormalization.  The
+//! batched form is the DCB v3 wire format; the per-bin
+//! `*_serial` variants preserve the legacy v1/v2 bytes.
+//!
+//! The paper's Fig. 2 walkthrough is reproduced in the
+//! `fig2_interval_walkthrough` unit test below.
 
 /// Probability scale: probabilities live in [1, PROB_ONE - 1].
 pub const PROB_BITS: u32 = 12;
@@ -20,7 +27,21 @@ pub const PROB_INIT: u16 = PROB_ONE / 2;
 /// Adaptation rate (larger = slower adaptation).
 pub const ADAPT_SHIFT: u32 = 5;
 
+/// Ideal code length of a bypass (equiprobable) bin, in bits.  Bypass bins
+/// carry no context, so their cost is exactly 1 bit — the estimator and the
+/// RDOQ cost tables must use this constant instead of a `Context::bits`
+/// call (a fresh context also reads 1.0, but an *adapted* context would
+/// silently drift the estimate away from what the coder actually spends).
+pub const BYPASS_BITS: f32 = 1.0;
+
 const TOP: u32 = 1 << 24;
+
+/// Largest number of bypass bins coded per renormalization in the batched
+/// bypass path: `range >= TOP = 2^24` at loop entry, so shifting out up to
+/// 16 bits keeps `range >= 2^8 > 0` and the chunk·range products inside
+/// 32 bits.  Part of the DCB v3 wire format — changing it is a format
+/// break (the golden vectors will say so).
+pub const BYPASS_CHUNK: u32 = 16;
 
 /// Adaptive binary context model: 12-bit probability of the 0 bin.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,7 +56,7 @@ impl Default for Context {
 }
 
 impl Context {
-    #[inline]
+    #[inline(always)]
     pub fn update(&mut self, bit: bool) {
         if bit {
             self.p0 -= self.p0 >> ADAPT_SHIFT;
@@ -77,13 +98,19 @@ impl Default for Encoder {
 
 impl Encoder {
     pub fn new() -> Self {
+        Self::with_capacity(0)
+    }
+
+    /// Pre-size the output buffer (the container paths know a good payload
+    /// estimate; growing a fresh `Vec` per slice shows up in profiles).
+    pub fn with_capacity(cap: usize) -> Self {
         Self {
             low: 0,
             range: u32::MAX,
             cache: 0,
             pending: 0,
             first: true,
-            out: Vec::new(),
+            out: Vec::with_capacity(cap),
         }
     }
 
@@ -111,7 +138,7 @@ impl Encoder {
     }
 
     /// Encode one bin with an adaptive context.
-    #[inline]
+    #[inline(always)]
     pub fn encode(&mut self, ctx: &mut Context, bit: bool) {
         let bound = (self.range >> PROB_BITS) * ctx.p0 as u32;
         if bit {
@@ -127,8 +154,11 @@ impl Encoder {
         }
     }
 
-    /// Encode one equiprobable (bypass) bin.
-    #[inline]
+    /// Encode one equiprobable (bypass) bin: shift-only, no probability
+    /// multiply, no context update.  For a single bin this is bit-exactly
+    /// the `n == 1` case of [`Self::encode_bypass_bits`], so single bypass
+    /// bins are wire-compatible between the legacy and the batched paths.
+    #[inline(always)]
     pub fn encode_bypass(&mut self, bit: bool) {
         self.range >>= 1;
         if bit {
@@ -140,9 +170,40 @@ impl Encoder {
         }
     }
 
-    /// Bypass-encode the lowest `n` bits of `v`, MSB first.
+    /// Bypass-encode the lowest `n` bits of `v`, MSB first, **batched**: up
+    /// to [`BYPASS_CHUNK`] bins share one range shift and one
+    /// renormalization pass instead of paying both per bin.
+    ///
+    /// This is the DCB **v3** bypass wire format.  It is *not* byte-
+    /// compatible with the per-bin loop for `n > 1` (the per-bin path
+    /// re-truncates `range` at every halving; the batch truncates once), so
+    /// legacy v1/v2 streams go through
+    /// [`Self::encode_bypass_bits_serial`].
     #[inline]
     pub fn encode_bypass_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        let mut rem = n;
+        while rem > 0 {
+            let k = rem.min(BYPASS_CHUNK);
+            rem -= k;
+            let chunk = (v >> rem) & ((1u64 << k) - 1);
+            // range >= TOP here, so range >> k >= 2^8 and
+            // chunk * range < 2^32: the carry stays a single bit, exactly
+            // as in the context-coded path.
+            self.range >>= k;
+            self.low += chunk * self.range as u64;
+            while self.range < TOP {
+                self.range <<= 8;
+                self.shift_low();
+            }
+        }
+    }
+
+    /// Bypass-encode the lowest `n` bits of `v` one bin at a time — the
+    /// legacy (DCB v1/v2) wire format kept for byte-exact re-encoding of
+    /// old streams.
+    #[inline]
+    pub fn encode_bypass_bits_serial(&mut self, v: u64, n: u32) {
         for i in (0..n).rev() {
             self.encode_bypass((v >> i) & 1 == 1);
         }
@@ -189,15 +250,19 @@ impl<'a> Decoder<'a> {
         d
     }
 
-    #[inline]
+    #[inline(always)]
     fn next_byte(&mut self) -> u8 {
-        let b = self.input.get(self.pos).copied().unwrap_or(0);
+        let b = if self.pos < self.input.len() {
+            self.input[self.pos]
+        } else {
+            0
+        };
         self.pos += 1;
         b
     }
 
     /// Decode one bin with an adaptive context.
-    #[inline]
+    #[inline(always)]
     pub fn decode(&mut self, ctx: &mut Context) -> bool {
         let bound = (self.range >> PROB_BITS) * ctx.p0 as u32;
         let bit = self.code >= bound;
@@ -215,8 +280,8 @@ impl<'a> Decoder<'a> {
         bit
     }
 
-    /// Decode one bypass bin.
-    #[inline]
+    /// Decode one bypass bin (inverse of [`Encoder::encode_bypass`]).
+    #[inline(always)]
     pub fn decode_bypass(&mut self) -> bool {
         self.range >>= 1;
         let bit = self.code >= self.range;
@@ -230,9 +295,38 @@ impl<'a> Decoder<'a> {
         bit
     }
 
-    /// Decode `n` bypass bits MSB-first.
+    /// Decode `n` bypass bits MSB-first, **batched** — the inverse of
+    /// [`Encoder::encode_bypass_bits`] (DCB v3 wire format): one division
+    /// recovers up to [`BYPASS_CHUNK`] bins per renormalization pass.
     #[inline]
     pub fn decode_bypass_bits(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 64);
+        let mut v = 0u64;
+        let mut rem = n;
+        while rem > 0 {
+            let k = rem.min(BYPASS_CHUNK);
+            rem -= k;
+            self.range >>= k;
+            let mask = (1u32 << k) - 1;
+            // A well-formed stream keeps code < 2^k * range; the min()
+            // clamps corrupt streams so `code` never underflows and the
+            // decoded value stays in range (CRC catches the damage
+            // upstream).
+            let chunk = (self.code / self.range).min(mask);
+            self.code -= chunk * self.range;
+            v = (v << k) | chunk as u64;
+            while self.range < TOP {
+                self.range <<= 8;
+                self.code = (self.code << 8) | self.next_byte() as u32;
+            }
+        }
+        v
+    }
+
+    /// Decode `n` bypass bits one bin at a time — the legacy (DCB v1/v2)
+    /// wire format, inverse of [`Encoder::encode_bypass_bits_serial`].
+    #[inline]
+    pub fn decode_bypass_bits_serial(&mut self, n: u32) -> u64 {
         let mut v = 0u64;
         for _ in 0..n {
             v = (v << 1) | self.decode_bypass() as u64;
@@ -356,6 +450,135 @@ mod tests {
         let bytes = e.finish();
         let per = bytes.len() as f64 * 8.0 / n as f64;
         assert!((per - 1.0).abs() < 0.01, "{per}");
+    }
+
+    #[test]
+    fn batched_bypass_roundtrip_all_widths() {
+        // Every width 0..=64, values with set MSB/LSB patterns, plus
+        // random fills: the batch must reproduce exactly the bits fed in.
+        let mut rng = Pcg64::new(11);
+        let mut plan: Vec<(u64, u32)> = Vec::new();
+        for n in 0..=64u32 {
+            let v = rng.next_u64();
+            plan.push((if n == 64 { v } else { v & ((1u64 << n) - 1) }, n));
+        }
+        for _ in 0..2_000 {
+            let n = rng.below(65) as u32;
+            let v = rng.next_u64() & if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+            plan.push((v, n));
+        }
+        let mut e = Encoder::new();
+        for &(v, n) in &plan {
+            e.encode_bypass_bits(v, n);
+        }
+        let bytes = e.finish();
+        let mut d = Decoder::new(&bytes);
+        for &(v, n) in &plan {
+            assert_eq!(d.decode_bypass_bits(n), v, "n={n}");
+        }
+    }
+
+    #[test]
+    fn batched_bypass_costs_exactly_n_bits() {
+        // The batch path must stay a perfect 1 bit/bin coder.
+        let mut rng = Pcg64::new(12);
+        let mut total_bits = 0u64;
+        let mut e = Encoder::new();
+        for _ in 0..20_000 {
+            let n = 1 + rng.below(17) as u32;
+            e.encode_bypass_bits(rng.next_u64() & ((1u64 << n) - 1), n);
+            total_bits += n as u64;
+        }
+        let per = e.finish().len() as f64 * 8.0 / total_bits as f64;
+        assert!((per - 1.0).abs() < 0.01, "{per}");
+    }
+
+    #[test]
+    fn batched_bypass_interleaves_with_context_bins() {
+        let mut rng = Pcg64::new(13);
+        let mut ctx = Context::default();
+        let mut e = Encoder::new();
+        let plan: Vec<(u32, u64, bool)> = (0..20_000)
+            .map(|_| {
+                let n = rng.below(20) as u32; // n == 0 exercises the no-op batch
+                let v = if n == 0 { 0 } else { rng.next_u64() & ((1u64 << n) - 1) };
+                (n, v, rng.next_f64() < 0.2)
+            })
+            .collect();
+        for &(n, v, bit) in &plan {
+            e.encode_bypass_bits(v, n);
+            e.encode(&mut ctx, bit);
+        }
+        let bytes = e.finish();
+        let mut ctx2 = Context::default();
+        let mut d = Decoder::new(&bytes);
+        for &(n, v, bit) in &plan {
+            assert_eq!(d.decode_bypass_bits(n), v);
+            assert_eq!(d.decode(&mut ctx2), bit);
+        }
+        assert_eq!(ctx, ctx2);
+    }
+
+    #[test]
+    fn single_bin_batched_and_serial_bypass_are_wire_identical() {
+        // n == 1 batches are byte-exactly the per-bin path — the invariant
+        // that lets the EG prefix keep using encode_bypass in both formats.
+        let mut rng = Pcg64::new(14);
+        let bits: Vec<bool> = (0..10_000).map(|_| rng.next_f64() < 0.5).collect();
+        let mut ctx_a = Context::default();
+        let mut ctx_b = Context::default();
+        let mut a = Encoder::new();
+        let mut b = Encoder::new();
+        for (i, &bit) in bits.iter().enumerate() {
+            if i % 3 == 0 {
+                a.encode(&mut ctx_a, bit);
+                b.encode(&mut ctx_b, bit);
+            } else {
+                a.encode_bypass(bit);
+                b.encode_bypass_bits(bit as u64, 1);
+            }
+        }
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn zero_width_batch_is_a_noop() {
+        let mut e = Encoder::new();
+        e.encode_bypass_bits(0, 0);
+        e.encode_bypass_bits(123, 7);
+        e.encode_bypass_bits(0, 0);
+        let bytes = e.finish();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(d.decode_bypass_bits(0), 0);
+        assert_eq!(d.decode_bypass_bits(7), 123);
+        assert_eq!(d.decode_bypass_bits(0), 0);
+    }
+
+    #[test]
+    fn serial_bypass_matches_per_bin_loop() {
+        // The *_serial pair is the legacy wire format: byte-identical to
+        // looping encode_bypass, and self-consistent on decode.
+        let mut rng = Pcg64::new(15);
+        let plan: Vec<(u64, u32)> = (0..5_000)
+            .map(|_| {
+                let n = 1 + rng.below(24) as u32;
+                (rng.next_u64() & ((1u64 << n) - 1), n)
+            })
+            .collect();
+        let mut a = Encoder::new();
+        let mut b = Encoder::new();
+        for &(v, n) in &plan {
+            a.encode_bypass_bits_serial(v, n);
+            for i in (0..n).rev() {
+                b.encode_bypass((v >> i) & 1 == 1);
+            }
+        }
+        let bytes = a.finish();
+        assert_eq!(bytes, b.finish());
+        let mut d = Decoder::new(&bytes);
+        for &(v, n) in &plan {
+            assert_eq!(d.decode_bypass_bits_serial(n), v);
+        }
     }
 
     #[test]

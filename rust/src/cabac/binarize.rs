@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! | sigFlag | signFlag | AbsGr(1..n)Flags |  ExpGolomb(|v| - n - 1)      |
-//! |  ctx    |   ctx    |   ctx (1 each)   |  unary: ctx | suffix: bypass |
+//! |  ctx    |  bypass  |   ctx (1 each)   |  unary: ctx | suffix: bypass |
 //! ```
 //!
 //! * `sigFlag`  = (v != 0)
@@ -16,6 +16,17 @@
 //!
 //! Worked examples with n = 1 (Fig. 7):  1 -> 100,  -4 -> 111101,
 //! 7 -> 10111010.  Pinned in tests below.
+//!
+//! Two wire formats share this bin layout and differ only in how the
+//! uniformly distributed bins hit the range coder:
+//!
+//! * **v3** ([`encode_int`] / [`decode_int`]) — `signFlag` and the EG
+//!   suffix are bypass bins; the suffix goes through the *batched*
+//!   multi-bit bypass API (one renormalization per ≤16 bins).
+//! * **legacy** ([`encode_int_legacy`] / [`decode_int_legacy`]) — the DCB
+//!   v1/v2 format: `signFlag` context-coded, EG suffix bypassed one bin at
+//!   a time.  Kept so old containers re-encode byte-exact (pinned by
+//!   `rust/tests/golden_vectors.rs`).
 
 use super::arith::{Decoder, Encoder};
 use super::context::{SigHistory, WeightContexts};
@@ -63,9 +74,10 @@ pub fn binarize(v: i32, n: u32) -> Vec<(BinKind, bool)> {
     bins
 }
 
-/// Encode one integer weight through the arithmetic coder.
-/// `hist` supplies/updates the sigFlag context selection.
-pub fn encode_int(
+/// Shared encode body; `LEGACY` selects the v1/v2 wire format (context
+/// signFlag + per-bin EG suffix) vs the v3 bypass fast path.
+#[inline]
+fn encode_int_impl<const LEGACY: bool>(
     e: &mut Encoder,
     ctxs: &mut WeightContexts,
     hist: &mut SigHistory,
@@ -78,7 +90,11 @@ pub fn encode_int(
     if !sig {
         return;
     }
-    e.encode(&mut ctxs.sign, v < 0);
+    if LEGACY {
+        e.encode(&mut ctxs.sign, v < 0);
+    } else {
+        e.encode_bypass(v < 0);
+    }
     let a = v.unsigned_abs();
     let n = ctxs.cfg.max_abs_gr;
     for i in 1..=n {
@@ -103,11 +119,34 @@ pub fn encode_int(
     } else {
         e.encode_bypass(false);
     }
-    e.encode_bypass_bits(u as u64 & ((1u64 << k) - 1), k);
+    let suffix = u as u64 & ((1u64 << k) - 1);
+    if LEGACY {
+        e.encode_bypass_bits_serial(suffix, k);
+    } else {
+        e.encode_bypass_bits(suffix, k);
+    }
 }
 
-/// Decode one integer weight (inverse of [`encode_int`]).
-pub fn decode_int(
+/// Encode one integer weight through the arithmetic coder (v3 format:
+/// sign + EG suffix are bypass bins, the suffix batched).
+/// `hist` supplies/updates the sigFlag context selection.
+pub fn encode_int(e: &mut Encoder, ctxs: &mut WeightContexts, hist: &mut SigHistory, v: i32) {
+    encode_int_impl::<false>(e, ctxs, hist, v);
+}
+
+/// Encode one integer weight in the legacy DCB v1/v2 wire format.
+pub fn encode_int_legacy(
+    e: &mut Encoder,
+    ctxs: &mut WeightContexts,
+    hist: &mut SigHistory,
+    v: i32,
+) {
+    encode_int_impl::<true>(e, ctxs, hist, v);
+}
+
+/// Shared decode body (inverse of [`encode_int_impl`]).
+#[inline]
+pub(crate) fn decode_int_impl<const LEGACY: bool>(
     d: &mut Decoder,
     ctxs: &mut WeightContexts,
     hist: &mut SigHistory,
@@ -118,7 +157,11 @@ pub fn decode_int(
     if !sig {
         return 0;
     }
-    let neg = d.decode(&mut ctxs.sign);
+    let neg = if LEGACY {
+        d.decode(&mut ctxs.sign)
+    } else {
+        d.decode_bypass()
+    };
     let n = ctxs.cfg.max_abs_gr;
     let mut a = 1u32;
     let mut all_greater = true;
@@ -145,7 +188,11 @@ pub fn decode_int(
             k += 1;
             assert!(k < 32, "corrupt stream: EG prefix overflow");
         }
-        let suffix = d.decode_bypass_bits(k) as u32;
+        let suffix = if LEGACY {
+            d.decode_bypass_bits_serial(k) as u32
+        } else {
+            d.decode_bypass_bits(k) as u32
+        };
         let u = (1u32 << k) | suffix;
         a = u + n;
     }
@@ -156,6 +203,20 @@ pub fn decode_int(
     }
 }
 
+/// Decode one integer weight (inverse of [`encode_int`], v3 format).
+pub fn decode_int(d: &mut Decoder, ctxs: &mut WeightContexts, hist: &mut SigHistory) -> i32 {
+    decode_int_impl::<false>(d, ctxs, hist)
+}
+
+/// Decode one integer weight from the legacy DCB v1/v2 wire format.
+pub fn decode_int_legacy(
+    d: &mut Decoder,
+    ctxs: &mut WeightContexts,
+    hist: &mut SigHistory,
+) -> i32 {
+    decode_int_impl::<true>(d, ctxs, hist)
+}
+
 /// Advance the adaptive context states exactly as encoding `v` would,
 /// without running the arithmetic coder.  Used by the RDOQ quantizer to
 /// track the coder state while searching assignments (paper eq. 11: the
@@ -163,14 +224,14 @@ pub fn decode_int(
 pub fn update_contexts(ctxs: &mut WeightContexts, hist: &mut SigHistory, v: i32) {
     // Allocation-free mirror of encode_int's context updates (this sits in
     // the RDOQ inner loop — see EXPERIMENTS.md §Perf; the symbolic
-    // `binarize()` path allocates a Vec per value).
+    // `binarize()` path allocates a Vec per value).  The signFlag is a
+    // bypass bin in the v3 format, so it carries no context state here.
     let sig = v != 0;
     ctxs.sig[hist.ctx_index()].update(sig);
     hist.push(sig);
     if !sig {
         return;
     }
-    ctxs.sign.update(v < 0);
     let a = v.unsigned_abs();
     let n = ctxs.cfg.max_abs_gr;
     for i in 1..=n {
@@ -245,20 +306,31 @@ mod tests {
     }
 
     fn roundtrip(values: &[i32], cfg: CodingConfig) {
-        let mut ctxs = WeightContexts::new(cfg);
-        let mut hist = SigHistory::default();
-        let mut e = Encoder::new();
-        for &v in values {
-            encode_int(&mut e, &mut ctxs, &mut hist, v);
+        for legacy in [false, true] {
+            let mut ctxs = WeightContexts::new(cfg);
+            let mut hist = SigHistory::default();
+            let mut e = Encoder::new();
+            for &v in values {
+                if legacy {
+                    encode_int_legacy(&mut e, &mut ctxs, &mut hist, v);
+                } else {
+                    encode_int(&mut e, &mut ctxs, &mut hist, v);
+                }
+            }
+            let bytes = e.finish();
+            let mut ctxs2 = WeightContexts::new(cfg);
+            let mut hist2 = SigHistory::default();
+            let mut d = Decoder::new(&bytes);
+            for &v in values {
+                let got = if legacy {
+                    decode_int_legacy(&mut d, &mut ctxs2, &mut hist2)
+                } else {
+                    decode_int(&mut d, &mut ctxs2, &mut hist2)
+                };
+                assert_eq!(got, v, "legacy={legacy}");
+            }
+            assert_eq!(ctxs, ctxs2, "legacy={legacy}");
         }
-        let bytes = e.finish();
-        let mut ctxs2 = WeightContexts::new(cfg);
-        let mut hist2 = SigHistory::default();
-        let mut d = Decoder::new(&bytes);
-        for &v in values {
-            assert_eq!(decode_int(&mut d, &mut ctxs2, &mut hist2), v);
-        }
-        assert_eq!(ctxs, ctxs2);
     }
 
     #[test]
@@ -305,6 +377,47 @@ mod tests {
                 .collect();
             roundtrip(&values, cfg);
         }
+    }
+
+    #[test]
+    fn legacy_and_v3_formats_differ_but_agree_on_values() {
+        // Same values, both wire formats: the byte streams diverge (sign +
+        // suffix bins are coded differently) yet each decodes exactly, and
+        // the bypass rewrite costs < 2% on a sign-balanced stream.
+        let mut rng = Pcg64::new(23);
+        let values: Vec<i32> = (0..20_000)
+            .map(|_| {
+                if rng.next_f64() < 0.5 {
+                    0
+                } else {
+                    let m = 1 + (rng.next_f64() * rng.next_f64() * 400.0) as i32;
+                    if rng.next_f64() < 0.5 {
+                        -m
+                    } else {
+                        m
+                    }
+                }
+            })
+            .collect();
+        let cfg = CodingConfig::default();
+        let code = |legacy: bool| {
+            let mut ctxs = WeightContexts::new(cfg);
+            let mut hist = SigHistory::default();
+            let mut e = Encoder::new();
+            for &v in &values {
+                if legacy {
+                    encode_int_legacy(&mut e, &mut ctxs, &mut hist, v);
+                } else {
+                    encode_int(&mut e, &mut ctxs, &mut hist, v);
+                }
+            }
+            e.finish()
+        };
+        let v3 = code(false);
+        let legacy = code(true);
+        assert_ne!(v3, legacy, "formats must not be byte-compatible");
+        let ratio = v3.len() as f64 / legacy.len() as f64;
+        assert!(ratio < 1.02, "bypass sign cost blew up: {ratio:.4}");
     }
 
     #[test]

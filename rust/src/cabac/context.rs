@@ -54,6 +54,17 @@ impl WeightContexts {
             eg: vec![Context::default(); cfg.eg_contexts as usize],
         }
     }
+
+    /// Re-prime every context to its initial state without reallocating —
+    /// the per-worker scratch reuse the slice fan-out paths rely on (a
+    /// fresh `WeightContexts` per 16k-symbol slice is two heap allocations
+    /// per slice for nothing).
+    pub fn reset(&mut self) {
+        self.sig = [Context::default(); 3];
+        self.sign = Context::default();
+        self.gr.fill(Context::default());
+        self.eg.fill(Context::default());
+    }
 }
 
 /// Rolling significance history for sigFlag context selection.
@@ -95,6 +106,18 @@ mod tests {
         let w = WeightContexts::new(cfg);
         assert_eq!(w.gr.len(), 4);
         assert_eq!(w.eg.len(), 8);
+    }
+
+    #[test]
+    fn reset_matches_fresh() {
+        let cfg = CodingConfig::default();
+        let mut w = WeightContexts::new(cfg);
+        w.sig[1].update(true);
+        w.sign.update(false);
+        w.gr[3].update(true);
+        w.eg[7].update(true);
+        w.reset();
+        assert_eq!(w, WeightContexts::new(cfg));
     }
 
     #[test]

@@ -5,20 +5,55 @@
 //! integer with the binarization of `binarize.rs`, contexts adapting on the
 //! fly.  No probability tables are transmitted — CABAC is backward-adaptive
 //! (§II-B.1).
+//!
+//! The default entry points emit the v3 bin format (bypass sign, batched
+//! EG suffix); the `*_legacy` twins emit the byte-stable v1/v2 format.
+//! The `*_with` variants reuse caller-owned [`WeightContexts`] scratch —
+//! the slice fan-out allocates one per worker, not one per slice.
 
 use super::arith::Encoder;
 use super::context::{CodingConfig, SigHistory, WeightContexts};
 use super::{binarize, decoder};
 
-/// Encode a quantized layer (integer grid indices) to a CABAC bitstream.
-pub fn encode_layer(values: &[i32], cfg: CodingConfig) -> Vec<u8> {
-    let mut ctxs = WeightContexts::new(cfg);
+#[inline]
+fn encode_layer_impl<const LEGACY: bool>(values: &[i32], ctxs: &mut WeightContexts) -> Vec<u8> {
+    ctxs.reset();
     let mut hist = SigHistory::default();
-    let mut e = Encoder::new();
+    // Sparse planes land well under 1 byte/value; 1/3 avoids both the
+    // realloc ladder and gross over-allocation on all-zero slices.
+    let mut e = Encoder::with_capacity(values.len() / 3 + 16);
     for &v in values {
-        binarize::encode_int(&mut e, &mut ctxs, &mut hist, v);
+        if LEGACY {
+            binarize::encode_int_legacy(&mut e, ctxs, &mut hist, v);
+        } else {
+            binarize::encode_int(&mut e, ctxs, &mut hist, v);
+        }
     }
     e.finish()
+}
+
+/// Encode a quantized layer (integer grid indices) to a CABAC bitstream
+/// (v3 bin format: bypass sign + batched EG suffix).
+pub fn encode_layer(values: &[i32], cfg: CodingConfig) -> Vec<u8> {
+    encode_layer_impl::<false>(values, &mut WeightContexts::new(cfg))
+}
+
+/// [`encode_layer`] reusing caller-owned context scratch (reset on entry).
+/// The slice fan-out paths call this once per slice with one scratch per
+/// worker thread, instead of allocating fresh context tables per slice.
+pub fn encode_layer_with(values: &[i32], ctxs: &mut WeightContexts) -> Vec<u8> {
+    encode_layer_impl::<false>(values, ctxs)
+}
+
+/// Encode a layer in the legacy DCB v1/v2 bin format (context-coded sign,
+/// per-bin EG suffix).  Kept so v1/v2 containers stay byte-exact.
+pub fn encode_layer_legacy(values: &[i32], cfg: CodingConfig) -> Vec<u8> {
+    encode_layer_impl::<true>(values, &mut WeightContexts::new(cfg))
+}
+
+/// [`encode_layer_legacy`] with caller-owned context scratch.
+pub fn encode_layer_legacy_with(values: &[i32], ctxs: &mut WeightContexts) -> Vec<u8> {
+    encode_layer_impl::<true>(values, ctxs)
 }
 
 /// Encode and also report the exact payload size in bits (excluding the
@@ -124,6 +159,56 @@ mod tests {
             "bpv {bpv:.3} vs marginal entropy {h_marginal:.3}"
         );
         assert!(roundtrip_verify(&values, CodingConfig::default()));
+    }
+
+    #[test]
+    fn scratch_reuse_is_byte_identical() {
+        // encode_layer_with must reset its scratch: coding three planes
+        // through one WeightContexts gives the same bytes as fresh ones.
+        let mut rng = Pcg64::new(43);
+        let cfg = CodingConfig::default();
+        let mut scratch = crate::cabac::WeightContexts::new(cfg);
+        for trial in 0..3 {
+            let values: Vec<i32> = (0..4_000)
+                .map(|_| {
+                    if rng.next_f64() < 0.7 {
+                        0
+                    } else {
+                        rng.below(500) as i32 - 250
+                    }
+                })
+                .collect();
+            assert_eq!(
+                encode_layer_with(&values, &mut scratch),
+                encode_layer(&values, cfg),
+                "trial {trial}"
+            );
+            assert_eq!(
+                encode_layer_legacy_with(&values, &mut scratch),
+                encode_layer_legacy(&values, cfg),
+                "legacy trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn legacy_layer_roundtrips() {
+        let mut rng = Pcg64::new(44);
+        let cfg = CodingConfig::default();
+        let values: Vec<i32> = (0..8_000)
+            .map(|_| {
+                if rng.next_f64() < 0.6 {
+                    0
+                } else {
+                    rng.below(3000) as i32 - 1500
+                }
+            })
+            .collect();
+        let bytes = encode_layer_legacy(&values, cfg);
+        let out = decoder::decode_layer_legacy(&bytes, values.len(), cfg).unwrap();
+        assert_eq!(out, values);
+        // and the two formats are distinct streams
+        assert_ne!(bytes, encode_layer(&values, cfg));
     }
 
     #[test]

@@ -5,7 +5,18 @@
 //! The estimator walks the binarization of a candidate integer and sums the
 //! ideal code length of each bin under the **current** adaptive context
 //! states (without mutating them).  Context-coded bins cost
-//! `-log2 p(bin)`; bypass bins cost exactly 1.
+//! `-log2 p(bin)`; bypass bins — the signFlag, the Exp-Golomb suffix, and
+//! prefix positions past the context budget — cost exactly
+//! [`BYPASS_BITS`] = 1, matching what the v3 coder actually spends (a
+//! `Context::bits` read would drift once the old sign context adapted).
+//!
+//! The estimator models the **v3** bin format only.  When a caller forces
+//! a legacy container (`--container v1|v2`), the emitted stream still
+//! context-codes the sign, so on sign-skewed layers the R term here
+//! overstates the true legacy sign cost by up to `1 - H(p_sign)` bits per
+//! nonzero weight; the stream stays valid — RDOQ assignments are simply
+//! optimized under v3 costs.  Legacy containers are a compatibility
+//! surface, not an optimization target, so this is deliberate.
 //!
 //! Two access patterns:
 //!  * [`estimate_int`] — exact per-candidate cost (used by the sequential
@@ -15,6 +26,7 @@
 //!    periodically refreshed table loses almost nothing — validated by the
 //!    `table_close_to_exact` test and the ablation bench).
 
+use super::arith::BYPASS_BITS;
 use super::binarize::{binarize, BinKind};
 use super::context::WeightContexts;
 
@@ -25,16 +37,16 @@ pub fn estimate_int(ctxs: &WeightContexts, sig_idx: usize, v: i32) -> f32 {
     for (kind, bit) in binarize(v, ctxs.cfg.max_abs_gr) {
         bits += match kind {
             BinKind::Sig => ctxs.sig[sig_idx].bits(bit),
-            BinKind::Sign => ctxs.sign.bits(bit),
+            BinKind::Sign => BYPASS_BITS,
             BinKind::Gr(i) => ctxs.gr[(i - 1) as usize].bits(bit),
             BinKind::EgPrefix(p) => {
                 if (p as usize) < ctxs.eg.len() {
                     ctxs.eg[p as usize].bits(bit)
                 } else {
-                    1.0
+                    BYPASS_BITS
                 }
             }
-            BinKind::EgSuffix => 1.0,
+            BinKind::EgSuffix => BYPASS_BITS,
         };
     }
     bits
@@ -106,14 +118,14 @@ pub fn build_cost_tables(ctxs: &WeightContexts, half: i32) -> [CostTable; 3] {
     let max_k = (31 - max_u.leading_zeros()) as usize;
     let mut egp_cum = vec![0f32; max_k + 2];
     for p in 0..=max_k {
-        let bit_cost = if p < m { ctxs.eg[p].bits(true) } else { 1.0 };
+        let bit_cost = if p < m { ctxs.eg[p].bits(true) } else { BYPASS_BITS };
         egp_cum[p + 1] = egp_cum[p] + bit_cost;
     }
     let eg_zero = |k: usize| -> f32 {
         if k < m {
             ctxs.eg[k].bits(false)
         } else {
-            1.0
+            BYPASS_BITS
         }
     };
 
@@ -129,8 +141,9 @@ pub fn build_cost_tables(ctxs: &WeightContexts, half: i32) -> [CostTable; 3] {
         };
     }
 
-    let sign_pos = ctxs.sign.bits(false);
-    let sign_neg = ctxs.sign.bits(true);
+    // signFlag is a bypass bin in the v3 format: exactly 1 bit either way.
+    let sign_pos = BYPASS_BITS;
+    let sign_neg = BYPASS_BITS;
     std::array::from_fn(|sig_idx| {
         let sig0 = ctxs.sig[sig_idx].bits(false);
         let sig1 = ctxs.sig[sig_idx].bits(true);

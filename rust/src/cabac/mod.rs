@@ -2,13 +2,17 @@
 //! coding over quantized weight tensors (paper §II-B.1, §III-B).
 //!
 //! Module map:
-//!  * [`arith`]     — the binary arithmetic range coder + adaptive contexts.
+//!  * [`arith`]     — the binary arithmetic range coder + adaptive contexts,
+//!    including the batched bypass fast path (shift-only equiprobable bins).
 //!  * [`context`]   — context sets & sigFlag context derivation.
-//!  * [`binarize`]  — sig/sign/AbsGr(n)/Exp-Golomb binarization (Fig. 7).
-//!  * [`encoder`] / [`decoder`] — layer-level coding of integer tensors.
-//!  * [`estimator`] — RDOQ code-length estimation (the `L_ik` of eq. 11).
+//!  * [`binarize`]  — sig/sign/AbsGr(n)/Exp-Golomb binarization (Fig. 7),
+//!    in the v3 bypass format and the byte-stable legacy v1/v2 format.
+//!  * [`encoder`] / [`decoder`] — layer-level coding of integer tensors
+//!    (scratch-reusing `*_with` / `*_into` variants for the slice fan-out).
+//!  * [`estimator`] — RDOQ code-length estimation (the `L_ik` of eq. 11);
+//!    bypass bins cost exactly [`arith::BYPASS_BITS`].
 //!  * [`slices`]    — independently coded slices for parallel (de)coding
-//!    (the DCB2 container's payload format).
+//!    (the DCB2/DCB3 containers' payload format).
 
 pub mod arith;
 pub mod binarize;
@@ -18,9 +22,15 @@ pub mod encoder;
 pub mod estimator;
 pub mod slices;
 
-pub use arith::{Context, Decoder, Encoder};
+pub use arith::{Context, Decoder, Encoder, BYPASS_BITS};
 pub use context::{CodingConfig, SigHistory, WeightContexts};
-pub use decoder::decode_layer;
-pub use encoder::{encode_layer, encode_layer_with_size};
+pub use decoder::{decode_layer, decode_layer_into, decode_layer_into_legacy, decode_layer_legacy};
+pub use encoder::{
+    encode_layer, encode_layer_legacy, encode_layer_legacy_with, encode_layer_with,
+    encode_layer_with_size,
+};
 pub use estimator::{estimate_int, CostTable};
-pub use slices::{decode_layer_sliced, encode_layer_sliced, encode_layer_sliced_parallel};
+pub use slices::{
+    decode_layer_sliced, decode_layer_sliced_legacy, encode_layer_sliced,
+    encode_layer_sliced_parallel,
+};

@@ -10,9 +10,18 @@
 //! Wire format: u32 slice_len (symbols) | u32 n_slices | per slice:
 //! u32 byte_len | payload.
 
-use super::context::CodingConfig;
-use super::{decode_layer, encode_layer};
-use crate::util::parallel::parallel_map;
+//! The slice framing is bin-format agnostic; these standalone entry points
+//! code slices in the **v3** bin format (bypass fast path).  Payloads
+//! written by the pre-v3 crate (or extracted from v1/v2 containers) carry
+//! the legacy bin format and must go through
+//! [`decode_layer_sliced_legacy`] — the framing has no version byte of its
+//! own, so the caller owns that dispatch (the `.dcb` container does it via
+//! its version field).
+
+use super::context::{CodingConfig, WeightContexts};
+use super::decoder::{decode_layer_into, decode_layer_into_legacy};
+use super::encoder::{encode_layer, encode_layer_with};
+use crate::util::parallel::{parallel_for_each_mut_with, parallel_map_with};
 use crate::util::{Error, Result};
 
 /// Number of slices a `count`-symbol plane splits into at `slice_len`.
@@ -74,18 +83,20 @@ pub fn parse_sliced(raw: &[u8], count: usize) -> Result<(usize, Vec<(&[u8], usiz
 }
 
 /// Encode with `slice_len` symbols per slice (serial reference path).
+/// One context scratch is reset and reused across all slices.
 pub fn encode_layer_sliced(values: &[i32], cfg: CodingConfig, slice_len: usize) -> Vec<u8> {
     let slice_len = slice_len.max(1);
+    let mut ctxs = WeightContexts::new(cfg);
     let payloads: Vec<Vec<u8>> = values
         .chunks(slice_len)
-        .map(|s| encode_layer(s, cfg))
+        .map(|s| encode_layer_with(s, &mut ctxs))
         .collect();
     assemble_sliced(slice_len, &payloads)
 }
 
-/// Encode with slices fanned out over `threads` workers.  Slices are
-/// independent by construction, so the output is byte-identical to
-/// [`encode_layer_sliced`].
+/// Encode with slices fanned out over `threads` workers (one context
+/// scratch per worker).  Slices are independent by construction, so the
+/// output is byte-identical to [`encode_layer_sliced`].
 pub fn encode_layer_sliced_parallel(
     values: &[i32],
     cfg: CodingConfig,
@@ -94,26 +105,116 @@ pub fn encode_layer_sliced_parallel(
 ) -> Vec<u8> {
     let slice_len = slice_len.max(1);
     let chunks: Vec<&[i32]> = values.chunks(slice_len).collect();
-    let payloads = parallel_map(&chunks, threads, |s| encode_layer(s, cfg));
+    let payloads = parallel_map_with(
+        &chunks,
+        threads,
+        || WeightContexts::new(cfg),
+        |ctxs, s| encode_layer_with(s, ctxs),
+    );
     assemble_sliced(slice_len, &payloads)
 }
 
-/// Decode, fanning slices out over `threads` workers.
+/// One unit of parallel slice decoding: a coded payload plus the disjoint
+/// chunk of the output plane it reconstructs (errors are parked per job
+/// and surfaced after the fan-out joins).
+pub(crate) struct SliceDecodeJob<'raw, 'out> {
+    pub bytes: &'raw [u8],
+    pub out: &'out mut [i32],
+    pub err: Option<Error>,
+}
+
+/// Partition `plane` into one disjoint `&mut` chunk per parsed slice and
+/// pair each with its payload.  `slices` must be the output of
+/// [`parse_sliced`] for this plane's symbol count — that contract is what
+/// makes the `split_at_mut` walk panic-free (the per-slice counts sum to
+/// exactly `plane.len()`).
+pub(crate) fn make_jobs<'raw, 'out>(
+    slices: Vec<(&'raw [u8], usize)>,
+    mut plane: &'out mut [i32],
+) -> Vec<SliceDecodeJob<'raw, 'out>> {
+    let mut jobs = Vec::with_capacity(slices.len());
+    for (bytes, n) in slices {
+        // mem::take moves the remainder out so the split halves inherit the
+        // full plane lifetime (a plain reborrow could not escape the loop).
+        let (head, tail) = std::mem::take(&mut plane).split_at_mut(n);
+        jobs.push(SliceDecodeJob {
+            bytes,
+            out: head,
+            err: None,
+        });
+        plane = tail;
+    }
+    jobs
+}
+
+/// Decode a batch of slice jobs over `threads` workers, each decoding
+/// in place with one reusable context scratch per worker.
+pub(crate) fn run_decode_jobs<F>(
+    jobs: &mut [SliceDecodeJob<'_, '_>],
+    cfg: CodingConfig,
+    threads: usize,
+    decode: F,
+) where
+    F: Fn(&[u8], &mut WeightContexts, &mut [i32]) -> Result<()> + Sync,
+{
+    parallel_for_each_mut_with(
+        jobs,
+        threads,
+        || WeightContexts::new(cfg),
+        |ctxs, job| {
+            if let Err(e) = decode(job.bytes, ctxs, job.out) {
+                job.err = Some(e);
+            }
+        },
+    );
+}
+
+fn decode_layer_sliced_impl(
+    raw: &[u8],
+    count: usize,
+    cfg: CodingConfig,
+    threads: usize,
+    legacy: bool,
+) -> Result<Vec<i32>> {
+    let (_, payloads) = parse_sliced(raw, count)?;
+    let mut out = vec![0i32; count];
+    let mut jobs = make_jobs(payloads, &mut out);
+    run_decode_jobs(&mut jobs, cfg, threads, |b, c, o| {
+        if legacy {
+            decode_layer_into_legacy(b, c, o)
+        } else {
+            decode_layer_into(b, c, o)
+        }
+    });
+    if let Some(e) = jobs.into_iter().find_map(|j| j.err) {
+        return Err(e);
+    }
+    Ok(out)
+}
+
+/// Decode, fanning slices out over `threads` workers.  The output plane is
+/// allocated once and workers decode into disjoint chunks of it — no
+/// per-slice result vectors, no reassembly copy.  Expects v3-bin slices
+/// (the format [`encode_layer_sliced`] writes).
 pub fn decode_layer_sliced(
     raw: &[u8],
     count: usize,
     cfg: CodingConfig,
     threads: usize,
 ) -> Result<Vec<i32>> {
-    let (_, payloads) = parse_sliced(raw, count)?;
-    let decoded = parallel_map(&payloads, threads, |&(bytes, n)| {
-        decode_layer(bytes, n, cfg)
-    });
-    let mut out = Vec::with_capacity(count);
-    for d in decoded {
-        out.extend(d?);
-    }
-    Ok(out)
+    decode_layer_sliced_impl(raw, count, cfg, threads, false)
+}
+
+/// [`decode_layer_sliced`] for payloads coded with the legacy (pre-v3)
+/// bin format — what this crate's sliced encoder produced before the
+/// bypass fast path, and what v2 containers hold.
+pub fn decode_layer_sliced_legacy(
+    raw: &[u8],
+    count: usize,
+    cfg: CodingConfig,
+    threads: usize,
+) -> Result<Vec<i32>> {
+    decode_layer_sliced_impl(raw, count, cfg, threads, true)
 }
 
 /// Compression overhead of slicing vs a monolithic stream, in bytes.
@@ -203,6 +304,26 @@ mod tests {
                 let par = encode_layer_sliced_parallel(&values, cfg, slice_len, threads);
                 assert_eq!(par, serial, "slice_len={slice_len} threads={threads}");
             }
+        }
+    }
+
+    #[test]
+    fn legacy_sliced_payloads_still_decode() {
+        // A sliced stream assembled from legacy-bin slices (what the
+        // pre-v3 crate wrote) must decode through the legacy entry point.
+        let cfg = CodingConfig::default();
+        let values = plane(6_000, 9);
+        let payloads: Vec<Vec<u8>> = values
+            .chunks(512)
+            .map(|s| crate::cabac::encoder::encode_layer_legacy(s, cfg))
+            .collect();
+        let raw = assemble_sliced(512, &payloads);
+        let back = decode_layer_sliced_legacy(&raw, values.len(), cfg, 2).unwrap();
+        assert_eq!(back, values);
+        // the v3 entry point must NOT reproduce it (distinct bin formats)
+        match decode_layer_sliced(&raw, values.len(), cfg, 2) {
+            Ok(wrong) => assert_ne!(wrong, values),
+            Err(_) => {}
         }
     }
 

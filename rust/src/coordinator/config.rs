@@ -111,7 +111,8 @@ mod tests {
         assert!(c.threads >= 1);
         assert!(c.tolerance > 0.0);
         assert!(!c.uniform_clusters.is_empty());
-        assert_eq!(c.container.version, crate::model::VERSION_V2);
+        // pipelines emit the bypass fast-path container by default
+        assert_eq!(c.container.version, crate::model::VERSION_V3);
         assert!(c.container.slice_len >= 1);
         assert!(c.container.threads >= 1);
     }

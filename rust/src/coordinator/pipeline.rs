@@ -57,7 +57,9 @@ pub fn run_candidate(
             let compressed = compress_dc(net, cand, cfg);
             let bytes = compressed.to_bytes_with(cfg.container);
             // True decode path: parse + CABAC-decode + dequantize, under
-            // the same container policy (v2 fans slices out over threads).
+            // the same container policy (sliced v2/v3 containers fan slices
+            // out over threads; v3 — the default — additionally decodes on
+            // the bypass fast path).
             let decoded = CompressedNetwork::from_bytes_with(&bytes, cfg.container.threads)?;
             let recon = decoded.reconstruct(&net.name);
             let accuracy = service.accuracy(&recon)?;

@@ -2,7 +2,7 @@
 //!
 //! Verbs:
 //!   compress   <model.nwf> [-o out.dcb] [--method dc-v1|dc-v2] [--delta D]
-//!              [--lambda L] [--s S] [--container v1|v2]
+//!              [--lambda L] [--s S] [--container v1|v2|v3]
 //!              [--slice-len N] [--threads N]  one-shot compression
 //!   decompress <model.dcb> [-o out.nwf] [--threads N]  decode + reconstruct
 //!   eval       <model.nwf|model.dcb>         top-1 accuracy via PJRT
@@ -67,11 +67,11 @@ fn usage() -> ExitCode {
         "usage: deepcabac <verb> [args]\n\
          verbs:\n\
            compress   <model.nwf> [-o out.dcb] [--method dc-v1|dc-v2] [--delta D] [--lambda L] [--s S]\n\
-                      [--container v1|v2] [--slice-len N] [--threads N]\n\
+                      [--container v1|v2|v3] [--slice-len N] [--threads N]\n\
            decompress <model.dcb> [-o out.nwf] [--threads N]\n\
            eval       <model.nwf|.dcb> [--artifacts DIR]\n\
            search     <model.nwf> [--method dc-v1|dc-v2|lloyd|uniform|all] [--threads N] [--tolerance PP]\n\
-                      [--container v1|v2] [--slice-len N]\n\
+                      [--container v1|v2|v3] [--slice-len N]\n\
            info       <model.nwf|.dcb> [--threads N]\n"
     );
     ExitCode::from(2)
@@ -117,15 +117,16 @@ fn flag_usize(args: &Args, key: &str) -> Option<usize> {
 }
 
 /// Build the `.dcb` container policy from `--container`, `--slice-len` and
-/// `--threads` (defaults: v2, DEFAULT_SLICE_LEN, all cores).
+/// `--threads` (defaults: v3, DEFAULT_SLICE_LEN, all cores).
 fn container_policy(args: &Args) -> Result<ContainerPolicy> {
     let mut policy = ContainerPolicy::default();
     match args.flags.get("container").map(String::as_str) {
         Some("v1") | Some("1") => policy.version = model::VERSION_V1,
-        Some("v2") | Some("2") | None => policy.version = model::VERSION_V2,
+        Some("v2") | Some("2") => policy.version = model::VERSION_V2,
+        Some("v3") | Some("3") | None => policy.version = model::VERSION_V3,
         Some(other) => {
             return Err(deepcabac::util::Error::Config(format!(
-                "unknown container version '{other}' (expected v1 or v2)"
+                "unknown container version '{other}' (expected v1, v2 or v3)"
             )))
         }
     }

@@ -8,7 +8,7 @@ pub mod scan;
 
 pub use bitstream::{
     probe, CompressedNetwork, ContainerPolicy, ContainerProbe, LayerProbe, QuantizedLayer,
-    DEFAULT_SLICE_LEN, VERSION_V1, VERSION_V2,
+    DEFAULT_SLICE_LEN, VERSION_V1, VERSION_V2, VERSION_V3,
 };
 pub use network::{Importance, Kind, Layer, Network};
 pub use nwf::{read_nwf, write_nwf};

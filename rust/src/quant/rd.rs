@@ -6,7 +6,10 @@
 //! ```
 //!
 //! with `L_ik` the CABAC code-length estimate under the coder's *current*
-//! adaptive context state.  The contexts advance with every chosen symbol
+//! adaptive context state.  Bypass bins (signFlag, Exp-Golomb suffix) are
+//! costed at exactly 1 bit — matching the v3 bypass fast path the encoder
+//! actually emits, so the R term of the objective is what the stream
+//! spends.  The contexts advance with every chosen symbol
 //! (mirroring what the encoder will do), and the per-index cost tables are
 //! refreshed every [`RdParams::refresh`] weights — contexts adapt with an
 //! exponential shift, so a block-stale table changes assignments only near

@@ -27,18 +27,39 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    parallel_map_with(items, threads, || (), |_, t| f(t))
+}
+
+/// [`parallel_map`] with per-worker scratch state: each worker thread calls
+/// `init()` once and threads the result through every item it claims.  The
+/// codec fan-outs use this to reuse context tables and decode buffers
+/// across the thousands of slices one container decode visits.
+pub fn parallel_map_with<T, S, R, I, F>(items: &[T], threads: usize, init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> R + Sync,
+{
     let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        let mut scratch = init();
+        return items.iter().map(|t| f(&mut scratch, t)).collect();
+    }
     let cursor = AtomicUsize::new(0);
     let out: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
+            s.spawn(|| {
+                let mut scratch = init();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let r = f(&mut scratch, &items[i]);
+                    out.lock().unwrap()[i] = Some(r);
                 }
-                let r = f(&items[i]);
-                out.lock().unwrap()[i] = Some(r);
             });
         }
     });
@@ -47,6 +68,47 @@ where
         .into_iter()
         .map(|r| r.expect("worker panicked before storing result"))
         .collect()
+}
+
+/// Run `f` over every item **in place** (`&mut T`) on `threads` workers,
+/// with per-worker scratch.  This is the decode fan-out shape: each item
+/// owns a disjoint `&mut [i32]` chunk of a pre-allocated layer buffer, so
+/// results land directly where they belong instead of being collected and
+/// re-appended.  Items are claimed via an atomic cursor; the per-item
+/// mutex is uncontended (exactly one claimant) and costs one lock per
+/// multi-thousand-symbol slice.
+pub fn parallel_for_each_mut_with<T, S, I, F>(items: &mut [T], threads: usize, init: I, f: F)
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &mut T) + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        let mut scratch = init();
+        for item in items.iter_mut() {
+            f(&mut scratch, item);
+        }
+        return;
+    }
+    let n = items.len();
+    let cells: Vec<Mutex<&mut T>> = items.iter_mut().map(Mutex::new).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let mut scratch = init();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let mut item = cells[i].lock().unwrap();
+                    f(&mut scratch, &mut **item);
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -76,6 +138,60 @@ mod tests {
     fn more_threads_than_items() {
         let out = parallel_map(&[5], 16, |&x| x);
         assert_eq!(out, vec![5]);
+    }
+
+    #[test]
+    fn map_with_scratch_preserves_order() {
+        // Scratch accumulates per worker; results must still be positional.
+        let items: Vec<usize> = (0..257).collect();
+        let out = parallel_map_with(
+            &items,
+            4,
+            || 0usize,
+            |seen, &x| {
+                *seen += 1;
+                x * 3
+            },
+        );
+        assert_eq!(out, (0..257).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_with_single_thread_uses_one_scratch() {
+        let items = [1usize, 2, 3, 4];
+        let out = parallel_map_with(
+            &items,
+            1,
+            || 0usize,
+            |acc, &x| {
+                *acc += x;
+                *acc
+            },
+        );
+        // one worker, one scratch: running prefix sums
+        assert_eq!(out, vec![1, 3, 6, 10]);
+    }
+
+    #[test]
+    fn for_each_mut_writes_in_place() {
+        for threads in [1usize, 4] {
+            let mut items: Vec<(usize, i64)> = (0..100).map(|i| (i, 0)).collect();
+            parallel_for_each_mut_with(
+                &mut items,
+                threads,
+                || (),
+                |_, item| item.1 = item.0 as i64 * 2,
+            );
+            for (i, v) in items {
+                assert_eq!(v, i as i64 * 2, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_mut_empty() {
+        let mut items: Vec<u8> = Vec::new();
+        parallel_for_each_mut_with(&mut items, 8, || (), |_, _| unreachable!());
     }
 
     #[test]

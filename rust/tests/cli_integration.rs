@@ -80,9 +80,9 @@ fn compress_info_decompress_eval_roundtrip() {
 
     let (ok, out, _) = run(&["info", dcb.to_str().unwrap()]);
     assert!(ok);
-    // compress defaults to the sliced v2 container; info reports the
-    // version and per-layer slice structure
-    assert!(out.contains("dcb v2"), "{out}");
+    // compress defaults to the sliced bypass-fast-path v3 container; info
+    // reports the version and per-layer slice structure
+    assert!(out.contains("dcb v3"), "{out}");
     assert!(out.contains("slices="), "{out}");
     assert!(out.contains("conv1"));
 

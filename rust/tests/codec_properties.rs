@@ -143,6 +143,139 @@ fn prop_external_coders_roundtrip() {
     );
 }
 
+/// Mixed context/bypass bin sequences at the arithmetic-coder level: the
+/// batched bypass fast path must interleave with adaptive bins and the
+/// single-bin bypass without corrupting either, including the 0-length
+/// batch.  (The layer-level props cover the binarizer; this pins the raw
+/// coder contract the binarizer relies on.)
+#[test]
+fn prop_arith_mixed_context_bypass_roundtrip() {
+    #[derive(Clone, Copy)]
+    enum Op {
+        Ctx(usize, bool),
+        Bypass(bool),
+        Batch(u64, u32),
+    }
+    let mut rng = deepcabac::util::Pcg64::new(0xF00D);
+    for trial in 0..40 {
+        let n_ops = rng.below(3_000) as usize; // includes empty plans
+        let plan: Vec<Op> = (0..n_ops)
+            .map(|_| match rng.below(3) {
+                0 => Op::Ctx(rng.below(4) as usize, rng.next_f64() < 0.3),
+                1 => Op::Bypass(rng.next_f64() < 0.5),
+                _ => {
+                    let n = rng.below(65) as u32; // 0..=64, 0 = no-op batch
+                    let v = if n == 0 {
+                        0
+                    } else if n == 64 {
+                        rng.next_u64()
+                    } else {
+                        rng.next_u64() & ((1u64 << n) - 1)
+                    };
+                    Op::Batch(v, n)
+                }
+            })
+            .collect();
+        let mut ctxs = vec![deepcabac::cabac::Context::default(); 4];
+        let mut e = deepcabac::cabac::Encoder::new();
+        for &op in &plan {
+            match op {
+                Op::Ctx(c, b) => e.encode(&mut ctxs[c], b),
+                Op::Bypass(b) => e.encode_bypass(b),
+                Op::Batch(v, n) => e.encode_bypass_bits(v, n),
+            }
+        }
+        let bytes = e.finish();
+        let mut dctxs = vec![deepcabac::cabac::Context::default(); 4];
+        let mut d = deepcabac::cabac::Decoder::new(&bytes);
+        for (i, &op) in plan.iter().enumerate() {
+            match op {
+                Op::Ctx(c, b) => assert_eq!(d.decode(&mut dctxs[c]), b, "t{trial} op{i}"),
+                Op::Bypass(b) => assert_eq!(d.decode_bypass(), b, "t{trial} op{i}"),
+                Op::Batch(v, n) => {
+                    assert_eq!(d.decode_bypass_bits(n), v, "t{trial} op{i} n={n}")
+                }
+            }
+        }
+        assert_eq!(ctxs, dctxs, "t{trial}");
+    }
+}
+
+/// All-bypass streams (no context bin ever coded) must roundtrip — the
+/// degenerate plan the renormalization edge cases hide in.
+#[test]
+fn prop_arith_all_bypass_stream_roundtrips() {
+    let mut rng = deepcabac::util::Pcg64::new(0xF00E);
+    for _ in 0..20 {
+        let widths: Vec<u32> = (0..rng.below(2_000)).map(|_| rng.below(33) as u32).collect();
+        let vals: Vec<u64> = widths
+            .iter()
+            .map(|&n| {
+                if n == 0 {
+                    0
+                } else {
+                    rng.next_u64() & ((1u64 << n) - 1)
+                }
+            })
+            .collect();
+        let mut e = deepcabac::cabac::Encoder::new();
+        for (&v, &n) in vals.iter().zip(&widths) {
+            e.encode_bypass_bits(v, n);
+        }
+        let bytes = e.finish();
+        let mut d = deepcabac::cabac::Decoder::new(&bytes);
+        for (&v, &n) in vals.iter().zip(&widths) {
+            assert_eq!(d.decode_bypass_bits(n), v);
+        }
+    }
+}
+
+/// Legacy (v1/v2 bins) and v3 layer coding must each roundtrip on the same
+/// planes, produce distinct streams whenever a sign bin exists, and stay
+/// within a few percent of each other in size.
+#[test]
+fn prop_legacy_and_v3_layers_roundtrip_on_same_planes() {
+    let mut rng = deepcabac::util::Pcg64::new(0xF00F);
+    let coding = CodingConfig::default();
+    for trial in 0..25 {
+        let n = rng.below(4_000) as usize;
+        let values: Vec<i32> = (0..n)
+            .map(|_| {
+                let r = rng.next_f64();
+                if r < 0.55 {
+                    0
+                } else if r < 0.9 {
+                    rng.below(60) as i32 - 30
+                } else {
+                    rng.below(2_000_000) as i32 - 1_000_000
+                }
+            })
+            .collect();
+        let v3 = cabac::encode_layer(&values, coding);
+        let legacy = cabac::encode_layer_legacy(&values, coding);
+        assert_eq!(
+            cabac::decode_layer(&v3, values.len(), coding).unwrap(),
+            values,
+            "t{trial} v3"
+        );
+        assert_eq!(
+            cabac::decode_layer_legacy(&legacy, values.len(), coding).unwrap(),
+            values,
+            "t{trial} legacy"
+        );
+        if values.iter().any(|&v| v != 0) {
+            let small = v3.len().min(legacy.len()) as f64;
+            let big = v3.len().max(legacy.len()) as f64;
+            assert!(
+                big / small < 1.05 + 32.0 / small,
+                "t{trial}: v3 {} B vs legacy {} B",
+                v3.len(),
+                legacy.len()
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_cabac_never_catastrophically_expands() {
     // Even on adversarial (high-entropy) planes, the CABAC stream must stay
@@ -327,6 +460,53 @@ fn dcb_v1_and_v2_decode_identically_across_thread_counts() {
         let dv2 = CompressedNetwork::from_bytes_with(&v2, threads).unwrap();
         assert_eq!(dv1.layers, d1.layers, "v1 threads={threads}");
         assert_eq!(dv2.layers, d1.layers, "v2 threads={threads}");
+    }
+}
+
+#[test]
+fn prop_dcb3_container_roundtrip() {
+    use deepcabac::model::{CompressedNetwork, ContainerPolicy};
+    check_slice(
+        Config {
+            cases: 60,
+            seed: 0xE5D,
+        },
+        gen::sparse_symbols,
+        |s| {
+            let net = plane_network(s);
+            // Exercise slice boundaries around the plane size.
+            for slice_len in [1usize, 97, s.len().max(1)] {
+                for threads in [1usize, 4] {
+                    let bytes = net.to_bytes_with(ContainerPolicy::v3(slice_len, threads));
+                    let ok = CompressedNetwork::from_bytes_with(&bytes, threads)
+                        .map(|b| b.layers == net.layers)
+                        .unwrap_or(false);
+                    if !ok {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn dcb3_rejects_truncation_and_flips() {
+    use deepcabac::model::{CompressedNetwork, ContainerPolicy};
+    let mut rng = deepcabac::util::Pcg64::new(0xEC);
+    let s: Vec<i32> = (0..5000).map(|_| rng.below(7) as i32 - 3).collect();
+    let clean = plane_network(&s).to_bytes_with(ContainerPolicy::v3(512, 2));
+    for cut in [0, 3, 8, clean.len() / 4, clean.len() / 2, clean.len() - 5] {
+        assert!(
+            CompressedNetwork::from_bytes(&clean[..cut]).is_err(),
+            "cut={cut}"
+        );
+    }
+    for pos in [5, clean.len() / 3, clean.len() - 1] {
+        let mut bytes = clean.clone();
+        bytes[pos] ^= 0x40;
+        assert!(CompressedNetwork::from_bytes(&bytes).is_err(), "pos={pos}");
     }
 }
 

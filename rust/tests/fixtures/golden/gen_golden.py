@@ -1,0 +1,465 @@
+#!/usr/bin/env python3
+"""Golden-vector fixture generator for rust/tests/golden_vectors.rs.
+
+A byte-exact Python transcription of the Rust coder (rust/src/cabac/{arith,
+binarize,encoder}.rs and rust/src/model/bitstream.rs), used to pin the three
+container wire formats as checked-in fixtures:
+
+  golden_v1.dcb  - monolithic container, legacy bins (context sign,
+                   per-bin EG suffix)
+  golden_v2.dcb  - sliced container (slice_len 512), legacy bins
+  golden_v3.dcb  - sliced container (slice_len 512), bypass fast path
+                   (bypass sign, batched EG suffix)
+
+The generator decodes everything back with an independent Python decoder
+mirror and CRC-checks the containers before writing, so a transcription slip
+fails here rather than in CI.  The network payload is derived from the same
+LCG that rust/tests/golden_vectors.rs re-implements.
+
+Regenerate (only when intentionally changing a wire format!) with:
+    python3 rust/tests/fixtures/golden/gen_golden.py
+"""
+
+import os
+import struct
+import zlib
+
+M32 = 0xFFFFFFFF
+M64 = 0xFFFFFFFFFFFFFFFF
+PROB_BITS = 12
+PROB_ONE = 1 << PROB_BITS
+PROB_INIT = PROB_ONE // 2
+ADAPT_SHIFT = 5
+TOP = 1 << 24
+BYPASS_CHUNK = 16
+
+MAX_ABS_GR = 10
+EG_CONTEXTS = 16
+SLICE_LEN = 512
+
+
+# --- arith.rs ---------------------------------------------------------------
+
+class Context:
+    __slots__ = ("p0",)
+
+    def __init__(self):
+        self.p0 = PROB_INIT
+
+    def update(self, bit):
+        if bit:
+            self.p0 -= self.p0 >> ADAPT_SHIFT
+        else:
+            self.p0 += (PROB_ONE - self.p0) >> ADAPT_SHIFT
+
+
+class Encoder:
+    def __init__(self):
+        self.low = 0
+        self.range = M32  # u32::MAX
+        self.cache = 0
+        self.pending = 0
+        self.first = True
+        self.out = bytearray()
+
+    def shift_low(self):
+        if (self.low & M32) < 0xFF000000 or (self.low >> 32) != 0:
+            carry = (self.low >> 32) & 0xFF
+            if not self.first:
+                self.out.append((self.cache + carry) & 0xFF)
+            else:
+                self.out.append(carry)  # cache==0 on first flush
+                self.first = False
+            while self.pending > 0:
+                self.out.append((0xFF + carry) & 0xFF)
+                self.pending -= 1
+            self.cache = (self.low >> 24) & 0xFF
+        else:
+            self.pending += 1
+        self.low = (self.low << 8) & M32
+
+    def encode(self, ctx, bit):
+        bound = (self.range >> PROB_BITS) * ctx.p0
+        if bit:
+            self.low += bound
+            self.range -= bound
+        else:
+            self.range = bound
+        ctx.update(bit)
+        while self.range < TOP:
+            self.range = (self.range << 8) & M32
+            self.shift_low()
+
+    def encode_bypass(self, bit):
+        self.range >>= 1
+        if bit:
+            self.low += self.range
+        while self.range < TOP:
+            self.range = (self.range << 8) & M32
+            self.shift_low()
+
+    def encode_bypass_bits(self, v, n):
+        rem = n
+        while rem > 0:
+            k = min(rem, BYPASS_CHUNK)
+            rem -= k
+            chunk = (v >> rem) & ((1 << k) - 1)
+            self.range >>= k
+            self.low += chunk * self.range
+            while self.range < TOP:
+                self.range = (self.range << 8) & M32
+                self.shift_low()
+
+    def encode_bypass_bits_serial(self, v, n):
+        for i in range(n - 1, -1, -1):
+            self.encode_bypass((v >> i) & 1 == 1)
+
+    def finish(self):
+        for _ in range(5):
+            self.shift_low()
+        return bytes(self.out)
+
+
+class Decoder:
+    def __init__(self, buf):
+        self.buf = buf
+        self.pos = 1  # skip the priming byte
+        self.code = 0
+        self.range = M32
+        for _ in range(4):
+            self.code = ((self.code << 8) | self.next_byte()) & M32
+
+    def next_byte(self):
+        b = self.buf[self.pos] if self.pos < len(self.buf) else 0
+        self.pos += 1
+        return b
+
+    def decode(self, ctx):
+        bound = (self.range >> PROB_BITS) * ctx.p0
+        bit = self.code >= bound
+        if bit:
+            self.code -= bound
+            self.range -= bound
+        else:
+            self.range = bound
+        ctx.update(bit)
+        while self.range < TOP:
+            self.range = (self.range << 8) & M32
+            self.code = ((self.code << 8) | self.next_byte()) & M32
+        return bit
+
+    def decode_bypass(self):
+        self.range >>= 1
+        bit = self.code >= self.range
+        if bit:
+            self.code -= self.range
+        while self.range < TOP:
+            self.range = (self.range << 8) & M32
+            self.code = ((self.code << 8) | self.next_byte()) & M32
+        return bit
+
+    def decode_bypass_bits(self, n):
+        v = 0
+        rem = n
+        while rem > 0:
+            k = min(rem, BYPASS_CHUNK)
+            rem -= k
+            self.range >>= k
+            mask = (1 << k) - 1
+            chunk = min(self.code // self.range, mask)
+            self.code -= chunk * self.range
+            v = (v << k) | chunk
+            while self.range < TOP:
+                self.range = (self.range << 8) & M32
+                self.code = ((self.code << 8) | self.next_byte()) & M32
+        return v
+
+    def decode_bypass_bits_serial(self, n):
+        v = 0
+        for _ in range(n):
+            v = (v << 1) | (1 if self.decode_bypass() else 0)
+        return v
+
+
+# --- context.rs / binarize.rs ----------------------------------------------
+
+class WeightContexts:
+    def __init__(self):
+        self.sig = [Context(), Context(), Context()]
+        self.sign = Context()
+        self.gr = [Context() for _ in range(MAX_ABS_GR)]
+        self.eg = [Context() for _ in range(EG_CONTEXTS)]
+
+
+class SigHistory:
+    def __init__(self):
+        self.prev = [False, False]
+
+    def ctx_index(self):
+        return int(self.prev[0]) + int(self.prev[1])
+
+    def push(self, significant):
+        self.prev = [self.prev[1], significant]
+
+
+def bit_length_minus_one(u):
+    # Rust: 31 - u.leading_zeros() for u: u32, u >= 1
+    return u.bit_length() - 1
+
+
+def encode_int(e, ctxs, hist, v, legacy):
+    sig = v != 0
+    e.encode(ctxs.sig[hist.ctx_index()], sig)
+    hist.push(sig)
+    if not sig:
+        return
+    if legacy:
+        e.encode(ctxs.sign, v < 0)
+    else:
+        e.encode_bypass(v < 0)
+    a = abs(v)
+    n = MAX_ABS_GR
+    for i in range(1, n + 1):
+        gt = a > i
+        e.encode(ctxs.gr[i - 1], gt)
+        if not gt:
+            return
+    u = a - n  # r + 1, >= 1
+    k = bit_length_minus_one(u)
+    m = EG_CONTEXTS
+    for p in range(k):
+        if p < m:
+            e.encode(ctxs.eg[p], True)
+        else:
+            e.encode_bypass(True)
+    if k < m:
+        e.encode(ctxs.eg[k], False)
+    else:
+        e.encode_bypass(False)
+    suffix = u & ((1 << k) - 1)
+    if legacy:
+        e.encode_bypass_bits_serial(suffix, k)
+    else:
+        e.encode_bypass_bits(suffix, k)
+
+
+def decode_int(d, ctxs, hist, legacy):
+    sig = d.decode(ctxs.sig[hist.ctx_index()])
+    hist.push(sig)
+    if not sig:
+        return 0
+    neg = d.decode(ctxs.sign) if legacy else d.decode_bypass()
+    n = MAX_ABS_GR
+    a = 1
+    all_greater = True
+    for i in range(1, n + 1):
+        if not d.decode(ctxs.gr[i - 1]):
+            a = i
+            all_greater = False
+            break
+    if all_greater:
+        m = EG_CONTEXTS
+        k = 0
+        while True:
+            one = d.decode(ctxs.eg[k]) if k < m else d.decode_bypass()
+            if not one:
+                break
+            k += 1
+            assert k < 32, "corrupt stream"
+        suffix = d.decode_bypass_bits_serial(k) if legacy else d.decode_bypass_bits(k)
+        a = ((1 << k) | suffix) + n
+    return -a if neg else a
+
+
+def encode_layer(values, legacy):
+    ctxs, hist, e = WeightContexts(), SigHistory(), Encoder()
+    for v in values:
+        encode_int(e, ctxs, hist, v, legacy)
+    return e.finish()
+
+
+def decode_layer(raw, count, legacy):
+    ctxs, hist, d = WeightContexts(), SigHistory(), Decoder(raw)
+    return [decode_int(d, ctxs, hist, legacy) for _ in range(count)]
+
+
+# --- model/bitstream.rs -----------------------------------------------------
+
+def assemble_sliced(slice_len, payloads):
+    out = bytearray()
+    out += struct.pack("<I", max(slice_len, 1))
+    out += struct.pack("<I", len(payloads))
+    for p in payloads:
+        out += struct.pack("<I", len(p))
+        out += p
+    return bytes(out)
+
+
+def layer_payload(ints, version):
+    legacy = version != 3
+    if version == 1:
+        return encode_layer(ints, legacy)
+    chunks = [ints[i:i + SLICE_LEN] for i in range(0, len(ints), SLICE_LEN)]
+    return assemble_sliced(SLICE_LEN, [encode_layer(c, legacy) for c in chunks])
+
+
+def to_bytes(net, version):
+    body = bytearray()
+    body.append(version)
+    body += struct.pack("<H", len(net["name"]))
+    body += net["name"].encode()
+    body += struct.pack("<I", MAX_ABS_GR)
+    body += struct.pack("<I", EG_CONTEXTS)
+    body += struct.pack("<I", len(net["layers"]))
+    for l in net["layers"]:
+        body += struct.pack("<H", len(l["name"]))
+        body += l["name"].encode()
+        body.append(l["kind"])
+        body.append(len(l["shape"]))
+        for d in l["shape"]:
+            body += struct.pack("<I", d)
+        body += struct.pack("<I", l["rows"])
+        body += struct.pack("<I", l["cols"])
+        body += struct.pack("<f", l["delta"])
+        body.append(1 if l["bias"] is not None else 0)
+        if l["bias"] is not None:
+            body += struct.pack("<I", len(l["bias"]))
+            for x in l["bias"]:
+                body += struct.pack("<f", x)
+        payload = layer_payload(l["ints"], version)
+        body += struct.pack("<I", len(payload))
+        body += payload
+    return b"DCB1" + bytes(body) + struct.pack("<I", zlib.crc32(bytes(body)) & M32)
+
+
+def parse_and_decode(raw):
+    """Independent decode mirror of CompressedNetwork::from_bytes."""
+    assert raw[:4] == b"DCB1"
+    body = raw[4:-4]
+    assert struct.unpack("<I", raw[-4:])[0] == zlib.crc32(body) & M32, "crc"
+    pos = 0
+
+    def take(n):
+        nonlocal pos
+        assert pos + n <= len(body), "truncated"
+        s = body[pos:pos + n]
+        pos += n
+        return s
+
+    version = take(1)[0]
+    assert version in (1, 2, 3)
+    legacy = version != 3
+    name = take(struct.unpack("<H", take(2))[0]).decode()
+    max_abs_gr, eg_contexts, n_layers = (
+        struct.unpack("<I", take(4))[0] for _ in range(3)
+    )
+    assert (max_abs_gr, eg_contexts) == (MAX_ABS_GR, EG_CONTEXTS)
+    layers = []
+    for _ in range(n_layers):
+        lname = take(struct.unpack("<H", take(2))[0]).decode()
+        kind = take(1)[0]
+        nd = take(1)[0]
+        shape = [struct.unpack("<I", take(4))[0] for _ in range(nd)]
+        rows = struct.unpack("<I", take(4))[0]
+        cols = struct.unpack("<I", take(4))[0]
+        delta = struct.unpack("<f", take(4))[0]
+        bias = None
+        if take(1)[0]:
+            blen = struct.unpack("<I", take(4))[0]
+            bias = [struct.unpack("<f", take(4))[0] for _ in range(blen)]
+        payload = take(struct.unpack("<I", take(4))[0])
+        count = rows * cols
+        if version == 1:
+            ints = decode_layer(payload, count, legacy)
+        else:
+            slice_len, n_slices = struct.unpack("<II", payload[:8])
+            assert slice_len == SLICE_LEN
+            assert n_slices == -(-count // slice_len)
+            p, ints = 8, []
+            for i in range(n_slices):
+                ln = struct.unpack("<I", payload[p:p + 4])[0]
+                p += 4
+                nsym = count - slice_len * (n_slices - 1) if i + 1 == n_slices else slice_len
+                ints += decode_layer(payload[p:p + ln], nsym, legacy)
+                p += ln
+            assert p == len(payload)
+        layers.append(
+            dict(name=lname, kind=kind, shape=shape, rows=rows, cols=cols,
+                 ints=ints, delta=delta, bias=bias)
+        )
+    assert pos == len(body), "trailing garbage"
+    return dict(name=name, layers=layers)
+
+
+# --- deterministic payload (mirrored in golden_vectors.rs) ------------------
+
+class Lcg:
+    """Tiny LCG shared verbatim with the Rust test: 64-bit state, top bits."""
+
+    def __init__(self, seed):
+        self.s = seed & M64
+
+    def next(self):
+        self.s = (self.s * 6364136223846793005 + 1442695040888963407) & M64
+        return self.s >> 33
+
+
+def gen_ints(lcg, count, mag_cap):
+    out = []
+    for _ in range(count):
+        if lcg.next() % 10 < 6:
+            out.append(0)
+        else:
+            mag = int(lcg.next() % mag_cap) + 1
+            out.append(-mag if lcg.next() & 1 else mag)
+    return out
+
+
+def golden_network():
+    lcg = Lcg(0xDCB3)
+    fc1 = dict(
+        name="fc1", kind=0, shape=[50, 40], rows=40, cols=50,
+        ints=gen_ints(lcg, 2000, 35), delta=0.03125,
+        bias=[float(int(lcg.next() % 64) - 32) / 16.0 for _ in range(40)],
+    )
+    big = dict(
+        name="big", kind=1, shape=[50, 30], rows=30, cols=50,
+        ints=gen_ints(lcg, 1500, 250000), delta=0.0078125, bias=None,
+    )
+    return dict(name="golden_net", layers=[fc1, big])
+
+
+def main():
+    here = os.path.dirname(os.path.abspath(__file__))
+    net = golden_network()
+    # sanity: the big layer must exercise batched suffixes wider than one
+    # 16-bit chunk (k up to 17)
+    widest = max(
+        (abs(v) - MAX_ABS_GR).bit_length() - 1
+        for v in net["layers"][1]["ints"] if abs(v) > MAX_ABS_GR
+    )
+    assert widest > BYPASS_CHUNK, f"need k > {BYPASS_CHUNK}, got {widest}"
+
+    for version in (1, 2, 3):
+        raw = to_bytes(net, version)
+        back = parse_and_decode(raw)
+        assert back["name"] == net["name"]
+        for l, b in zip(net["layers"], back["layers"]):
+            for key in ("name", "kind", "shape", "rows", "cols", "ints"):
+                assert l[key] == b[key], (version, l["name"], key)
+            assert struct.pack("<f", l["delta"]) == struct.pack("<f", b["delta"])
+            if l["bias"] is None:
+                assert b["bias"] is None
+            else:
+                assert [struct.pack("<f", x) for x in l["bias"]] == [
+                    struct.pack("<f", x) for x in b["bias"]
+                ]
+        path = os.path.join(here, f"golden_v{version}.dcb")
+        with open(path, "wb") as f:
+            f.write(raw)
+        print(f"golden_v{version}.dcb: {len(raw)} bytes, "
+              f"crc32 {zlib.crc32(raw) & M32:08x}")
+
+
+if __name__ == "__main__":
+    main()

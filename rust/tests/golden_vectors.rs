@@ -1,0 +1,183 @@
+//! Golden-vector fixtures: checked-in v1/v2/v3 `.dcb` streams that pin all
+//! three container wire formats byte-for-byte.
+//!
+//! The fixtures under `rust/tests/fixtures/golden/` were produced by
+//! `gen_golden.py` (a transcription of this crate's coder, self-verified by
+//! an independent Python decoder before writing).  These tests prove the
+//! compatibility story instead of asserting it in prose:
+//!
+//! * every fixture **decodes** to the expected network (derived from the
+//!   same tiny LCG the generator uses), through the version-dispatched
+//!   `CompressedNetwork::from_bytes` path;
+//! * re-encoding the decoded network under the fixture's own policy is
+//!   **byte-exact** — v1/v2 via the retained legacy bin format, v3 via the
+//!   bypass fast path — so none of the three formats can silently drift.
+
+use std::path::PathBuf;
+
+use deepcabac::cabac::CodingConfig;
+use deepcabac::model::{
+    probe, CompressedNetwork, ContainerPolicy, Kind, QuantizedLayer, VERSION_V1, VERSION_V2,
+    VERSION_V3,
+};
+
+const SLICE_LEN: usize = 512;
+
+/// The generator's LCG, verbatim (gen_golden.py `class Lcg`).
+struct Lcg {
+    s: u64,
+}
+
+impl Lcg {
+    fn new(seed: u64) -> Self {
+        Self { s: seed }
+    }
+
+    fn next(&mut self) -> u64 {
+        self.s = self
+            .s
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.s >> 33
+    }
+}
+
+fn gen_ints(lcg: &mut Lcg, count: usize, mag_cap: u64) -> Vec<i32> {
+    (0..count)
+        .map(|_| {
+            if lcg.next() % 10 < 6 {
+                0
+            } else {
+                let mag = (lcg.next() % mag_cap) as i32 + 1;
+                if lcg.next() & 1 == 1 {
+                    -mag
+                } else {
+                    mag
+                }
+            }
+        })
+        .collect()
+}
+
+/// The fixture network (gen_golden.py `golden_network`), re-derived here so
+/// the expected symbols never live in two places.
+fn golden_network() -> CompressedNetwork {
+    let mut lcg = Lcg::new(0xDCB3);
+    let fc1_ints = gen_ints(&mut lcg, 2000, 35);
+    let fc1_bias: Vec<f32> = (0..40)
+        .map(|_| ((lcg.next() % 64) as i64 - 32) as f32 / 16.0)
+        .collect();
+    let big_ints = gen_ints(&mut lcg, 1500, 250_000);
+    CompressedNetwork {
+        name: "golden_net".into(),
+        cfg: CodingConfig::default(),
+        layers: vec![
+            QuantizedLayer {
+                name: "fc1".into(),
+                kind: Kind::Dense,
+                shape: vec![50, 40],
+                rows: 40,
+                cols: 50,
+                ints: fc1_ints,
+                delta: 0.03125,
+                bias: Some(fc1_bias),
+            },
+            QuantizedLayer {
+                name: "big".into(),
+                kind: Kind::Conv,
+                shape: vec![50, 30],
+                rows: 30,
+                cols: 50,
+                ints: big_ints,
+                delta: 0.0078125,
+                bias: None,
+            },
+        ],
+    }
+}
+
+fn fixture(name: &str) -> Vec<u8> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/golden")
+        .join(name);
+    std::fs::read(&path).unwrap_or_else(|e| panic!("missing fixture {path:?}: {e}"))
+}
+
+fn policy(version: u8) -> ContainerPolicy {
+    match version {
+        VERSION_V1 => ContainerPolicy {
+            version: VERSION_V1,
+            slice_len: 0,
+            threads: 1,
+        },
+        VERSION_V2 => ContainerPolicy::v2(SLICE_LEN, 2),
+        _ => ContainerPolicy::v3(SLICE_LEN, 2),
+    }
+}
+
+fn check_golden(file: &str, version: u8) {
+    let raw = fixture(file);
+    let expected = golden_network();
+
+    let header = probe(&raw).unwrap_or_else(|e| panic!("{file}: probe failed: {e}"));
+    assert_eq!(header.version, version, "{file}");
+    assert_eq!(header.param_count(), expected.param_count(), "{file}");
+
+    // Decode through the version-dispatched path, single- and multi-thread.
+    for threads in [1usize, 4] {
+        let got = CompressedNetwork::from_bytes_with(&raw, threads)
+            .unwrap_or_else(|e| panic!("{file}: decode failed: {e}"));
+        assert_eq!(got.name, expected.name, "{file}");
+        assert_eq!(got.cfg, expected.cfg, "{file}");
+        assert_eq!(got.layers, expected.layers, "{file} threads={threads}");
+    }
+
+    // Re-encode byte-exact under the fixture's own policy.
+    let reencoded = expected.to_bytes_with(policy(version));
+    assert_eq!(
+        reencoded, raw,
+        "{file}: re-encode is not byte-exact (wire format drifted — if this \
+         was intentional, bump the container version instead of changing an \
+         existing format, and regenerate via gen_golden.py)"
+    );
+}
+
+#[test]
+fn golden_v1_decodes_and_reencodes_byte_exact() {
+    check_golden("golden_v1.dcb", VERSION_V1);
+}
+
+#[test]
+fn golden_v2_decodes_and_reencodes_byte_exact() {
+    check_golden("golden_v2.dcb", VERSION_V2);
+}
+
+#[test]
+fn golden_v3_decodes_and_reencodes_byte_exact() {
+    check_golden("golden_v3.dcb", VERSION_V3);
+}
+
+#[test]
+fn golden_network_exercises_wide_batched_suffixes() {
+    // The fixture must cover EG suffixes wider than one 16-bit bypass
+    // chunk, so the batched path's chunk split is pinned by the vectors.
+    let net = golden_network();
+    let n = net.cfg.max_abs_gr;
+    let widest = net.layers[1]
+        .ints
+        .iter()
+        .filter(|v| v.unsigned_abs() > n)
+        .map(|v| 31 - (v.unsigned_abs() - n).leading_zeros())
+        .max()
+        .unwrap();
+    assert!(widest > 16, "widest suffix k = {widest}");
+}
+
+#[test]
+fn golden_fixtures_all_decode_to_the_same_network() {
+    let a = CompressedNetwork::from_bytes(&fixture("golden_v1.dcb")).unwrap();
+    let b = CompressedNetwork::from_bytes(&fixture("golden_v2.dcb")).unwrap();
+    let c = CompressedNetwork::from_bytes(&fixture("golden_v3.dcb")).unwrap();
+    assert_eq!(a.layers, b.layers);
+    assert_eq!(b.layers, c.layers);
+}
