@@ -19,6 +19,7 @@ use deepcabac::cabac::{binarize, CodingConfig, Decoder, SigHistory, WeightContex
 use deepcabac::model::{
     CompressedNetwork, ContainerPolicy, Kind, QuantizedLayer, DEFAULT_SLICE_LEN, VERSION_V1,
 };
+use deepcabac::quant::rd::{rd_quantize_layer_sliced_parallel, required_half, RdParams};
 use deepcabac::util::Pcg64;
 
 /// The seed crate's decode hot loop, reconstructed verbatim: legacy bins,
@@ -218,6 +219,32 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          ({speedup_v3_t1:.2}x vs v1@1t on the new decoder; v3@4t = {speedup_v3_t4:.2}x)"
     );
 
+    // --- slice-aligned RDOQ: the dominant encode-side cost, now parallel ---
+    // One synthetic sparse-Laplace plane of the same parameter count; the
+    // rate model restarts per slice, so slices fan out across workers and
+    // assignments are thread-invariant (asserted below — the t1/tN legs
+    // must agree exactly for the speedup to be meaningful).
+    let mut wrng = Pcg64::new(0x5D0);
+    let weights = wrng.sparse_laplace_vec(params, 0.05, 0.3);
+    let delta = 0.004f32;
+    let p = RdParams::new(delta, 2.0 * delta * delta, required_half(&weights, delta, 2048));
+    let (rdoq_t1, ints_t1) = bench(warmup, iters, || {
+        rd_quantize_layer_sliced_parallel(&weights, &[], &p, slice_len, 1)
+    });
+    let (rdoq_t4, ints_t4) = bench(warmup, iters, || {
+        rd_quantize_layer_sliced_parallel(&weights, &[], &p, slice_len, 4)
+    });
+    assert_eq!(ints_t1.0, ints_t4.0, "RDOQ assignments must be thread-invariant");
+    let rdoq_speedup_t4 = rdoq_t1.median_s / rdoq_t4.median_s;
+    println!(
+        "rdoq:  t1 {:>7.1} ms ({:.2} Msym/s) | t4 {:>7.1} ms ({:.2} Msym/s, {:.2}x)",
+        rdoq_t1.median_s * 1e3,
+        params as f64 / rdoq_t1.median_s / 1e6,
+        rdoq_t4.median_s * 1e3,
+        params as f64 / rdoq_t4.median_s / 1e6,
+        rdoq_speedup_t4
+    );
+
     // --- JSON for the perf trajectory + the CI bench gate ---
     let mut dec_fields = String::new();
     for (t, s) in &dec_v3 {
@@ -235,6 +262,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          \"v3_t1_s\": {:.6}, \"v3_t4_s\": {:.6}}},\n  \"decode\": {{\"seed_t1_s\": {:.6}, \
          \"seed_t1_msym_s\": {:.3}, \"v1_t1_s\": {:.6}, \
          \"v1_t1_msym_s\": {:.3}, \"v2_t4_s\": {:.6}, \"v2_t4_msym_s\": {:.3}{}}},\n  \
+         \"rdoq_t1_s\": {:.6},\n  \"rdoq_t1_msym_s\": {:.3},\n  \
+         \"rdoq_t4_s\": {:.6},\n  \"rdoq_t4_msym_s\": {:.3},\n  \
+         \"rdoq_speedup_t4_vs_t1\": {:.4},\n  \
          \"decode_speedup_v2_t4_vs_v1_t1\": {:.4},\n  \
          \"decode_speedup_v3_t1_vs_v1_t1\": {:.4},\n  \
          \"decode_speedup_v3_t4_vs_v1_t1\": {:.4},\n  \
@@ -258,6 +288,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         dec_v2_t4.median_s,
         params as f64 / dec_v2_t4.median_s / 1e6,
         dec_fields,
+        rdoq_t1.median_s,
+        params as f64 / rdoq_t1.median_s / 1e6,
+        rdoq_t4.median_s,
+        params as f64 / rdoq_t4.median_s / 1e6,
+        rdoq_speedup_t4,
         speedup_v2_t4,
         speedup_v3_t1,
         speedup_v3_t4,

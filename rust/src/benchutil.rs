@@ -112,8 +112,9 @@ pub struct GateReport {
 
 /// Compare a current `BENCH_dcb2.json` against the committed baseline.
 ///
-/// Two checks, both read their thresholds from the *baseline* file so
-/// re-baselining never needs a code change:
+/// Three checks (the third armed only when the baseline carries its keys),
+/// all reading their thresholds from the *baseline* file so re-baselining
+/// never needs a code change:
 ///
 /// 1. **Absolute regression** — `v3_t1_msym_s` (single-thread decode
 ///    throughput) must not drop more than `max_regress_pct` (default 15)
@@ -130,6 +131,13 @@ pub struct GateReport {
 ///    the JSON is informational only: both of those legs run the *new*
 ///    decoder, so it isolates just the bin-format delta, which Amdahl
 ///    caps near 1.1x on sparse planes.)
+/// 3. **RDOQ throughput** — absolute `rdoq_t1_msym_s` regression (same
+///    budget and bootstrap rule as decode, additionally skipped while the
+///    baseline value is non-positive so a placeholder can never pass
+///    vacuously via division by zero) plus the machine-independent
+///    same-run floor `rdoq_speedup_t4_vs_t1 >= min_rdoq_parallel_speedup`.
+///    Each sub-check arms itself from the corresponding baseline key, so
+///    pre-metric baselines keep gating decode only.
 pub fn bench_gate(baseline: &str, current: &str) -> GateReport {
     let mut lines = Vec::new();
     let mut pass = true;
@@ -186,6 +194,54 @@ pub fn bench_gate(baseline: &str, current: &str) -> GateReport {
             pass = false;
             lines
                 .push("FAIL current BENCH_dcb2.json has no decode_speedup_v3_t1_vs_seed_t1".into());
+        }
+    }
+
+    // 3. **RDOQ throughput** (added with the slice-aligned quantizer).
+    //    Both sub-checks are armed by keys in the *baseline*, so baselines
+    //    predating the metric stay valid:
+    //    * absolute `rdoq_t1_msym_s` regression, same `max_regress_pct`
+    //      budget as decode, skipped while the baseline is bootstrap;
+    //    * machine-independent same-run parallel-speedup floor
+    //      `rdoq_speedup_t4_vs_t1 >= min_rdoq_parallel_speedup` (slices
+    //      are independent, so a collapse here means the fan-out broke).
+    if let Some(b) = json_num(baseline, "rdoq_t1_msym_s") {
+        match json_num(current, "rdoq_t1_msym_s") {
+            Some(c) if bootstrap || b <= 0.0 => lines.push(format!(
+                "SKIP rdoq absolute check: baseline not armed (current {c:.3} Msym/s)"
+            )),
+            Some(c) => {
+                let regress_pct = 100.0 * (b - c) / b;
+                let ok = regress_pct <= max_regress_pct;
+                pass &= ok;
+                lines.push(format!(
+                    "{} rdoq@1t {c:.3} Msym/s vs baseline {b:.3} ({regress_pct:+.1}% \
+                     regression, limit {max_regress_pct}%)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push("FAIL current BENCH_dcb2.json has no rdoq_t1_msym_s field".into());
+            }
+        }
+    }
+    if let Some(floor) = json_num(baseline, "min_rdoq_parallel_speedup") {
+        match json_num(current, "rdoq_speedup_t4_vs_t1") {
+            Some(r) => {
+                let ok = r >= floor;
+                pass &= ok;
+                lines.push(format!(
+                    "{} same-run rdoq parallel speedup t4/t1 = {r:.2}x (floor {floor}x)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no rdoq_speedup_t4_vs_t1 field".into(),
+                );
+            }
         }
     }
     GateReport { pass, lines }
@@ -311,5 +367,62 @@ mod tests {
     fn gate_rejects_missing_fields() {
         let r = bench_gate(&bench_json(10.0, 2.4), "{}");
         assert!(!r.pass);
+    }
+
+    fn bench_json_rdoq(msym: f64, speedup: f64, rdoq_msym: f64, rdoq_speedup: f64) -> String {
+        format!(
+            "{{\"bench\": \"dcb2\", \"v3_t1_msym_s\": {msym}, \
+             \"decode_speedup_v3_t1_vs_seed_t1\": {speedup}, \
+             \"rdoq_t1_msym_s\": {rdoq_msym}, \
+             \"rdoq_speedup_t4_vs_t1\": {rdoq_speedup}}}"
+        )
+    }
+
+    #[test]
+    fn gate_rdoq_checks_armed_by_baseline_keys() {
+        // Baseline without rdoq keys: current rdoq numbers are ignored.
+        let old_baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&old_baseline, &bench_json_rdoq(10.0, 2.4, 1.0, 0.5));
+        assert!(r.pass, "{:?}", r.lines);
+        // Baseline with rdoq keys: regression and floor are enforced.
+        let armed = "{\"v3_t1_msym_s\": 10.0, \"decode_speedup_v3_t1_vs_seed_t1\": 2.4, \
+             \"rdoq_t1_msym_s\": 5.0, \"min_rdoq_parallel_speedup\": 1.3}";
+        let good = bench_gate(armed, &bench_json_rdoq(10.0, 2.4, 4.6, 2.1)); // -8% < 15%
+        assert!(good.pass, "{:?}", good.lines);
+        let regressed = bench_gate(armed, &bench_json_rdoq(10.0, 2.4, 3.0, 2.1)); // -40%
+        assert!(!regressed.pass, "{:?}", regressed.lines);
+        let collapsed = bench_gate(armed, &bench_json_rdoq(10.0, 2.4, 5.0, 1.1)); // < 1.3x
+        assert!(!collapsed.pass, "{:?}", collapsed.lines);
+        // Armed baseline + current missing the metric entirely: fail loudly.
+        let missing = bench_gate(armed, &bench_json(10.0, 2.4));
+        assert!(!missing.pass, "{:?}", missing.lines);
+    }
+
+    #[test]
+    fn gate_rdoq_bootstrap_skips_absolute_but_keeps_floor() {
+        let baseline = "{\"bootstrap\": 1, \"min_self_speedup\": 2.0, \
+                        \"rdoq_t1_msym_s\": 5.0, \"min_rdoq_parallel_speedup\": 1.3}";
+        let good = bench_gate(baseline, &bench_json_rdoq(0.5, 2.2, 0.1, 1.9));
+        assert!(good.pass, "{:?}", good.lines);
+        let bad = bench_gate(baseline, &bench_json_rdoq(0.5, 2.2, 0.1, 1.0));
+        assert!(!bad.pass, "{:?}", bad.lines);
+    }
+
+    #[test]
+    fn gate_rdoq_zero_baseline_skips_instead_of_vacuous_pass() {
+        // A 0.0 placeholder value must SKIP the absolute check (division
+        // by zero would otherwise make every regression "-inf%" = PASS),
+        // even without the bootstrap flag — but the floor stays enforced.
+        let baseline = "{\"v3_t1_msym_s\": 10.0, \"rdoq_t1_msym_s\": 0.0, \
+                        \"min_rdoq_parallel_speedup\": 1.3}";
+        let r = bench_gate(baseline, &bench_json_rdoq(10.0, 2.4, 3.0, 1.9));
+        assert!(r.pass, "{:?}", r.lines);
+        assert!(
+            r.lines.iter().any(|l| l.contains("SKIP rdoq")),
+            "{:?}",
+            r.lines
+        );
+        let bad = bench_gate(baseline, &bench_json_rdoq(10.0, 2.4, 3.0, 1.0));
+        assert!(!bad.pass, "{:?}", bad.lines);
     }
 }

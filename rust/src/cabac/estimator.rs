@@ -103,6 +103,20 @@ impl CostTable {
 ///               + [a >  n] EG(a - n)   with EG(u) = egp_cum[k] + eg0[k] + k,
 ///                 k = floor(log2 u) — all terms precomputable.
 pub fn build_cost_tables(ctxs: &WeightContexts, half: i32) -> [CostTable; 3] {
+    let mut out: [CostTable; 3] = std::array::from_fn(|_| CostTable {
+        cost: Vec::new(),
+        half: 0,
+    });
+    build_cost_tables_into(ctxs, half, &mut out);
+    out
+}
+
+/// [`build_cost_tables`] writing into caller-owned tables, reusing their
+/// `cost` allocations.  The slice-aligned RDOQ rebuilds tables once per
+/// refresh block *per slice*; with thousands of slices per network that is
+/// thousands of rebuilds per worker, so the table buffers live in the
+/// worker's scratch instead of being reallocated each time.
+pub fn build_cost_tables_into(ctxs: &WeightContexts, half: i32, out: &mut [CostTable; 3]) {
     assert!(half >= 0);
     let half_u = half as usize;
     let n = ctxs.cfg.max_abs_gr as usize;
@@ -144,17 +158,18 @@ pub fn build_cost_tables(ctxs: &WeightContexts, half: i32) -> [CostTable; 3] {
     // signFlag is a bypass bin in the v3 format: exactly 1 bit either way.
     let sign_pos = BYPASS_BITS;
     let sign_neg = BYPASS_BITS;
-    std::array::from_fn(|sig_idx| {
+    for (sig_idx, table) in out.iter_mut().enumerate() {
         let sig0 = ctxs.sig[sig_idx].bits(false);
         let sig1 = ctxs.sig[sig_idx].bits(true);
-        let mut cost = vec![0f32; 2 * half_u + 1];
+        table.half = half;
+        table.cost.clear();
+        table.cost.resize(2 * half_u + 1, 0.0);
         for a in 1..=half_u {
-            cost[half_u - a] = sig1 + sign_neg + abs_part[a];
-            cost[half_u + a] = sig1 + sign_pos + abs_part[a];
+            table.cost[half_u - a] = sig1 + sign_neg + abs_part[a];
+            table.cost[half_u + a] = sig1 + sign_pos + abs_part[a];
         }
-        cost[half_u] = sig0;
-        CostTable { cost, half }
-    })
+        table.cost[half_u] = sig0;
+    }
 }
 
 #[cfg(test)]
@@ -282,6 +297,32 @@ mod tests {
             encode_int(&mut e, &mut ctxs, &mut hist, v);
         }
         check(&ctxs);
+    }
+
+    #[test]
+    fn build_into_matches_and_reuses_buffers() {
+        // The scratch-reusing build must agree with the allocating one and
+        // cope with half changing between rebuilds (per-layer half differs
+        // across the flattened slice jobs one worker claims).
+        let mut ctxs = fresh();
+        let mut hist = SigHistory::default();
+        let mut e = Encoder::new();
+        for v in [0, 2, 0, 0, -7, 1, 0, 19] {
+            encode_int(&mut e, &mut ctxs, &mut hist, v);
+        }
+        let mut tables: [CostTable; 3] = std::array::from_fn(|_| CostTable {
+            cost: Vec::new(),
+            half: 0,
+        });
+        for half in [64, 8, 300] {
+            build_cost_tables_into(&ctxs, half, &mut tables);
+            let reference = build_cost_tables(&ctxs, half);
+            for (a, b) in tables.iter().zip(&reference) {
+                assert_eq!(a.half, b.half);
+                assert_eq!(a.cost, b.cost, "half={half}");
+            }
+            assert_eq!(tables[0].len(), 2 * half as usize + 1);
+        }
     }
 
     #[test]

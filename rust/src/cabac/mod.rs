@@ -29,7 +29,7 @@ pub use encoder::{
     encode_layer, encode_layer_legacy, encode_layer_legacy_with, encode_layer_with,
     encode_layer_with_size,
 };
-pub use estimator::{estimate_int, CostTable};
+pub use estimator::{build_cost_tables, build_cost_tables_into, estimate_int, CostTable};
 pub use slices::{
     decode_layer_sliced, decode_layer_sliced_legacy, encode_layer_sliced,
     encode_layer_sliced_parallel,

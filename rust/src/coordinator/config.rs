@@ -93,6 +93,22 @@ impl Default for SearchConfig {
     }
 }
 
+impl SearchConfig {
+    /// Slice geometry the quantizer must optimize for, derived from the
+    /// container policy so RDOQ's rate model and the emitted stream always
+    /// agree: `Some((slice_len, threads))` when the container restarts
+    /// contexts per slice (v2/v3), `None` for monolithic v1 payloads
+    /// (whose per-layer context chain is what [`crate::quant::rd::rd_quantize_network`]
+    /// models).
+    pub fn quantizer_slicing(&self) -> Option<(usize, usize)> {
+        if self.container.version == crate::model::VERSION_V1 {
+            None
+        } else {
+            Some((self.container.slice_len.max(1), self.container.threads.max(1)))
+        }
+    }
+}
+
 pub use crate::util::parallel::default_threads;
 
 #[cfg(test)]

@@ -70,14 +70,21 @@ pub fn enumerate_candidates(
             let probes = parallel_map(&grid, cfg.threads, |&delta| {
                 nn_probe(net, delta, cfg, service)
             });
-            let mut feasible: Vec<f32> = grid
-                .iter()
-                .zip(&probes)
-                .filter_map(|(&d, acc)| match acc {
-                    Ok(a) if *a >= original_accuracy - cfg.tolerance => Some(d),
-                    _ => None,
-                })
-                .collect();
+            // A probe error is an eval-service fault, not evidence that Δ
+            // is infeasible: silently mapping Err -> "drop this Δ" shrank
+            // the round-2 search space on transient failures.  Retry the
+            // failed probe once serially (fan-out pressure is the common
+            // transient cause), then propagate.
+            let mut feasible: Vec<f32> = Vec::with_capacity(grid.len());
+            for (&delta, probe) in grid.iter().zip(probes) {
+                let acc = match probe {
+                    Ok(a) => a,
+                    Err(_) => nn_probe(net, delta, cfg, service)?,
+                };
+                if acc >= original_accuracy - cfg.tolerance {
+                    feasible.push(delta);
+                }
+            }
             feasible.sort_by(f32::total_cmp);
             feasible.reverse();
             feasible.truncate(cfg.dc2_keep);

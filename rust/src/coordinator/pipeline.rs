@@ -10,7 +10,7 @@ use crate::codecs::LosslessCoder;
 use crate::metrics::Sizes;
 use crate::model::{CompressedNetwork, Network};
 use crate::quant::lloyd::lloyd_quantize_network;
-use crate::quant::rd::rd_quantize_network;
+use crate::quant::rd::{rd_quantize_network, rd_quantize_network_sliced};
 use crate::quant::stepsize::{dc_v1_delta, dc_v1_importance};
 use crate::quant::uniform;
 use crate::runtime::EvalService;
@@ -52,21 +52,36 @@ pub fn run_candidate(
 ) -> Result<CandidateResult> {
     let original_weights = net.f32_size_bytes();
     let bias = net.bias_size_bytes();
+    // Candidates already fan out over `cfg.threads` (grid_search), so the
+    // per-candidate quantize/encode/decode fan-outs run single-threaded
+    // here — nesting them would oversubscribe the pool threads² with no
+    // speedup.  Output bytes and assignments are thread-count independent,
+    // so this is purely a scheduling choice; the one-shot CLI `compress`
+    // path calls compress_dc directly and keeps the full fan-out.
+    let inner = SearchConfig {
+        container: crate::model::ContainerPolicy {
+            threads: 1,
+            ..cfg.container
+        },
+        ..*cfg
+    };
+    let cfg = if cfg.threads > 1 { &inner } else { cfg };
     match cand.method {
         Method::DcV1 | Method::DcV2 => {
             let compressed = compress_dc(net, cand, cfg);
             let bytes = compressed.to_bytes_with(cfg.container);
             // True decode path: parse + CABAC-decode + dequantize, under
-            // the same container policy (sliced v2/v3 containers fan slices
-            // out over threads; v3 — the default — additionally decodes on
-            // the bypass fast path).
+            // the same container policy and slice geometry (v3 — the
+            // default — decodes on the bypass fast path; note the clamp
+            // above runs it single-threaded inside the candidate pool).
             let decoded = CompressedNetwork::from_bytes_with(&bytes, cfg.container.threads)?;
             let recon = decoded.reconstruct(&net.name);
             let accuracy = service.accuracy(&recon)?;
-            // .dcb embeds the (uncompressed) biases; count weights-only
-            // payload as total minus bias so Sizes can add bias per the
-            // paper's convention.
-            let compressed_weights = bytes.len().saturating_sub(bias);
+            // True coded-weight bytes: per-layer CABAC payloads + Δ side
+            // info, from the container headers — NOT `bytes.len() - bias`,
+            // which billed framing (magic, names, shapes, length fields,
+            // CRC, bias framing) as weight payload.
+            let compressed_weights = coded_weight_bytes(&bytes)?;
             Ok(CandidateResult {
                 candidate: *cand,
                 sizes: Sizes {
@@ -129,23 +144,53 @@ pub fn run_candidate(
     }
 }
 
-/// DC quantization of the whole network (no entropy coding yet).
+/// True coded-weight bytes of a serialized `.dcb` stream: the per-layer
+/// CABAC payload (incl. the in-payload slice table for v2/v3 — part of
+/// the coded representation) plus the 4-byte Δ each layer ships as
+/// quantizer side info.  Container framing — magic, version, model/layer
+/// names, shapes, bias blocks, length fields, CRC — is transport, not
+/// weight payload, and is excluded so [`Sizes`] reports what the paper's
+/// Table I counts.
+pub fn coded_weight_bytes(bytes: &[u8]) -> Result<usize> {
+    let header = crate::model::probe(bytes)?;
+    Ok(header.layers.iter().map(|l| l.payload_bytes + 4).sum())
+}
+
+/// DC quantization of the whole network (no entropy coding yet).  The
+/// RDOQ rate model follows `cfg.container`: sliced containers (v2/v3) get
+/// the slice-aligned quantizer — fresh contexts every
+/// `cfg.container.slice_len` symbols, slice jobs fanned out across layers
+/// over `cfg.container.threads` workers — so the R term of eq. 11 is the
+/// rate the emitted stream actually spends; v1 keeps the monolithic
+/// per-layer chain.  Assignments are thread-count independent.
 pub fn compress_dc(net: &Network, cand: &Candidate, cfg: &SearchConfig) -> CompressedNetwork {
+    fn quantize<'a>(
+        net: &'a Network,
+        layer_params: impl FnMut(&'a crate::model::Layer) -> (f32, Vec<f32>),
+        lambda: f32,
+        cfg: &SearchConfig,
+    ) -> Vec<crate::model::QuantizedLayer> {
+        match cfg.quantizer_slicing() {
+            Some((slice_len, threads)) => rd_quantize_network_sliced(
+                net,
+                layer_params,
+                lambda,
+                cfg.coding,
+                cfg.max_half,
+                slice_len,
+                threads,
+            ),
+            None => rd_quantize_network(net, layer_params, lambda, cfg.coding, cfg.max_half),
+        }
+    }
     let layers = match cand.method {
-        Method::DcV1 => rd_quantize_network(
+        Method::DcV1 => quantize(
             net,
             |l| (dc_v1_delta(l, cand.s), dc_v1_importance(l)),
             cand.lambda,
-            cfg.coding,
-            cfg.max_half,
+            cfg,
         ),
-        Method::DcV2 => rd_quantize_network(
-            net,
-            |l| (cand.delta, vec![1.0; l.len()]),
-            cand.lambda,
-            cfg.coding,
-            cfg.max_half,
-        ),
+        Method::DcV2 => quantize(net, |l| (cand.delta, vec![1.0; l.len()]), cand.lambda, cfg),
         _ => unreachable!("compress_dc only handles DC methods"),
     };
     CompressedNetwork {
@@ -169,6 +214,13 @@ pub fn compress_dc(net: &Network, cand: &Candidate, cfg: &SearchConfig) -> Compr
 /// switching matters more, the gap grows to ~30% — the host path remains
 /// the default, this one is the deployment shape for accelerator-resident
 /// weights (quantified by `device_kernel_pipeline_close_to_host`).
+///
+/// Unlike [`compress_dc`], this path does **not** slice-align its rate
+/// model to the container policy: the frozen-table approximation above
+/// already dominates the ~1–3% slice-restart mismatch at the default
+/// 16384-symbol slices, and per-slice table rebuilds would mean per-slice
+/// kernel dispatches.  If the kernel path ever becomes the default,
+/// aligning it is the next step.
 pub fn compress_dc_device(
     net: &Network,
     cand: &Candidate,
@@ -318,6 +370,83 @@ mod tests {
             .sum::<f64>()
             / 600.0;
         assert!(mse < 1e-3, "{mse}");
+    }
+
+    #[test]
+    fn coded_weight_bytes_counts_payload_not_framing() {
+        let net = tiny_net();
+        let cand = Candidate {
+            method: Method::DcV2,
+            s: 0.0,
+            delta: 0.01,
+            lambda: 1e-4,
+            clusters: 0,
+        };
+        let cfg = SearchConfig::default();
+        let comp = compress_dc(&net, &cand, &cfg);
+        let bytes = comp.to_bytes_with(cfg.container);
+        let got = coded_weight_bytes(&bytes).unwrap();
+        // Pin the accounting: exactly the standalone sliced encoding of
+        // each layer plus the 4-byte Δ side info, nothing else.
+        let expected: usize = comp
+            .layers
+            .iter()
+            .map(|l| {
+                crate::cabac::encode_layer_sliced(&l.ints, cfg.coding, cfg.container.slice_len)
+                    .len()
+                    + 4
+            })
+            .sum();
+        assert_eq!(got, expected);
+        // The old `bytes.len() - bias` accounting billed framing (names,
+        // shapes, CRC, bias framing) as weight payload — strictly more.
+        assert!(got < bytes.len() - net.bias_size_bytes(), "{got} vs {}", bytes.len());
+    }
+
+    #[test]
+    fn compress_dc_quantizer_follows_container_slicing() {
+        // With a sliced container the quantizer must restart its rate
+        // model per slice (byte-identical to the standalone slice-aligned
+        // RDOQ), and the v1 path must keep the monolithic chain.
+        use crate::quant::rd::{rd_quantize_layer, rd_quantize_layer_sliced, RdParams};
+        let net = tiny_net();
+        let cand = Candidate {
+            method: Method::DcV2,
+            s: 0.0,
+            delta: 0.004,
+            lambda: 2.0,
+            clusters: 0,
+        };
+        let slice_len = 150; // 600-weight layer -> 4 slices
+        let mut cfg = SearchConfig {
+            container: crate::model::ContainerPolicy::v3(slice_len, 4),
+            ..SearchConfig::default()
+        };
+        let sliced = compress_dc(&net, &cand, &cfg);
+        let mut p = RdParams::new(
+            cand.delta,
+            cand.lambda * cand.delta * cand.delta,
+            crate::quant::rd::required_half(&net.layers[0].weights, cand.delta, cfg.max_half),
+        );
+        p.cfg = cfg.coding;
+        let imp = vec![1.0f32; net.layers[0].weights.len()];
+        let (expect, _) = rd_quantize_layer_sliced(&net.layers[0].weights, &imp, &p, slice_len);
+        assert_eq!(sliced.layers[0].ints, expect);
+        // thread count must not change assignments
+        cfg.container.threads = 1;
+        let t1 = compress_dc(&net, &cand, &cfg);
+        cfg.container.threads = 7;
+        let t7 = compress_dc(&net, &cand, &cfg);
+        assert_eq!(t1.layers[0].ints, t7.layers[0].ints);
+        // v1 container -> monolithic chain
+        cfg.container = crate::model::ContainerPolicy::v1();
+        let mono = compress_dc(&net, &cand, &cfg);
+        assert_eq!(
+            mono.layers[0].ints,
+            rd_quantize_layer(&net.layers[0].weights, &imp, &p)
+        );
+        // and the two rate models genuinely disagree on this plane
+        assert_ne!(mono.layers[0].ints, sliced.layers[0].ints);
     }
 
     #[test]

@@ -4,6 +4,9 @@
 //!   compress   <model.nwf> [-o out.dcb] [--method dc-v1|dc-v2] [--delta D]
 //!              [--lambda L] [--s S] [--container v1|v2|v3]
 //!              [--slice-len N] [--threads N]  one-shot compression
+//!              (--container/--slice-len set the geometry for BOTH the
+//!              emitted stream and the quantizer's rate model: sliced
+//!              containers get slice-aligned RDOQ, v1 the monolithic chain)
 //!   decompress <model.dcb> [-o out.nwf] [--threads N]  decode + reconstruct
 //!   eval       <model.nwf|model.dcb>         top-1 accuracy via PJRT
 //!   search     <model.nwf> [--method M]...   grid-search (Fig. 5 loop)
@@ -173,8 +176,12 @@ fn cmd_compress(args: &Args) -> Result<()> {
         .unwrap_or_else(|| format!("{input}.dcb"));
     std::fs::write(&out, &bytes)?;
     let orig = net.f32_size_bytes() + net.bias_size_bytes();
+    let rdoq = match cfg.quantizer_slicing() {
+        Some((slice_len, _)) => format!("slice-aligned RDOQ @ {slice_len} sym/slice"),
+        None => "monolithic RDOQ".into(),
+    };
     println!(
-        "{input} -> {out}: {} -> {} bytes ({:.2}% of original, x{:.1}, dcb v{})",
+        "{input} -> {out}: {} -> {} bytes ({:.2}% of original, x{:.1}, dcb v{}, {rdoq})",
         orig,
         bytes.len(),
         100.0 * bytes.len() as f64 / orig as f64,

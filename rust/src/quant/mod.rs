@@ -12,5 +12,8 @@ pub mod stepsize;
 pub mod uniform;
 
 pub use lloyd::{lloyd_quantize_network, weighted_lloyd, LloydResult};
-pub use rd::{rd_quantize_layer, rd_quantize_network, RdParams};
+pub use rd::{
+    rd_quantize_layer, rd_quantize_layer_sliced, rd_quantize_layer_sliced_parallel,
+    rd_quantize_network, rd_quantize_network_sliced, RdParams, RdScratch,
+};
 pub use stepsize::{dc_v1_delta, dc_v1_importance, dc_v2_delta_grid};

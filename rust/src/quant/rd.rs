@@ -16,11 +16,26 @@
 //! cost ties (the `stale_table_is_near_exact` test quantifies this).  This
 //! block structure is exactly what lets the Pallas `rd_assign` kernel run
 //! the inner argmin data-parallel on device with a frozen table.
+//!
+//! **Slice alignment.**  The v2/v3 containers restart the arithmetic coder
+//! and the context models every [`slice`](crate::cabac::slices) — so a rate
+//! model that runs one monolithic per-layer context chain estimates an R
+//! term the sliced stream never spends (adaptation restarts make early
+//! in-slice symbols *more* expensive than a warmed-up chain predicts).
+//! [`rd_quantize_layer_sliced`] / [`rd_quantize_network_sliced`] quantize
+//! each slice with fresh contexts and its own adaptive cost-table chain,
+//! exactly mirroring `encode_layer_sliced` semantics.  Slices are
+//! independent by construction, which also fans the dominant encode-side
+//! cost out over all cores: the network driver flattens slices across
+//! layers (the same fan-out shape as container decode) with one
+//! [`RdScratch`] per worker.  When `slice_len >= layer len` the layer is a
+//! single slice, which degenerates to the monolithic chain byte-for-byte.
 
 use crate::cabac::binarize::update_contexts;
 use crate::cabac::context::{CodingConfig, SigHistory, WeightContexts};
-use crate::cabac::estimator::{build_cost_tables, CostTable};
+use crate::cabac::estimator::{build_cost_tables_into, CostTable};
 use crate::model::{Network, QuantizedLayer};
+use crate::util::parallel::parallel_map_with;
 
 /// Inner-argmin strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,24 +85,50 @@ pub fn required_half(weights: &[f32], delta: f32, cap: i32) -> i32 {
     (((max_abs / delta).ceil() as i64 + 1).min(cap as i64)) as i32
 }
 
-/// Quantize one layer's weights sequentially.  `importance` is F_i
-/// (length-matched or empty for F_i = 1).
-pub fn rd_quantize_layer(
+/// Reusable per-worker RDOQ scratch: one context set (reset per slice, the
+/// same contract as the encoder's slice fan-out) plus the three sig-context
+/// cost tables, whose buffers survive across the thousands of slice jobs
+/// one worker claims.
+pub struct RdScratch {
+    ctxs: WeightContexts,
+    tables: [CostTable; 3],
+}
+
+impl RdScratch {
+    pub fn new(cfg: CodingConfig) -> Self {
+        Self {
+            ctxs: WeightContexts::new(cfg),
+            tables: std::array::from_fn(|_| CostTable {
+                cost: Vec::new(),
+                half: 0,
+            }),
+        }
+    }
+}
+
+/// RDOQ one slice with fresh contexts (scratch reset on entry), appending
+/// the chosen indices to `out`.  Returns the summed R term (bits) of the
+/// chosen assignments under the tables the search consulted — the rate
+/// RDOQ believed it was paying, comparable against the real coded size
+/// (see the `sliced_estimate_tracks_real_sliced_stream` test).
+fn rd_quantize_slice_into(
     weights: &[f32],
     importance: &[f32],
     p: &RdParams,
-) -> Vec<i32> {
-    assert!(importance.is_empty() || importance.len() == weights.len());
-    let mut ctxs = WeightContexts::new(p.cfg);
+    scratch: &mut RdScratch,
+    out: &mut Vec<i32>,
+) -> f64 {
+    let RdScratch { ctxs, tables } = scratch;
+    ctxs.reset();
     let mut hist = SigHistory::default();
     // One cost table per sigFlag context (the sig bin is the only
     // history-dependent part of the binarization).
-    let mut tables = build_tables(&ctxs, p.half);
+    build_cost_tables_into(ctxs, p.half, tables);
     let refresh = p.refresh.max(1);
-    let mut out = Vec::with_capacity(weights.len());
+    let mut est_bits = 0f64;
     for (i, &w) in weights.iter().enumerate() {
         if i % refresh == 0 && i > 0 {
-            tables = build_tables(&ctxs, p.half);
+            build_cost_tables_into(ctxs, p.half, tables);
         }
         let f = if importance.is_empty() { 1.0 } else { importance[i] };
         let table = &tables[hist.ctx_index()];
@@ -95,14 +136,95 @@ pub fn rd_quantize_layer(
             SearchMode::Full => argmin_rd(w, f, p.delta, p.lambda, table),
             SearchMode::Window => argmin_rd_window(w, f, p.delta, p.lambda, table),
         };
-        update_contexts(&mut ctxs, &mut hist, k);
+        est_bits += table.bits(k) as f64;
+        update_contexts(ctxs, &mut hist, k);
         out.push(k);
     }
+    est_bits
+}
+
+/// Quantize one layer's weights sequentially along a single monolithic
+/// context chain (the v1-container rate model).  `importance` is F_i
+/// (length-matched or empty for F_i = 1).
+pub fn rd_quantize_layer(weights: &[f32], importance: &[f32], p: &RdParams) -> Vec<i32> {
+    assert!(importance.is_empty() || importance.len() == weights.len());
+    let mut scratch = RdScratch::new(p.cfg);
+    let mut out = Vec::with_capacity(weights.len());
+    rd_quantize_slice_into(weights, importance, p, &mut scratch, &mut out);
     out
 }
 
-fn build_tables(ctxs: &WeightContexts, half: i32) -> [CostTable; 3] {
-    build_cost_tables(ctxs, half)
+/// Split a plane and its (possibly empty) importances into per-slice pairs.
+fn slice_jobs<'a>(
+    weights: &'a [f32],
+    importance: &'a [f32],
+    slice_len: usize,
+) -> Vec<(&'a [f32], &'a [f32])> {
+    let mut jobs = Vec::with_capacity(weights.len().div_ceil(slice_len.max(1)));
+    let mut offset = 0usize;
+    for chunk in weights.chunks(slice_len.max(1)) {
+        let imp = if importance.is_empty() {
+            &[][..]
+        } else {
+            &importance[offset..offset + chunk.len()]
+        };
+        jobs.push((chunk, imp));
+        offset += chunk.len();
+    }
+    jobs
+}
+
+/// Slice-aligned RDOQ: quantize each `slice_len`-symbol slice with fresh
+/// contexts and its own cost-table chain, exactly the rate structure
+/// [`crate::cabac::encode_layer_sliced`] pays for.  Serial reference path
+/// (one scratch reused across slices); returns the assignments and the
+/// summed rate estimate in bits.
+pub fn rd_quantize_layer_sliced(
+    weights: &[f32],
+    importance: &[f32],
+    p: &RdParams,
+    slice_len: usize,
+) -> (Vec<i32>, f64) {
+    assert!(importance.is_empty() || importance.len() == weights.len());
+    let mut scratch = RdScratch::new(p.cfg);
+    let mut out = Vec::with_capacity(weights.len());
+    let mut est_bits = 0f64;
+    for (w, imp) in slice_jobs(weights, importance, slice_len) {
+        est_bits += rd_quantize_slice_into(w, imp, p, &mut scratch, &mut out);
+    }
+    (out, est_bits)
+}
+
+/// [`rd_quantize_layer_sliced`] with slices fanned out over `threads`
+/// workers (one [`RdScratch`] per worker).  Slices restart their context
+/// chain by construction, so assignments and the rate estimate are
+/// identical to the serial path for every thread count.
+pub fn rd_quantize_layer_sliced_parallel(
+    weights: &[f32],
+    importance: &[f32],
+    p: &RdParams,
+    slice_len: usize,
+    threads: usize,
+) -> (Vec<i32>, f64) {
+    assert!(importance.is_empty() || importance.len() == weights.len());
+    let jobs = slice_jobs(weights, importance, slice_len);
+    let coded = parallel_map_with(
+        &jobs,
+        threads,
+        || RdScratch::new(p.cfg),
+        |scratch, &(w, imp)| {
+            let mut out = Vec::with_capacity(w.len());
+            let bits = rd_quantize_slice_into(w, imp, p, scratch, &mut out);
+            (out, bits)
+        },
+    );
+    let mut out = Vec::with_capacity(weights.len());
+    let mut est_bits = 0f64;
+    for (ints, bits) in coded {
+        out.extend(ints);
+        est_bits += bits;
+    }
+    (out, est_bits)
 }
 
 /// Full-scan argmin over the grid — identical semantics to the Pallas
@@ -139,33 +261,35 @@ pub fn argmin_rd_window(w: f32, f: f32, delta: f32, lambda: f32, table: &CostTab
     // margin recovers those rate-driven jumps (agreement test below).
     let hi = nn.abs().saturating_add(8).min(half) as usize;
     let base = half as usize;
-    // Contiguous slice walk (no per-candidate clamp): positive side scans
-    // cost[base..], negative side scans cost[..=base] in reverse.
+    // Both arms walk a contiguous slice of the table (no per-candidate
+    // bounds check): positive side scans cost[base..=base+hi] forward,
+    // negative side scans cost[base-hi..=base] reversed — either way `a`
+    // ascends 0..=hi, so tie-breaking (first win, smallest |index|) is
+    // identical across arms.
+    let sd = sign * delta;
+    let best_a = if sign > 0.0 {
+        scan_arm(table.cost[base..=base + hi].iter().copied(), w, f, sd, lambda)
+    } else {
+        scan_arm(table.cost[base - hi..=base].iter().rev().copied(), w, f, sd, lambda)
+    };
+    sign as i32 * best_a as i32
+}
+
+/// One window arm: costs arrive in ascending-|index| order, `a` is the
+/// distance from 0 along the weight's sign side.
+#[inline]
+fn scan_arm(costs: impl Iterator<Item = f32>, w: f32, f: f32, sd: f32, lambda: f32) -> usize {
     let mut best = f32::INFINITY;
     let mut best_a = 0usize;
-    let sd = sign * delta;
-    if sign > 0.0 {
-        let costs = &table.cost[base..=base + hi];
-        for (a, &c) in costs.iter().enumerate() {
-            let d = w - sd * a as f32;
-            let cost = f * d * d + lambda * c;
-            if cost < best {
-                best = cost;
-                best_a = a;
-            }
-        }
-    } else {
-        for a in 0..=hi {
-            let c = table.cost[base - a];
-            let d = w - sd * a as f32;
-            let cost = f * d * d + lambda * c;
-            if cost < best {
-                best = cost;
-                best_a = a;
-            }
+    for (a, c) in costs.enumerate() {
+        let d = w - sd * a as f32;
+        let cost = f * d * d + lambda * c;
+        if cost < best {
+            best = cost;
+            best_a = a;
         }
     }
-    sign as i32 * best_a as i32
+    best_a
 }
 
 /// Quantize a whole network with RDOQ.  `layer_params` yields (Δ, F_i
@@ -205,6 +329,89 @@ pub fn rd_quantize_network<'a>(
                 cols: l.cols,
                 ints: rd_quantize_layer(&l.weights, &imp, &p),
                 delta,
+                bias: l.bias.clone(),
+            }
+        })
+        .collect()
+}
+
+/// [`rd_quantize_network`] with the **slice-aligned** rate model: each
+/// layer is quantized slice by slice (fresh contexts per `slice_len`
+/// symbols), matching the v2/v3 container geometry, and the slice jobs of
+/// *all* layers are flattened into one fan-out over `threads` workers —
+/// the same shape the container decoder uses, so a network whose largest
+/// layer alone would occupy one core still saturates the pool.
+///
+/// Assignments are independent of `threads` (slices restart their chains
+/// by construction); `threads = 1` is the serial reference.  A layer with
+/// `slice_len >= len` is a single slice, i.e. exactly the monolithic
+/// [`rd_quantize_layer`] chain.
+pub fn rd_quantize_network_sliced<'a>(
+    net: &'a Network,
+    mut layer_params: impl FnMut(&'a crate::model::Layer) -> (f32, Vec<f32>),
+    lambda: f32,
+    cfg: CodingConfig,
+    max_half: i32,
+    slice_len: usize,
+    threads: usize,
+) -> Vec<QuantizedLayer> {
+    let slice_len = slice_len.max(1);
+    // Per-layer plan: Δ, half, importances (owned; jobs borrow from here).
+    let plans: Vec<(&crate::model::Layer, RdParams, Vec<f32>)> = net
+        .layers
+        .iter()
+        .map(|l| {
+            let (delta, imp) = layer_params(l);
+            assert!(imp.is_empty() || imp.len() == l.weights.len());
+            let p = RdParams {
+                delta,
+                lambda: lambda * delta * delta,
+                half: required_half(&l.weights, delta, max_half),
+                refresh: 256,
+                cfg,
+                search: SearchMode::Window,
+            };
+            (l, p, imp)
+        })
+        .collect();
+    // Flatten slice jobs across layers (the container-decode fan-out
+    // shape), remembering how many slices each layer contributed.
+    let mut jobs: Vec<(&[f32], &[f32], RdParams)> = Vec::new();
+    let mut per_layer = Vec::with_capacity(plans.len());
+    for (l, p, imp) in &plans {
+        let before = jobs.len();
+        for (w, i) in slice_jobs(&l.weights, imp, slice_len) {
+            jobs.push((w, i, *p));
+        }
+        per_layer.push(jobs.len() - before);
+    }
+    let coded = parallel_map_with(
+        &jobs,
+        threads,
+        || RdScratch::new(cfg),
+        |scratch, (w, imp, p)| {
+            let mut out = Vec::with_capacity(w.len());
+            rd_quantize_slice_into(w, imp, p, scratch, &mut out);
+            out
+        },
+    );
+    let mut it = coded.into_iter();
+    plans
+        .iter()
+        .zip(per_layer)
+        .map(|((l, p, _), n)| {
+            let mut ints = Vec::with_capacity(l.weights.len());
+            for chunk in it.by_ref().take(n) {
+                ints.extend(chunk);
+            }
+            QuantizedLayer {
+                name: l.name.clone(),
+                kind: l.kind,
+                shape: l.shape.clone(),
+                rows: l.rows,
+                cols: l.cols,
+                ints,
+                delta: p.delta,
                 bias: l.bias.clone(),
             }
         })
@@ -367,5 +574,143 @@ mod tests {
         let h = required_half(&w, 0.01, 4096);
         assert!(h >= 120);
         assert_eq!(required_half(&w, 0.01, 64), 64); // cap applies
+    }
+
+    #[test]
+    fn single_slice_equals_monolithic() {
+        // slice_len >= layer len degenerates to the monolithic chain.
+        let mut rng = Pcg64::new(97);
+        let w = rng.sparse_laplace_vec(5_000, 0.05, 0.4);
+        let p = params(0.004, 3e-6, 128);
+        let mono = rd_quantize_layer(&w, &[], &p);
+        for slice_len in [5_000usize, 8_000, usize::MAX] {
+            let (sliced, _) = rd_quantize_layer_sliced(&w, &[], &p, slice_len);
+            assert_eq!(sliced, mono, "slice_len={slice_len}");
+        }
+    }
+
+    #[test]
+    fn sliced_assignments_thread_invariant() {
+        let mut rng = Pcg64::new(98);
+        let w = rng.sparse_laplace_vec(20_000, 0.05, 0.3);
+        let imp: Vec<f32> = w.iter().map(|x| 1.0 + x.abs()).collect();
+        let p = params(0.004, 3e-6, 256);
+        for slice_len in [512usize, 4096] {
+            let (serial, serial_bits) = rd_quantize_layer_sliced(&w, &imp, &p, slice_len);
+            for threads in [1usize, 2, 4, 8] {
+                let (par, par_bits) =
+                    rd_quantize_layer_sliced_parallel(&w, &imp, &p, slice_len, threads);
+                assert_eq!(par, serial, "slice_len={slice_len} threads={threads}");
+                assert_eq!(par_bits, serial_bits, "rate estimate must match too");
+            }
+        }
+    }
+
+    #[test]
+    fn sliced_estimate_tracks_real_sliced_stream() {
+        // The point of slice alignment (extends the estimator's
+        // `estimate_tracks_real_encoder`): the summed R term RDOQ optimizes
+        // must be what the sliced v3 stream actually spends — within 2% on
+        // a 30k sparse-Laplace plane, for exact (refresh=1) and block-stale
+        // (refresh=256, the production default) tables.
+        let mut rng = Pcg64::new(96);
+        let w = rng.sparse_laplace_vec(30_000, 0.05, 0.3);
+        let slice_len = 8192usize;
+        let delta = 0.004f32;
+        let half = required_half(&w, delta, 512);
+        for refresh in [1usize, 256] {
+            let mut p = params(delta, 3e-6, half);
+            p.refresh = refresh;
+            let (ints, est_bits) = rd_quantize_layer_sliced(&w, &[], &p, slice_len);
+            let raw = crate::cabac::encode_layer_sliced(&ints, p.cfg, slice_len);
+            let actual_bits = raw.len() as f64 * 8.0;
+            let rel = (actual_bits - est_bits).abs() / actual_bits;
+            assert!(
+                rel < 0.02,
+                "refresh={refresh}: est {est_bits:.0} vs actual {actual_bits:.0} (rel {rel:.4})"
+            );
+        }
+    }
+
+    #[test]
+    fn monolithic_estimate_understates_sliced_stream() {
+        // The PR 1 mismatch this module fixes: a monolithic per-layer
+        // context chain estimates an R term the sliced stream never spends.
+        // At 1024-symbol slices the real stream pays >2.5% more than the
+        // monolithic estimate (adaptation restarts + per-slice coder
+        // tails), while the slice-aligned estimate stays within 2%.
+        let mut rng = Pcg64::new(96);
+        let w = rng.sparse_laplace_vec(30_000, 0.05, 0.3);
+        let slice_len = 1024usize;
+        let delta = 0.004f32;
+        let mut p = params(delta, 3e-6, required_half(&w, delta, 512));
+        p.refresh = 1; // exact per-symbol estimates isolate the chain shape
+        let (mono_ints, mono_est) = rd_quantize_layer_sliced(&w, &[], &p, usize::MAX);
+        let mono_actual =
+            crate::cabac::encode_layer_sliced(&mono_ints, p.cfg, slice_len).len() as f64 * 8.0;
+        let understate = (mono_actual - mono_est) / mono_actual;
+        assert!(
+            understate > 0.025,
+            "mono est {mono_est:.0} vs sliced stream {mono_actual:.0} ({understate:.4})"
+        );
+        let (ints, est) = rd_quantize_layer_sliced(&w, &[], &p, slice_len);
+        let actual = crate::cabac::encode_layer_sliced(&ints, p.cfg, slice_len).len() as f64 * 8.0;
+        let rel = (actual - est).abs() / actual;
+        assert!(rel < 0.02, "aligned est {est:.0} vs {actual:.0} ({rel:.4})");
+        assert!(rel < understate, "aligned model must track strictly better");
+    }
+
+    #[test]
+    fn network_sliced_thread_invariant_and_flattens_layers() {
+        use crate::model::{Kind, Layer};
+        let mut rng = Pcg64::new(99);
+        let mk = |name: &str, n: usize, rng: &mut Pcg64| Layer {
+            name: name.into(),
+            kind: Kind::Dense,
+            shape: vec![n, 1],
+            rows: 1,
+            cols: n,
+            weights: rng.sparse_laplace_vec(n, 0.05, 0.4),
+            fisher: None,
+            hessian: None,
+            bias: None,
+        };
+        let net = Network {
+            name: "t".into(),
+            layers: vec![mk("a", 3_000, &mut rng), mk("b", 700, &mut rng)],
+        };
+        let cfg = CodingConfig::default();
+        let quantize = |threads: usize| {
+            rd_quantize_network_sliced(
+                &net,
+                |l| (0.004, vec![1.0; l.len()]),
+                2.0,
+                cfg,
+                2048,
+                512,
+                threads,
+            )
+        };
+        let t1 = quantize(1);
+        for threads in [2usize, 4, 16] {
+            let tn = quantize(threads);
+            for (a, b) in t1.iter().zip(&tn) {
+                assert_eq!(a.ints, b.ints, "threads={threads}");
+            }
+        }
+        // Per layer, the driver must reproduce the standalone sliced path.
+        for (l, q) in net.layers.iter().zip(&t1) {
+            let p = RdParams {
+                delta: 0.004,
+                lambda: 2.0 * 0.004 * 0.004,
+                half: required_half(&l.weights, 0.004, 2048),
+                refresh: 256,
+                cfg,
+                search: SearchMode::Window,
+            };
+            let imp = vec![1.0f32; l.weights.len()];
+            let (expect, _) = rd_quantize_layer_sliced(&l.weights, &imp, &p, 512);
+            assert_eq!(q.ints, expect, "layer {}", l.name);
+        }
     }
 }

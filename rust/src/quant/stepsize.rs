@@ -26,7 +26,13 @@ pub fn dc_v1_lambda_grid(points: usize) -> Vec<f32> {
         .collect()
 }
 
-/// λ grid for DC-v2 (App. A-E): 0.01 + 0.001·i, i = 0..=20.
+/// λ grid for DC-v2 (App. A-E).  The paper's grid is 0.01 + 0.001·i,
+/// i = 0..=20 — 21 points linearly spanning [0.01, 0.03].  We keep the
+/// *span* fixed and normalize the point count: `points` samples spaced
+/// evenly across [0.01, 0.03], so coarser sweeps stay centred on the same
+/// region instead of truncating its top (the formula reproduces the
+/// paper's grid exactly at `points = 21` — pinned by
+/// `dc_v2_lambda_grid_matches_paper_at_21_points`).
 pub fn dc_v2_lambda_grid(points: usize) -> Vec<f32> {
     let n = points.max(2);
     (0..n)
@@ -34,9 +40,14 @@ pub fn dc_v2_lambda_grid(points: usize) -> Vec<f32> {
         .collect()
 }
 
-/// Δ candidate grid for DC-v2 (App. A-E): log-spaced 0.001..0.15 plus the
-/// linear top-up band 0.064..0.128.
-pub fn dc_v2_delta_grid(log_points: usize, lin_points: usize) -> Vec<f32> {
+/// Δ candidate grid for DC-v2 (App. A-E): log-spaced 0.001..0.15 plus a
+/// **log-spaced** top-up band densifying 0.064..0.128 — the doubling band
+/// where the zoo's dense nets cross from within-tolerance to accuracy
+/// collapse, so round 1 benefits from extra resolution there.  The band
+/// is intentionally geometric like the main grid (Δ acts multiplicatively
+/// on quantization error, so equal *ratios*, not equal gaps, give equal
+/// resolution; pinned by `dc_v2_delta_top_up_band_is_log_spaced`).
+pub fn dc_v2_delta_grid(log_points: usize, band_points: usize) -> Vec<f32> {
     let mut v: Vec<f32> = (0..log_points.max(2))
         .map(|i| {
             0.001
@@ -45,9 +56,9 @@ pub fn dc_v2_delta_grid(log_points: usize, lin_points: usize) -> Vec<f32> {
                 )
         })
         .collect();
-    v.extend((0..lin_points.max(2)).map(|i| {
+    v.extend((0..band_points.max(2)).map(|i| {
         0.064
-            * 2f32.powf((0.128f32 / 0.064).log2() * i as f32 / (lin_points.max(2) - 1) as f32)
+            * 2f32.powf((0.128f32 / 0.064).log2() * i as f32 / (band_points.max(2) - 1) as f32)
     }));
     v.sort_by(f32::total_cmp);
     v.dedup();
@@ -172,6 +183,44 @@ mod tests {
         let d = dc_v2_delta_grid(20, 8);
         assert!(d.windows(2).all(|w| w[0] < w[1]));
         assert!(d[0] >= 0.0009 && *d.last().unwrap() <= 0.151);
+    }
+
+    #[test]
+    fn dc_v2_lambda_grid_matches_paper_at_21_points() {
+        // App. A-E: λ = 0.01 + 0.001·i, i = 0..=20.  The normalized-span
+        // formula must reproduce it exactly at the paper's point count.
+        let g = dc_v2_lambda_grid(21);
+        assert_eq!(g.len(), 21);
+        for (i, &l) in g.iter().enumerate() {
+            let paper = 0.01 + 0.001 * i as f32;
+            assert!((l - paper).abs() < 1e-6, "i={i}: {l} vs {paper}");
+        }
+    }
+
+    #[test]
+    fn dc_v2_delta_top_up_band_is_log_spaced() {
+        // With the coarsest main grid (2 points: 0.001 and 0.15) the band
+        // members are isolated: exactly `band_points` values in
+        // [0.064, 0.128], geometric end to end.
+        let g = dc_v2_delta_grid(2, 5);
+        let band: Vec<f32> = g
+            .iter()
+            .copied()
+            .filter(|&d| (0.0639..=0.1281).contains(&d))
+            .collect();
+        assert_eq!(band.len(), 5);
+        assert!((band[0] - 0.064).abs() < 1e-6);
+        assert!((band[4] - 0.128).abs() < 1e-6);
+        let ratio = band[1] / band[0];
+        for w in band.windows(2) {
+            assert!(
+                (w[1] / w[0] - ratio).abs() < 1e-4,
+                "not geometric: {band:?}"
+            );
+        }
+        // log spacing means the absolute gaps widen toward the top —
+        // i.e. NOT the linear band an earlier doc claimed.
+        assert!(band[1] - band[0] < band[4] - band[3]);
     }
 
     #[test]

@@ -594,3 +594,41 @@ fn dcb_probe_reports_container_structure() {
     assert_eq!(p2.layers[0].n_slices, net.layers[0].ints.len().div_ceil(300));
     assert_eq!(p2.param_count(), net.param_count());
 }
+
+#[test]
+fn prop_sliced_rdoq_thread_invariant_byte_identical_streams() {
+    // For any weight plane and slice length: slice-aligned RDOQ assignments
+    // must be invariant to thread count, and encoding those assignments
+    // serially vs in parallel must yield byte-identical sliced streams.
+    use deepcabac::quant::rd::{
+        rd_quantize_layer_sliced, rd_quantize_layer_sliced_parallel, required_half, RdParams,
+    };
+    check_slice(
+        Config {
+            cases: 24,
+            seed: 0x5D00,
+        },
+        gen::weights,
+        |w| {
+            let coding = CodingConfig::default();
+            let delta = 0.01f32;
+            let p = RdParams::new(delta, 2.0 * delta * delta, required_half(w, delta, 256));
+            for slice_len in [5usize, 257, 4096] {
+                let (serial, serial_bits) = rd_quantize_layer_sliced(w, &[], &p, slice_len);
+                for threads in [2usize, 4] {
+                    let (par, par_bits) =
+                        rd_quantize_layer_sliced_parallel(w, &[], &p, slice_len, threads);
+                    if par != serial || par_bits != serial_bits {
+                        return false;
+                    }
+                }
+                let a = cabac::encode_layer_sliced(&serial, coding, slice_len);
+                let b = cabac::encode_layer_sliced_parallel(&serial, coding, slice_len, 3);
+                if a != b {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
