@@ -1,8 +1,11 @@
 //! DCB container throughput bench: monolithic v1 vs sliced v2 (legacy
 //! bins) vs sliced v3 (bypass fast path) on a multi-million-parameter
 //! network — decode fan-out at 1/2/4 threads, the size overhead each
-//! container costs, and the headline **single-thread** v3-vs-v1 decode
-//! speedup the CI perf gate tracks.
+//! container costs, the headline **single-thread** v3-vs-v1 decode
+//! speedup the CI perf gate tracks, the slice-aligned RDOQ legs, and the
+//! end-to-end grid-search legs (estimate-first vs exact-always pricing on
+//! the identical grid — `search_speedup_est_vs_exact` is the tentpole
+//! same-run floor the gate enforces).
 //!
 //! Emits `BENCH_dcb2.json` (workspace root) for the perf trajectory; the
 //! CI bench-gate job runs it with `--smoke` (smaller network, fewer
@@ -16,8 +19,10 @@
 
 use deepcabac::benchutil::bench;
 use deepcabac::cabac::{binarize, CodingConfig, Decoder, SigHistory, WeightContexts};
+use deepcabac::coordinator::{self, Method, SearchConfig, SearchStrategy};
 use deepcabac::model::{
-    CompressedNetwork, ContainerPolicy, Kind, QuantizedLayer, DEFAULT_SLICE_LEN, VERSION_V1,
+    CompressedNetwork, ContainerPolicy, Kind, Layer, Network, QuantizedLayer, DEFAULT_SLICE_LEN,
+    VERSION_V1,
 };
 use deepcabac::quant::rd::{rd_quantize_layer_sliced_parallel, required_half, RdParams};
 use deepcabac::util::Pcg64;
@@ -245,6 +250,91 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         rdoq_speedup_t4
     );
 
+    // --- estimate-first vs exact-always grid search ---
+    // A float network of the same parameter count, searched end to end
+    // (round-1 Δ scan + the (Δ, λ) product) under both pricing strategies
+    // against a deterministic in-process accuracy oracle.  The oracle is a
+    // cheap monotone-in-distortion proxy quantized to 1/16 steps — like
+    // top-1 over a small eval set, it plateaus, which keeps the Pareto
+    // front realistically small (~a quarter of the grid here; the front
+    // carries one member per distinct accuracy level, not per λ point).  Both legs run the identical grid on the
+    // identical oracle, so the same-run ratio isolates exactly what
+    // estimate-first removes: the per-candidate encode + serialize +
+    // decode round-trip for everything off the Pareto front.
+    let fnet = {
+        let mut wrng = Pcg64::new(0x5EA);
+        let dims: [(&str, usize); 3] =
+            [("fc1", params / 2), ("fc2", params / 4), ("fc3", params / 4)];
+        Network {
+            name: "dcb2_search".into(),
+            layers: dims
+                .iter()
+                .map(|&(name, n)| Layer {
+                    name: name.into(),
+                    kind: Kind::Dense,
+                    shape: vec![n, 1],
+                    rows: 1,
+                    cols: n,
+                    weights: wrng.sparse_laplace_vec(n, 0.05, 0.3),
+                    fisher: None,
+                    hessian: None,
+                    bias: None,
+                })
+                .collect(),
+        }
+    };
+    let oracle = deepcabac::benchutil::closeness_oracle(fnet.clone(), 0.004, 16.0);
+    // Grid shape: the paper's App. A-E protocol sweeps 21 λ points per Δ;
+    // a dense λ sweep is also what makes estimate-first pay off — the
+    // Pareto front grows with the number of distinct (quantized) accuracy
+    // plateaus, not with λ resolution, so the re-encoded fraction shrinks
+    // as the sweep densifies.
+    let search_cfg = SearchConfig {
+        threads: 4,
+        dc2_deltas: 12,
+        dc2_keep: 4,
+        dc2_lambdas: 12,
+        ..SearchConfig::default()
+    };
+    let run_search = |strategy: SearchStrategy| {
+        let cfg = SearchConfig {
+            strategy,
+            ..search_cfg
+        };
+        coordinator::search(&fnet, Method::DcV2, &cfg, &oracle).expect("search")
+    };
+    let (search_iters, search_warmup) = if smoke { (2, 0) } else { (3, 1) };
+    let (s_exact, out_exact) =
+        bench(search_warmup, search_iters, || run_search(SearchStrategy::ExactAlways));
+    let (s_est, out_est) =
+        bench(search_warmup, search_iters, || run_search(SearchStrategy::EstimateFirst));
+    // Correctness guard (deterministic, so a mismatch is a bug, not noise):
+    // both strategies must agree on the front and the selected best.
+    let front_exact: Vec<_> = out_exact.pareto().iter().map(|r| r.candidate).collect();
+    let front_est: Vec<_> = out_est.pareto().iter().map(|r| r.candidate).collect();
+    let best_exact = out_exact.best_result().map(|r| r.candidate);
+    let best_est = out_est.best_result().map(|r| r.candidate);
+    let fronts_match = front_exact == front_est && best_exact == best_est;
+    if !fronts_match {
+        eprintln!(
+            "WARNING: estimate-first front diverged from exact-always \
+             (est {front_est:?} vs exact {front_exact:?})"
+        );
+    }
+    let n_cands = out_est.results.len();
+    let search_syms = params * n_cands;
+    let search_speedup = s_exact.median_s / s_est.median_s;
+    println!(
+        "search: exact@4t {:>7.1} ms | est@4t {:>7.1} ms ({:.2}x, {} candidates, \
+         {} re-encoded, est-vs-real <= {:.2}%)",
+        s_exact.median_s * 1e3,
+        s_est.median_s * 1e3,
+        search_speedup,
+        n_cands,
+        out_est.exact_sized,
+        out_est.est_real_max_rel.unwrap_or(0.0) * 100.0
+    );
+
     // --- JSON for the perf trajectory + the CI bench gate ---
     let mut dec_fields = String::new();
     for (t, s) in &dec_v3 {
@@ -265,6 +355,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          \"rdoq_t1_s\": {:.6},\n  \"rdoq_t1_msym_s\": {:.3},\n  \
          \"rdoq_t4_s\": {:.6},\n  \"rdoq_t4_msym_s\": {:.3},\n  \
          \"rdoq_speedup_t4_vs_t1\": {:.4},\n  \
+         \"search_candidates\": {},\n  \"search_repriced\": {},\n  \
+         \"search_fronts_match\": {},\n  \
+         \"search_t4_exact_s\": {:.6},\n  \"search_t4_exact_msym_s\": {:.3},\n  \
+         \"search_t4_est_s\": {:.6},\n  \"search_t4_est_msym_s\": {:.3},\n  \
+         \"search_speedup_est_vs_exact\": {:.4},\n  \
          \"decode_speedup_v2_t4_vs_v1_t1\": {:.4},\n  \
          \"decode_speedup_v3_t1_vs_v1_t1\": {:.4},\n  \
          \"decode_speedup_v3_t4_vs_v1_t1\": {:.4},\n  \
@@ -293,6 +388,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         rdoq_t4.median_s,
         params as f64 / rdoq_t4.median_s / 1e6,
         rdoq_speedup_t4,
+        n_cands,
+        out_est.exact_sized,
+        if fronts_match { 1 } else { 0 },
+        s_exact.median_s,
+        search_syms as f64 / s_exact.median_s / 1e6,
+        s_est.median_s,
+        search_syms as f64 / s_est.median_s / 1e6,
+        search_speedup,
         speedup_v2_t4,
         speedup_v3_t1,
         speedup_v3_t4,

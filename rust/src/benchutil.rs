@@ -60,6 +60,32 @@ pub fn artifacts_ready() -> bool {
     artifacts_dir().join("MANIFEST.txt").exists()
 }
 
+/// Deterministic proxy accuracy oracle for search benches and tests: the
+/// fraction of weights reconstructed within `epsilon` of `reference`,
+/// floor-quantized to `1/steps` — like top-1 over a finite eval set, it is
+/// monotone in distortion and plateaus, which keeps Pareto fronts
+/// realistically small.  Runs in-process (no PJRT, no artifacts), so full
+/// grid searches are exercisable anywhere.
+pub fn closeness_oracle(
+    reference: crate::model::Network,
+    epsilon: f32,
+    steps: f64,
+) -> crate::runtime::EvalService {
+    crate::runtime::EvalService::from_fn(move |recon: &crate::model::Network| {
+        let (mut close, mut total) = (0usize, 0usize);
+        for (a, b) in reference.layers.iter().zip(&recon.layers) {
+            total += a.weights.len();
+            close += a
+                .weights
+                .iter()
+                .zip(&b.weights)
+                .filter(|(&x, &y)| (x - y).abs() <= epsilon)
+                .count();
+        }
+        Ok((close as f64 / total.max(1) as f64 * steps).floor() / steps)
+    })
+}
+
 /// Model subset selection: `DCB_BENCH_MODELS=lenet5,smallvgg` filters the
 /// default list (useful to keep `cargo bench` iterations quick).
 pub fn bench_models(default: &[&'static str]) -> Vec<&'static str> {
@@ -244,6 +270,57 @@ pub fn bench_gate(baseline: &str, current: &str) -> GateReport {
             }
         }
     }
+
+    // 4. **Estimate-first search** (added with the two-phase grid search).
+    //    Same arming pattern as RDOQ — both sub-checks read their keys from
+    //    the *baseline*, so pre-metric baselines stay valid:
+    //    * absolute `search_t4_est_msym_s` regression (same budget as the
+    //      other absolute checks; skipped while the baseline is bootstrap
+    //      or carries a non-positive placeholder);
+    //    * machine-independent same-run floor
+    //      `search_speedup_est_vs_exact >= min_search_speedup_est_vs_exact`
+    //      — the estimate-first search over the exact-always search on the
+    //      identical grid in the same run, which is what the tentpole buys
+    //      (O(front) instead of O(grid) trial encodes).
+    if let Some(b) = json_num(baseline, "search_t4_est_msym_s") {
+        match json_num(current, "search_t4_est_msym_s") {
+            Some(c) if bootstrap || b <= 0.0 => lines.push(format!(
+                "SKIP search absolute check: baseline not armed (current {c:.3} Msym/s)"
+            )),
+            Some(c) => {
+                let regress_pct = 100.0 * (b - c) / b;
+                let ok = regress_pct <= max_regress_pct;
+                pass &= ok;
+                lines.push(format!(
+                    "{} search est@4t {c:.3} Msym/s vs baseline {b:.3} ({regress_pct:+.1}% \
+                     regression, limit {max_regress_pct}%)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push("FAIL current BENCH_dcb2.json has no search_t4_est_msym_s field".into());
+            }
+        }
+    }
+    if let Some(floor) = json_num(baseline, "min_search_speedup_est_vs_exact") {
+        match json_num(current, "search_speedup_est_vs_exact") {
+            Some(r) => {
+                let ok = r >= floor;
+                pass &= ok;
+                lines.push(format!(
+                    "{} same-run search speedup est/exact = {r:.2}x (floor {floor}x)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no search_speedup_est_vs_exact field".into(),
+                );
+            }
+        }
+    }
     GateReport { pass, lines }
 }
 
@@ -284,6 +361,34 @@ mod tests {
     fn model_filter() {
         std::env::remove_var("DCB_BENCH_MODELS");
         assert_eq!(bench_models(&["a", "b"]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn closeness_oracle_quantizes_and_tracks_distortion() {
+        use crate::model::{Kind, Layer, Network};
+        let mk = |weights: Vec<f32>| Network {
+            name: "o".into(),
+            layers: vec![Layer {
+                name: "l".into(),
+                kind: Kind::Dense,
+                shape: vec![4, 1],
+                rows: 1,
+                cols: 4,
+                weights,
+                fisher: None,
+                hessian: None,
+                bias: None,
+            }],
+        };
+        let reference = mk(vec![0.0, 0.1, 0.2, 0.3]);
+        let svc = closeness_oracle(reference.clone(), 0.01, 8.0);
+        assert_eq!(svc.accuracy(&reference).unwrap(), 1.0);
+        // two of four weights off by more than epsilon -> 0.5, on the 1/8 grid
+        let half_off = mk(vec![0.0, 0.1, 0.25, 0.35]);
+        assert_eq!(svc.accuracy(&half_off).unwrap(), 0.5);
+        // quantization floors: 3/4 close -> floor(0.75 * 8)/8 = 0.75
+        let quarter_off = mk(vec![0.0, 0.1, 0.2, 0.35]);
+        assert_eq!(svc.accuracy(&quarter_off).unwrap(), 0.75);
     }
 
     #[test]
@@ -405,6 +510,53 @@ mod tests {
         let good = bench_gate(baseline, &bench_json_rdoq(0.5, 2.2, 0.1, 1.9));
         assert!(good.pass, "{:?}", good.lines);
         let bad = bench_gate(baseline, &bench_json_rdoq(0.5, 2.2, 0.1, 1.0));
+        assert!(!bad.pass, "{:?}", bad.lines);
+    }
+
+    fn bench_json_search(msym: f64, speedup: f64, search_msym: f64, search_speedup: f64) -> String {
+        format!(
+            "{{\"bench\": \"dcb2\", \"v3_t1_msym_s\": {msym}, \
+             \"decode_speedup_v3_t1_vs_seed_t1\": {speedup}, \
+             \"search_t4_est_msym_s\": {search_msym}, \
+             \"search_speedup_est_vs_exact\": {search_speedup}}}"
+        )
+    }
+
+    #[test]
+    fn gate_search_checks_armed_by_baseline_keys() {
+        // Baseline without search keys: current search numbers are ignored.
+        let old_baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&old_baseline, &bench_json_search(10.0, 2.4, 1.0, 0.5));
+        assert!(r.pass, "{:?}", r.lines);
+        // Armed baseline: absolute regression + same-run floor enforced.
+        let armed = "{\"v3_t1_msym_s\": 10.0, \"decode_speedup_v3_t1_vs_seed_t1\": 2.4, \
+             \"search_t4_est_msym_s\": 8.0, \"min_search_speedup_est_vs_exact\": 2.0}";
+        let good = bench_gate(armed, &bench_json_search(10.0, 2.4, 7.5, 2.6)); // -6% < 15%
+        assert!(good.pass, "{:?}", good.lines);
+        let regressed = bench_gate(armed, &bench_json_search(10.0, 2.4, 5.0, 2.6)); // -38%
+        assert!(!regressed.pass, "{:?}", regressed.lines);
+        let collapsed = bench_gate(armed, &bench_json_search(10.0, 2.4, 8.0, 1.4)); // < 2.0x
+        assert!(!collapsed.pass, "{:?}", collapsed.lines);
+        // Armed baseline + current missing the metric entirely: fail loudly.
+        let missing = bench_gate(armed, &bench_json(10.0, 2.4));
+        assert!(!missing.pass, "{:?}", missing.lines);
+    }
+
+    #[test]
+    fn gate_search_zero_baseline_skips_absolute_but_keeps_floor() {
+        // The bootstrap placeholder ships search_t4_est_msym_s = 0.0: the
+        // absolute check must SKIP (not vacuously pass), while the
+        // machine-independent est-vs-exact floor stays enforced.
+        let baseline = "{\"v3_t1_msym_s\": 10.0, \"search_t4_est_msym_s\": 0.0, \
+                        \"min_search_speedup_est_vs_exact\": 2.0}";
+        let r = bench_gate(baseline, &bench_json_search(10.0, 2.4, 3.0, 2.4));
+        assert!(r.pass, "{:?}", r.lines);
+        assert!(
+            r.lines.iter().any(|l| l.contains("SKIP search")),
+            "{:?}",
+            r.lines
+        );
+        let bad = bench_gate(baseline, &bench_json_search(10.0, 2.4, 3.0, 1.2));
         assert!(!bad.pass, "{:?}", bad.lines);
     }
 

@@ -67,15 +67,26 @@ impl Context {
     }
 
     /// Ideal code length of coding `bit` in this state, in bits.
+    ///
+    /// Probabilities are 12-bit, so all 4096 possible values are
+    /// precomputed into a lazily-built LUT (values identical to the direct
+    /// `-log2(p / 4096)` — the LUT is filled with exactly that expression).
+    /// This sits on two hot paths: the RDOQ's per-refresh cost-table
+    /// rebuilds and the estimate-first search's per-symbol exact rate
+    /// accumulation.
     #[inline]
     pub fn bits(&self, bit: bool) -> f32 {
-        let p = if bit {
-            (PROB_ONE - self.p0) as f32
-        } else {
-            self.p0 as f32
-        };
-        -(p / PROB_ONE as f32).log2()
+        let p = if bit { PROB_ONE - self.p0 } else { self.p0 };
+        bits_lut()[p as usize]
     }
+}
+
+/// `-log2(p / PROB_ONE)` for every 12-bit probability value.  Index 0 (a
+/// probability no context can hold — `p0` stays in [1, PROB_ONE - 1]) is
+/// +inf and harmless.
+fn bits_lut() -> &'static [f32; PROB_ONE as usize + 1] {
+    static LUT: std::sync::OnceLock<[f32; PROB_ONE as usize + 1]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| std::array::from_fn(|p| -(p as f32 / PROB_ONE as f32).log2()))
 }
 
 /// Range encoder.  Emits a leading zero byte (cache priming) that the
@@ -339,6 +350,19 @@ impl<'a> Decoder<'a> {
 mod tests {
     use super::*;
     use crate::util::Pcg64;
+
+    #[test]
+    fn bits_lut_matches_direct_formula() {
+        // The LUT must be indistinguishable from computing -log2(p/4096)
+        // on the fly, for every reachable probability state and both bins.
+        for p0 in 1..PROB_ONE {
+            let c = Context { p0 };
+            let direct0 = -(p0 as f32 / PROB_ONE as f32).log2();
+            let direct1 = -((PROB_ONE - p0) as f32 / PROB_ONE as f32).log2();
+            assert_eq!(c.bits(false), direct0, "p0={p0}");
+            assert_eq!(c.bits(true), direct1, "p0={p0}");
+        }
+    }
 
     fn roundtrip_with_contexts(bits: &[bool], n_ctx: usize, pick: impl Fn(usize) -> usize) {
         let mut encs = vec![Context::default(); n_ctx];

@@ -43,6 +43,25 @@ pub struct Candidate {
     pub clusters: usize,
 }
 
+/// How the grid search prices candidates (the estimate-first tentpole).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SearchStrategy {
+    /// Two-phase search: phase A prices every DC candidate with the
+    /// slice-aligned RDOQ's rate estimate (no encode / serialize / decode)
+    /// and evaluates accuracy on the quantizer's reconstruction directly
+    /// (identical to the decoded stream — CABAC is lossless, test-pinned);
+    /// phase B re-encodes only the Pareto survivors + the selected best so
+    /// every *reported* size is real coded bytes.  O(front) trial encodes
+    /// instead of O(grid).
+    #[default]
+    EstimateFirst,
+    /// Trial-encode every candidate through the full quantize → encode →
+    /// serialize → decode → evaluate path (the pre-estimate behaviour; the
+    /// escape hatch and the reference the seeded equivalence tests compare
+    /// against).
+    ExactAlways,
+}
+
 /// Grid-search budget knobs (defaults sized for the bench harness; the
 /// full-paper grids from App. A-D/E are available by raising these).
 #[derive(Clone, Copy, Debug)]
@@ -71,6 +90,14 @@ pub struct SearchConfig {
     /// Cap on the RDOQ grid half-width (Rust path; the Pallas kernel
     /// artifact supports up to 512).
     pub max_half: i32,
+    /// Candidate pricing strategy (estimate-first vs exact-always).
+    pub strategy: SearchStrategy,
+    /// Estimate-first phase B budget for keeping phase-A quantizations in
+    /// memory (bytes; `grid × params × 4` must fit).  Survivors whose ints
+    /// were kept are re-encoded without re-quantizing; past the budget the
+    /// search re-quantizes survivors instead (assignments are deterministic,
+    /// so both routes yield byte-identical streams).
+    pub memo_budget_bytes: usize,
 }
 
 impl Default for SearchConfig {
@@ -89,6 +116,8 @@ impl Default for SearchConfig {
             lloyd_max_iter: 25,
             uniform_clusters: &[32, 64, 128, 256, 512, 1024],
             max_half: 2048,
+            strategy: SearchStrategy::default(),
+            memo_budget_bytes: 256 << 20,
         }
     }
 }
@@ -106,6 +135,17 @@ impl SearchConfig {
         } else {
             Some((self.container.slice_len.max(1), self.container.threads.max(1)))
         }
+    }
+
+    /// Whether the grid search prices `method`'s candidates estimate-first.
+    /// Only the DC methods have a CABAC rate estimator, and the estimator
+    /// models the **v3** bin format — legacy containers (v1/v2) fall back to
+    /// exact-always rather than ranking candidates under costs the emitted
+    /// stream would not spend.
+    pub fn use_estimate_first(&self, method: Method) -> bool {
+        self.strategy == SearchStrategy::EstimateFirst
+            && matches!(method, Method::DcV1 | Method::DcV2)
+            && self.container.version == crate::model::VERSION_V3
     }
 }
 
@@ -131,5 +171,26 @@ mod tests {
         assert_eq!(c.container.version, crate::model::VERSION_V3);
         assert!(c.container.slice_len >= 1);
         assert!(c.container.threads >= 1);
+        assert_eq!(c.strategy, SearchStrategy::EstimateFirst);
+        assert!(c.memo_budget_bytes > 0);
+    }
+
+    #[test]
+    fn estimate_first_applies_to_dc_on_v3_only() {
+        let mut c = SearchConfig::default();
+        assert!(c.use_estimate_first(Method::DcV1));
+        assert!(c.use_estimate_first(Method::DcV2));
+        // no CABAC estimator for the baseline methods
+        assert!(!c.use_estimate_first(Method::Uniform));
+        assert!(!c.use_estimate_first(Method::Lloyd(Importance::Ones)));
+        // the estimator models v3 bins: legacy containers fall back
+        c.container = crate::model::ContainerPolicy::v1();
+        assert!(!c.use_estimate_first(Method::DcV2));
+        c.container = crate::model::ContainerPolicy::v2(1024, 2);
+        assert!(!c.use_estimate_first(Method::DcV2));
+        // explicit escape hatch
+        c.container = crate::model::ContainerPolicy::default();
+        c.strategy = SearchStrategy::ExactAlways;
+        assert!(!c.use_estimate_first(Method::DcV2));
     }
 }

@@ -2,9 +2,13 @@
 //! → quantize (eq. 11) → CABAC-encode → decode → reconstruct → evaluate →
 //! repeat over the β grid until the desired accuracy-vs-size trade-off.
 //!
-//!  * [`config`]      — methods (DC-v1/DC-v2/Lloyd/Uniform), grids, budgets.
-//!  * [`pipeline`]    — one candidate end to end (true decode path).
-//!  * [`grid_search`] — β-grid fan-out over the worker pool.
+//!  * [`config`]      — methods (DC-v1/DC-v2/Lloyd/Uniform), grids, budgets,
+//!    pricing strategy (estimate-first vs exact-always).
+//!  * [`pipeline`]    — one candidate end to end (true decode path) and the
+//!    estimator-priced phase-A variant.
+//!  * [`prep`]        — per-Δ candidate memo (plans, importances, tables).
+//!  * [`grid_search`] — β-grid fan-out over the worker pool; two-phase
+//!    estimate-first pricing with exact re-encode of the Pareto survivors.
 //!  * [`pareto`]      — accuracy-vs-size front + tolerance selection.
 //!  * [`parallel`]    — the thread-pool primitive (offline tokio stand-in;
 //!    lives in `util::parallel`, re-exported here for path stability).
@@ -14,10 +18,12 @@ pub mod config;
 pub mod grid_search;
 pub mod pareto;
 pub mod pipeline;
+pub mod prep;
 pub mod report;
 
 pub use crate::util::parallel;
 
-pub use config::{Candidate, Method, SearchConfig};
+pub use config::{Candidate, Method, SearchConfig, SearchStrategy};
 pub use grid_search::{search, SearchOutcome};
-pub use pipeline::{run_candidate, CandidateResult};
+pub use pipeline::{run_candidate, run_candidate_estimated, CandidateResult};
+pub use prep::CandidatePrep;

@@ -5,23 +5,41 @@ use super::pipeline::CandidateResult;
 
 /// Indices of the Pareto-optimal results: no other point has both
 /// (accuracy >=, size <=) with at least one strict.
+///
+/// Sort-based O(n log n) sweep (replacing the old all-pairs O(n²) scan):
+/// sort by (size asc, accuracy desc), walk equal-size groups in ascending
+/// size, and keep a point iff it has its group's maximum accuracy AND that
+/// accuracy strictly exceeds every smaller size's maximum — exactly the
+/// dominance rule above (a strictly smaller size dominates at equal
+/// accuracy; an equal size needs strictly higher accuracy).  Duplicated
+/// points survive together, as under the pairwise rule.  Assumes accuracies
+/// are not NaN (they are top-1 fractions).  Returned indices ascend, like
+/// the old scan's.  Equality with the pairwise definition is
+/// property-tested on random point sets (`prop_front_matches_naive_scan`).
 pub fn pareto_front(results: &[CandidateResult]) -> Vec<usize> {
+    let size = |i: usize| results[i].sizes.compressed_weights;
+    let mut idx: Vec<usize> = (0..results.len()).collect();
+    idx.sort_by(|&a, &b| {
+        size(a).cmp(&size(b)).then(results[b].accuracy.total_cmp(&results[a].accuracy))
+    });
     let mut front = Vec::new();
-    'outer: for (i, a) in results.iter().enumerate() {
-        for (j, b) in results.iter().enumerate() {
-            if i == j {
-                continue;
-            }
-            let dominates = b.accuracy >= a.accuracy
-                && b.sizes.compressed_weights <= a.sizes.compressed_weights
-                && (b.accuracy > a.accuracy
-                    || b.sizes.compressed_weights < a.sizes.compressed_weights);
-            if dominates {
-                continue 'outer;
-            }
+    let mut best_acc_smaller = f64::NEG_INFINITY;
+    let mut g = 0usize;
+    while g < idx.len() {
+        let mut h = g;
+        while h < idx.len() && size(idx[h]) == size(idx[g]) {
+            h += 1;
         }
-        front.push(i);
+        // Sorted accuracy-descending within the group, so the group max is
+        // the first entry.
+        let group_max = results[idx[g]].accuracy;
+        if group_max > best_acc_smaller {
+            front.extend(idx[g..h].iter().copied().filter(|&i| results[i].accuracy == group_max));
+            best_acc_smaller = group_max;
+        }
+        g = h;
     }
+    front.sort_unstable();
     front
 }
 
@@ -98,5 +116,69 @@ mod tests {
     fn empty_results() {
         assert!(pareto_front(&[]).is_empty());
         assert!(best_within_tolerance(&[], 0.9, 0.01).is_none());
+    }
+
+    #[test]
+    fn duplicates_and_size_ties_survive_together() {
+        // Neither of two identical points dominates the other: both stay.
+        let rs = vec![res(0.9, 100), res(0.9, 100), res(0.9, 50)];
+        assert_eq!(pareto_front(&rs), vec![2]); // smaller size dominates both
+        let rs = vec![res(0.9, 100), res(0.9, 100)];
+        assert_eq!(pareto_front(&rs), vec![0, 1]);
+        // Equal size: only the max-accuracy member(s) survive.
+        let rs = vec![res(0.9, 100), res(0.95, 100), res(0.95, 100)];
+        assert_eq!(pareto_front(&rs), vec![1, 2]);
+    }
+
+    /// The pre-optimization all-pairs scan, kept as the property-test
+    /// reference for the sort-based sweep.
+    fn pareto_front_naive(results: &[CandidateResult]) -> Vec<usize> {
+        let mut front = Vec::new();
+        'outer: for (i, a) in results.iter().enumerate() {
+            for (j, b) in results.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let dominates = b.accuracy >= a.accuracy
+                    && b.sizes.compressed_weights <= a.sizes.compressed_weights
+                    && (b.accuracy > a.accuracy
+                        || b.sizes.compressed_weights < a.sizes.compressed_weights);
+                if dominates {
+                    continue 'outer;
+                }
+            }
+            front.push(i);
+        }
+        front
+    }
+
+    #[test]
+    fn prop_front_matches_naive_scan() {
+        // Random point sets with deliberate ties in both coordinates (sizes
+        // drawn from a small range, accuracies quantized) — the regime
+        // where a sweep is easiest to get subtly wrong.
+        use crate::testutil::{check, Config};
+        use crate::util::Pcg64;
+        check(
+            Config {
+                cases: 200,
+                seed: 0x9A12,
+            },
+            |rng: &mut Pcg64| {
+                let n = rng.below(60) as usize;
+                (0..n)
+                    .map(|_| {
+                        let acc = (rng.below(12) as f64) / 12.0;
+                        let size = rng.below(20) as usize * 10;
+                        (acc, size)
+                    })
+                    .collect::<Vec<(f64, usize)>>()
+            },
+            |points| {
+                let results: Vec<CandidateResult> =
+                    points.iter().map(|&(a, s)| res(a, s)).collect();
+                pareto_front(&results) == pareto_front_naive(&results)
+            },
+        );
     }
 }

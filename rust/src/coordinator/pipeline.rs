@@ -5,18 +5,37 @@
 //! bitstream — the full request path, not a shortcut through the encoder's
 //! own reconstruction.
 
+use crate::cabac::estimator::estimated_sliced_payload_bytes;
 use crate::cabac::CodingConfig;
 use crate::codecs::LosslessCoder;
 use crate::metrics::Sizes;
 use crate::model::{CompressedNetwork, Network};
 use crate::quant::lloyd::lloyd_quantize_network;
-use crate::quant::rd::{rd_quantize_network, rd_quantize_network_sliced};
-use crate::quant::stepsize::{dc_v1_delta, dc_v1_importance};
+use crate::quant::rd::{
+    rd_quantize_network, rd_quantize_network_planned, rd_quantize_network_sliced,
+};
+use crate::quant::stepsize::{dc_v1_delta, dc_v1_importance, dc_v2_importance};
 use crate::quant::uniform;
 use crate::runtime::EvalService;
 use crate::util::Result;
 
 use super::config::{Candidate, Method, SearchConfig};
+use super::prep::CandidatePrep;
+
+/// Pinned tolerance on |estimated − real| coded weight bytes for phase-B
+/// re-encoded survivors, relative to the real size.  The slice-aligned
+/// RDOQ's Σbits tracks the emitted v3 stream within 2%
+/// (`quant::rd::tests::sliced_estimate_tracks_real_sliced_stream`), and the
+/// payload-byte model adds exact framing accounting on top
+/// (`cabac::estimator::tests::payload_estimate_tracks_real_sliced_encoding`),
+/// so 2% holds end to end; the seeded search-strategy tests assert it.
+pub const EST_RATE_TOLERANCE: f64 = 0.02;
+
+/// Backend tag for candidates whose reported size is a rate **estimate**
+/// (phase A of the estimate-first search); re-encoded survivors carry the
+/// plain "CABAC" tag, so every front/best size the search reports is real
+/// coded bytes.
+pub const BACKEND_CABAC_ESTIMATED: &str = "CABAC-est";
 
 /// Outcome of one candidate run.
 #[derive(Clone, Debug)]
@@ -43,6 +62,61 @@ const BASELINE_BACKENDS: [LosslessCoder; 3] = [
     LosslessCoder::Bzip2,
 ];
 
+/// Clamp the per-candidate container fan-out to one thread when the
+/// candidates themselves already fan out over the worker pool (nesting
+/// would oversubscribe threads² with no speedup).  Bytes and assignments
+/// are thread-count independent, so this is purely a scheduling choice;
+/// the one-shot CLI `compress` path calls compress_dc directly and keeps
+/// the full fan-out.
+pub(crate) fn clamp_candidate_threads(cfg: &SearchConfig) -> SearchConfig {
+    SearchConfig {
+        container: crate::model::ContainerPolicy {
+            threads: 1,
+            ..cfg.container
+        },
+        ..*cfg
+    }
+}
+
+/// Quantize + encode + serialize one DC candidate and account its true
+/// coded-weight bytes from the container headers.  This is the **exact**
+/// pricing path — shared by [`run_candidate`] (exact-always mode) and the
+/// estimate-first search's phase B, so "reported size" always means the
+/// same real encoder, container, and probe arithmetic.
+pub fn encode_dc_candidate(
+    net: &Network,
+    cand: &Candidate,
+    cfg: &SearchConfig,
+) -> Result<(Vec<u8>, Sizes)> {
+    let compressed = compress_dc(net, cand, cfg);
+    exact_dc_sizes(net, &compressed, cfg)
+}
+
+/// Serialize an already-quantized DC candidate and account its sizes (the
+/// phase-B route when phase A's quantization was kept in the memo budget —
+/// assignments are deterministic, so this is byte-identical to
+/// [`encode_dc_candidate`]).
+pub fn exact_dc_sizes(
+    net: &Network,
+    compressed: &CompressedNetwork,
+    cfg: &SearchConfig,
+) -> Result<(Vec<u8>, Sizes)> {
+    let bytes = compressed.to_bytes_with(cfg.container);
+    // True coded-weight bytes: per-layer CABAC payloads + Δ side info,
+    // from the container headers — NOT `bytes.len() - bias`, which billed
+    // framing (magic, names, shapes, length fields, CRC, bias framing) as
+    // weight payload.
+    let compressed_weights = coded_weight_bytes(&bytes)?;
+    Ok((
+        bytes,
+        Sizes {
+            original_weights: net.f32_size_bytes(),
+            bias: net.bias_size_bytes(),
+            compressed_weights,
+        },
+    ))
+}
+
 /// Run one candidate end to end.  Needs the eval service for accuracy.
 pub fn run_candidate(
     net: &Network,
@@ -52,24 +126,11 @@ pub fn run_candidate(
 ) -> Result<CandidateResult> {
     let original_weights = net.f32_size_bytes();
     let bias = net.bias_size_bytes();
-    // Candidates already fan out over `cfg.threads` (grid_search), so the
-    // per-candidate quantize/encode/decode fan-outs run single-threaded
-    // here — nesting them would oversubscribe the pool threads² with no
-    // speedup.  Output bytes and assignments are thread-count independent,
-    // so this is purely a scheduling choice; the one-shot CLI `compress`
-    // path calls compress_dc directly and keeps the full fan-out.
-    let inner = SearchConfig {
-        container: crate::model::ContainerPolicy {
-            threads: 1,
-            ..cfg.container
-        },
-        ..*cfg
-    };
+    let inner = clamp_candidate_threads(cfg);
     let cfg = if cfg.threads > 1 { &inner } else { cfg };
     match cand.method {
         Method::DcV1 | Method::DcV2 => {
-            let compressed = compress_dc(net, cand, cfg);
-            let bytes = compressed.to_bytes_with(cfg.container);
+            let (bytes, sizes) = encode_dc_candidate(net, cand, cfg)?;
             // True decode path: parse + CABAC-decode + dequantize, under
             // the same container policy and slice geometry (v3 — the
             // default — decodes on the bypass fast path; note the clamp
@@ -77,18 +138,9 @@ pub fn run_candidate(
             let decoded = CompressedNetwork::from_bytes_with(&bytes, cfg.container.threads)?;
             let recon = decoded.reconstruct(&net.name);
             let accuracy = service.accuracy(&recon)?;
-            // True coded-weight bytes: per-layer CABAC payloads + Δ side
-            // info, from the container headers — NOT `bytes.len() - bias`,
-            // which billed framing (magic, names, shapes, length fields,
-            // CRC, bias framing) as weight payload.
-            let compressed_weights = coded_weight_bytes(&bytes)?;
             Ok(CandidateResult {
                 candidate: *cand,
-                sizes: Sizes {
-                    original_weights,
-                    bias,
-                    compressed_weights,
-                },
+                sizes,
                 accuracy,
                 backend: "CABAC",
             })
@@ -144,6 +196,74 @@ pub fn run_candidate(
     }
 }
 
+/// Phase-A output of the estimate-first search for one DC candidate.
+pub struct EstimatedCandidate {
+    /// Sizes are the RDOQ rate estimate (backend
+    /// [`BACKEND_CABAC_ESTIMATED`]); accuracy is exact — evaluated on the
+    /// quantizer's reconstruction, which is identical to the decoded
+    /// stream's because CABAC is lossless (pinned by the
+    /// `ints_accuracy_equals_decoded_stream_accuracy` test, not assumed).
+    pub result: CandidateResult,
+    /// The quantization itself, kept when the caller's memo budget allows
+    /// so phase B can re-encode survivors without re-quantizing.
+    pub quantized: Option<CompressedNetwork>,
+}
+
+/// Price one DC candidate **without touching the entropy coder**: quantize
+/// through the per-Δ [`CandidatePrep`] plans (slice-aligned RDOQ, which
+/// returns the per-slice Σbits it optimized for), convert the rate estimate
+/// to container payload bytes via the exact framing arithmetic (8-byte
+/// slice-table header + 4 bytes per slice + coder tail, plus the 4-byte Δ
+/// side info per layer — the same accounting [`coded_weight_bytes`] reads
+/// out of a real stream), and evaluate accuracy on the reconstruction of
+/// the quantizer's ints directly.
+///
+/// Requires a sliced container (the estimate-first mode is gated to v3 by
+/// `SearchConfig::use_estimate_first`).
+pub fn run_candidate_estimated(
+    net: &Network,
+    cand: &Candidate,
+    cfg: &SearchConfig,
+    service: &EvalService,
+    prep: &CandidatePrep,
+    keep_quantized: bool,
+) -> Result<EstimatedCandidate> {
+    debug_assert!(matches!(cand.method, Method::DcV1 | Method::DcV2));
+    let inner = clamp_candidate_threads(cfg);
+    let cfg = if cfg.threads > 1 { &inner } else { cfg };
+    let (slice_len, threads) = cfg
+        .quantizer_slicing()
+        .expect("estimate-first pricing requires a sliced container");
+    let (layers, slice_bits) =
+        rd_quantize_network_planned(net, &prep.plans, cand.lambda, cfg.coding, slice_len, threads);
+    // Per layer: estimated sliced payload + the 4-byte Δ side info — the
+    // exact shape coded_weight_bytes() sums from a real container probe.
+    let compressed_weights: usize = slice_bits
+        .iter()
+        .map(|bits| estimated_sliced_payload_bytes(bits) + 4)
+        .sum();
+    let compressed = CompressedNetwork {
+        name: net.name.clone(),
+        cfg: cfg.coding,
+        layers,
+    };
+    let recon = compressed.reconstruct(&net.name);
+    let accuracy = service.accuracy(&recon)?;
+    Ok(EstimatedCandidate {
+        result: CandidateResult {
+            candidate: *cand,
+            sizes: Sizes {
+                original_weights: net.f32_size_bytes(),
+                bias: net.bias_size_bytes(),
+                compressed_weights,
+            },
+            accuracy,
+            backend: BACKEND_CABAC_ESTIMATED,
+        },
+        quantized: keep_quantized.then_some(compressed),
+    })
+}
+
 /// True coded-weight bytes of a serialized `.dcb` stream: the per-layer
 /// CABAC payload (incl. the in-payload slice table for v2/v3 — part of
 /// the coded representation) plus the 4-byte Δ each layer ships as
@@ -190,7 +310,7 @@ pub fn compress_dc(net: &Network, cand: &Candidate, cfg: &SearchConfig) -> Compr
             cand.lambda,
             cfg,
         ),
-        Method::DcV2 => quantize(net, |l| (cand.delta, vec![1.0; l.len()]), cand.lambda, cfg),
+        Method::DcV2 => quantize(net, |_| (cand.delta, dc_v2_importance()), cand.lambda, cfg),
         _ => unreachable!("compress_dc only handles DC methods"),
     };
     CompressedNetwork {
@@ -289,11 +409,19 @@ fn best_lossless_planes(
     let mut best = usize::MAX;
     let mut best_name = "";
     for coder in BASELINE_BACKENDS {
+        // Short-circuit: once this backend's running total exceeds the best
+        // complete total, its remaining planes cannot change the outcome —
+        // skip them (the best-of rule only needs the winner's exact size).
         let mut total = 0usize;
+        let mut abandoned = false;
         for &(plane, rows, cols) in planes {
             total += coder.size_bytes(plane, rows, cols, coding)?;
+            if total >= best {
+                abandoned = true;
+                break;
+            }
         }
-        if total < best {
+        if !abandoned && total < best {
             best = total;
             best_name = coder.name();
         }
@@ -447,6 +575,89 @@ mod tests {
         );
         // and the two rate models genuinely disagree on this plane
         assert_ne!(mono.layers[0].ints, sliced.layers[0].ints);
+    }
+
+    #[test]
+    fn estimated_pricing_tracks_exact_and_repricing_is_byte_identical() {
+        let net = tiny_net();
+        let svc = EvalService::from_fn(|_| Ok(1.0));
+        let cfg = SearchConfig {
+            container: crate::model::ContainerPolicy::v3(150, 1),
+            threads: 1,
+            ..SearchConfig::default()
+        };
+        for lambda in [0.0f32, 1.0, 8.0] {
+            let cand = Candidate {
+                method: Method::DcV2,
+                s: 0.0,
+                delta: 0.01,
+                lambda,
+                clusters: 0,
+            };
+            let prep = CandidatePrep::build(&net, &cand, &cfg);
+            let est = run_candidate_estimated(&net, &cand, &cfg, &svc, &prep, true).unwrap();
+            assert_eq!(est.result.backend, BACKEND_CABAC_ESTIMATED);
+            assert_eq!(est.result.accuracy, 1.0);
+            let (_, exact) = encode_dc_candidate(&net, &cand, &cfg).unwrap();
+            let est_w = est.result.sizes.compressed_weights as f64;
+            let real_w = exact.compressed_weights as f64;
+            let rel = (est_w - real_w).abs() / real_w;
+            assert!(
+                rel <= EST_RATE_TOLERANCE,
+                "λ={lambda}: est {est_w} vs exact {real_w} ({rel:.4})"
+            );
+            // Phase B's memo route: serializing the kept quantization must
+            // reproduce the re-quantize-and-encode sizes exactly.
+            let kept = est.quantized.expect("keep_quantized = true");
+            let (_, repriced) = exact_dc_sizes(&net, &kept, &cfg).unwrap();
+            assert_eq!(repriced.compressed_weights, exact.compressed_weights);
+        }
+    }
+
+    #[test]
+    fn best_lossless_short_circuit_keeps_winner_exact() {
+        // The early-exit can only skip planes of backends that already
+        // lost; the returned winner total must equal the full evaluation.
+        let mut rng = Pcg64::new(321);
+        let planes_data: Vec<Vec<i32>> = (0..4)
+            .map(|i| {
+                (0..400 + i * 37)
+                    .map(|_| {
+                        if rng.next_f64() < 0.7 {
+                            0
+                        } else {
+                            rng.below(19) as i32 - 9
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let planes: Vec<(&Vec<i32>, usize, usize)> = planes_data
+            .iter()
+            .map(|p| (p, 1usize, p.len()))
+            .collect();
+        let coding = crate::cabac::CodingConfig::default();
+        let (best, name) = best_lossless_planes(&planes, coding).unwrap();
+        // exhaustive reference over the same backends
+        let mut totals = Vec::new();
+        for coder in BASELINE_BACKENDS {
+            let mut total = 0usize;
+            for &(p, r, c) in &planes {
+                total += coder.size_bytes(p, r, c, coding).unwrap();
+            }
+            totals.push((total, coder.name()));
+        }
+        // first-wins on ties, like the short-circuiting loop
+        let mut ref_best = usize::MAX;
+        let mut ref_name = "";
+        for &(t, n) in &totals {
+            if t < ref_best {
+                ref_best = t;
+                ref_name = n;
+            }
+        }
+        assert_eq!(best, ref_best);
+        assert_eq!(name, ref_name);
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Per-Δ candidate preparation memo for the grid search.
+//!
+//! A (Δ, λ) grid re-derives a lot of λ-independent state per candidate:
+//! each layer's step-size (DC-v1's eq. 12), its
+//! [`crate::quant::rd::required_half`] grid width, its importance vector
+//! (DC-v1's median-normalized Fisher; DC-v2's
+//! all-ones), and the fresh-context cost tables every slice seeds its
+//! search with.  All of that depends only on the candidate's Δ key — `s`
+//! for DC-v1, the global Δ for DC-v2 — so one [`CandidatePrep`] per unique
+//! key serves the entire λ grid, and importance vectors (which do not even
+//! depend on the key) are shared across *all* preps of a method.
+
+use std::sync::Arc;
+
+use crate::model::Network;
+use crate::quant::rd::{fresh_tables_cached, LayerRdPlan};
+use crate::quant::stepsize::{dc_v1_delta, dc_v1_importance};
+
+use super::config::{Candidate, Method, SearchConfig};
+
+/// The λ-independent state shared by every candidate at one Δ key.
+#[derive(Clone)]
+pub struct CandidatePrep {
+    /// One quantization plan per layer (Δ, half, F_i, fresh cost tables).
+    pub plans: Vec<LayerRdPlan>,
+}
+
+impl CandidatePrep {
+    /// Build the prep for a single candidate's Δ key (the one-off path;
+    /// the grid search uses [`prepare_candidates`] to share state across
+    /// the grid).
+    pub fn build(net: &Network, cand: &Candidate, cfg: &SearchConfig) -> Self {
+        let set = prepare_candidates(net, std::slice::from_ref(cand), cfg);
+        Self {
+            plans: set.preps.into_iter().next().expect("one candidate").plans,
+        }
+    }
+}
+
+/// [`CandidatePrep`]s for a candidate grid, deduplicated by Δ key.
+pub struct PrepSet {
+    /// One prep per unique Δ key, in first-seen order.
+    pub preps: Vec<CandidatePrep>,
+    /// `index[i]` is the prep for `candidates[i]`.
+    pub index: Vec<usize>,
+}
+
+/// The λ-independent part of a DC candidate: `s` for DC-v1 (Δ is derived
+/// per layer from it), the global Δ for DC-v2.  Keyed by the exact bit
+/// pattern — grid points are generated, not computed, so equal keys are
+/// bit-equal.
+fn delta_key(cand: &Candidate) -> u32 {
+    match cand.method {
+        Method::DcV1 => cand.s.to_bits(),
+        _ => cand.delta.to_bits(),
+    }
+}
+
+/// Group `candidates` by Δ key and build one [`CandidatePrep`] per group.
+/// Importance vectors are computed once per layer and shared across every
+/// prep (they are key-independent), and fresh-context cost tables are
+/// shared across preps whose layers agree on the grid half-width.
+///
+/// The grid must be single-method (the grid search enumerates per method):
+/// Δ keys are only meaningful within one method — `s`-bits and Δ-bits
+/// would otherwise collide — so mixed grids are rejected.
+pub fn prepare_candidates(net: &Network, candidates: &[Candidate], cfg: &SearchConfig) -> PrepSet {
+    assert!(
+        candidates.windows(2).all(|w| w[0].method == w[1].method),
+        "prepare_candidates expects a single-method candidate grid"
+    );
+    let mut keys: Vec<u32> = Vec::new();
+    let mut index = Vec::with_capacity(candidates.len());
+    for cand in candidates {
+        let key = delta_key(cand);
+        let at = match keys.iter().position(|&k| k == key) {
+            Some(i) => i,
+            None => {
+                keys.push(key);
+                keys.len() - 1
+            }
+        };
+        index.push(at);
+    }
+    // Key-independent per-layer importances, computed once for the grid.
+    let method = candidates.first().map(|c| c.method);
+    let importances: Vec<Arc<Vec<f32>>> = net
+        .layers
+        .iter()
+        .map(|l| match method {
+            Some(Method::DcV1) => Arc::new(dc_v1_importance(l)),
+            // DC-v2 (and anything else routed here): empty = all-ones.
+            _ => Arc::new(Vec::new()),
+        })
+        .collect();
+    // Fresh-context cost tables depend only on (coding config, half), so
+    // one cache spans every prep: Δ keys whose layers land on the same
+    // half-width share tables.
+    let mut fresh_cache = Vec::new();
+    let preps = keys
+        .iter()
+        .map(|&key| {
+            let plans = net
+                .layers
+                .iter()
+                .zip(&importances)
+                .map(|(l, imp)| {
+                    let delta = match method {
+                        Some(Method::DcV1) => dc_v1_delta(l, f32::from_bits(key)),
+                        _ => f32::from_bits(key),
+                    };
+                    let half = crate::quant::rd::required_half(&l.weights, delta, cfg.max_half);
+                    LayerRdPlan {
+                        delta,
+                        half,
+                        importance: imp.clone(),
+                        fresh: fresh_tables_cached(&mut fresh_cache, cfg.coding, half),
+                    }
+                })
+                .collect();
+            CandidatePrep { plans }
+        })
+        .collect();
+    PrepSet { preps, index }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Kind, Layer};
+    use crate::util::Pcg64;
+
+    fn net() -> Network {
+        let mut rng = Pcg64::new(77);
+        let mk = |name: &str, n: usize, rng: &mut Pcg64| Layer {
+            name: name.into(),
+            kind: Kind::Dense,
+            shape: vec![n, 1],
+            rows: 1,
+            cols: n,
+            weights: rng.sparse_laplace_vec(n, 0.05, 0.4),
+            fisher: Some((0..n).map(|i| 1.0 + (i % 7) as f32).collect()),
+            hessian: None,
+            bias: None,
+        };
+        Network {
+            name: "p".into(),
+            layers: vec![mk("a", 400, &mut rng), mk("b", 150, &mut rng)],
+        }
+    }
+
+    fn cand(method: Method, s: f32, delta: f32, lambda: f32) -> Candidate {
+        Candidate {
+            method,
+            s,
+            delta,
+            lambda,
+            clusters: 0,
+        }
+    }
+
+    #[test]
+    fn dedups_by_delta_key_and_shares_importance() {
+        let net = net();
+        let cfg = SearchConfig::default();
+        let grid = vec![
+            cand(Method::DcV2, 0.0, 0.01, 0.0),
+            cand(Method::DcV2, 0.0, 0.01, 2.0),
+            cand(Method::DcV2, 0.0, 0.02, 0.0),
+            cand(Method::DcV2, 0.0, 0.01, 8.0),
+        ];
+        let set = prepare_candidates(&net, &grid, &cfg);
+        assert_eq!(set.preps.len(), 2); // two unique Δs
+        assert_eq!(set.index, vec![0, 0, 1, 0]);
+        // DC-v2 importance is the shared empty (all-ones) vector
+        for prep in &set.preps {
+            for plan in &prep.plans {
+                assert!(plan.importance.is_empty());
+            }
+        }
+        assert_eq!(set.preps[0].plans[0].delta, 0.01);
+        assert_eq!(set.preps[1].plans[0].delta, 0.02);
+    }
+
+    #[test]
+    fn dc_v1_prep_derives_per_layer_delta_and_fisher_importance() {
+        let net = net();
+        let cfg = SearchConfig::default();
+        let grid = vec![
+            cand(Method::DcV1, 64.0, 0.0, 0.0),
+            cand(Method::DcV1, 64.0, 0.0, 1.0),
+            cand(Method::DcV1, 128.0, 0.0, 0.0),
+        ];
+        let set = prepare_candidates(&net, &grid, &cfg);
+        assert_eq!(set.preps.len(), 2);
+        for (prep, s) in set.preps.iter().zip([64.0f32, 128.0]) {
+            for (plan, l) in prep.plans.iter().zip(&net.layers) {
+                assert_eq!(plan.delta, dc_v1_delta(l, s), "s={s} layer {}", l.name);
+                assert_eq!(*plan.importance, dc_v1_importance(l));
+            }
+        }
+        // importance Arcs are shared across the two preps (key-independent)
+        assert!(Arc::ptr_eq(
+            &set.preps[0].plans[0].importance,
+            &set.preps[1].plans[0].importance
+        ));
+    }
+
+    #[test]
+    fn single_candidate_build() {
+        let net = net();
+        let cfg = SearchConfig::default();
+        let prep = CandidatePrep::build(&net, &cand(Method::DcV2, 0.0, 0.008, 1.0), &cfg);
+        assert_eq!(prep.plans.len(), net.layers.len());
+        for (plan, l) in prep.plans.iter().zip(&net.layers) {
+            assert_eq!(plan.delta, 0.008);
+            assert_eq!(
+                plan.half,
+                crate::quant::rd::required_half(&l.weights, 0.008, cfg.max_half)
+            );
+        }
+    }
+}

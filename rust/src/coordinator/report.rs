@@ -28,6 +28,14 @@ pub fn outcome_details(o: &SearchOutcome) -> String {
         o.original_accuracy * 100.0,
         o.results.len()
     );
+    if let Some(rel) = o.est_real_max_rel {
+        s.push_str(&format!(
+            "  estimate-first: {}/{} candidates re-encoded exactly, est-vs-real <= {:.2}%\n",
+            o.exact_sized,
+            o.results.len(),
+            rel * 100.0
+        ));
+    }
     for (i, r) in o.results.iter().enumerate() {
         let mark = if Some(i) == o.best { " <= best" } else { "" };
         s.push_str(&format!(
@@ -73,6 +81,8 @@ mod tests {
                 backend: "CABAC",
             }],
             best: Some(0),
+            exact_sized: 1,
+            est_real_max_rel: None,
         }
     }
 
@@ -88,6 +98,17 @@ mod tests {
     fn details_mark_best() {
         let d = outcome_details(&outcome());
         assert!(d.contains("<= best"));
+        // exact-always outcomes carry no estimate line
+        assert!(!d.contains("estimate-first"));
+    }
+
+    #[test]
+    fn details_report_estimate_first_stats() {
+        let mut o = outcome();
+        o.est_real_max_rel = Some(0.0123);
+        let d = outcome_details(&o);
+        assert!(d.contains("estimate-first: 1/1"));
+        assert!(d.contains("1.23%"));
     }
 
     #[test]

@@ -9,7 +9,10 @@
 //!              containers get slice-aligned RDOQ, v1 the monolithic chain)
 //!   decompress <model.dcb> [-o out.nwf] [--threads N]  decode + reconstruct
 //!   eval       <model.nwf|model.dcb>         top-1 accuracy via PJRT
-//!   search     <model.nwf> [--method M]...   grid-search (Fig. 5 loop)
+//!   search     <model.nwf> [--method M]...   grid-search (Fig. 5 loop);
+//!              --search-mode estimate-first (default: rate-estimated
+//!              phase A, exact re-encode of Pareto survivors) or
+//!              exact-always (trial-encode every candidate)
 //!   info       <model.nwf|model.dcb> [--threads N]  container inspection
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --threads N.
@@ -19,7 +22,7 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use deepcabac::coordinator::{self, Method, SearchConfig};
+use deepcabac::coordinator::{self, Method, SearchConfig, SearchStrategy};
 use deepcabac::model::{
     self, read_nwf, write_nwf, CompressedNetwork, ContainerPolicy, Importance, Network,
 };
@@ -74,7 +77,7 @@ fn usage() -> ExitCode {
            decompress <model.dcb> [-o out.nwf] [--threads N]\n\
            eval       <model.nwf|.dcb> [--artifacts DIR]\n\
            search     <model.nwf> [--method dc-v1|dc-v2|lloyd|uniform|all] [--threads N] [--tolerance PP]\n\
-                      [--container v1|v2|v3] [--slice-len N]\n\
+                      [--container v1|v2|v3] [--slice-len N] [--search-mode estimate-first|exact-always]\n\
            info       <model.nwf|.dcb> [--threads N]\n"
     );
     ExitCode::from(2)
@@ -254,6 +257,17 @@ fn cmd_search(args: &Args) -> Result<()> {
     if let Some(t) = args.flags.get("tolerance").and_then(|v| v.parse::<f64>().ok()) {
         cfg.tolerance = t / 100.0; // CLI takes percentage points
     }
+    match args.flags.get("search-mode").map(String::as_str) {
+        Some("exact-always") | Some("exact") => cfg.strategy = SearchStrategy::ExactAlways,
+        Some("estimate-first") | Some("estimate") | None => {
+            cfg.strategy = SearchStrategy::EstimateFirst
+        }
+        Some(other) => {
+            return Err(deepcabac::util::Error::Config(format!(
+                "unknown search mode '{other}' (expected estimate-first or exact-always)"
+            )))
+        }
+    }
     let methods: Vec<Method> = match args.flags.get("method").map(String::as_str) {
         Some("dc-v1") => vec![Method::DcV1],
         Some("dc-v2") => vec![Method::DcV2],
@@ -272,6 +286,16 @@ fn cmd_search(args: &Args) -> Result<()> {
         eprintln!("[search] {} on {} ...", m.name(), net.name);
         let o = coordinator::search(&net, m, &cfg, &host.handle)?;
         eprintln!("{}", coordinator::report::outcome_details(&o));
+        if let Some(rel) = o.est_real_max_rel {
+            eprintln!(
+                "[search] {}: estimate-first skipped {} trial encodes ({} survivors \
+                 re-encoded; est-vs-real <= {:.2}%)",
+                m.name(),
+                o.results.len() - o.exact_sized,
+                o.exact_sized,
+                rel * 100.0
+            );
+        }
         outcomes.push(o);
     }
     println!("{}", coordinator::report::table1_row(&net.name, &outcomes));

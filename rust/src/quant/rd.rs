@@ -31,9 +31,11 @@
 //! [`RdScratch`] per worker.  When `slice_len >= layer len` the layer is a
 //! single slice, which degenerates to the monolithic chain byte-for-byte.
 
+use std::sync::Arc;
+
 use crate::cabac::binarize::update_contexts;
 use crate::cabac::context::{CodingConfig, SigHistory, WeightContexts};
-use crate::cabac::estimator::{build_cost_tables_into, CostTable};
+use crate::cabac::estimator::{build_cost_tables, build_cost_tables_into, estimate_int, CostTable};
 use crate::model::{Network, QuantizedLayer};
 use crate::util::parallel::parallel_map_with;
 
@@ -85,6 +87,69 @@ pub fn required_half(weights: &[f32], delta: f32, cap: i32) -> i32 {
     (((max_abs / delta).ceil() as i64 + 1).min(cap as i64)) as i32
 }
 
+/// The λ-independent quantization plan for one layer: everything the grid
+/// search would otherwise recompute per (Δ, λ) candidate even though it only
+/// depends on Δ — the per-layer step-size, the grid half-width, the
+/// importance vector, and the fresh-context cost tables every slice starts
+/// from.  Built once per Δ key and shared (via `Arc`) across the whole λ
+/// grid and all worker threads.
+#[derive(Clone)]
+pub struct LayerRdPlan {
+    /// Step-size Δ for this layer.
+    pub delta: f32,
+    /// Grid half-width ([`required_half`] of the layer at Δ).
+    pub half: i32,
+    /// Per-weight F_i; the **empty** vector means F_i = 1 (so DC-v2 never
+    /// allocates a length-n ones vector per layer per candidate).
+    pub importance: Arc<Vec<f32>>,
+    /// Fresh-context cost tables for (coding config, `half`).  These depend
+    /// on nothing else, so every slice of every λ candidate can seed its
+    /// scratch from them by copy instead of rebuilding them on entry.
+    pub fresh: Arc<[CostTable; 3]>,
+}
+
+/// Fresh-context cost tables for (cfg, `half`), memoized in `cache` — layers
+/// (and Δ keys) that share a coding config and half-width share one table
+/// set.  The config is part of the key, so one cache may safely span
+/// heterogeneous configs.
+pub fn fresh_tables_cached(
+    cache: &mut Vec<(CodingConfig, i32, Arc<[CostTable; 3]>)>,
+    cfg: CodingConfig,
+    half: i32,
+) -> Arc<[CostTable; 3]> {
+    if let Some((_, _, f)) = cache.iter().find(|(c, h, _)| *c == cfg && *h == half) {
+        return f.clone();
+    }
+    let f: Arc<[CostTable; 3]> = Arc::new(build_cost_tables(&WeightContexts::new(cfg), half));
+    cache.push((cfg, half, f.clone()));
+    f
+}
+
+/// Build per-layer plans from a (Δ, F) generator, sharing one fresh-context
+/// table set per distinct half-width.
+pub fn build_network_plans<'a>(
+    net: &'a Network,
+    mut layer_params: impl FnMut(&'a crate::model::Layer) -> (f32, Arc<Vec<f32>>),
+    cfg: CodingConfig,
+    max_half: i32,
+) -> Vec<LayerRdPlan> {
+    let mut cache = Vec::new();
+    net.layers
+        .iter()
+        .map(|l| {
+            let (delta, importance) = layer_params(l);
+            assert!(importance.is_empty() || importance.len() == l.weights.len());
+            let half = required_half(&l.weights, delta, max_half);
+            LayerRdPlan {
+                delta,
+                half,
+                importance,
+                fresh: fresh_tables_cached(&mut cache, cfg, half),
+            }
+        })
+        .collect()
+}
+
 /// Reusable per-worker RDOQ scratch: one context set (reset per slice, the
 /// same contract as the encoder's slice fan-out) plus the three sig-context
 /// cost tables, whose buffers survive across the thousands of slice jobs
@@ -108,13 +173,22 @@ impl RdScratch {
 
 /// RDOQ one slice with fresh contexts (scratch reset on entry), appending
 /// the chosen indices to `out`.  Returns the summed R term (bits) of the
-/// chosen assignments under the tables the search consulted — the rate
-/// RDOQ believed it was paying, comparable against the real coded size
-/// (see the `sliced_estimate_tracks_real_sliced_stream` test).
+/// chosen assignments as the **exact pre-update estimate under the live
+/// context states** — not the block-stale table values the argmin
+/// consulted.  The distinction matters at high rate pressure: on a
+/// near-empty slice the stale table still charges early-slice prices for
+/// zeros whose context has long since adapted, overstating the real coded
+/// size by tens of percent, while the exact estimate tracks it within the
+/// coder's own ~2% (see `sliced_estimate_tracks_real_sliced_stream` and
+/// `sparse_high_lambda_estimate_stays_tight`).  Selection still uses the
+/// tables (the kernel-compatible block structure); only the accounting is
+/// exact — `estimate_int` is LUT-backed, so this costs a few table reads
+/// per symbol.
 fn rd_quantize_slice_into(
     weights: &[f32],
     importance: &[f32],
     p: &RdParams,
+    fresh: Option<&[CostTable; 3]>,
     scratch: &mut RdScratch,
     out: &mut Vec<i32>,
 ) -> f64 {
@@ -122,8 +196,20 @@ fn rd_quantize_slice_into(
     ctxs.reset();
     let mut hist = SigHistory::default();
     // One cost table per sigFlag context (the sig bin is the only
-    // history-dependent part of the binarization).
-    build_cost_tables_into(ctxs, p.half, tables);
+    // history-dependent part of the binarization).  A precomputed
+    // fresh-context table set (the contexts were just reset, so the states
+    // match by construction) is seeded by copy — cheaper than rebuilding,
+    // and the build would produce identical tables.
+    match fresh {
+        Some(f) if f[0].half == p.half => {
+            for (dst, src) in tables.iter_mut().zip(f.iter()) {
+                dst.half = src.half;
+                dst.cost.clear();
+                dst.cost.extend_from_slice(&src.cost);
+            }
+        }
+        _ => build_cost_tables_into(ctxs, p.half, tables),
+    }
     let refresh = p.refresh.max(1);
     let mut est_bits = 0f64;
     for (i, &w) in weights.iter().enumerate() {
@@ -131,12 +217,13 @@ fn rd_quantize_slice_into(
             build_cost_tables_into(ctxs, p.half, tables);
         }
         let f = if importance.is_empty() { 1.0 } else { importance[i] };
-        let table = &tables[hist.ctx_index()];
+        let sig_idx = hist.ctx_index();
+        let table = &tables[sig_idx];
         let k = match p.search {
             SearchMode::Full => argmin_rd(w, f, p.delta, p.lambda, table),
             SearchMode::Window => argmin_rd_window(w, f, p.delta, p.lambda, table),
         };
-        est_bits += table.bits(k) as f64;
+        est_bits += estimate_int(ctxs, sig_idx, k) as f64;
         update_contexts(ctxs, &mut hist, k);
         out.push(k);
     }
@@ -150,7 +237,7 @@ pub fn rd_quantize_layer(weights: &[f32], importance: &[f32], p: &RdParams) -> V
     assert!(importance.is_empty() || importance.len() == weights.len());
     let mut scratch = RdScratch::new(p.cfg);
     let mut out = Vec::with_capacity(weights.len());
-    rd_quantize_slice_into(weights, importance, p, &mut scratch, &mut out);
+    rd_quantize_slice_into(weights, importance, p, None, &mut scratch, &mut out);
     out
 }
 
@@ -190,7 +277,7 @@ pub fn rd_quantize_layer_sliced(
     let mut out = Vec::with_capacity(weights.len());
     let mut est_bits = 0f64;
     for (w, imp) in slice_jobs(weights, importance, slice_len) {
-        est_bits += rd_quantize_slice_into(w, imp, p, &mut scratch, &mut out);
+        est_bits += rd_quantize_slice_into(w, imp, p, None, &mut scratch, &mut out);
     }
     (out, est_bits)
 }
@@ -214,7 +301,7 @@ pub fn rd_quantize_layer_sliced_parallel(
         || RdScratch::new(p.cfg),
         |scratch, &(w, imp)| {
             let mut out = Vec::with_capacity(w.len());
-            let bits = rd_quantize_slice_into(w, imp, p, scratch, &mut out);
+            let bits = rd_quantize_slice_into(w, imp, p, None, scratch, &mut out);
             (out, bits)
         },
     );
@@ -355,33 +442,52 @@ pub fn rd_quantize_network_sliced<'a>(
     slice_len: usize,
     threads: usize,
 ) -> Vec<QuantizedLayer> {
-    let slice_len = slice_len.max(1);
-    // Per-layer plan: Δ, half, importances (owned; jobs borrow from here).
-    let plans: Vec<(&crate::model::Layer, RdParams, Vec<f32>)> = net
-        .layers
-        .iter()
-        .map(|l| {
+    let plans = build_network_plans(
+        net,
+        |l| {
             let (delta, imp) = layer_params(l);
-            assert!(imp.is_empty() || imp.len() == l.weights.len());
-            let p = RdParams {
-                delta,
-                lambda: lambda * delta * delta,
-                half: required_half(&l.weights, delta, max_half),
-                refresh: 256,
-                cfg,
-                search: SearchMode::Window,
-            };
-            (l, p, imp)
-        })
-        .collect();
+            (delta, Arc::new(imp))
+        },
+        cfg,
+        max_half,
+    );
+    rd_quantize_network_planned(net, &plans, lambda, cfg, slice_len, threads).0
+}
+
+/// [`rd_quantize_network_sliced`] over prebuilt [`LayerRdPlan`]s (the form
+/// the grid search's per-Δ candidate memo holds), additionally returning
+/// each layer's **per-slice rate estimate** in bits — the Σbits the RDOQ
+/// optimized for, which is what the estimate-first search prices candidates
+/// with (see `cabac::estimator::estimated_sliced_payload_bytes`).
+///
+/// Assignments are identical to the closure-based driver for the same
+/// (Δ, F, half) and independent of `threads`.
+pub fn rd_quantize_network_planned(
+    net: &Network,
+    plans: &[LayerRdPlan],
+    lambda: f32,
+    cfg: CodingConfig,
+    slice_len: usize,
+    threads: usize,
+) -> (Vec<QuantizedLayer>, Vec<Vec<f64>>) {
+    assert_eq!(plans.len(), net.layers.len());
+    let slice_len = slice_len.max(1);
     // Flatten slice jobs across layers (the container-decode fan-out
     // shape), remembering how many slices each layer contributed.
-    let mut jobs: Vec<(&[f32], &[f32], RdParams)> = Vec::new();
+    let mut jobs: Vec<(&[f32], &[f32], RdParams, &LayerRdPlan)> = Vec::new();
     let mut per_layer = Vec::with_capacity(plans.len());
-    for (l, p, imp) in &plans {
+    for (l, plan) in net.layers.iter().zip(plans) {
+        let p = RdParams {
+            delta: plan.delta,
+            lambda: lambda * plan.delta * plan.delta,
+            half: plan.half,
+            refresh: 256,
+            cfg,
+            search: SearchMode::Window,
+        };
         let before = jobs.len();
-        for (w, i) in slice_jobs(&l.weights, imp, slice_len) {
-            jobs.push((w, i, *p));
+        for (w, i) in slice_jobs(&l.weights, &plan.importance, slice_len) {
+            jobs.push((w, i, p, plan));
         }
         per_layer.push(jobs.len() - before);
     }
@@ -389,33 +495,36 @@ pub fn rd_quantize_network_sliced<'a>(
         &jobs,
         threads,
         || RdScratch::new(cfg),
-        |scratch, (w, imp, p)| {
+        |scratch, (w, imp, p, plan)| {
             let mut out = Vec::with_capacity(w.len());
-            rd_quantize_slice_into(w, imp, p, scratch, &mut out);
-            out
+            let bits =
+                rd_quantize_slice_into(w, imp, p, Some(plan.fresh.as_ref()), scratch, &mut out);
+            (out, bits)
         },
     );
     let mut it = coded.into_iter();
-    plans
-        .iter()
-        .zip(per_layer)
-        .map(|((l, p, _), n)| {
-            let mut ints = Vec::with_capacity(l.weights.len());
-            for chunk in it.by_ref().take(n) {
-                ints.extend(chunk);
-            }
-            QuantizedLayer {
-                name: l.name.clone(),
-                kind: l.kind,
-                shape: l.shape.clone(),
-                rows: l.rows,
-                cols: l.cols,
-                ints,
-                delta: p.delta,
-                bias: l.bias.clone(),
-            }
-        })
-        .collect()
+    let mut layers = Vec::with_capacity(plans.len());
+    let mut rates = Vec::with_capacity(plans.len());
+    for ((l, plan), n) in net.layers.iter().zip(plans).zip(per_layer) {
+        let mut ints = Vec::with_capacity(l.weights.len());
+        let mut bits = Vec::with_capacity(n);
+        for (chunk, b) in it.by_ref().take(n) {
+            ints.extend(chunk);
+            bits.push(b);
+        }
+        layers.push(QuantizedLayer {
+            name: l.name.clone(),
+            kind: l.kind,
+            shape: l.shape.clone(),
+            rows: l.rows,
+            cols: l.cols,
+            ints,
+            delta: plan.delta,
+            bias: l.bias.clone(),
+        });
+        rates.push(bits);
+    }
+    (layers, rates)
 }
 
 #[cfg(test)]
@@ -633,6 +742,39 @@ mod tests {
     }
 
     #[test]
+    fn sparse_high_lambda_estimate_stays_tight() {
+        // The estimate-first search prices near-empty candidates (high rate
+        // pressure -> mostly-zero planes) off this estimate, where
+        // stale-table accounting used to drift by tens of percent: the
+        // exact per-symbol accumulation + the framing/tail payload model
+        // must stay within 2% of the real sliced stream in BYTES.
+        use crate::cabac::estimator::estimated_sliced_payload_bytes;
+        let mut rng = Pcg64::new(0x4A);
+        let w = rng.sparse_laplace_vec(12_000, 0.05, 0.4);
+        let delta = 0.005f32;
+        let half = required_half(&w, delta, 512);
+        for lambda in [0.0f32, 2.0, 16.0] {
+            let p = params(delta, lambda * delta * delta, half);
+            for slice_len in [1024usize, 4096] {
+                let mut ints = Vec::new();
+                let mut per_slice = Vec::new();
+                for chunk in w.chunks(slice_len) {
+                    let (ci, bits) = rd_quantize_layer_sliced(chunk, &[], &p, usize::MAX);
+                    ints.extend(ci);
+                    per_slice.push(bits);
+                }
+                let est = estimated_sliced_payload_bytes(&per_slice);
+                let real = crate::cabac::encode_layer_sliced(&ints, p.cfg, slice_len).len();
+                let rel = (est as f64 - real as f64).abs() / real as f64;
+                assert!(
+                    rel < 0.02,
+                    "λ={lambda} slice_len={slice_len}: est {est} vs real {real} ({rel:.4})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn monolithic_estimate_understates_sliced_stream() {
         // The PR 1 mismatch this module fixes: a monolithic per-layer
         // context chain estimates an R term the sliced stream never spends.
@@ -658,6 +800,86 @@ mod tests {
         let rel = (actual - est).abs() / actual;
         assert!(rel < 0.02, "aligned est {est:.0} vs {actual:.0} ({rel:.4})");
         assert!(rel < understate, "aligned model must track strictly better");
+    }
+
+    #[test]
+    fn planned_driver_matches_closure_driver_and_returns_slice_rates() {
+        use crate::model::{Kind, Layer};
+        let mut rng = Pcg64::new(101);
+        let mk = |name: &str, n: usize, rng: &mut Pcg64| Layer {
+            name: name.into(),
+            kind: Kind::Dense,
+            shape: vec![n, 1],
+            rows: 1,
+            cols: n,
+            weights: rng.sparse_laplace_vec(n, 0.05, 0.4),
+            fisher: None,
+            hessian: None,
+            bias: None,
+        };
+        let net = Network {
+            name: "t".into(),
+            layers: vec![mk("a", 2_500, &mut rng), mk("b", 900, &mut rng)],
+        };
+        let cfg = CodingConfig::default();
+        let (slice_len, lambda) = (512usize, 2.0f32);
+        let plans = build_network_plans(&net, |_| (0.004, Arc::new(Vec::new())), cfg, 2048);
+        // fresh tables are shared between layers with equal half
+        if plans[0].half == plans[1].half {
+            assert!(Arc::ptr_eq(&plans[0].fresh, &plans[1].fresh));
+        }
+        for threads in [1usize, 4] {
+            let (planned, rates) =
+                rd_quantize_network_planned(&net, &plans, lambda, cfg, slice_len, threads);
+            let sliced = rd_quantize_network_sliced(
+                &net,
+                |l| (0.004, vec![1.0; l.len()]),
+                lambda,
+                cfg,
+                2048,
+                slice_len,
+                threads,
+            );
+            for ((a, b), l) in planned.iter().zip(&sliced).zip(&net.layers) {
+                assert_eq!(a.ints, b.ints, "threads={threads} layer {}", l.name);
+            }
+            // per-layer slice counts and summed bits match the standalone path
+            for (l, (q, bits)) in net.layers.iter().zip(planned.iter().zip(&rates)) {
+                assert_eq!(bits.len(), l.weights.len().div_ceil(slice_len));
+                let p = RdParams {
+                    delta: 0.004,
+                    lambda: lambda * 0.004 * 0.004,
+                    half: required_half(&l.weights, 0.004, 2048),
+                    refresh: 256,
+                    cfg,
+                    search: SearchMode::Window,
+                };
+                let (expect, expect_bits) =
+                    rd_quantize_layer_sliced(&l.weights, &[], &p, slice_len);
+                assert_eq!(q.ints, expect);
+                let total: f64 = bits.iter().sum();
+                assert!((total - expect_bits).abs() < 1e-6, "{total} vs {expect_bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn fresh_table_seeding_is_equivalent_to_building() {
+        // Seeding a slice's scratch from precomputed fresh-context tables
+        // must produce exactly the tables ctxs.reset() + build would.
+        let cfg = CodingConfig::default();
+        let mut cache = Vec::new();
+        for half in [16i32, 300] {
+            let fresh = fresh_tables_cached(&mut cache, cfg, half);
+            let reference = build_cost_tables(&WeightContexts::new(cfg), half);
+            for (a, b) in fresh.iter().zip(&reference) {
+                assert_eq!(a.half, b.half);
+                assert_eq!(a.cost, b.cost);
+            }
+            // memoized: a second lookup returns the same allocation
+            assert!(Arc::ptr_eq(&fresh, &fresh_tables_cached(&mut cache, cfg, half)));
+        }
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

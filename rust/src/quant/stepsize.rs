@@ -105,6 +105,15 @@ pub fn dc_v1_delta(layer: &Layer, s: f32) -> f32 {
     2.0 * w_max / (2.0 * w_max / sig_min + s)
 }
 
+/// Per-weight F_i for DC-v2: every weight counts equally (the method's
+/// defining simplification — no FIM estimation).  Represented as the
+/// **empty** vector, which the RDOQ reads as F_i = 1, so the grid search
+/// never allocates a length-n ones vector per layer per candidate (it used
+/// to: one `vec![1.0; n]` per layer per (Δ, λ) point).
+pub fn dc_v2_importance() -> Vec<f32> {
+    Vec::new()
+}
+
 /// Per-weight F_i for DC-v1: the Fisher diagonal itself, normalized so the
 /// *median* F is 1 — eq. (11) is scale-invariant in (F, λ) jointly, and
 /// normalizing makes one λ grid work across layers/models.
@@ -236,5 +245,13 @@ mod tests {
     fn importance_fallback_without_fisher() {
         let l = layer_with(None, vec![0.1, 0.2]);
         assert_eq!(dc_v1_importance(&l), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn dc_v2_importance_is_the_empty_all_ones_convention() {
+        // Empty = F_i = 1 everywhere; the RDOQ equivalence with an explicit
+        // ones vector is pinned by
+        // `quant::rd::tests::planned_driver_matches_closure_driver_and_returns_slice_rates`.
+        assert!(dc_v2_importance().is_empty());
     }
 }

@@ -33,10 +33,22 @@ enum Request {
     Shutdown,
 }
 
-/// Cloneable handle to the runtime thread.
+/// Cloneable handle to an accuracy oracle: either the PJRT runtime thread
+/// ([`EvalService::spawn`]) or an in-process scoring function
+/// ([`EvalService::from_fn`] — deterministic proxy oracles for tests and
+/// benches, which must exercise the full grid-search machinery on machines
+/// without the AOT artifacts or the real xla bindings).
 #[derive(Clone)]
 pub struct EvalService {
-    tx: mpsc::SyncSender<Request>,
+    inner: Inner,
+}
+
+#[derive(Clone)]
+enum Inner {
+    /// Channel into the dedicated PJRT runtime thread.
+    Pjrt(mpsc::SyncSender<Request>),
+    /// In-process accuracy function (no device kernel available).
+    Local(std::sync::Arc<dyn Fn(&Network) -> Result<f64> + Send + Sync>),
 }
 
 /// Owns the runtime thread; dropping it shuts the thread down.
@@ -96,23 +108,43 @@ impl EvalService {
             .recv()
             .map_err(|_| Error::Config("eval thread died during init".into()))??;
         Ok(EvalServiceHost {
-            handle: EvalService { tx: tx.clone() },
+            handle: EvalService {
+                inner: Inner::Pjrt(tx.clone()),
+            },
             join: Some(join),
             tx,
         })
     }
 
+    /// An in-process accuracy oracle from a plain function — no PJRT, no
+    /// artifacts, no runtime thread.  The function must be deterministic if
+    /// the caller relies on reproducible search outcomes (the seeded
+    /// search-strategy tests and the search benches do).  Device-kernel
+    /// requests ([`Self::rd_assign`]) are unavailable on this backend.
+    pub fn from_fn<F>(f: F) -> EvalService
+    where
+        F: Fn(&Network) -> Result<f64> + Send + Sync + 'static,
+    {
+        EvalService {
+            inner: Inner::Local(std::sync::Arc::new(f)),
+        }
+    }
+
     /// Blocking accuracy request.
     pub fn accuracy(&self, net: &Network) -> Result<f64> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Accuracy {
-                net: Box::new(net.clone()),
-                reply,
-            })
-            .map_err(|_| Error::Config("eval service down".into()))?;
-        rx.recv()
-            .map_err(|_| Error::Config("eval service dropped reply".into()))?
+        match &self.inner {
+            Inner::Local(f) => f(net),
+            Inner::Pjrt(tx) => {
+                let (reply, rx) = mpsc::channel();
+                tx.send(Request::Accuracy {
+                    net: Box::new(net.clone()),
+                    reply,
+                })
+                .map_err(|_| Error::Config("eval service down".into()))?;
+                rx.recv()
+                    .map_err(|_| Error::Config("eval service dropped reply".into()))?
+            }
+        }
     }
 
     /// Blocking device-kernel RDOQ request (Pallas rd_assign via PJRT).
@@ -124,19 +156,25 @@ impl EvalService {
         lambda: f32,
         cost: &[f32],
     ) -> Result<Vec<i32>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::RdAssign {
-                w: w.to_vec(),
-                fim: fim.to_vec(),
-                delta,
-                lambda,
-                cost: cost.to_vec(),
-                reply,
-            })
-            .map_err(|_| Error::Config("eval service down".into()))?;
-        rx.recv()
-            .map_err(|_| Error::Config("eval service dropped reply".into()))?
+        match &self.inner {
+            Inner::Local(_) => Err(Error::Config(
+                "rd_assign unavailable: local eval oracle has no device kernel".into(),
+            )),
+            Inner::Pjrt(tx) => {
+                let (reply, rx) = mpsc::channel();
+                tx.send(Request::RdAssign {
+                    w: w.to_vec(),
+                    fim: fim.to_vec(),
+                    delta,
+                    lambda,
+                    cost: cost.to_vec(),
+                    reply,
+                })
+                .map_err(|_| Error::Config("eval service down".into()))?;
+                rx.recv()
+                    .map_err(|_| Error::Config("eval service dropped reply".into()))?
+            }
+        }
     }
 }
 
@@ -146,5 +184,26 @@ impl Drop for EvalServiceHost {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_oracle_scores_and_rejects_kernel_requests() {
+        let svc = EvalService::from_fn(|net: &Network| Ok(net.layers.len() as f64 / 10.0));
+        let net = Network {
+            name: "t".into(),
+            layers: Vec::new(),
+        };
+        assert_eq!(svc.accuracy(&net).unwrap(), 0.0);
+        // cloneable + usable across threads like the PJRT handle
+        let c = svc.clone();
+        std::thread::scope(|s| {
+            s.spawn(move || assert_eq!(c.accuracy(&net).unwrap(), 0.0));
+        });
+        assert!(svc.rd_assign(&[0.0], &[1.0], 0.1, 0.0, &[1.0]).is_err());
     }
 }

@@ -1,0 +1,207 @@
+//! Seeded end-to-end tests of the estimate-first grid search against the
+//! exact-always reference, over a deterministic in-process accuracy oracle
+//! (`EvalService::from_fn`) — no PJRT artifacts required.
+//!
+//! Pins the two assumptions the estimate-first tentpole rests on:
+//!  1. the RDOQ rate estimate prices candidates well enough that the Pareto
+//!     front, best candidate, and reported (real-byte) survivor sizes are
+//!     identical to trial-encoding everything;
+//!  2. CABAC is lossless, so accuracy evaluated on the quantizer's ints
+//!     equals accuracy evaluated on the decoded stream — for every
+//!     candidate, not just the survivors.
+
+use deepcabac::coordinator::pipeline::{compress_dc, BACKEND_CABAC_ESTIMATED, EST_RATE_TOLERANCE};
+use deepcabac::coordinator::{self, Candidate, Method, SearchConfig, SearchStrategy};
+use deepcabac::model::{CompressedNetwork, ContainerPolicy, Kind, Layer, Network};
+use deepcabac::runtime::EvalService;
+use deepcabac::util::Pcg64;
+
+fn synth_net() -> Network {
+    let mut rng = Pcg64::new(0x5EED);
+    let mk = |name: &str, n: usize, scale: f32, zero: f64, rng: &mut Pcg64| Layer {
+        name: name.into(),
+        kind: Kind::Dense,
+        shape: vec![n, 1],
+        rows: 1,
+        cols: n,
+        weights: rng.sparse_laplace_vec(n, scale, zero),
+        // Fisher diagonal sized so DC-v1's eq. 12 lands on step-sizes in the
+        // same regime as DC-v2's feasible Δ band (σ_min ≈ 4.5e-3).
+        fisher: Some((0..n).map(|i| 1e4 * (1.0 + (i % 5) as f32)).collect()),
+        hessian: None,
+        bias: None,
+    };
+    Network {
+        name: "strat".into(),
+        layers: vec![
+            mk("a", 2400, 0.05, 0.4, &mut rng),
+            mk("b", 1200, 0.08, 0.3, &mut rng),
+        ],
+    }
+}
+
+/// Deterministic proxy oracle (`benchutil::closeness_oracle`): fraction of
+/// weights reconstructed within 0.004 of the original, floor-quantized to
+/// 1/64 steps — quantized like top-1 over a finite eval set, so accuracy
+/// plateaus keep Pareto fronts realistically small.
+fn oracle(net: &Network) -> EvalService {
+    deepcabac::benchutil::closeness_oracle(net.clone(), 0.004, 64.0)
+}
+
+fn cfg(strategy: SearchStrategy) -> SearchConfig {
+    SearchConfig {
+        container: ContainerPolicy::v3(1024, 2),
+        threads: 2,
+        dc1_lambdas: 3,
+        dc2_deltas: 10,
+        dc2_keep: 2,
+        dc2_lambdas: 5,
+        strategy,
+        ..SearchConfig::default()
+    }
+}
+
+#[test]
+fn estimate_first_matches_exact_always_front_best_and_reported_sizes() {
+    let net = synth_net();
+    let svc = oracle(&net);
+    for method in [Method::DcV2, Method::DcV1] {
+        let est =
+            coordinator::search(&net, method, &cfg(SearchStrategy::EstimateFirst), &svc).unwrap();
+        let exact =
+            coordinator::search(&net, method, &cfg(SearchStrategy::ExactAlways), &svc).unwrap();
+        assert_eq!(est.results.len(), exact.results.len(), "{method:?}");
+        assert!(est.results.len() >= 6, "grid too small to mean anything");
+        // Same grid, same accuracies (identical quantizations — phase A
+        // evaluates the quantizer's ints, exact mode the decoded stream).
+        for (e, x) in est.results.iter().zip(&exact.results) {
+            assert_eq!(e.candidate, x.candidate);
+            assert_eq!(e.accuracy, x.accuracy, "{:?}", e.candidate);
+        }
+        // Identical Pareto front and best candidate...
+        let front_est = deepcabac::coordinator::pareto::pareto_front(&est.results);
+        let front_exact = deepcabac::coordinator::pareto::pareto_front(&exact.results);
+        assert_eq!(front_est, front_exact, "{method:?}");
+        assert_eq!(est.best, exact.best, "{method:?}");
+        assert!(est.best.is_some(), "{method:?} found no feasible point");
+        // ...with identical *reported* sizes: every front/best member was
+        // re-encoded through the exact path, so the bytes must match the
+        // exact-always run bit for bit.
+        for &i in &front_est {
+            assert_eq!(
+                est.results[i].sizes.compressed_weights,
+                exact.results[i].sizes.compressed_weights,
+                "{method:?} front member {i}"
+            );
+            assert_eq!(est.results[i].backend, "CABAC");
+        }
+        // Estimate quality: phase A priced every candidate within the
+        // pinned tolerance of its real coded size (compare the est-sized
+        // non-survivors against the exact run's real bytes).
+        assert!(est.est_real_max_rel.unwrap() <= EST_RATE_TOLERANCE, "{method:?}");
+        assert!(exact.est_real_max_rel.is_none());
+        let mut estimated = 0usize;
+        for (e, x) in est.results.iter().zip(&exact.results) {
+            if e.backend == BACKEND_CABAC_ESTIMATED {
+                estimated += 1;
+                let est_w = e.sizes.compressed_weights as f64;
+                let real_w = x.sizes.compressed_weights as f64;
+                let rel = (est_w - real_w).abs() / real_w;
+                assert!(
+                    rel <= EST_RATE_TOLERANCE,
+                    "{method:?} {:?}: est {est_w} vs real {real_w} ({rel:.4})",
+                    e.candidate
+                );
+            }
+        }
+        // The tentpole's point: most of the grid was never trial-encoded.
+        assert_eq!(est.exact_sized + estimated, est.results.len());
+        assert!(
+            estimated > 0,
+            "{method:?}: estimate-first re-encoded the whole grid"
+        );
+        assert_eq!(exact.exact_sized, exact.results.len());
+    }
+}
+
+#[test]
+fn ints_accuracy_equals_decoded_stream_accuracy_for_every_candidate() {
+    // The losslessness assumption phase A rests on, pinned per candidate:
+    // reconstruct-from-quantizer-ints and reconstruct-from-decoded-stream
+    // are the same network, so the oracle scores them identically (bitwise
+    // — same f64, not merely close).
+    let net = synth_net();
+    let svc = oracle(&net);
+    let c = cfg(SearchStrategy::ExactAlways);
+    let mut checked = 0usize;
+    for &delta in &[0.003f32, 0.006, 0.009] {
+        for &lambda in &[0.0f32, 0.5, 4.0, 16.0] {
+            let cand = Candidate {
+                method: Method::DcV2,
+                s: 0.0,
+                delta,
+                lambda,
+                clusters: 0,
+            };
+            let compressed = compress_dc(&net, &cand, &c);
+            let bytes = compressed.to_bytes_with(c.container);
+            let decoded = CompressedNetwork::from_bytes_with(&bytes, 2).unwrap();
+            for (a, b) in compressed.layers.iter().zip(&decoded.layers) {
+                assert_eq!(a.ints, b.ints, "Δ={delta} λ={lambda}");
+            }
+            let acc_ints = svc.accuracy(&compressed.reconstruct(&net.name)).unwrap();
+            let acc_stream = svc.accuracy(&decoded.reconstruct(&net.name)).unwrap();
+            assert_eq!(acc_ints, acc_stream, "Δ={delta} λ={lambda}");
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, 12);
+}
+
+#[test]
+fn legacy_containers_fall_back_to_exact_pricing() {
+    // The estimator models v3 bins; on a v1 container the estimate-first
+    // strategy must silently run exact-always (every size real, no
+    // estimate stats) rather than ranking under costs the stream wouldn't
+    // spend.
+    let net = synth_net();
+    let svc = oracle(&net);
+    let c = SearchConfig {
+        container: ContainerPolicy::v1(),
+        ..cfg(SearchStrategy::EstimateFirst)
+    };
+    let out = coordinator::search(&net, Method::DcV2, &c, &svc).unwrap();
+    assert!(out.est_real_max_rel.is_none());
+    assert_eq!(out.exact_sized, out.results.len());
+    assert!(out.results.iter().all(|r| r.backend == "CABAC"));
+}
+
+#[test]
+fn memo_budget_zero_still_matches_with_requantized_survivors() {
+    // With the phase-B memo disabled the survivors are re-quantized instead
+    // of re-encoded from kept ints — deterministic assignments make both
+    // routes byte-identical.
+    let net = synth_net();
+    let svc = oracle(&net);
+    let base = cfg(SearchStrategy::EstimateFirst);
+    let kept = coordinator::search(&net, Method::DcV2, &base, &svc).unwrap();
+    let requant = coordinator::search(
+        &net,
+        Method::DcV2,
+        &SearchConfig {
+            memo_budget_bytes: 0,
+            ..base
+        },
+        &svc,
+    )
+    .unwrap();
+    assert_eq!(kept.results.len(), requant.results.len());
+    for (a, b) in kept.results.iter().zip(&requant.results) {
+        assert_eq!(a.candidate, b.candidate);
+        assert_eq!(a.sizes.compressed_weights, b.sizes.compressed_weights);
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.backend, b.backend);
+    }
+    assert_eq!(kept.best, requant.best);
+    assert_eq!(kept.est_real_max_rel, requant.est_real_max_rel);
+}
