@@ -21,8 +21,8 @@ use deepcabac::benchutil::bench;
 use deepcabac::cabac::{binarize, CodingConfig, Decoder, SigHistory, WeightContexts};
 use deepcabac::coordinator::{self, Method, SearchConfig, SearchStrategy};
 use deepcabac::model::{
-    CompressedNetwork, ContainerPolicy, Kind, Layer, Network, QuantizedLayer, DEFAULT_SLICE_LEN,
-    VERSION_V1,
+    decode_network_into, CompressedNetwork, ContainerPolicy, DecodeArena, Kind, Layer, Network,
+    QuantizedLayer, DEFAULT_SLICE_LEN, VERSION_V1,
 };
 use deepcabac::quant::rd::{rd_quantize_layer_sliced_parallel, required_half, RdParams};
 use deepcabac::util::Pcg64;
@@ -224,6 +224,49 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          ({speedup_v3_t1:.2}x vs v1@1t on the new decoder; v3@4t = {speedup_v3_t4:.2}x)"
     );
 
+    // --- fused decode→floats vs the legacy two-pass path ---
+    // Two-pass = the pre-arena request path: container decode into freshly
+    // allocated i32 planes, then reconstruct_named()'s dequantize pass
+    // (another fresh f32 plane per layer, every call).  Fused = one CABAC
+    // pass writing dequantized f32 straight into a warmed DecodeArena
+    // (zero steady-state allocations).  Same v3 bytes, same thread count —
+    // the same-run ratio isolates exactly what fusion removes and is the
+    // gate's machine-independent floor.
+    let (floats_twopass_t1, twopass_net) = bench(warmup, iters, || {
+        CompressedNetwork::from_bytes_with(&v3_bytes, 1)
+            .unwrap()
+            .reconstruct_named()
+    });
+    let mut arena = DecodeArena::new();
+    decode_network_into(&v3_bytes, 1, &mut arena)?; // warm: skeleton + scratch
+    decode_network_into(&v3_bytes, 4, &mut arena)?; // warm: pool workers + t4 scratch
+    let (floats_fused_t1, _) = bench(warmup, iters, || {
+        decode_network_into(&v3_bytes, 1, &mut arena).unwrap();
+    });
+    let (floats_fused_t4, _) = bench(warmup, iters, || {
+        decode_network_into(&v3_bytes, 4, &mut arena).unwrap();
+    });
+    {
+        // correctness guard: the fused planes must equal the two-pass ones
+        let fused = decode_network_into(&v3_bytes, 4, &mut arena)?;
+        assert_eq!(fused.layers.len(), twopass_net.layers.len());
+        for (a, b) in fused.layers.iter().zip(&twopass_net.layers) {
+            assert_eq!(a.weights, b.weights, "fused decode diverged from two-pass");
+        }
+    }
+    let floats_speedup = floats_twopass_t1.median_s / floats_fused_t1.median_s;
+    println!(
+        "floats: twopass@1t {:>6.1} ms ({:.2} Msym/s) | fused@1t {:>6.1} ms \
+         ({:.2} Msym/s, {:.2}x) | fused@4t {:>6.1} ms ({:.2} Msym/s)",
+        floats_twopass_t1.median_s * 1e3,
+        params as f64 / floats_twopass_t1.median_s / 1e6,
+        floats_fused_t1.median_s * 1e3,
+        params as f64 / floats_fused_t1.median_s / 1e6,
+        floats_speedup,
+        floats_fused_t4.median_s * 1e3,
+        params as f64 / floats_fused_t4.median_s / 1e6
+    );
+
     // --- slice-aligned RDOQ: the dominant encode-side cost, now parallel ---
     // One synthetic sparse-Laplace plane of the same parameter count; the
     // rate model restarts per slice, so slices fan out across workers and
@@ -344,6 +387,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             params as f64 / s.median_s / 1e6
         ));
     }
+    let floats_fields = format!(
+        "\"decode_floats_twopass_t1_s\": {:.6},\n  \
+         \"decode_floats_twopass_t1_msym_s\": {:.3},\n  \
+         \"decode_floats_t1_s\": {:.6},\n  \"decode_floats_t1_msym_s\": {:.3},\n  \
+         \"decode_floats_t4_s\": {:.6},\n  \"decode_floats_t4_msym_s\": {:.3},\n  \
+         \"decode_floats_speedup_fused_vs_twopass\": {:.4},",
+        floats_twopass_t1.median_s,
+        params as f64 / floats_twopass_t1.median_s / 1e6,
+        floats_fused_t1.median_s,
+        params as f64 / floats_fused_t1.median_s / 1e6,
+        floats_fused_t4.median_s,
+        params as f64 / floats_fused_t4.median_s / 1e6,
+        floats_speedup
+    );
     let json = format!(
         "{{\n  \"bench\": \"dcb2\",\n  \"mode\": \"{}\",\n  \"params\": {},\n  \
          \"layers\": {},\n  \"slice_len\": {},\n  \"v1_bytes\": {},\n  \"v2_bytes\": {},\n  \
@@ -352,6 +409,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          \"v3_t1_s\": {:.6}, \"v3_t4_s\": {:.6}}},\n  \"decode\": {{\"seed_t1_s\": {:.6}, \
          \"seed_t1_msym_s\": {:.3}, \"v1_t1_s\": {:.6}, \
          \"v1_t1_msym_s\": {:.3}, \"v2_t4_s\": {:.6}, \"v2_t4_msym_s\": {:.3}{}}},\n  \
+         {}\n  \
          \"rdoq_t1_s\": {:.6},\n  \"rdoq_t1_msym_s\": {:.3},\n  \
          \"rdoq_t4_s\": {:.6},\n  \"rdoq_t4_msym_s\": {:.3},\n  \
          \"rdoq_speedup_t4_vs_t1\": {:.4},\n  \
@@ -383,6 +441,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         dec_v2_t4.median_s,
         params as f64 / dec_v2_t4.median_s / 1e6,
         dec_fields,
+        floats_fields,
         rdoq_t1.median_s,
         params as f64 / rdoq_t1.median_s / 1e6,
         rdoq_t4.median_s,

@@ -138,9 +138,10 @@ pub struct GateReport {
 
 /// Compare a current `BENCH_dcb2.json` against the committed baseline.
 ///
-/// Three checks (the third armed only when the baseline carries its keys),
-/// all reading their thresholds from the *baseline* file so re-baselining
-/// never needs a code change:
+/// Five checks (the later ones armed only when the baseline carries their
+/// keys — see the numbered comments in the body for RDOQ, estimate-first
+/// search and the fused decode→floats pair), all reading their thresholds
+/// from the *baseline* file so re-baselining never needs a code change:
 ///
 /// 1. **Absolute regression** — `v3_t1_msym_s` (single-thread decode
 ///    throughput) must not drop more than `max_regress_pct` (default 15)
@@ -317,6 +318,64 @@ pub fn bench_gate(baseline: &str, current: &str) -> GateReport {
                 pass = false;
                 lines.push(
                     "FAIL current BENCH_dcb2.json has no search_speedup_est_vs_exact field".into(),
+                );
+            }
+        }
+    }
+
+    // 5. **Fused decode→floats** (added with the zero-allocation arena
+    //    path).  Same arming pattern as RDOQ/search — both sub-checks read
+    //    their keys from the *baseline*, so pre-metric baselines stay
+    //    valid:
+    //    * absolute `decode_floats_t1_msym_s` regression (same budget as
+    //      the other absolute checks; skipped while the baseline is
+    //      bootstrap or carries a non-positive placeholder);
+    //    * machine-independent same-run floor
+    //      `decode_floats_speedup_fused_vs_twopass >=
+    //      min_decode_floats_speedup_fused_vs_twopass` — the fused
+    //      single-pass arena decode over the two-pass
+    //      decode-then-dequantize path on the same bytes in the same run,
+    //      which is what the fusion buys (no intermediate i32 plane, no
+    //      second pass, no steady-state allocations).
+    if let Some(b) = json_num(baseline, "decode_floats_t1_msym_s") {
+        match json_num(current, "decode_floats_t1_msym_s") {
+            Some(c) if bootstrap || b <= 0.0 => lines.push(format!(
+                "SKIP decode-floats absolute check: baseline not armed (current {c:.3} Msym/s)"
+            )),
+            Some(c) => {
+                let regress_pct = 100.0 * (b - c) / b;
+                let ok = regress_pct <= max_regress_pct;
+                pass &= ok;
+                lines.push(format!(
+                    "{} decode-floats fused@1t {c:.3} Msym/s vs baseline {b:.3} \
+                     ({regress_pct:+.1}% regression, limit {max_regress_pct}%)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no decode_floats_t1_msym_s field".into(),
+                );
+            }
+        }
+    }
+    if let Some(floor) = json_num(baseline, "min_decode_floats_speedup_fused_vs_twopass") {
+        match json_num(current, "decode_floats_speedup_fused_vs_twopass") {
+            Some(r) => {
+                let ok = r >= floor;
+                pass &= ok;
+                lines.push(format!(
+                    "{} same-run decode-floats speedup fused/twopass = {r:.2}x (floor {floor}x)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no \
+                     decode_floats_speedup_fused_vs_twopass field"
+                        .into(),
                 );
             }
         }
@@ -557,6 +616,54 @@ mod tests {
             r.lines
         );
         let bad = bench_gate(baseline, &bench_json_search(10.0, 2.4, 3.0, 1.2));
+        assert!(!bad.pass, "{:?}", bad.lines);
+    }
+
+    fn bench_json_floats(msym: f64, speedup: f64, floats_msym: f64, floats_speedup: f64) -> String {
+        format!(
+            "{{\"bench\": \"dcb2\", \"v3_t1_msym_s\": {msym}, \
+             \"decode_speedup_v3_t1_vs_seed_t1\": {speedup}, \
+             \"decode_floats_t1_msym_s\": {floats_msym}, \
+             \"decode_floats_speedup_fused_vs_twopass\": {floats_speedup}}}"
+        )
+    }
+
+    #[test]
+    fn gate_decode_floats_checks_armed_by_baseline_keys() {
+        // Baseline without the fused-decode keys: current values ignored.
+        let old_baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&old_baseline, &bench_json_floats(10.0, 2.4, 1.0, 0.5));
+        assert!(r.pass, "{:?}", r.lines);
+        // Armed baseline: absolute regression + same-run floor enforced.
+        let armed = "{\"v3_t1_msym_s\": 10.0, \"decode_speedup_v3_t1_vs_seed_t1\": 2.4, \
+             \"decode_floats_t1_msym_s\": 12.0, \
+             \"min_decode_floats_speedup_fused_vs_twopass\": 1.3}";
+        let good = bench_gate(armed, &bench_json_floats(10.0, 2.4, 11.0, 1.6)); // -8% < 15%
+        assert!(good.pass, "{:?}", good.lines);
+        let regressed = bench_gate(armed, &bench_json_floats(10.0, 2.4, 7.0, 1.6)); // -42%
+        assert!(!regressed.pass, "{:?}", regressed.lines);
+        let collapsed = bench_gate(armed, &bench_json_floats(10.0, 2.4, 12.0, 1.1)); // < 1.3x
+        assert!(!collapsed.pass, "{:?}", collapsed.lines);
+        // Armed baseline + current missing the metric entirely: fail loudly.
+        let missing = bench_gate(armed, &bench_json(10.0, 2.4));
+        assert!(!missing.pass, "{:?}", missing.lines);
+    }
+
+    #[test]
+    fn gate_decode_floats_zero_baseline_skips_absolute_but_keeps_floor() {
+        // The bootstrap placeholder ships decode_floats_t1_msym_s = 0.0:
+        // the absolute check must SKIP (not vacuously pass via /0), while
+        // the machine-independent fused-vs-twopass floor stays enforced.
+        let baseline = "{\"v3_t1_msym_s\": 10.0, \"decode_floats_t1_msym_s\": 0.0, \
+                        \"min_decode_floats_speedup_fused_vs_twopass\": 1.3}";
+        let r = bench_gate(baseline, &bench_json_floats(10.0, 2.4, 3.0, 1.5));
+        assert!(r.pass, "{:?}", r.lines);
+        assert!(
+            r.lines.iter().any(|l| l.contains("SKIP decode-floats")),
+            "{:?}",
+            r.lines
+        );
+        let bad = bench_gate(baseline, &bench_json_floats(10.0, 2.4, 3.0, 1.1));
         assert!(!bad.pass, "{:?}", bad.lines);
     }
 

@@ -46,6 +46,34 @@ pub fn decode_layer_into_legacy(
     decode_into_impl::<true>(bytes, ctxs, out)
 }
 
+/// Fused decode + dequantization plane kernel: decode each symbol and
+/// write `symbol as f32 * delta` straight into `out`, keeping the decoded
+/// integer in-register — no intermediate `i32` plane, no second pass over
+/// the layer.  `LEGACY` selects the v1/v2 bin format, monomorphized like
+/// the integer path (the wire bytes are exactly what
+/// [`decode_layer_into`] / [`decode_layer_into_legacy`] read — this is a
+/// decode-side fusion, not a format change).  Context scratch is
+/// caller-owned and reset on entry; one panic guard covers the whole
+/// plane.  This is the hot loop of the zero-allocation decode→inference
+/// path (`model::decode_network_into`).
+pub fn decode_layer_dequant_into<const LEGACY: bool>(
+    bytes: &[u8],
+    ctxs: &mut WeightContexts,
+    delta: f32,
+    out: &mut [f32],
+) -> Result<()> {
+    ctxs.reset();
+    let mut hist = SigHistory::default();
+    let mut d = Decoder::new(bytes);
+    let n = out.len();
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        for slot in out.iter_mut() {
+            *slot = binarize::decode_int_impl::<LEGACY>(&mut d, ctxs, &mut hist) as f32 * delta;
+        }
+    }))
+    .map_err(|_| Error::Decode(format!("corrupt CABAC stream in {n}-symbol plane")))
+}
+
 /// Decode `count` integers from a CABAC layer bitstream (v3 bin format).
 pub fn decode_layer(bytes: &[u8], count: usize, cfg: CodingConfig) -> Result<Vec<i32>> {
     let mut out = vec![0i32; count];
@@ -97,6 +125,53 @@ mod tests {
             decode_layer_into(&bytes, &mut scratch, &mut out).unwrap();
             assert_eq!(out, values);
         }
+    }
+
+    #[test]
+    fn fused_dequant_matches_two_pass_for_both_formats() {
+        // The fused kernel must be bit-exactly decode_layer_into (or the
+        // legacy twin) followed by `i as f32 * delta`, on shared scratch.
+        let values: Vec<i32> = (0..3000usize)
+            .map(|i| match i % 7 {
+                0 | 1 | 2 | 3 => 0,
+                4 => (i % 23) as i32 - 11,
+                5 => 4096 + i as i32,
+                _ => -((i % 300) as i32),
+            })
+            .collect();
+        let cfg = CodingConfig::default();
+        let delta = 0.03125f32;
+        let mut scratch = WeightContexts::new(cfg);
+        let mut ints = vec![0i32; values.len()];
+        let mut floats = vec![0f32; values.len()];
+        // v3 format
+        let bytes = encode_layer(&values, cfg);
+        decode_layer_into(&bytes, &mut scratch, &mut ints).unwrap();
+        decode_layer_dequant_into::<false>(&bytes, &mut scratch, delta, &mut floats).unwrap();
+        for (&i, &f) in ints.iter().zip(&floats) {
+            assert_eq!(f, i as f32 * delta);
+        }
+        assert_eq!(ints, values);
+        // legacy format
+        let bytes = encode_layer_legacy(&values, cfg);
+        decode_layer_into_legacy(&bytes, &mut scratch, &mut ints).unwrap();
+        decode_layer_dequant_into::<true>(&bytes, &mut scratch, delta, &mut floats).unwrap();
+        for (&i, &f) in ints.iter().zip(&floats) {
+            assert_eq!(f, i as f32 * delta);
+        }
+        assert_eq!(ints, values);
+    }
+
+    #[test]
+    fn fused_dequant_survives_truncation() {
+        let values: Vec<i32> = (0..500).map(|i| (i % 17) - 8).collect();
+        let cfg = CodingConfig::default();
+        let bytes = encode_layer(&values, cfg);
+        let cut = &bytes[..bytes.len() / 2];
+        let mut scratch = WeightContexts::new(cfg);
+        let mut out = vec![0f32; values.len()];
+        // garbage values or Err are both acceptable; a panic is not
+        let _ = decode_layer_dequant_into::<false>(cut, &mut scratch, 0.1, &mut out);
     }
 
     #[test]

@@ -15,13 +15,23 @@ use super::arith::Encoder;
 use super::context::{CodingConfig, SigHistory, WeightContexts};
 use super::{binarize, decoder};
 
+/// Generic output-capacity fallback when no estimator hint is available:
+/// sparse planes land well under 1 byte/value; 1/3 avoids both the realloc
+/// ladder and gross over-allocation on all-zero slices.
 #[inline]
-fn encode_layer_impl<const LEGACY: bool>(values: &[i32], ctxs: &mut WeightContexts) -> Vec<u8> {
+fn default_cap(n_values: usize) -> usize {
+    n_values / 3 + 16
+}
+
+#[inline]
+fn encode_layer_impl<const LEGACY: bool>(
+    values: &[i32],
+    ctxs: &mut WeightContexts,
+    cap: usize,
+) -> Vec<u8> {
     ctxs.reset();
     let mut hist = SigHistory::default();
-    // Sparse planes land well under 1 byte/value; 1/3 avoids both the
-    // realloc ladder and gross over-allocation on all-zero slices.
-    let mut e = Encoder::with_capacity(values.len() / 3 + 16);
+    let mut e = Encoder::with_capacity(cap);
     for &v in values {
         if LEGACY {
             binarize::encode_int_legacy(&mut e, ctxs, &mut hist, v);
@@ -35,25 +45,46 @@ fn encode_layer_impl<const LEGACY: bool>(values: &[i32], ctxs: &mut WeightContex
 /// Encode a quantized layer (integer grid indices) to a CABAC bitstream
 /// (v3 bin format: bypass sign + batched EG suffix).
 pub fn encode_layer(values: &[i32], cfg: CodingConfig) -> Vec<u8> {
-    encode_layer_impl::<false>(values, &mut WeightContexts::new(cfg))
+    encode_layer_impl::<false>(values, &mut WeightContexts::new(cfg), default_cap(values.len()))
 }
 
 /// [`encode_layer`] reusing caller-owned context scratch (reset on entry).
 /// The slice fan-out paths call this once per slice with one scratch per
 /// worker thread, instead of allocating fresh context tables per slice.
 pub fn encode_layer_with(values: &[i32], ctxs: &mut WeightContexts) -> Vec<u8> {
-    encode_layer_impl::<false>(values, ctxs)
+    encode_layer_impl::<false>(values, ctxs, default_cap(values.len()))
+}
+
+/// [`encode_layer_with`] with an explicit output-capacity hint in bytes —
+/// the sliced encode paths seed this from the estimator's per-slice
+/// payload estimate (`cabac::estimator::slice_capacity_hint`) instead of
+/// the generic `len/3` heuristic.  Emitted bytes are identical; only the
+/// initial buffer reservation differs.
+pub fn encode_layer_with_cap(values: &[i32], ctxs: &mut WeightContexts, cap: usize) -> Vec<u8> {
+    encode_layer_impl::<false>(values, ctxs, cap)
 }
 
 /// Encode a layer in the legacy DCB v1/v2 bin format (context-coded sign,
 /// per-bin EG suffix).  Kept so v1/v2 containers stay byte-exact.
 pub fn encode_layer_legacy(values: &[i32], cfg: CodingConfig) -> Vec<u8> {
-    encode_layer_impl::<true>(values, &mut WeightContexts::new(cfg))
+    encode_layer_impl::<true>(values, &mut WeightContexts::new(cfg), default_cap(values.len()))
 }
 
 /// [`encode_layer_legacy`] with caller-owned context scratch.
 pub fn encode_layer_legacy_with(values: &[i32], ctxs: &mut WeightContexts) -> Vec<u8> {
-    encode_layer_impl::<true>(values, ctxs)
+    encode_layer_impl::<true>(values, ctxs, default_cap(values.len()))
+}
+
+/// [`encode_layer_legacy_with`] with an explicit output-capacity hint in
+/// bytes (the legacy-bin twin of [`encode_layer_with_cap`] — v2 container
+/// slices are legacy-coded but still benefit from estimator-seeded
+/// buffers).
+pub fn encode_layer_legacy_with_cap(
+    values: &[i32],
+    ctxs: &mut WeightContexts,
+    cap: usize,
+) -> Vec<u8> {
+    encode_layer_impl::<true>(values, ctxs, cap)
 }
 
 /// Encode and also report the exact payload size in bits (excluding the
@@ -187,6 +218,26 @@ mod tests {
                 encode_layer_legacy_with(&values, &mut scratch),
                 encode_layer_legacy(&values, cfg),
                 "legacy trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn capacity_hint_does_not_change_bytes() {
+        // The capacity is a reservation, never a truncation: any hint
+        // (zero, tiny, huge) must yield byte-identical streams.
+        let mut rng = Pcg64::new(45);
+        let cfg = CodingConfig::default();
+        let values: Vec<i32> = (0..2_000)
+            .map(|_| if rng.next_f64() < 0.7 { 0 } else { rng.below(90) as i32 - 45 })
+            .collect();
+        let reference = encode_layer(&values, cfg);
+        let mut scratch = crate::cabac::WeightContexts::new(cfg);
+        for cap in [0usize, 1, 64, 100_000] {
+            assert_eq!(
+                encode_layer_with_cap(&values, &mut scratch, cap),
+                reference,
+                "cap={cap}"
             );
         }
     }

@@ -27,7 +27,7 @@
 //!    `table_close_to_exact` test and the ablation bench).
 
 use super::arith::BYPASS_BITS;
-use super::context::WeightContexts;
+use super::context::{SigHistory, WeightContexts};
 
 /// Exact code length (bits) of integer `v` under context snapshot `ctxs`,
 /// with the sigFlag read from context index `sig_idx`.
@@ -129,6 +129,25 @@ pub const SLICE_CODER_TAIL_BYTES: f64 = 4.5;
 pub fn estimated_sliced_payload_bytes(per_slice_bits: &[f64]) -> usize {
     let body: f64 = per_slice_bits.iter().map(|b| b / 8.0 + SLICE_CODER_TAIL_BYTES).sum();
     (8.0 + 4.0 * per_slice_bits.len() as f64 + body).round() as usize
+}
+
+/// Encode-side `Encoder` capacity hint for one slice, in bytes: the
+/// summed per-symbol cost under the given (fresh-context) tables plus the
+/// coder tail.  Tracking the sigFlag history picks the right sig table per
+/// symbol; magnitudes past the tables' half-width clamp, so this is a
+/// *reservation* hint, not an exact size — on sparse planes fresh-context
+/// sig costs overstate the adapted stream, which errs on the side of one
+/// allocation instead of a realloc ladder.  Used by
+/// `cabac::slices::encode_layer_sliced[_parallel]` to seed
+/// [`crate::cabac::encoder::encode_layer_with_cap`].
+pub fn slice_capacity_hint(tables: &[CostTable; 3], values: &[i32]) -> usize {
+    let mut hist = SigHistory::default();
+    let mut bits = 0f64;
+    for &v in values {
+        bits += tables[hist.ctx_index()].bits(v) as f64;
+        hist.push(v != 0);
+    }
+    (bits / 8.0 + SLICE_CODER_TAIL_BYTES).ceil() as usize + 2
 }
 
 /// Build all three sig-context cost tables in one pass (perf-critical: the
@@ -485,6 +504,41 @@ mod tests {
         }
         // empty plane: just the 8-byte sliced header
         assert_eq!(estimated_sliced_payload_bytes(&[]), 8);
+    }
+
+    #[test]
+    fn slice_capacity_hint_bounds_are_sane() {
+        // The hint must cover (or come within a small realloc of) the real
+        // slice payload without grossly over-reserving: fresh-context sig
+        // costs cap the overstatement at ~1 bit/symbol.
+        let mut rng = Pcg64::new(0xCAB);
+        let cfg = CodingConfig::default();
+        let tables = build_cost_tables(&fresh(), 64);
+        for nonzero in [0.0f64, 0.2, 0.5] {
+            let values: Vec<i32> = (0..8_192)
+                .map(|_| {
+                    if rng.next_f64() >= nonzero {
+                        0
+                    } else {
+                        rng.below(60) as i32 - 30
+                    }
+                })
+                .collect();
+            let hint = slice_capacity_hint(&tables, &values);
+            let real = crate::cabac::encode_layer(&values, cfg).len();
+            // never grossly under-reserve (fresh contexts >= adapted costs
+            // for these unclamped magnitudes)
+            assert!(
+                hint + 64 >= real / 2,
+                "nonzero={nonzero}: hint {hint} far below real {real}"
+            );
+            // over-reservation bounded by the fresh-vs-adapted context gap
+            // (~1 bit/symbol on the sig bins plus the adapted gr savings)
+            assert!(
+                hint <= 2 * real + values.len() / 8 + 64,
+                "nonzero={nonzero}: hint {hint} vs real {real}"
+            );
+        }
     }
 
     #[test]

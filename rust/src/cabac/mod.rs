@@ -24,13 +24,19 @@ pub mod slices;
 
 pub use arith::{Context, Decoder, Encoder, BYPASS_BITS};
 pub use context::{CodingConfig, SigHistory, WeightContexts};
-pub use decoder::{decode_layer, decode_layer_into, decode_layer_into_legacy, decode_layer_legacy};
+pub use decoder::{
+    decode_layer, decode_layer_dequant_into, decode_layer_into, decode_layer_into_legacy,
+    decode_layer_legacy,
+};
 pub use encoder::{
     encode_layer, encode_layer_legacy, encode_layer_legacy_with, encode_layer_with,
-    encode_layer_with_size,
+    encode_layer_with_cap, encode_layer_with_size,
 };
-pub use estimator::{build_cost_tables, build_cost_tables_into, estimate_int, CostTable};
+pub use estimator::{
+    build_cost_tables, build_cost_tables_into, estimate_int, slice_capacity_hint, CostTable,
+};
 pub use slices::{
+    decode_layer_dequant_sliced_into, decode_layer_dequant_sliced_into_legacy,
     decode_layer_sliced, decode_layer_sliced_legacy, encode_layer_sliced,
     encode_layer_sliced_parallel,
 };

@@ -9,6 +9,12 @@
 //!
 //! Wire format: u32 slice_len (symbols) | u32 n_slices | per slice:
 //! u32 byte_len | payload.
+//!
+//! Decoding has two output shapes sharing one job machinery: the integer
+//! paths fill `&mut [i32]` chunks, and the **fused floats-out** paths
+//! ([`decode_layer_dequant_sliced_into`]) write dequantized `f32` weights
+//! directly — the decode→inference hot path never materializes an integer
+//! plane.
 
 //! The slice framing is bin-format agnostic; these standalone entry points
 //! code slices in the **v3** bin format (bypass fast path).  Payloads
@@ -19,10 +25,33 @@
 //! its version field).
 
 use super::context::{CodingConfig, WeightContexts};
-use super::decoder::{decode_layer_into, decode_layer_into_legacy};
-use super::encoder::{encode_layer, encode_layer_with};
+use super::decoder::{decode_layer_dequant_into, decode_layer_into, decode_layer_into_legacy};
+use super::encoder::{encode_layer, encode_layer_with_cap};
+use super::estimator::{build_cost_tables, slice_capacity_hint, CostTable};
 use crate::util::parallel::{parallel_for_each_mut_with, parallel_map_with};
 use crate::util::{Error, Result};
+
+/// Grid half-width of the fresh-context cost tables the encode paths build
+/// for per-slice capacity hints.  Larger magnitudes clamp — the hint is a
+/// buffer reservation, not an exact size — so a small table suffices.
+const HINT_HALF: i32 = 64;
+
+/// Fresh-context cost tables for per-slice capacity hints (shared by the
+/// standalone sliced encoders here and the container's sliced encode
+/// fan-out in `model::bitstream`).
+pub(crate) fn hint_tables(cfg: CodingConfig) -> [CostTable; 3] {
+    build_cost_tables(&WeightContexts::new(cfg), HINT_HALF)
+}
+
+/// Per-slice `Encoder` capacity: the estimator's payload estimate when
+/// hint tables are available, else a `slice_len / 4` fallback (sparse
+/// planes land well under 2 bits/symbol).
+pub(crate) fn slice_cap(hints: Option<&[CostTable; 3]>, values: &[i32], slice_len: usize) -> usize {
+    match hints {
+        Some(t) => slice_capacity_hint(t, values),
+        None => slice_len / 4 + 16,
+    }
+}
 
 /// Number of slices a `count`-symbol plane splits into at `slice_len`.
 pub fn slice_count(count: usize, slice_len: usize) -> usize {
@@ -49,6 +78,34 @@ pub fn assemble_sliced(slice_len: usize, payloads: &[Vec<u8>]) -> Vec<u8> {
 /// implausible header (`slice_len == 0`, slice count inconsistent with
 /// `count`), and trailing garbage.
 pub fn parse_sliced(raw: &[u8], count: usize) -> Result<(usize, Vec<(&[u8], usize)>)> {
+    // Pre-size from the claimed slice count, clamped by what a valid
+    // stream could actually hold (>= 4 header bytes per slice, <= count
+    // slices) so a corrupt header cannot force a huge reservation —
+    // walk_sliced re-validates the count before anything is pushed.
+    let claimed = if raw.len() >= 8 {
+        u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize
+    } else {
+        0
+    };
+    let mut payloads: Vec<(&[u8], usize)> =
+        Vec::with_capacity(claimed.min(count).min(raw.len() / 4));
+    let slice_len = walk_sliced(raw, count, |off, len, n_symbols| {
+        payloads.push((&raw[off..off + len], n_symbols));
+    })?;
+    Ok((slice_len, payloads))
+}
+
+/// Allocation-free walk of the sliced wire format: the same validation as
+/// [`parse_sliced`], but each slice is reported as plain offsets
+/// `(payload_offset, payload_len, n_symbols)` relative to `raw` instead of
+/// being collected — the reusable `DecodeArena` slice table is built from
+/// this (offsets carry no lifetimes, so the table survives across decodes).
+/// Returns the stream's slice length.
+pub(crate) fn walk_sliced(
+    raw: &[u8],
+    count: usize,
+    mut on_slice: impl FnMut(usize, usize, usize),
+) -> Result<usize> {
     if raw.len() < 8 {
         return Err(Error::Format("sliced stream truncated".into()));
     }
@@ -58,7 +115,6 @@ pub fn parse_sliced(raw: &[u8], count: usize) -> Result<(usize, Vec<(&[u8], usiz
         return Err(Error::Format("sliced stream header inconsistent".into()));
     }
     let mut pos = 8usize;
-    let mut payloads: Vec<(&[u8], usize)> = Vec::with_capacity(n_slices);
     for i in 0..n_slices {
         if pos + 4 > raw.len() {
             return Err(Error::Format("sliced stream truncated".into()));
@@ -73,30 +129,34 @@ pub fn parse_sliced(raw: &[u8], count: usize) -> Result<(usize, Vec<(&[u8], usiz
         } else {
             slice_len
         };
-        payloads.push((&raw[pos..pos + len], n_symbols));
+        on_slice(pos, len, n_symbols);
         pos += len;
     }
     if pos != raw.len() {
         return Err(Error::Format("sliced stream has trailing garbage".into()));
     }
-    Ok((slice_len, payloads))
+    Ok(slice_len)
 }
 
 /// Encode with `slice_len` symbols per slice (serial reference path).
-/// One context scratch is reset and reused across all slices.
+/// One context scratch is reset and reused across all slices; each slice's
+/// output buffer is pre-sized from the estimator's payload hint instead of
+/// growing from the generic `len/3` guess.
 pub fn encode_layer_sliced(values: &[i32], cfg: CodingConfig, slice_len: usize) -> Vec<u8> {
     let slice_len = slice_len.max(1);
     let mut ctxs = WeightContexts::new(cfg);
+    let hints = hint_tables(cfg);
     let payloads: Vec<Vec<u8>> = values
         .chunks(slice_len)
-        .map(|s| encode_layer_with(s, &mut ctxs))
+        .map(|s| encode_layer_with_cap(s, &mut ctxs, slice_cap(Some(&hints), s, slice_len)))
         .collect();
     assemble_sliced(slice_len, &payloads)
 }
 
 /// Encode with slices fanned out over `threads` workers (one context
-/// scratch per worker).  Slices are independent by construction, so the
-/// output is byte-identical to [`encode_layer_sliced`].
+/// scratch per worker; one shared fresh-context capacity-hint table set).
+/// Slices are independent by construction, so the output is byte-identical
+/// to [`encode_layer_sliced`].
 pub fn encode_layer_sliced_parallel(
     values: &[i32],
     cfg: CodingConfig,
@@ -104,22 +164,24 @@ pub fn encode_layer_sliced_parallel(
     threads: usize,
 ) -> Vec<u8> {
     let slice_len = slice_len.max(1);
+    let hints = hint_tables(cfg);
     let chunks: Vec<&[i32]> = values.chunks(slice_len).collect();
     let payloads = parallel_map_with(
         &chunks,
         threads,
         || WeightContexts::new(cfg),
-        |ctxs, s| encode_layer_with(s, ctxs),
+        |ctxs, s| encode_layer_with_cap(s, ctxs, slice_cap(Some(&hints), s, slice_len)),
     );
     assemble_sliced(slice_len, &payloads)
 }
 
 /// One unit of parallel slice decoding: a coded payload plus the disjoint
 /// chunk of the output plane it reconstructs (errors are parked per job
-/// and surfaced after the fan-out joins).
-pub(crate) struct SliceDecodeJob<'raw, 'out> {
+/// and surfaced after the fan-out joins).  Generic over the plane element:
+/// `i32` for the integer paths, `f32` for the fused dequantized decode.
+pub(crate) struct SliceDecodeJob<'raw, 'out, T> {
     pub bytes: &'raw [u8],
-    pub out: &'out mut [i32],
+    pub out: &'out mut [T],
     pub err: Option<Error>,
 }
 
@@ -128,10 +190,10 @@ pub(crate) struct SliceDecodeJob<'raw, 'out> {
 /// [`parse_sliced`] for this plane's symbol count — that contract is what
 /// makes the `split_at_mut` walk panic-free (the per-slice counts sum to
 /// exactly `plane.len()`).
-pub(crate) fn make_jobs<'raw, 'out>(
+pub(crate) fn make_jobs<'raw, 'out, T>(
     slices: Vec<(&'raw [u8], usize)>,
-    mut plane: &'out mut [i32],
-) -> Vec<SliceDecodeJob<'raw, 'out>> {
+    mut plane: &'out mut [T],
+) -> Vec<SliceDecodeJob<'raw, 'out, T>> {
     let mut jobs = Vec::with_capacity(slices.len());
     for (bytes, n) in slices {
         // mem::take moves the remainder out so the split halves inherit the
@@ -149,13 +211,14 @@ pub(crate) fn make_jobs<'raw, 'out>(
 
 /// Decode a batch of slice jobs over `threads` workers, each decoding
 /// in place with one reusable context scratch per worker.
-pub(crate) fn run_decode_jobs<F>(
-    jobs: &mut [SliceDecodeJob<'_, '_>],
+pub(crate) fn run_decode_jobs<T, F>(
+    jobs: &mut [SliceDecodeJob<'_, '_, T>],
     cfg: CodingConfig,
     threads: usize,
     decode: F,
 ) where
-    F: Fn(&[u8], &mut WeightContexts, &mut [i32]) -> Result<()> + Sync,
+    T: Send,
+    F: Fn(&[u8], &mut WeightContexts, &mut [T]) -> Result<()> + Sync,
 {
     parallel_for_each_mut_with(
         jobs,
@@ -190,6 +253,56 @@ fn decode_layer_sliced_impl(
         return Err(e);
     }
     Ok(out)
+}
+
+fn decode_dequant_sliced_impl(
+    raw: &[u8],
+    cfg: CodingConfig,
+    delta: f32,
+    threads: usize,
+    legacy: bool,
+    out: &mut [f32],
+) -> Result<()> {
+    let (_, payloads) = parse_sliced(raw, out.len())?;
+    let mut jobs = make_jobs(payloads, out);
+    run_decode_jobs(&mut jobs, cfg, threads, |b, c, o| {
+        if legacy {
+            decode_layer_dequant_into::<true>(b, c, delta, o)
+        } else {
+            decode_layer_dequant_into::<false>(b, c, delta, o)
+        }
+    });
+    if let Some(e) = jobs.into_iter().find_map(|j| j.err) {
+        return Err(e);
+    }
+    Ok(())
+}
+
+/// Fused sliced decode→dequantize: reconstruct `out.len()` weights as
+/// `symbol * delta` straight into the caller's `f32` plane, fanning
+/// disjoint `&mut [f32]` chunks across `threads` workers — the sliced form
+/// of [`decode_layer_dequant_into`].  No intermediate `i32` plane exists at
+/// any point.  Expects v3-bin slices (what [`encode_layer_sliced`] writes).
+pub fn decode_layer_dequant_sliced_into(
+    raw: &[u8],
+    cfg: CodingConfig,
+    delta: f32,
+    threads: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    decode_dequant_sliced_impl(raw, cfg, delta, threads, false, out)
+}
+
+/// [`decode_layer_dequant_sliced_into`] for legacy-bin (pre-v3 / v2
+/// container) slice payloads.
+pub fn decode_layer_dequant_sliced_into_legacy(
+    raw: &[u8],
+    cfg: CodingConfig,
+    delta: f32,
+    threads: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    decode_dequant_sliced_impl(raw, cfg, delta, threads, true, out)
 }
 
 /// Decode, fanning slices out over `threads` workers.  The output plane is
@@ -283,6 +396,88 @@ mod tests {
         // fewer slices -> less overhead
         let over_big = slicing_overhead(&values, cfg, 40_000);
         assert!(over_big <= over_default);
+    }
+
+    #[test]
+    fn capacity_seeded_encode_is_byte_stable() {
+        // Pre-sizing the per-slice Encoder from the estimator hint must not
+        // change a single emitted byte: the sliced stream equals assembling
+        // independently coded slices (the wire contract the golden vectors
+        // pin at container level).
+        let cfg = CodingConfig::default();
+        let values = plane(9_000, 11);
+        for slice_len in [64usize, 700, 9_000] {
+            let reference: Vec<Vec<u8>> = values
+                .chunks(slice_len)
+                .map(|s| encode_layer(s, cfg))
+                .collect();
+            assert_eq!(
+                encode_layer_sliced(&values, cfg, slice_len),
+                assemble_sliced(slice_len, &reference),
+                "slice_len={slice_len}"
+            );
+        }
+    }
+
+    #[test]
+    fn slice_cap_fallback_without_hint_tables() {
+        // The no-estimate arm: slice_len/4 + 16, independent of the values.
+        let values = [0i32; 100];
+        assert_eq!(slice_cap(None, &values, 16_384), 16_384 / 4 + 16);
+        assert_eq!(slice_cap(None, &values, 1), 16);
+        // and the hinted arm defers to the estimator
+        let cfg = CodingConfig::default();
+        let hints = hint_tables(cfg);
+        assert_eq!(
+            slice_cap(Some(&hints), &values, 16_384),
+            slice_capacity_hint(&hints, &values)
+        );
+    }
+
+    #[test]
+    fn fused_sliced_dequant_matches_int_decode() {
+        let cfg = CodingConfig::default();
+        let values = plane(12_000, 12);
+        let delta = 0.0078125f32;
+        for slice_len in [1usize, 257, 4096, 20_000] {
+            let raw = encode_layer_sliced(&values, cfg, slice_len);
+            let ints = decode_layer_sliced(&raw, values.len(), cfg, 4).unwrap();
+            for threads in [1usize, 4] {
+                let mut floats = vec![f32::NAN; values.len()];
+                decode_layer_dequant_sliced_into(&raw, cfg, delta, threads, &mut floats)
+                    .unwrap();
+                for (&i, &f) in ints.iter().zip(&floats) {
+                    assert_eq!(f, i as f32 * delta, "slice_len={slice_len} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_sliced_dequant_legacy_payloads() {
+        // Legacy-bin slices (v2 container payloads) through the fused path.
+        let cfg = CodingConfig::default();
+        let values = plane(5_000, 13);
+        let payloads: Vec<Vec<u8>> = values
+            .chunks(512)
+            .map(|s| crate::cabac::encoder::encode_layer_legacy(s, cfg))
+            .collect();
+        let raw = assemble_sliced(512, &payloads);
+        let mut floats = vec![0f32; values.len()];
+        decode_layer_dequant_sliced_into_legacy(&raw, cfg, 0.25, 2, &mut floats).unwrap();
+        for (&v, &f) in values.iter().zip(&floats) {
+            assert_eq!(f, v as f32 * 0.25);
+        }
+        // truncation surfaces as Err, same as the int path
+        let mut floats = vec![0f32; values.len()];
+        assert!(decode_layer_dequant_sliced_into(
+            &raw[..raw.len() / 3],
+            cfg,
+            0.25,
+            2,
+            &mut floats
+        )
+        .is_err());
     }
 
     #[test]

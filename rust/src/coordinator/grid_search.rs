@@ -19,12 +19,14 @@ use crate::model::Network;
 use crate::runtime::EvalService;
 use crate::util::Result;
 
+use crate::model::DecodeArena;
+
 use super::config::{Candidate, Method, SearchConfig};
-use super::parallel::parallel_map;
+use super::parallel::{parallel_map, parallel_map_with};
 use super::pareto;
 use super::pipeline::{
-    encode_dc_candidate, exact_dc_sizes, nn_probe, run_candidate, run_candidate_estimated,
-    CandidateResult, EST_RATE_TOLERANCE,
+    encode_dc_candidate, exact_dc_sizes, nn_probe, run_candidate_estimated,
+    run_candidate_with_arena, CandidateResult, EST_RATE_TOLERANCE,
 };
 use super::prep::prepare_candidates;
 use crate::quant::stepsize;
@@ -288,9 +290,16 @@ pub fn search(
             search_estimate_first(net, &candidates, cfg, service, original_accuracy)?;
         (results, Some(max_rel), repriced)
     } else {
-        let results_raw = parallel_map(&candidates, cfg.threads, |cand| {
-            run_candidate(net, cand, cfg, service)
-        });
+        // One persistent DecodeArena per worker: every candidate of a
+        // search serializes the same network shape, so only each worker's
+        // first decode pays the skeleton allocation — the rest ride the
+        // warm zero-allocation path.
+        let results_raw = parallel_map_with(
+            &candidates,
+            cfg.threads,
+            DecodeArena::new,
+            |arena, cand| run_candidate_with_arena(net, cand, cfg, service, arena),
+        );
         let mut results = Vec::with_capacity(results_raw.len());
         for r in results_raw {
             results.push(r?);

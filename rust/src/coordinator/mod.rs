@@ -25,5 +25,7 @@ pub use crate::util::parallel;
 
 pub use config::{Candidate, Method, SearchConfig, SearchStrategy};
 pub use grid_search::{search, SearchOutcome};
-pub use pipeline::{run_candidate, run_candidate_estimated, CandidateResult};
+pub use pipeline::{
+    run_candidate, run_candidate_estimated, run_candidate_with_arena, CandidateResult,
+};
 pub use prep::CandidatePrep;

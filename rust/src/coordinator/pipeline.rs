@@ -9,7 +9,7 @@ use crate::cabac::estimator::estimated_sliced_payload_bytes;
 use crate::cabac::CodingConfig;
 use crate::codecs::LosslessCoder;
 use crate::metrics::Sizes;
-use crate::model::{CompressedNetwork, Network};
+use crate::model::{decode_network_into, CompressedNetwork, DecodeArena, Network};
 use crate::quant::lloyd::lloyd_quantize_network;
 use crate::quant::rd::{
     rd_quantize_network, rd_quantize_network_planned, rd_quantize_network_sliced,
@@ -118,11 +118,28 @@ pub fn exact_dc_sizes(
 }
 
 /// Run one candidate end to end.  Needs the eval service for accuracy.
+/// Decodes through a fresh call-local arena; fan-outs that run many
+/// same-shaped candidates should prefer [`run_candidate_with_arena`] with
+/// per-worker arenas so every decode after the first is warm.
 pub fn run_candidate(
     net: &Network,
     cand: &Candidate,
     cfg: &SearchConfig,
     service: &EvalService,
+) -> Result<CandidateResult> {
+    run_candidate_with_arena(net, cand, cfg, service, &mut DecodeArena::new())
+}
+
+/// [`run_candidate`] decoding through a caller-owned [`DecodeArena`]: the
+/// grid search hands each worker a persistent arena, so only the worker's
+/// first candidate pays the skeleton allocation — every subsequent
+/// same-shaped decode is the zero-allocation warm path.
+pub fn run_candidate_with_arena(
+    net: &Network,
+    cand: &Candidate,
+    cfg: &SearchConfig,
+    service: &EvalService,
+    arena: &mut DecodeArena,
 ) -> Result<CandidateResult> {
     let original_weights = net.f32_size_bytes();
     let bias = net.bias_size_bytes();
@@ -131,13 +148,14 @@ pub fn run_candidate(
     match cand.method {
         Method::DcV1 | Method::DcV2 => {
             let (bytes, sizes) = encode_dc_candidate(net, cand, cfg)?;
-            // True decode path: parse + CABAC-decode + dequantize, under
-            // the same container policy and slice geometry (v3 — the
-            // default — decodes on the bypass fast path; note the clamp
-            // above runs it single-threaded inside the candidate pool).
-            let decoded = CompressedNetwork::from_bytes_with(&bytes, cfg.container.threads)?;
-            let recon = decoded.reconstruct(&net.name);
-            let accuracy = service.accuracy(&recon)?;
+            // True decode path, now fused: parse + CABAC-decode straight
+            // into dequantized f32 planes (no intermediate i32 plane),
+            // under the same container policy and slice geometry (v3 —
+            // the default — decodes on the bypass fast path; note the
+            // clamp above runs it single-threaded inside the candidate
+            // pool).
+            let recon = decode_network_into(&bytes, cfg.container.threads, arena)?;
+            let accuracy = service.accuracy(recon)?;
             Ok(CandidateResult {
                 candidate: *cand,
                 sizes,

@@ -203,14 +203,16 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     let threads = flag_usize(args, "threads")
         .unwrap_or_else(coordinator::config::default_threads)
         .max(1);
-    let compressed = CompressedNetwork::from_bytes_with(&raw, threads)?;
-    let net = compressed.reconstruct_named();
+    // Fused decode→floats: one CABAC pass straight into dequantized
+    // planes (no intermediate i32 planes), slices fanned over the pool.
+    let mut arena = model::DecodeArena::new();
+    let net = model::decode_network_into(&raw, threads, &mut arena)?;
     let out = args
         .flags
         .get("o")
         .cloned()
         .unwrap_or_else(|| format!("{input}.nwf"));
-    write_nwf(&out, &net)?;
+    write_nwf(&out, net)?;
     println!(
         "{input} -> {out}: {} layers, {} params",
         net.layers.len(),

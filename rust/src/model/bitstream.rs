@@ -30,15 +30,31 @@
 //! throughput at ≲1% size cost.  Decoding dispatches on the version byte,
 //! so v1/v2 streams remain first-class and re-encode byte-exact (pinned
 //! by `rust/tests/golden_vectors.rs`).
+//!
+//! Two decode shapes share the version dispatch: the classic two-pass
+//! [`CompressedNetwork::from_bytes_with`] (ints, then
+//! [`QuantizedLayer::dequantize`]) and the **fused** zero-allocation
+//! [`decode_network_into`], which CABAC-decodes straight into the
+//! dequantized `f32` planes of a reusable [`DecodeArena`] — the
+//! decode→inference serving path.  Both read identical bytes; neither
+//! changes the wire format.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::network::{Kind, Layer, Network};
-use crate::cabac::decoder::{decode_layer_into, decode_layer_into_legacy};
-use crate::cabac::encoder::{encode_layer_legacy_with, encode_layer_with};
+use crate::cabac::decoder::{
+    decode_layer_dequant_into, decode_layer_into, decode_layer_into_legacy,
+};
+use crate::cabac::encoder::{
+    encode_layer_legacy_with, encode_layer_legacy_with_cap, encode_layer_with_cap,
+};
 use crate::cabac::slices::{
-    assemble_sliced, make_jobs, parse_sliced, run_decode_jobs, slice_count, SliceDecodeJob,
+    assemble_sliced, hint_tables, make_jobs, parse_sliced, run_decode_jobs, slice_cap,
+    slice_count, walk_sliced, SliceDecodeJob,
 };
 use crate::cabac::{CodingConfig, WeightContexts};
-use crate::util::parallel::{default_threads, parallel_map_with};
+use crate::util::parallel::{default_threads, parallel_map_with, Pool, SendPtr};
 use crate::util::{Error, Result};
 
 const MAGIC: &[u8; 4] = b"DCB1";
@@ -122,6 +138,15 @@ impl QuantizedLayer {
         self.ints.iter().map(|&i| i as f32 * self.delta).collect()
     }
 
+    /// [`Self::dequantize`] into a caller-owned plane (no allocation) —
+    /// the arena-backed reconstruction path.
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.ints.len(), "plane length mismatch");
+        for (o, &i) in out.iter_mut().zip(&self.ints) {
+            *o = i as f32 * self.delta;
+        }
+    }
+
     /// Rebuild a [`Layer`] with dequantized weights (importances dropped —
     /// they are an encoder-side aid, not part of the model).
     pub fn to_layer(&self) -> Layer {
@@ -199,93 +224,171 @@ struct ParsedContainer<'a> {
     layers: Vec<RawLayer<'a>>,
 }
 
-/// Validate magic + CRC and walk every header field.
-fn parse_container(raw: &[u8]) -> Result<ParsedContainer<'_>> {
-    if raw.len() < 8 || &raw[..4] != MAGIC {
-        return Err(Error::Format("bad dcb magic".into()));
+/// Borrowed, allocation-free view of one layer's header fields + payload,
+/// yielded by [`ContainerWalker`] in wire order.
+struct LayerView<'a> {
+    name: &'a str,
+    kind_code: u8,
+    /// n_dims × u32 LE bytes.
+    dims: &'a [u8],
+    rows: usize,
+    cols: usize,
+    delta: f32,
+    /// blen × f32 LE bytes (`None` = no bias).
+    bias: Option<&'a [u8]>,
+    payload: &'a [u8],
+}
+
+impl<'a> LayerView<'a> {
+    fn n_dims(&self) -> usize {
+        self.dims.len() / 4
     }
-    let body = &raw[4..raw.len() - 4];
-    let crc_stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
-    if crc32fast::hash(body) != crc_stored {
-        return Err(Error::Format("dcb crc mismatch".into()));
+
+    fn dims_iter(&self) -> impl Iterator<Item = usize> + 'a {
+        let dims = self.dims;
+        dims.chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
     }
-    let mut pos = 0usize;
-    macro_rules! take {
-        ($n:expr) => {{
-            if pos + $n > body.len() {
-                return Err(Error::Format("dcb truncated".into()));
-            }
-            let s = &body[pos..pos + $n];
-            pos += $n;
-            s
-        }};
+}
+
+fn take<'a>(body: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *pos + n > body.len() {
+        return Err(Error::Format("dcb truncated".into()));
     }
-    macro_rules! u32le {
-        () => {
-            u32::from_le_bytes(take!(4).try_into().unwrap())
-        };
-    }
-    let version = take!(1)[0];
-    if !(VERSION_V1..=VERSION_V3).contains(&version) {
-        return Err(Error::Format(format!("dcb version {version} unsupported")));
-    }
-    let model_name_len = u16::from_le_bytes(take!(2).try_into().unwrap()) as usize;
-    let model_name = String::from_utf8(take!(model_name_len).to_vec())
-        .map_err(|e| Error::Format(format!("bad model name: {e}")))?;
-    let cfg = CodingConfig {
-        max_abs_gr: u32le!(),
-        eg_contexts: u32le!(),
-    };
-    if cfg.max_abs_gr == 0 || cfg.max_abs_gr > 64 || cfg.eg_contexts > 64 {
-        return Err(Error::Format("dcb implausible coding config".into()));
-    }
-    let n_layers = u32le!() as usize;
-    let mut layers = Vec::with_capacity(n_layers.min(4096));
-    for _ in 0..n_layers {
-        let name_len = u16::from_le_bytes(take!(2).try_into().unwrap()) as usize;
-        let name = String::from_utf8(take!(name_len).to_vec())
-            .map_err(|e| Error::Format(format!("bad name: {e}")))?;
-        let kind = Kind::from_code(take!(1)[0])?;
-        let nd = take!(1)[0] as usize;
-        let mut shape = Vec::with_capacity(nd);
-        for _ in 0..nd {
-            shape.push(u32le!() as usize);
+    let s = &body[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+fn take_u16(body: &[u8], pos: &mut usize) -> Result<u16> {
+    Ok(u16::from_le_bytes(take(body, pos, 2)?.try_into().unwrap()))
+}
+
+fn take_u32(body: &[u8], pos: &mut usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(take(body, pos, 4)?.try_into().unwrap()))
+}
+
+/// Streaming container walker: validates magic + CRC + head fields on
+/// `open`, then yields one borrowed [`LayerView`] per layer — **no heap
+/// allocation anywhere** (names are validated in place as `&str`, dims and
+/// bias stay raw LE bytes).  Both the allocating [`parse_container`] and
+/// the zero-allocation [`DecodeArena`] warm path are built on this walker,
+/// so there is exactly one wire-format reader.
+struct ContainerWalker<'a> {
+    version: u8,
+    name: &'a str,
+    cfg: CodingConfig,
+    n_layers: usize,
+    body: &'a [u8],
+    pos: usize,
+    emitted: usize,
+}
+
+impl<'a> ContainerWalker<'a> {
+    fn open(raw: &'a [u8]) -> Result<Self> {
+        if raw.len() < 8 || &raw[..4] != MAGIC {
+            return Err(Error::Format("bad dcb magic".into()));
         }
-        let rows = u32le!() as usize;
-        let cols = u32le!() as usize;
-        let delta = f32::from_le_bytes(take!(4).try_into().unwrap());
-        let has_bias = take!(1)[0] != 0;
+        let body = &raw[4..raw.len() - 4];
+        let crc_stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+        if crc32fast::hash(body) != crc_stored {
+            return Err(Error::Format("dcb crc mismatch".into()));
+        }
+        let mut pos = 0usize;
+        let version = take(body, &mut pos, 1)?[0];
+        if !(VERSION_V1..=VERSION_V3).contains(&version) {
+            return Err(Error::Format(format!("dcb version {version} unsupported")));
+        }
+        let name_len = take_u16(body, &mut pos)? as usize;
+        let name = std::str::from_utf8(take(body, &mut pos, name_len)?)
+            .map_err(|e| Error::Format(format!("bad model name: {e}")))?;
+        let cfg = CodingConfig {
+            max_abs_gr: take_u32(body, &mut pos)?,
+            eg_contexts: take_u32(body, &mut pos)?,
+        };
+        if cfg.max_abs_gr == 0 || cfg.max_abs_gr > 64 || cfg.eg_contexts > 64 {
+            return Err(Error::Format("dcb implausible coding config".into()));
+        }
+        let n_layers = take_u32(body, &mut pos)? as usize;
+        Ok(Self {
+            version,
+            name,
+            cfg,
+            n_layers,
+            body,
+            pos,
+            emitted: 0,
+        })
+    }
+
+    /// The next layer's header view, or `None` once all advertised layers
+    /// were walked (at which point trailing garbage is rejected).
+    fn next_layer(&mut self) -> Result<Option<LayerView<'a>>> {
+        if self.emitted == self.n_layers {
+            if self.pos != self.body.len() {
+                return Err(Error::Format("dcb trailing garbage".into()));
+            }
+            return Ok(None);
+        }
+        let body = self.body;
+        let pos = &mut self.pos;
+        let name_len = take_u16(body, pos)? as usize;
+        let name = std::str::from_utf8(take(body, pos, name_len)?)
+            .map_err(|e| Error::Format(format!("bad name: {e}")))?;
+        let kind_code = take(body, pos, 1)?[0];
+        let nd = take(body, pos, 1)?[0] as usize;
+        let dims = take(body, pos, nd * 4)?;
+        let rows = take_u32(body, pos)? as usize;
+        let cols = take_u32(body, pos)? as usize;
+        let delta = f32::from_le_bytes(take(body, pos, 4)?.try_into().unwrap());
+        let has_bias = take(body, pos, 1)?[0] != 0;
         let bias = if has_bias {
-            let blen = u32le!() as usize;
-            let raw = take!(blen.saturating_mul(4));
-            Some(
-                raw.chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect(),
-            )
+            let blen = take_u32(body, pos)? as usize;
+            Some(take(body, pos, blen.saturating_mul(4))?)
         } else {
             None
         };
-        let plen = u32le!() as usize;
-        let payload = take!(plen);
-        layers.push(RawLayer {
+        let plen = take_u32(body, pos)? as usize;
+        let payload = take(body, pos, plen)?;
+        self.emitted += 1;
+        Ok(Some(LayerView {
             name,
-            kind,
-            shape,
+            kind_code,
+            dims,
             rows,
             cols,
             delta,
             bias,
             payload,
+        }))
+    }
+}
+
+/// Validate magic + CRC and walk every header field (allocating form of
+/// [`ContainerWalker`] — owned names/shapes/bias, payloads still borrowed).
+fn parse_container(raw: &[u8]) -> Result<ParsedContainer<'_>> {
+    let mut w = ContainerWalker::open(raw)?;
+    let mut layers = Vec::with_capacity(w.n_layers.min(4096));
+    while let Some(v) = w.next_layer()? {
+        layers.push(RawLayer {
+            name: v.name.to_string(),
+            kind: Kind::from_code(v.kind_code)?,
+            shape: v.dims_iter().collect(),
+            rows: v.rows,
+            cols: v.cols,
+            delta: v.delta,
+            bias: v.bias.map(|b| {
+                b.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            }),
+            payload: v.payload,
         });
     }
-    if pos != body.len() {
-        return Err(Error::Format("dcb trailing garbage".into()));
-    }
     Ok(ParsedContainer {
-        version,
-        name: model_name,
-        cfg,
+        version: w.version,
+        name: w.name.to_string(),
+        cfg: w.cfg,
         layers,
     })
 }
@@ -313,6 +416,318 @@ pub fn probe(raw: &[u8]) -> Result<ContainerProbe> {
         cfg: parsed.cfg,
         layers,
     })
+}
+
+/// One flattened fused-decode job: a byte range within the container plus
+/// the target range within its layer's `f32` plane.  Plain offsets — no
+/// borrows — so the table is rebuilt in place and reused across decodes.
+#[derive(Clone, Copy)]
+struct SliceRef {
+    layer: usize,
+    byte_off: usize,
+    byte_len: usize,
+    out_off: usize,
+    out_len: usize,
+    delta: f32,
+}
+
+/// Append one layer's fused-decode jobs to the flattened slice table —
+/// shared by the arena's warm (`prepare`) and cold (`rebuild`) paths so
+/// the slice geometry has exactly one builder.  `payload` must borrow
+/// from the container buffer `raw_base` points into.
+fn push_slice_refs(
+    slices: &mut Vec<SliceRef>,
+    layer: usize,
+    raw_base: usize,
+    payload: &[u8],
+    count: usize,
+    delta: f32,
+    sliced: bool,
+) -> Result<()> {
+    let payload_off = payload.as_ptr() as usize - raw_base;
+    if sliced {
+        let mut out_off = 0usize;
+        walk_sliced(payload, count, |off, len, n_symbols| {
+            slices.push(SliceRef {
+                layer,
+                byte_off: payload_off + off,
+                byte_len: len,
+                out_off,
+                out_len: n_symbols,
+                delta,
+            });
+            out_off += n_symbols;
+        })?;
+    } else {
+        // v1: one slice spanning the whole plane (decoded even for empty
+        // planes — the payload still carries the coder tail).
+        slices.push(SliceRef {
+            layer,
+            byte_off: payload_off,
+            byte_len: payload.len(),
+            out_off: 0,
+            out_len: count,
+            delta,
+        });
+    }
+    Ok(())
+}
+
+/// Reusable decode→inference scratch for the **fused** container decode
+/// ([`decode_network_into`]): the dequantized [`Network`] skeleton with its
+/// `f32` planes, per-worker CABAC context scratch, and the flattened slice
+/// table, all keyed by the container's identity (model name, coding
+/// config, per-layer names/kinds/shapes/bias lengths — the container
+/// *version* is not part of the key, so v1/v2/v3 streams of one model
+/// share a warm arena).
+///
+/// The first decode of a given shape is the warm-up (it allocates the
+/// skeleton and scratch); every subsequent decode of a same-shaped
+/// container reuses every buffer and performs **zero heap allocations**
+/// end to end — pinned by the counting-allocator test in
+/// `rust/tests/arena_alloc.rs`.  After a decode error the planes are in an
+/// unspecified state, but the arena itself remains valid for reuse.
+pub struct DecodeArena {
+    net: Network,
+    cfg: CodingConfig,
+    valid: bool,
+    legacy: bool,
+    slices: Vec<SliceRef>,
+    plane_ptrs: Vec<SendPtr<f32>>,
+    scratches: Vec<WeightContexts>,
+}
+
+impl Default for DecodeArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DecodeArena {
+    pub fn new() -> Self {
+        Self {
+            net: Network {
+                name: String::new(),
+                layers: Vec::new(),
+            },
+            cfg: CodingConfig::default(),
+            valid: false,
+            legacy: false,
+            slices: Vec::new(),
+            plane_ptrs: Vec::new(),
+            scratches: Vec::new(),
+        }
+    }
+
+    /// The most recently decoded network (empty before the first decode).
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// Warm-path preparation: walk `raw`'s headers against the cached
+    /// skeleton; on a full identity match, refresh biases and rebuild the
+    /// flattened slice table **without allocating**.  `Ok(false)` means
+    /// the key did not match (the caller rebuilds cold); `Err` means the
+    /// container is corrupt.
+    fn prepare(&mut self, raw: &[u8]) -> Result<bool> {
+        let mut w = ContainerWalker::open(raw)?;
+        if !self.valid
+            || w.cfg != self.cfg
+            || w.name != self.net.name
+            || w.n_layers != self.net.layers.len()
+        {
+            return Ok(false);
+        }
+        self.legacy = w.version != VERSION_V3;
+        let sliced = w.version != VERSION_V1;
+        self.slices.clear();
+        let raw_base = raw.as_ptr() as usize;
+        let mut li = 0usize;
+        while let Some(v) = w.next_layer()? {
+            let l = &mut self.net.layers[li];
+            let bias_len_match = match (&l.bias, v.bias) {
+                (None, None) => true,
+                (Some(dst), Some(src)) => dst.len() * 4 == src.len(),
+                _ => false,
+            };
+            if v.name != l.name
+                || v.kind_code != l.kind.code()
+                || v.rows != l.rows
+                || v.cols != l.cols
+                || v.n_dims() != l.shape.len()
+                || !v.dims_iter().eq(l.shape.iter().copied())
+                || !bias_len_match
+            {
+                return Ok(false);
+            }
+            if let (Some(dst), Some(src)) = (&mut l.bias, v.bias) {
+                for (d, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
+                    *d = f32::from_le_bytes(c.try_into().unwrap());
+                }
+            }
+            push_slice_refs(
+                &mut self.slices,
+                li,
+                raw_base,
+                v.payload,
+                v.rows * v.cols,
+                v.delta,
+                sliced,
+            )?;
+            li += 1;
+        }
+        Ok(true)
+    }
+
+    /// Cold path: (re)build the network skeleton from the container
+    /// headers AND the flattened slice table in one parse (allocates —
+    /// the warm-up cost `prepare` then avoids on subsequent decodes).
+    fn rebuild(&mut self, raw: &[u8]) -> Result<()> {
+        let parsed = parse_container(raw)?;
+        self.cfg = parsed.cfg;
+        self.legacy = parsed.version != VERSION_V3;
+        let sliced = parsed.version != VERSION_V1;
+        self.slices.clear();
+        let raw_base = raw.as_ptr() as usize;
+        for (li, l) in parsed.layers.iter().enumerate() {
+            // payloads are borrowed from `raw`, so the same offset
+            // arithmetic the warm path uses applies here.
+            push_slice_refs(
+                &mut self.slices,
+                li,
+                raw_base,
+                l.payload,
+                l.rows * l.cols,
+                l.delta,
+                sliced,
+            )?;
+        }
+        self.net = Network {
+            name: parsed.name,
+            layers: parsed
+                .layers
+                .into_iter()
+                .map(|l| Layer {
+                    weights: vec![0.0; l.rows * l.cols],
+                    name: l.name,
+                    kind: l.kind,
+                    shape: l.shape,
+                    rows: l.rows,
+                    cols: l.cols,
+                    fisher: None,
+                    hessian: None,
+                    bias: l.bias,
+                })
+                .collect(),
+        };
+        self.scratches.clear();
+        self.valid = true;
+        Ok(())
+    }
+
+    /// Fan the prepared slice table out over the pool, decoding each slice
+    /// with the fused dequant kernel straight into the skeleton's planes.
+    fn decode_planes(&mut self, pool: &Pool, raw: &[u8], threads: usize) -> Result<()> {
+        let DecodeArena {
+            net,
+            cfg,
+            legacy,
+            slices,
+            plane_ptrs,
+            scratches,
+            ..
+        } = self;
+        plane_ptrs.clear();
+        plane_ptrs.extend(net.layers.iter_mut().map(|l| SendPtr(l.weights.as_mut_ptr())));
+        let n = slices.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let threads = threads.max(1).min(n);
+        while scratches.len() < threads {
+            scratches.push(WeightContexts::new(*cfg));
+        }
+        let legacy = *legacy;
+        let cursor = AtomicUsize::new(0);
+        let first_err: Mutex<Option<Error>> = Mutex::new(None);
+        let scratch_base = SendPtr(scratches.as_mut_ptr());
+        let slices = &*slices;
+        let plane_ptrs = &*plane_ptrs;
+        let work = |widx: usize| {
+            // SAFETY: worker indices are unique within one fan-out, so each
+            // scratch slot has exactly one user; `scratches` outlives the
+            // blocking fan-out.
+            let ctxs = unsafe { &mut *scratch_base.0.add(widx) };
+            loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let s = slices[i];
+                let bytes = &raw[s.byte_off..s.byte_off + s.byte_len];
+                // SAFETY: the slice table partitions every plane into
+                // disjoint [out_off, out_off + out_len) ranges and each
+                // index is claimed exactly once, so no two &mut overlap.
+                let out = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        plane_ptrs[s.layer].0.add(s.out_off),
+                        s.out_len,
+                    )
+                };
+                let r = if legacy {
+                    decode_layer_dequant_into::<true>(bytes, ctxs, s.delta, out)
+                } else {
+                    decode_layer_dequant_into::<false>(bytes, ctxs, s.delta, out)
+                };
+                if let Err(e) = r {
+                    let mut g = first_err.lock().unwrap();
+                    if g.is_none() {
+                        *g = Some(e);
+                    }
+                }
+            }
+        };
+        if threads <= 1 {
+            work(0);
+        } else {
+            pool.run(threads, work);
+        }
+        match first_err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Fused decode→inference: CABAC-decode a serialized `.dcb` container
+/// straight into the arena's dequantized `f32` planes — one pass per
+/// symbol, **no intermediate `i32` plane** — fanning slices (across all
+/// layers) over the persistent worker [`Pool::global`].  Reads exactly the
+/// wire format [`CompressedNetwork::from_bytes_with`] reads (all three
+/// container versions; no format change), and returns the reconstructed
+/// network borrowed from the arena.  Steady-state decodes of same-shaped
+/// containers through a warmed arena allocate nothing.
+pub fn decode_network_into<'a>(
+    raw: &[u8],
+    threads: usize,
+    arena: &'a mut DecodeArena,
+) -> Result<&'a Network> {
+    decode_network_into_on(Pool::global(), raw, threads, arena)
+}
+
+/// [`decode_network_into`] on an explicit (injected) worker pool.
+pub fn decode_network_into_on<'a>(
+    pool: &Pool,
+    raw: &[u8],
+    threads: usize,
+    arena: &'a mut DecodeArena,
+) -> Result<&'a Network> {
+    if !arena.prepare(raw)? {
+        // Cold: one parse builds the skeleton AND the slice table.
+        arena.rebuild(raw)?;
+    }
+    arena.decode_planes(pool, raw, threads)?;
+    Ok(&arena.net)
 }
 
 impl CompressedNetwork {
@@ -346,16 +761,27 @@ impl CompressedNetwork {
                     .collect(),
             ),
         };
+        // Sliced chunks get estimator-seeded output capacities (fresh-table
+        // hints are bin-format agnostic at p0 = 0.5, so one table set serves
+        // v2's legacy bins too); v1's whole-layer payloads keep the generic
+        // heuristic — a monolithic hint would scan the full plane twice for
+        // a single allocation.
+        let hints = (policy.version != VERSION_V1).then(|| hint_tables(cfg));
         let coded = parallel_map_with(
             &chunks,
             policy.threads,
             || WeightContexts::new(cfg),
-            |ctxs, ints| {
-                if legacy {
-                    encode_layer_legacy_with(ints, ctxs)
-                } else {
-                    encode_layer_with(ints, ctxs)
+            |ctxs, ints| match &hints {
+                Some(h) => {
+                    let cap = slice_cap(Some(h), ints, slice_len);
+                    if legacy {
+                        encode_layer_legacy_with_cap(ints, ctxs, cap)
+                    } else {
+                        encode_layer_with_cap(ints, ctxs, cap)
+                    }
                 }
+                // v1 payloads are always legacy-bin
+                None => encode_layer_legacy_with(ints, ctxs),
             },
         );
         match per_layer {
@@ -440,7 +866,7 @@ impl CompressedNetwork {
             .iter()
             .map(|l| vec![0i32; l.rows * l.cols])
             .collect();
-        let mut jobs: Vec<SliceDecodeJob<'_, '_>> = Vec::new();
+        let mut jobs: Vec<SliceDecodeJob<'_, '_, i32>> = Vec::new();
         for (l, plane) in parsed.layers.iter().zip(planes.iter_mut()) {
             // v1 is "one slice spanning the whole plane"; v2/v3 get their
             // slice table from the payload framing.
@@ -498,6 +924,59 @@ impl CompressedNetwork {
             name: name.into(),
             layers: self.layers.iter().map(QuantizedLayer::to_layer).collect(),
         }
+    }
+
+    /// [`Self::reconstruct_named`] into arena-owned planes: dequantizes
+    /// every layer in place ([`QuantizedLayer::dequantize_into`]) instead
+    /// of allocating fresh `f32` planes per call.  Like the fused byte
+    /// path, the first call against a given shape builds the skeleton and
+    /// subsequent same-shaped calls allocate nothing.  For callers that
+    /// hold serialized bytes rather than decoded ints, prefer
+    /// [`decode_network_into`], which additionally skips the intermediate
+    /// `i32` planes.
+    pub fn reconstruct_into<'a>(&self, arena: &'a mut DecodeArena) -> &'a Network {
+        let matches = arena.valid
+            && arena.cfg == self.cfg
+            && arena.net.name == self.name
+            && arena.net.layers.len() == self.layers.len()
+            && arena.net.layers.iter().zip(&self.layers).all(|(l, q)| {
+                l.name == q.name
+                    && l.kind == q.kind
+                    && l.shape == q.shape
+                    && l.rows == q.rows
+                    && l.cols == q.cols
+                    && l.bias.as_ref().map(Vec::len) == q.bias.as_ref().map(Vec::len)
+            });
+        if !matches {
+            arena.cfg = self.cfg;
+            arena.net = Network {
+                name: self.name.clone(),
+                layers: self
+                    .layers
+                    .iter()
+                    .map(|q| Layer {
+                        name: q.name.clone(),
+                        kind: q.kind,
+                        shape: q.shape.clone(),
+                        rows: q.rows,
+                        cols: q.cols,
+                        weights: vec![0.0; q.rows * q.cols],
+                        fisher: None,
+                        hessian: None,
+                        bias: q.bias.clone(),
+                    })
+                    .collect(),
+            };
+            arena.scratches.clear();
+            arena.valid = true;
+        }
+        for (l, q) in arena.net.layers.iter_mut().zip(&self.layers) {
+            q.dequantize_into(&mut l.weights);
+            if let (Some(dst), Some(src)) = (&mut l.bias, &q.bias) {
+                dst.copy_from_slice(src);
+            }
+        }
+        &arena.net
     }
 
     pub fn param_count(&self) -> usize {
@@ -714,6 +1193,125 @@ mod tests {
         bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
         let err = CompressedNetwork::from_bytes(&bytes).unwrap_err();
         assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn fused_arena_decode_matches_two_pass_for_all_versions() {
+        let net = sample();
+        let mut arena = DecodeArena::new();
+        for policy in [
+            ContainerPolicy::v1(),
+            ContainerPolicy::v2(100, 2),
+            ContainerPolicy::v3(100, 2),
+            ContainerPolicy::default(),
+        ] {
+            let bytes = net.to_bytes_with(policy);
+            let expected = CompressedNetwork::from_bytes(&bytes).unwrap().reconstruct_named();
+            for threads in [1usize, 4] {
+                let got = decode_network_into(&bytes, threads, &mut arena).unwrap();
+                assert_eq!(got.name, expected.name);
+                assert_eq!(got.layers.len(), expected.layers.len());
+                for (a, b) in got.layers.iter().zip(&expected.layers) {
+                    assert_eq!(a.weights, b.weights, "v{} threads={threads}", policy.version);
+                    assert_eq!(a.bias, b.bias);
+                    assert_eq!(a.shape, b.shape);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_reuse_across_networks_never_leaks_stale_planes() {
+        // Same-shape reuse (warm path) AND different-shape reuse (cold
+        // rebuild): either way the planes must equal the two-pass decode of
+        // the *current* container exactly — no stale contents survive.
+        let mut rng = Pcg64::new(77);
+        let dense = |name: &str, rows: usize, cols: usize, rng: &mut Pcg64| QuantizedLayer {
+            name: name.into(),
+            kind: Kind::Dense,
+            shape: vec![cols, rows],
+            rows,
+            cols,
+            ints: (0..rows * cols).map(|_| rng.below(9) as i32 - 4).collect(),
+            delta: 0.5,
+            bias: None,
+        };
+        let a = CompressedNetwork {
+            name: "net_a".into(),
+            cfg: CodingConfig::default(),
+            layers: vec![dense("l0", 20, 30, &mut rng), dense("l1", 10, 10, &mut rng)],
+        };
+        // b: same shapes as a (warm reuse) but different values (all zero)
+        let mut b = a.clone();
+        for l in &mut b.layers {
+            for v in &mut l.ints {
+                *v = 0;
+            }
+        }
+        // c: different shape entirely (cold rebuild, smaller planes)
+        let c = CompressedNetwork {
+            name: "net_c".into(),
+            cfg: CodingConfig::default(),
+            layers: vec![dense("only", 5, 7, &mut rng)],
+        };
+        let mut arena = DecodeArena::new();
+        for net in [&a, &b, &c, &a] {
+            let bytes = net.to_bytes_with(ContainerPolicy::v3(64, 2));
+            let expected = CompressedNetwork::from_bytes(&bytes).unwrap().reconstruct_named();
+            let got = decode_network_into(&bytes, 2, &mut arena).unwrap();
+            assert_eq!(got.layers.len(), expected.layers.len());
+            for (x, y) in got.layers.iter().zip(&expected.layers) {
+                assert_eq!(x.weights, y.weights, "net {}", net.name);
+            }
+        }
+    }
+
+    #[test]
+    fn arena_rejects_corrupt_containers_like_two_pass() {
+        let net = sample();
+        let mut bytes = net.to_bytes_with(ContainerPolicy::default());
+        let mut arena = DecodeArena::new();
+        decode_network_into(&bytes, 2, &mut arena).unwrap(); // warm
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        assert!(decode_network_into(&bytes, 2, &mut arena).is_err());
+        assert!(decode_network_into(b"nonsense", 2, &mut arena).is_err());
+        // arena still usable after errors
+        let good = net.to_bytes_with(ContainerPolicy::default());
+        let got = decode_network_into(&good, 2, &mut arena).unwrap();
+        assert_eq!(got.layers.len(), net.layers.len());
+    }
+
+    #[test]
+    fn dequantize_into_matches_dequantize() {
+        let net = sample();
+        for l in &net.layers {
+            let mut out = vec![f32::NAN; l.ints.len()];
+            l.dequantize_into(&mut out);
+            assert_eq!(out, l.dequantize());
+        }
+    }
+
+    #[test]
+    fn reconstruct_into_matches_reconstruct_named() {
+        let net = sample();
+        let expected = net.reconstruct_named();
+        let mut arena = DecodeArena::new();
+        let got = net.reconstruct_into(&mut arena);
+        assert_eq!(got.name, expected.name);
+        for (a, b) in got.layers.iter().zip(&expected.layers) {
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.bias, b.bias);
+        }
+        // warm second pass over the same arena
+        let got = net.reconstruct_into(&mut arena);
+        assert_eq!(got.layers[0].weights, expected.layers[0].weights);
+        // and the same arena interoperates with the fused byte path
+        let bytes = net.to_bytes_with(ContainerPolicy::default());
+        let got = decode_network_into(&bytes, 2, &mut arena).unwrap();
+        for (a, b) in got.layers.iter().zip(&expected.layers) {
+            assert_eq!(a.weights, b.weights);
+        }
     }
 
     #[test]

@@ -14,12 +14,21 @@ use std::thread::JoinHandle;
 use super::eval::Evaluator;
 use super::pjrt::Engine;
 use crate::data::Dataset;
-use crate::model::Network;
+use crate::model::{decode_network_into, DecodeArena, Network};
 use crate::util::{Error, Result};
 
 enum Request {
     Accuracy {
         net: Box<Network>,
+        reply: mpsc::Sender<Result<f64>>,
+    },
+    /// Score a serialized `.dcb` container: the runtime thread decodes it
+    /// through its persistent [`DecodeArena`] (fused bytes→floats, zero
+    /// steady-state allocation for same-shaped models) and evaluates the
+    /// arena-resident network — the inference-from-compressed request
+    /// shape.
+    AccuracyCompressed {
+        bytes: Vec<u8>,
         reply: mpsc::Sender<Result<f64>>,
     },
     RdAssign {
@@ -82,10 +91,26 @@ impl EvalService {
                         return;
                     }
                 };
+                // Persistent fused-decode arena: repeated scoring of
+                // same-shaped containers decodes allocation-free, and the
+                // model becomes eval-thread-resident in one pass.
+                let mut arena = DecodeArena::new();
                 while let Ok(req) = rx.recv() {
                     match req {
                         Request::Accuracy { net, reply } => {
                             let _ = reply.send(evaluator.accuracy(&net));
+                        }
+                        Request::AccuracyCompressed { bytes, reply } => {
+                            // Serial decode by design: grid-search workers
+                            // block on this thread's replies while they may
+                            // hold the shared worker pool, so borrowing the
+                            // pool here could deadlock against them.  The
+                            // fused zero-allocation path is the win on this
+                            // thread; fan-out belongs to the caller's side.
+                            let _ = reply.send(
+                                decode_network_into(&bytes, 1, &mut arena)
+                                    .and_then(|net| evaluator.accuracy(net)),
+                            );
                         }
                         Request::RdAssign {
                             w,
@@ -138,6 +163,38 @@ impl EvalService {
                 let (reply, rx) = mpsc::channel();
                 tx.send(Request::Accuracy {
                     net: Box::new(net.clone()),
+                    reply,
+                })
+                .map_err(|_| Error::Config("eval service down".into()))?;
+                rx.recv()
+                    .map_err(|_| Error::Config("eval service dropped reply".into()))?
+            }
+        }
+    }
+
+    /// Blocking accuracy request on a **serialized `.dcb` container** —
+    /// the fused decode→inference path.  On the PJRT backend the runtime
+    /// thread decodes through its persistent [`DecodeArena`], so repeated
+    /// scoring of same-shaped containers allocates nothing in steady
+    /// state; the in-process backend decodes with a call-local arena
+    /// (still single-pass fused, no intermediate `i32` planes).
+    ///
+    /// A serving loop that owns the container should **move** its
+    /// `Vec<u8>` in (no copy on the way to the runtime thread); passing
+    /// `&[u8]` works too and pays one copy on the PJRT backend only (the
+    /// in-process backend decodes straight from the borrow).
+    pub fn accuracy_compressed(&self, raw: impl AsRef<[u8]> + Into<Vec<u8>>) -> Result<f64> {
+        match &self.inner {
+            Inner::Local(f) => {
+                let mut arena = DecodeArena::new();
+                let threads = crate::util::parallel::default_threads();
+                let net = decode_network_into(raw.as_ref(), threads, &mut arena)?;
+                f(net)
+            }
+            Inner::Pjrt(tx) => {
+                let (reply, rx) = mpsc::channel();
+                tx.send(Request::AccuracyCompressed {
+                    bytes: raw.into(),
                     reply,
                 })
                 .map_err(|_| Error::Config("eval service down".into()))?;
@@ -205,5 +262,41 @@ mod tests {
             s.spawn(move || assert_eq!(c.accuracy(&net).unwrap(), 0.0));
         });
         assert!(svc.rd_assign(&[0.0], &[1.0], 0.1, 0.0, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn accuracy_compressed_matches_two_pass_reconstruction() {
+        use crate::model::{CompressedNetwork, ContainerPolicy, Kind, QuantizedLayer};
+        let comp = CompressedNetwork {
+            name: "svc".into(),
+            cfg: crate::cabac::CodingConfig::default(),
+            layers: vec![QuantizedLayer {
+                name: "fc".into(),
+                kind: Kind::Dense,
+                shape: vec![4, 3],
+                rows: 3,
+                cols: 4,
+                ints: vec![0, 1, -2, 0, 5, 0, -1, 3, 0, 0, 2, -4],
+                delta: 0.25,
+                bias: None,
+            }],
+        };
+        let bytes = comp.to_bytes_with(ContainerPolicy::default());
+        // oracle: mean |w| — sensitive to every decoded value
+        let svc = EvalService::from_fn(|net: &Network| {
+            let (mut s, mut n) = (0f64, 0usize);
+            for l in &net.layers {
+                n += l.weights.len();
+                s += l.weights.iter().map(|w| w.abs() as f64).sum::<f64>();
+            }
+            Ok(s / n.max(1) as f64)
+        });
+        let direct = svc.accuracy(&comp.reconstruct_named()).unwrap();
+        // borrowed form (pays a copy) and moved form must agree
+        let fused = svc.accuracy_compressed(&bytes[..]).unwrap();
+        assert_eq!(fused, direct);
+        assert_eq!(svc.accuracy_compressed(bytes).unwrap(), direct);
+        // corrupt container surfaces as Err, not a panic
+        assert!(svc.accuracy_compressed(&b"garbage"[..]).is_err());
     }
 }

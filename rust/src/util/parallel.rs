@@ -1,26 +1,395 @@
-//! Minimal work-stealing-ish parallel map over an item list.
+//! Persistent worker pool + parallel primitives over an item list.
 //!
 //! (tokio/rayon are not in the offline vendor set — DESIGN.md §6.  A shared
 //! atomic cursor over an immutable slice gives the same load-balancing
 //! behaviour for our coarse-grained items: grid-search candidates, DCB2
 //! container slices, per-layer payloads.)
 //!
+//! Earlier revisions spawned `threads` OS threads per call via
+//! `std::thread::scope` and collected results through a `Mutex<Vec<_>>`.
+//! Both are gone: a [`Pool`] of **parked worker threads** (lazily grown, one
+//! process-wide instance behind [`Pool::global`], injectable instances via
+//! [`Pool::new`]) executes every fan-out, and results land in pre-split
+//! disjoint output slots — each worker writes the slot of the index it
+//! claimed, so there is no per-item lock at all.  Repeated fan-outs (the
+//! steady-state decode→inference path, sliced RDOQ, grid-search candidates)
+//! therefore pay zero thread spawns and zero result-collection locking.
+//!
+//! Nested fan-outs are safe by construction: a `Pool::run` issued *from* a
+//! pool worker executes inline on that worker (serial), which both avoids
+//! deadlocking the fixed worker set against itself and matches the
+//! coordinator's policy of clamping inner fan-outs to one thread.
+//!
 //! Lives in `util` so both `cabac`/`model` (slice fan-out) and
 //! `coordinator` (candidate fan-out) can use it without a layering cycle;
 //! `coordinator::parallel` re-exports this module for path stability.
 
+use std::cell::{Cell, UnsafeCell};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Default worker-thread count: all cores, capped at 16.
+/// Hard cap on pool workers and on any single fan-out's concurrency — a
+/// runaway-`threads` backstop, far above the core counts we target.
+pub const MAX_POOL_WORKERS: usize = 64;
+
+/// Default worker-thread count: all cores, capped at 16 — unless the
+/// `DCB_THREADS` environment variable overrides it (a positive integer;
+/// anything unparsable falls back to the hardware default).  CI runners and
+/// serving deployments use the override to pin the pool without code
+/// changes.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
+    let hw = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
-        .min(16)
+        .min(16);
+    match std::env::var("DCB_THREADS") {
+        Ok(v) => parse_thread_override(&v).unwrap_or(hw),
+        Err(_) => hw,
+    }
 }
 
-/// Apply `f` to every item on `threads` OS threads; results keep item order.
+/// Parse a `DCB_THREADS`-style override: `Some(n)` for a positive integer
+/// (clamped to [`MAX_POOL_WORKERS`]), `None` for empty/zero/garbage input —
+/// the caller falls back to the hardware default.  Split out of
+/// [`default_threads`] so the fallback path is unit-testable without
+/// mutating process-global environment state.
+pub fn parse_thread_override(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n.min(MAX_POOL_WORKERS)),
+        _ => None,
+    }
+}
+
+thread_local! {
+    /// True on pool worker threads — a nested `run` executes inline instead
+    /// of deadlocking the fixed worker set against itself.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Lifetime-erased broadcast job: a thin data pointer plus a monomorphized
+/// trampoline that calls the original closure.  Valid only while the
+/// submitting [`Pool::run`] is blocked (it never returns before every
+/// worker has finished with the job).
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    concurrency: usize,
+}
+
+// SAFETY: the pointee is a `Sync` closure borrowed by the submitter, which
+// blocks until all workers are done with it.
+unsafe impl Send for Job {}
+
+unsafe fn call_job<F: Fn(usize) + Sync>(data: *const (), idx: usize) {
+    let f = &*(data as *const F);
+    f(idx);
+}
+
+struct State {
+    /// Bumped per published job; workers run each generation exactly once.
+    seq: u64,
+    job: Option<Job>,
+    /// Workers that have not yet finished the current generation.
+    remaining: usize,
+    /// First worker panic of the current generation (re-thrown by `run`).
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+    workers: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The submitter parks here until `remaining == 0`.
+    done_cv: Condvar,
+}
+
+/// A persistent worker pool: threads are spawned lazily (up to the largest
+/// concurrency ever requested, capped at [`MAX_POOL_WORKERS`]) and parked
+/// between fan-outs, so steady-state parallel work pays no spawn cost.
+///
+/// One job runs at a time **per pool** (submissions serialize; only the
+/// first `concurrency` workers participate in — and synchronize — a job).
+/// Independent tenants that need overlapping fan-outs (e.g. two serving
+/// threads decoding concurrently) should each inject their own instance
+/// via [`Pool::new`] instead of sharing [`Pool::global`] — the in-repo
+/// pipeline is single-tenant (one search / one CLI verb at a time), so
+/// the global pool serializing its fan-outs costs nothing there.
+/// A worker panic is captured and re-thrown by [`Pool::run`] on the
+/// submitting thread after the fan-out joins — the same observable
+/// behaviour as the old `std::thread::scope` implementation.
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Serializes job submissions (one broadcast at a time).
+    submit: Mutex<()>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+fn worker_loop(shared: &Shared, idx: usize, start_seq: u64) {
+    IN_POOL.set(true);
+    let mut last_seq = start_seq;
+    loop {
+        let job = {
+            let mut g = shared.state.lock().unwrap();
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                if g.seq != last_seq {
+                    last_seq = g.seq;
+                    // `None` here means a generation this (non-participant)
+                    // worker slept through was already completed and
+                    // cleared by its participants — nothing to do.
+                    if let Some(job) = g.job {
+                        break job;
+                    }
+                }
+                g = shared.work_cv.wait(g).unwrap();
+            }
+        };
+        // Only the first `concurrency` workers participate in (and
+        // synchronize) a job; the rest just track the generation, so a
+        // narrow fan-out on a wide pool never waits on idle workers.
+        if idx < job.concurrency {
+            // SAFETY: the submitter blocks in `run` until every
+            // participant has decremented `remaining`, so `job.data`
+            // cannot dangle here.
+            let r = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, idx) }));
+            if let Err(p) = r {
+                let mut g = shared.state.lock().unwrap();
+                if g.panic.is_none() {
+                    g.panic = Some(p);
+                }
+            }
+            let mut g = shared.state.lock().unwrap();
+            g.remaining -= 1;
+            if g.remaining == 0 {
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pool {
+    /// A new, initially empty pool; workers spawn on demand up to the
+    /// concurrency a fan-out requests (capped at [`MAX_POOL_WORKERS`]).
+    pub fn new() -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                state: Mutex::new(State {
+                    seq: 0,
+                    job: None,
+                    remaining: 0,
+                    panic: None,
+                    shutdown: false,
+                    workers: 0,
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            }),
+            submit: Mutex::new(()),
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The process-wide pool every module-level fan-out runs on.  Built on
+    /// first use and never torn down (its parked workers die with the
+    /// process).
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(Pool::new)
+    }
+
+    fn ensure_workers(&self, want: usize) {
+        let want = want.min(MAX_POOL_WORKERS);
+        let mut g = self.shared.state.lock().unwrap();
+        while g.workers < want {
+            let idx = g.workers;
+            let start_seq = g.seq;
+            let shared = Arc::clone(&self.shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("dcb-pool-{idx}"))
+                .spawn(move || worker_loop(&shared, idx, start_seq))
+                .expect("failed to spawn pool worker");
+            self.handles.lock().unwrap().push(handle);
+            g.workers += 1;
+        }
+    }
+
+    /// Run `f(worker_index)` on up to `concurrency` pool workers and block
+    /// until all of them return.  `f` typically loops over an atomic cursor
+    /// claiming items — see [`Pool::map_with`].  With `concurrency <= 1`,
+    /// or when called from inside a pool worker (nested fan-out), `f(0)`
+    /// runs inline on the calling thread.
+    pub fn run<F>(&self, concurrency: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let concurrency = concurrency.clamp(1, MAX_POOL_WORKERS);
+        if concurrency <= 1 || IN_POOL.get() {
+            f(0);
+            return;
+        }
+        let submit = self.submit.lock().unwrap();
+        self.ensure_workers(concurrency);
+        let job = Job {
+            data: &f as *const F as *const (),
+            call: call_job::<F>,
+            concurrency,
+        };
+        {
+            let mut g = self.shared.state.lock().unwrap();
+            g.seq = g.seq.wrapping_add(1);
+            // Only participants (idx < concurrency) check in; ensure_workers
+            // guaranteed at least that many exist.
+            g.remaining = concurrency;
+            g.job = Some(job);
+            self.shared.work_cv.notify_all();
+        }
+        let mut g = self.shared.state.lock().unwrap();
+        while g.remaining > 0 {
+            g = self.shared.done_cv.wait(g).unwrap();
+        }
+        g.job = None;
+        let panic = g.panic.take();
+        drop(g);
+        drop(submit);
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+    }
+
+    /// [`parallel_map_with`] on this pool instance.
+    pub fn map_with<T, S, R, I, F>(&self, items: &[T], threads: usize, init: I, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, &T) -> R + Sync,
+    {
+        let threads = threads.max(1).min(items.len().max(1));
+        if threads <= 1 {
+            let mut scratch = init();
+            return items.iter().map(|t| f(&mut scratch, t)).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let slots = OutSlots::new(items.len());
+        self.run(threads, |_| {
+            let mut scratch = init();
+            loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&mut scratch, &items[i]);
+                // SAFETY: index i was claimed by exactly this worker (the
+                // atomic cursor hands each index out once), so the slot
+                // write is unaliased; `run` joins before slots are read.
+                unsafe { slots.put(i, r) };
+            }
+        });
+        slots.take()
+    }
+
+    /// [`parallel_for_each_mut_with`] on this pool instance.
+    pub fn for_each_mut_with<T, S, I, F>(&self, items: &mut [T], threads: usize, init: I, f: F)
+    where
+        T: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, &mut T) + Sync,
+    {
+        let threads = threads.max(1).min(items.len().max(1));
+        if threads <= 1 {
+            let mut scratch = init();
+            for item in items.iter_mut() {
+                f(&mut scratch, item);
+            }
+            return;
+        }
+        let n = items.len();
+        let base = SendPtr(items.as_mut_ptr());
+        let cursor = AtomicUsize::new(0);
+        self.run(threads, |_| {
+            let mut scratch = init();
+            loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: each index is claimed exactly once, so the &mut
+                // items never alias; `items` outlives the blocking `run`.
+                let item = unsafe { &mut *base.0.add(i) };
+                f(&mut scratch, item);
+            }
+        });
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.state.lock().unwrap();
+            g.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw-pointer wrapper asserting cross-thread shareability for
+/// disjoint-index writers (each index touched by exactly one claimant).
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+// SAFETY: callers guarantee disjoint element access (unique cursor claims),
+// so handing the pointer to multiple threads cannot create aliasing &muts.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Positional result slots written lock-free by disjoint claimants —
+/// replaces the old `Mutex<Vec<Option<R>>>` collection.
+struct OutSlots<R> {
+    cells: Vec<UnsafeCell<Option<R>>>,
+}
+
+// SAFETY: each cell is written by exactly one worker (unique cursor claim)
+// and only read after the fan-out joins; on a worker panic the filled
+// `Option`s drop normally with the Vec.
+unsafe impl<R: Send> Sync for OutSlots<R> {}
+
+impl<R> OutSlots<R> {
+    fn new(n: usize) -> Self {
+        Self {
+            cells: (0..n).map(|_| UnsafeCell::new(None)).collect(),
+        }
+    }
+
+    /// SAFETY: `i` must be claimed by exactly one caller, before `take`.
+    unsafe fn put(&self, i: usize, r: R) {
+        *self.cells[i].get() = Some(r);
+    }
+
+    fn take(self) -> Vec<R> {
+        self.cells
+            .into_iter()
+            .map(|c| c.into_inner().expect("fan-out joined with an unfilled slot"))
+            .collect()
+    }
+}
+
+/// Apply `f` to every item on up to `threads` pool workers; results keep
+/// item order.
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -30,10 +399,11 @@ where
     parallel_map_with(items, threads, || (), |_, t| f(t))
 }
 
-/// [`parallel_map`] with per-worker scratch state: each worker thread calls
-/// `init()` once and threads the result through every item it claims.  The
-/// codec fan-outs use this to reuse context tables and decode buffers
-/// across the thousands of slices one container decode visits.
+/// [`parallel_map`] with per-worker scratch state: each participating
+/// worker calls `init()` once per fan-out and threads the result through
+/// every item it claims.  The codec fan-outs use this to reuse context
+/// tables and decode buffers across the thousands of slices one container
+/// decode visits.  Runs on [`Pool::global`].
 pub fn parallel_map_with<T, S, R, I, F>(items: &[T], threads: usize, init: I, f: F) -> Vec<R>
 where
     T: Sync,
@@ -41,79 +411,28 @@ where
     I: Fn() -> S + Sync,
     F: Fn(&mut S, &T) -> R + Sync,
 {
-    let threads = threads.max(1).min(items.len().max(1));
-    if threads <= 1 {
-        let mut scratch = init();
-        return items.iter().map(|t| f(&mut scratch, t)).collect();
-    }
-    let cursor = AtomicUsize::new(0);
-    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| {
-                let mut scratch = init();
-                loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= items.len() {
-                        break;
-                    }
-                    let r = f(&mut scratch, &items[i]);
-                    out.lock().unwrap()[i] = Some(r);
-                }
-            });
-        }
-    });
-    out.into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("worker panicked before storing result"))
-        .collect()
+    Pool::global().map_with(items, threads, init, f)
 }
 
-/// Run `f` over every item **in place** (`&mut T`) on `threads` workers,
-/// with per-worker scratch.  This is the decode fan-out shape: each item
-/// owns a disjoint `&mut [i32]` chunk of a pre-allocated layer buffer, so
-/// results land directly where they belong instead of being collected and
-/// re-appended.  Items are claimed via an atomic cursor; the per-item
-/// mutex is uncontended (exactly one claimant) and costs one lock per
-/// multi-thousand-symbol slice.
+/// Run `f` over every item **in place** (`&mut T`) on up to `threads` pool
+/// workers, with per-worker scratch.  This is the decode fan-out shape:
+/// each item owns a disjoint `&mut [i32]` chunk of a pre-allocated layer
+/// buffer, so results land directly where they belong.  Items are claimed
+/// via an atomic cursor and written through disjoint-slot ownership — no
+/// per-item lock.
 pub fn parallel_for_each_mut_with<T, S, I, F>(items: &mut [T], threads: usize, init: I, f: F)
 where
     T: Send,
     I: Fn() -> S + Sync,
     F: Fn(&mut S, &mut T) + Sync,
 {
-    let threads = threads.max(1).min(items.len().max(1));
-    if threads <= 1 {
-        let mut scratch = init();
-        for item in items.iter_mut() {
-            f(&mut scratch, item);
-        }
-        return;
-    }
-    let n = items.len();
-    let cells: Vec<Mutex<&mut T>> = items.iter_mut().map(Mutex::new).collect();
-    let cursor = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| {
-                let mut scratch = init();
-                loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let mut item = cells[i].lock().unwrap();
-                    f(&mut scratch, &mut **item);
-                }
-            });
-        }
-    });
+    Pool::global().for_each_mut_with(items, threads, init, f)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Pcg64;
 
     #[test]
     fn preserves_order() {
@@ -196,8 +515,9 @@ mod tests {
 
     #[test]
     fn actually_parallel() {
-        // All threads must make progress concurrently: with 4 threads and
-        // 4 barrier-waiting items, completion implies true parallelism.
+        // All participants must make progress concurrently: with 4 workers
+        // and 4 barrier-waiting items, completion implies true parallelism
+        // (a worker blocked on the barrier cannot claim a second item).
         use std::sync::Barrier;
         let barrier = Barrier::new(4);
         let items = [0; 4];
@@ -206,5 +526,122 @@ mod tests {
             1
         });
         assert_eq!(out.iter().sum::<i32>(), 4);
+    }
+
+    #[test]
+    fn pool_reused_across_runs_and_concurrencies() {
+        // The same global pool must serve many fan-outs of varying widths
+        // (workers grow monotonically, parked between runs).
+        for threads in [2usize, 8, 3, 16, 1, 5] {
+            let items: Vec<usize> = (0..threads * 13).collect();
+            let out = parallel_map(&items, threads, |&x| x + 7);
+            assert_eq!(out, items.iter().map(|x| x + 7).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn injectable_pool_instance_works_and_shuts_down() {
+        let pool = Pool::new();
+        let items: Vec<usize> = (0..50).collect();
+        let out = pool.map_with(&items, 4, || (), |_, &x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+        drop(pool); // joins its workers without hanging
+    }
+
+    #[test]
+    fn prop_pool_map_matches_serial_reference() {
+        // Property: for random sizes, thread counts and per-worker scratch,
+        // the pooled map equals the serial reference in content AND order —
+        // the contract the old Mutex-collected implementation provided.
+        let mut rng = Pcg64::new(0x9001);
+        for trial in 0..25 {
+            let n = rng.below(400) as usize;
+            let threads = 1 + rng.below(9) as usize;
+            let items: Vec<i64> = (0..n).map(|_| rng.below(1000) as i64 - 500).collect();
+            let expect: Vec<i64> = items.iter().map(|&x| x * 3 - 1).collect();
+            let got = parallel_map_with(
+                &items,
+                threads,
+                || 0i64,
+                |acc, &x| {
+                    *acc += 1; // scratch is per-worker state, result is not
+                    x * 3 - 1
+                },
+            );
+            assert_eq!(got, expect, "trial {trial} n={n} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        // Old behaviour (std::thread::scope): a panicking worker propagates
+        // its payload to the submitter after the join.  The pool must do
+        // the same — and stay usable afterwards.
+        let items: Vec<usize> = (0..64).collect();
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(&items, 4, |&x| {
+                if x == 13 {
+                    panic!("boom");
+                }
+                x
+            })
+        }));
+        assert!(r.is_err(), "worker panic must reach the submitter");
+        let ok = parallel_map(&items, 4, |&x| x + 1);
+        assert_eq!(ok, (1..65).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn for_each_mut_panic_propagates() {
+        let mut items: Vec<usize> = (0..32).collect();
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            parallel_for_each_mut_with(
+                &mut items,
+                4,
+                || (),
+                |_, x| {
+                    if *x == 7 {
+                        panic!("boom");
+                    }
+                    *x += 1;
+                },
+            );
+        }));
+        assert!(r.is_err());
+        // and the pool still works
+        let out = parallel_map(&[1, 2, 3], 2, |&x| x);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn nested_fan_out_runs_inline_without_deadlock() {
+        // A parallel_map issued from inside a pool worker must fall back to
+        // inline execution (the worker set cannot wait on itself) and still
+        // produce correct, ordered results.
+        let out = parallel_map(&[1i32, 2, 3, 4], 4, |&x| {
+            parallel_map(&[x; 8], 4, |&y| y).iter().sum::<i32>()
+        });
+        assert_eq!(out, vec![8, 16, 24, 32]);
+    }
+
+    #[test]
+    fn thread_override_parsing() {
+        assert_eq!(parse_thread_override("4"), Some(4));
+        assert_eq!(parse_thread_override(" 12 "), Some(12));
+        assert_eq!(parse_thread_override("1"), Some(1));
+        // clamp to the pool cap
+        assert_eq!(parse_thread_override("9999"), Some(MAX_POOL_WORKERS));
+        // fallback cases: caller uses the hardware default
+        assert_eq!(parse_thread_override("0"), None);
+        assert_eq!(parse_thread_override(""), None);
+        assert_eq!(parse_thread_override("all"), None);
+        assert_eq!(parse_thread_override("-2"), None);
+        assert_eq!(parse_thread_override("3.5"), None);
+    }
+
+    #[test]
+    fn default_threads_is_sane() {
+        let t = default_threads();
+        assert!((1..=MAX_POOL_WORKERS).contains(&t));
     }
 }

@@ -1,0 +1,130 @@
+//! Zero-allocation pin for the fused decode path: once a `DecodeArena` is
+//! warm, repeated decodes of a same-shaped container must not touch the
+//! heap at all — serial AND pooled.
+//!
+//! A counting global allocator wraps the system one; this file deliberately
+//! holds a single `#[test]` so no sibling test thread can allocate during
+//! the measured window.  The measured quantity is the MINIMUM allocation
+//! delta over several repeats: the steady state is proven by any repeat
+//! observing zero, while stray harness activity (timers, channel wakeups)
+//! cannot produce a false PASS — only a retry.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use deepcabac::cabac::CodingConfig;
+use deepcabac::model::{
+    decode_network_into, CompressedNetwork, ContainerPolicy, DecodeArena, Kind, QuantizedLayer,
+};
+use deepcabac::util::Pcg64;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn sample_container() -> Vec<u8> {
+    let mut rng = Pcg64::new(0xA110C);
+    let mk = |name: &str, rows: usize, cols: usize, rng: &mut Pcg64| QuantizedLayer {
+        name: name.into(),
+        kind: Kind::Dense,
+        shape: vec![cols, rows],
+        rows,
+        cols,
+        ints: (0..rows * cols)
+            .map(|_| {
+                if rng.next_f64() < 0.75 {
+                    0
+                } else {
+                    rng.below(61) as i32 - 30
+                }
+            })
+            .collect(),
+        delta: 0.015625,
+        bias: Some((0..rows).map(|r| r as f32 * 0.25).collect()),
+    };
+    let net = CompressedNetwork {
+        name: "alloc_probe".into(),
+        cfg: CodingConfig::default(),
+        layers: vec![mk("fc1", 60, 200, &mut rng), mk("fc2", 25, 120, &mut rng)],
+    };
+    net.to_bytes_with(ContainerPolicy::v3(1024, 4))
+}
+
+fn min_alloc_delta(repeats: usize, mut f: impl FnMut()) -> usize {
+    let mut min_delta = usize::MAX;
+    for _ in 0..repeats {
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        f();
+        let delta = ALLOC_CALLS.load(Ordering::SeqCst) - before;
+        min_delta = min_delta.min(delta);
+    }
+    min_delta
+}
+
+#[test]
+fn warmed_arena_fused_decode_is_allocation_free() {
+    let bytes = sample_container();
+    let expected = CompressedNetwork::from_bytes(&bytes)
+        .unwrap()
+        .reconstruct_named();
+
+    let mut arena = DecodeArena::new();
+    // Warm-up: first serial decode builds the skeleton + scratch (and the
+    // global pool's OnceLock); second settles any lazily-grown capacity.
+    decode_network_into(&bytes, 1, &mut arena).unwrap();
+    decode_network_into(&bytes, 1, &mut arena).unwrap();
+
+    let serial = min_alloc_delta(5, || {
+        decode_network_into(&bytes, 1, &mut arena).unwrap();
+    });
+    assert_eq!(
+        serial, 0,
+        "steady-state serial fused decode performed {serial} heap allocations"
+    );
+
+    // Pooled path: warm once at t4 (spawns/parks the workers, grows the
+    // per-worker scratch), then the steady state must also be clean — the
+    // pool broadcasts a stack job, workers claim via an atomic cursor, and
+    // results land in the arena's preallocated planes.
+    decode_network_into(&bytes, 4, &mut arena).unwrap();
+    decode_network_into(&bytes, 4, &mut arena).unwrap();
+    let pooled = min_alloc_delta(5, || {
+        decode_network_into(&bytes, 4, &mut arena).unwrap();
+    });
+    assert_eq!(
+        pooled, 0,
+        "steady-state pooled fused decode performed {pooled} heap allocations"
+    );
+
+    // And the allocation-free planes are still the right planes.
+    let got = decode_network_into(&bytes, 4, &mut arena).unwrap();
+    assert_eq!(got.layers.len(), expected.layers.len());
+    for (a, b) in got.layers.iter().zip(&expected.layers) {
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.bias, b.bias);
+    }
+}

@@ -1,0 +1,229 @@
+//! Fused decode→inference equivalence suite.
+//!
+//! Pins the zero-allocation decode path against the classic two-pass one:
+//! `decode_layer_dequant_into` must be bit-exactly `decode_layer_into` +
+//! `dequantize()`, serial must equal pooled-parallel, the golden-vector
+//! containers must produce identical float planes through both paths (no
+//! wire change), and `DecodeArena` reuse across different networks must
+//! never leak stale plane contents.
+
+use std::path::PathBuf;
+
+use deepcabac::cabac::{
+    decode_layer_dequant_into, decode_layer_dequant_sliced_into, decode_layer_into,
+    decode_layer_into_legacy, decode_layer_sliced, encode_layer, encode_layer_legacy,
+    encode_layer_sliced, CodingConfig, WeightContexts,
+};
+use deepcabac::model::{
+    decode_network_into, decode_network_into_on, CompressedNetwork, ContainerPolicy, DecodeArena,
+    Kind, QuantizedLayer,
+};
+use deepcabac::util::parallel::Pool;
+use deepcabac::util::Pcg64;
+
+fn sparse_ints(n: usize, rng: &mut Pcg64) -> Vec<i32> {
+    (0..n)
+        .map(|_| {
+            if rng.next_f64() < 0.7 {
+                0
+            } else {
+                let m = 1 + (rng.next_f64() * rng.next_f64() * 120.0) as i32;
+                if rng.next_f64() < 0.5 {
+                    -m
+                } else {
+                    m
+                }
+            }
+        })
+        .collect()
+}
+
+fn random_network(name: &str, layer_dims: &[(usize, usize)], rng: &mut Pcg64) -> CompressedNetwork {
+    let layers = layer_dims
+        .iter()
+        .enumerate()
+        .map(|(i, &(rows, cols))| QuantizedLayer {
+            name: format!("l{i}"),
+            kind: if i % 2 == 0 { Kind::Dense } else { Kind::Conv },
+            shape: vec![cols, rows],
+            rows,
+            cols,
+            ints: sparse_ints(rows * cols, rng),
+            delta: 0.0078125 * (i + 1) as f32,
+            bias: (i % 2 == 0).then(|| (0..rows).map(|r| r as f32 * 0.125).collect()),
+        })
+        .collect();
+    CompressedNetwork {
+        name: name.into(),
+        cfg: CodingConfig::default(),
+        layers,
+    }
+}
+
+fn assert_fused_equals_two_pass(bytes: &[u8], arena: &mut DecodeArena, tag: &str) {
+    let expected = CompressedNetwork::from_bytes(bytes).unwrap().reconstruct_named();
+    for threads in [1usize, 4] {
+        let got = decode_network_into(bytes, threads, arena).unwrap();
+        assert_eq!(got.name, expected.name, "{tag}");
+        assert_eq!(got.layers.len(), expected.layers.len(), "{tag}");
+        for (a, b) in got.layers.iter().zip(&expected.layers) {
+            assert_eq!(a.name, b.name, "{tag}");
+            assert_eq!(a.weights, b.weights, "{tag} threads={threads} layer {}", a.name);
+            assert_eq!(a.bias, b.bias, "{tag}");
+            assert_eq!(a.shape, b.shape, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn layer_kernel_equals_decode_plus_dequantize_prop() {
+    // Prop corpus over sparsities, magnitudes and both bin formats: the
+    // fused plane kernel must reproduce decode_layer_into + `i * delta`
+    // bit-exactly (f32 multiplication is deterministic, so equality is
+    // exact, not approximate).
+    let mut rng = Pcg64::new(0xF05E);
+    let cfg = CodingConfig::default();
+    let mut scratch = WeightContexts::new(cfg);
+    for trial in 0..12 {
+        let n = 1 + rng.below(6000) as usize;
+        let values = sparse_ints(n, &mut rng);
+        let delta = 0.001 + rng.next_f64() as f32 * 0.1;
+        for legacy in [false, true] {
+            let bytes = if legacy {
+                encode_layer_legacy(&values, cfg)
+            } else {
+                encode_layer(&values, cfg)
+            };
+            let mut ints = vec![0i32; n];
+            let mut floats = vec![f32::NAN; n];
+            if legacy {
+                decode_layer_into_legacy(&bytes, &mut scratch, &mut ints).unwrap();
+                decode_layer_dequant_into::<true>(&bytes, &mut scratch, delta, &mut floats)
+                    .unwrap();
+            } else {
+                decode_layer_into(&bytes, &mut scratch, &mut ints).unwrap();
+                decode_layer_dequant_into::<false>(&bytes, &mut scratch, delta, &mut floats)
+                    .unwrap();
+            }
+            assert_eq!(ints, values, "trial {trial} legacy={legacy}");
+            for (&i, &f) in ints.iter().zip(&floats) {
+                assert_eq!(f, i as f32 * delta, "trial {trial} legacy={legacy}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sliced_kernel_serial_equals_pooled_parallel() {
+    let mut rng = Pcg64::new(0xF15E);
+    let cfg = CodingConfig::default();
+    let values = sparse_ints(40_000, &mut rng);
+    let delta = 0.03125f32;
+    for slice_len in [333usize, 4096] {
+        let raw = encode_layer_sliced(&values, cfg, slice_len);
+        let ints = decode_layer_sliced(&raw, values.len(), cfg, 1).unwrap();
+        let mut serial = vec![f32::NAN; values.len()];
+        decode_layer_dequant_sliced_into(&raw, cfg, delta, 1, &mut serial).unwrap();
+        for threads in [2usize, 4, 8] {
+            let mut par = vec![f32::NAN; values.len()];
+            decode_layer_dequant_sliced_into(&raw, cfg, delta, threads, &mut par).unwrap();
+            assert_eq!(par, serial, "slice_len={slice_len} threads={threads}");
+        }
+        for (&i, &f) in ints.iter().zip(&serial) {
+            assert_eq!(f, i as f32 * delta);
+        }
+    }
+}
+
+#[test]
+fn container_prop_corpus_fused_equals_two_pass() {
+    // Random networks × container policies (all three versions): the fused
+    // arena decode must equal the two-pass reference everywhere, reusing
+    // one arena across the whole corpus (constant shape churn — the
+    // stale-contents stress case).
+    let mut rng = Pcg64::new(0xF25E);
+    let mut arena = DecodeArena::new();
+    let nets = [
+        random_network("a", &[(30, 40), (17, 23)], &mut rng),
+        random_network("b", &[(8, 8)], &mut rng),
+        random_network("c", &[(30, 40), (17, 23), (5, 120)], &mut rng),
+        random_network("empty", &[], &mut rng),
+        random_network("zerolayer", &[(0, 7), (9, 11)], &mut rng),
+    ];
+    for net in &nets {
+        for policy in [
+            ContainerPolicy::v1(),
+            ContainerPolicy::v2(100, 2),
+            ContainerPolicy::v3(64, 3),
+            ContainerPolicy::default(),
+        ] {
+            let bytes = net.to_bytes_with(policy);
+            assert_fused_equals_two_pass(
+                &bytes,
+                &mut arena,
+                &format!("net {} v{}", net.name, policy.version),
+            );
+        }
+    }
+}
+
+#[test]
+fn arena_reuse_across_networks_matches_fresh_arena() {
+    // A warmed arena (same shapes, different payloads) and a cold-rebuilt
+    // arena (different shapes) must both equal a fresh-arena decode: no
+    // stale plane contents, no stale slice tables.
+    let mut rng = Pcg64::new(0xF35E);
+    let a = random_network("shape_x", &[(25, 31), (12, 12)], &mut rng);
+    let mut b = random_network("shape_x", &[(25, 31), (12, 12)], &mut rng);
+    b.layers[0].ints.iter_mut().for_each(|v| *v = 0); // mostly-empty twin
+    let c = random_network("shape_y", &[(6, 9)], &mut rng);
+    let mut shared = DecodeArena::new();
+    for net in [&a, &b, &c, &a, &b] {
+        let bytes = net.to_bytes_with(ContainerPolicy::v3(128, 2));
+        let mut fresh = DecodeArena::new();
+        let want = decode_network_into(&bytes, 2, &mut fresh).unwrap();
+        let want_layers: Vec<Vec<f32>> = want.layers.iter().map(|l| l.weights.clone()).collect();
+        let got = decode_network_into(&bytes, 2, &mut shared).unwrap();
+        assert_eq!(got.layers.len(), want_layers.len());
+        for (g, w) in got.layers.iter().zip(&want_layers) {
+            assert_eq!(&g.weights, w, "net {}", net.name);
+        }
+    }
+}
+
+#[test]
+fn injected_pool_decodes_identically_to_global() {
+    let mut rng = Pcg64::new(0xF45E);
+    let net = random_network("inj", &[(40, 50), (20, 20)], &mut rng);
+    let bytes = net.to_bytes_with(ContainerPolicy::v3(256, 4));
+    let mut a1 = DecodeArena::new();
+    let mut a2 = DecodeArena::new();
+    let pool = Pool::new();
+    let via_global = decode_network_into(&bytes, 4, &mut a1).unwrap();
+    let g: Vec<Vec<f32>> = via_global.layers.iter().map(|l| l.weights.clone()).collect();
+    let via_injected = decode_network_into_on(&pool, &bytes, 4, &mut a2).unwrap();
+    for (x, y) in via_injected.layers.iter().zip(&g) {
+        assert_eq!(&x.weights, y);
+    }
+}
+
+fn fixture(name: &str) -> Vec<u8> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/golden")
+        .join(name);
+    std::fs::read(&path).unwrap_or_else(|e| panic!("missing fixture {path:?}: {e}"))
+}
+
+#[test]
+fn golden_vectors_decode_identically_through_fused_path() {
+    // The acceptance pin: golden v1/v2/v3 streams — byte-identical on the
+    // wire (no format change; golden_vectors.rs pins the bytes) — must
+    // reconstruct the same float planes through the fused arena path as
+    // through the two-pass path, serial and pooled, sharing ONE arena
+    // across all three versions (same model identity → warm reuse).
+    let mut arena = DecodeArena::new();
+    for file in ["golden_v1.dcb", "golden_v2.dcb", "golden_v3.dcb"] {
+        let raw = fixture(file);
+        assert_fused_equals_two_pass(&raw, &mut arena, file);
+    }
+}
