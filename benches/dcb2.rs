@@ -5,7 +5,9 @@
 //! speedup the CI perf gate tracks, the slice-aligned RDOQ legs, and the
 //! end-to-end grid-search legs (estimate-first vs exact-always pricing on
 //! the identical grid — `search_speedup_est_vs_exact` is the tentpole
-//! same-run floor the gate enforces).
+//! same-run floor the gate enforces), and the ModelStore serving legs
+//! (1/4/16 concurrent clients over shared warm arenas —
+//! `serve_speedup_c16_vs_c1` is the serving layer's same-run floor).
 //!
 //! Emits `BENCH_dcb2.json` (workspace root) for the perf trajectory; the
 //! CI bench-gate job runs it with `--smoke` (smaller network, fewer
@@ -19,7 +21,10 @@
 
 use deepcabac::benchutil::bench;
 use deepcabac::cabac::{binarize, CodingConfig, Decoder, SigHistory, WeightContexts};
-use deepcabac::coordinator::{self, Method, SearchConfig, SearchStrategy};
+use deepcabac::coordinator::{
+    self, run_client_harness, AdmissionPolicy, Method, ModelStore, SearchConfig, SearchStrategy,
+    StoreConfig,
+};
 use deepcabac::model::{
     decode_network_into, CompressedNetwork, ContainerPolicy, DecodeArena, Kind, Layer, Network,
     QuantizedLayer, DEFAULT_SLICE_LEN, VERSION_V1,
@@ -378,6 +383,44 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         out_est.est_real_max_rel.unwrap_or(0.0) * 100.0
     );
 
+    // --- ModelStore serving: concurrent clients over shared warm arenas ---
+    // The v2 and v3 containers of the same network registered side by side
+    // (same shape key, so one warm-arena pool serves both); per-request
+    // decode is single-threaded, so throughput scales across client
+    // threads instead of inside one request.  The same-run c16/c1 ratio is
+    // the gate's machine-independent floor; c1 decodes/s is the absolute
+    // trajectory number.
+    let store = ModelStore::new(StoreConfig {
+        arena_capacity: 32,
+        max_in_flight: 32,
+        admission: AdmissionPolicy::Block,
+        decode_threads: 1,
+    });
+    store.register("dcb2_v3", v3_bytes.clone())?;
+    store.register("dcb2_v2", v2_bytes.clone())?;
+    let serve_names = vec!["dcb2_v3".to_string(), "dcb2_v2".to_string()];
+    let serve_requests = if smoke { 200 } else { 120 };
+    // Warm at the highest client count so every measured window runs on
+    // cache-hit arenas (up to 16 checked out at once).
+    run_client_harness(&store, &serve_names, 16, 64);
+    let mut serve = Vec::new();
+    for clients in [1usize, 4, 16] {
+        let rep = run_client_harness(&store, &serve_names, clients, serve_requests);
+        assert_eq!(rep.errors, 0, "block admission must not shed requests");
+        println!(
+            "serve: c{:<2} {:>8.1} decodes/s | p50 {:>6} us | p99 {:>6} us",
+            rep.clients, rep.decodes_per_s, rep.p50_us, rep.p99_us
+        );
+        serve.push(rep);
+    }
+    let serve_at = |c: usize| serve.iter().find(|r| r.clients == c).unwrap();
+    let serve_speedup_c16 = serve_at(16).decodes_per_s / serve_at(1).decodes_per_s;
+    let serve_stats = store.stats();
+    println!(
+        "serve: c16/c1 scaling {serve_speedup_c16:.2}x | hits {} misses {} over {} requests",
+        serve_stats.arena_hits, serve_stats.arena_misses, serve_stats.requests
+    );
+
     // --- JSON for the perf trajectory + the CI bench gate ---
     let mut dec_fields = String::new();
     for (t, s) in &dec_v3 {
@@ -401,6 +444,25 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         params as f64 / floats_fused_t4.median_s / 1e6,
         floats_speedup
     );
+    let serve_fields = format!(
+        "\"serve_requests\": {},\n  \"serve_c1_decodes_s\": {:.2},\n  \
+         \"serve_c1_p50_us\": {},\n  \"serve_c1_p99_us\": {},\n  \
+         \"serve_c4_decodes_s\": {:.2},\n  \"serve_c16_decodes_s\": {:.2},\n  \
+         \"serve_c16_p50_us\": {},\n  \"serve_c16_p99_us\": {},\n  \
+         \"serve_arena_hits\": {},\n  \"serve_arena_misses\": {},\n  \
+         \"serve_speedup_c16_vs_c1\": {:.4},",
+        serve_requests,
+        serve_at(1).decodes_per_s,
+        serve_at(1).p50_us,
+        serve_at(1).p99_us,
+        serve_at(4).decodes_per_s,
+        serve_at(16).decodes_per_s,
+        serve_at(16).p50_us,
+        serve_at(16).p99_us,
+        serve_stats.arena_hits,
+        serve_stats.arena_misses,
+        serve_speedup_c16
+    );
     let json = format!(
         "{{\n  \"bench\": \"dcb2\",\n  \"mode\": \"{}\",\n  \"params\": {},\n  \
          \"layers\": {},\n  \"slice_len\": {},\n  \"v1_bytes\": {},\n  \"v2_bytes\": {},\n  \
@@ -409,6 +471,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          \"v3_t1_s\": {:.6}, \"v3_t4_s\": {:.6}}},\n  \"decode\": {{\"seed_t1_s\": {:.6}, \
          \"seed_t1_msym_s\": {:.3}, \"v1_t1_s\": {:.6}, \
          \"v1_t1_msym_s\": {:.3}, \"v2_t4_s\": {:.6}, \"v2_t4_msym_s\": {:.3}{}}},\n  \
+         {}\n  \
          {}\n  \
          \"rdoq_t1_s\": {:.6},\n  \"rdoq_t1_msym_s\": {:.3},\n  \
          \"rdoq_t4_s\": {:.6},\n  \"rdoq_t4_msym_s\": {:.3},\n  \
@@ -442,6 +505,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         params as f64 / dec_v2_t4.median_s / 1e6,
         dec_fields,
         floats_fields,
+        serve_fields,
         rdoq_t1.median_s,
         params as f64 / rdoq_t1.median_s / 1e6,
         rdoq_t4.median_s,

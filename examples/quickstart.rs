@@ -1,18 +1,18 @@
-//! Quickstart: compress a trained network with DeepCABAC, decode it, and
-//! check the accuracy cost — the 60-second tour of the public API.
+//! Quickstart: compress a trained network with DeepCABAC, decode it,
+//! serve it from a `ModelStore`, and check the accuracy cost — the
+//! 60-second tour of the public API, using only `deepcabac::api`.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --offline --example quickstart
 //! ```
 
-use deepcabac::coordinator::pipeline::compress_dc;
-use deepcabac::coordinator::{Candidate, Method, SearchConfig};
-use deepcabac::model::{read_nwf, CompressedNetwork};
-use deepcabac::runtime::EvalService;
+use deepcabac::api::{
+    artifacts_dir, artifacts_ready, read_nwf, Compressor, Decoder, EvalService, ModelStore,
+};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let art = deepcabac::benchutil::artifacts_dir();
-    if !deepcabac::benchutil::artifacts_ready() {
+    let art = artifacts_dir();
+    if !artifacts_ready() {
         eprintln!("artifacts missing — run `make artifacts` first");
         return Ok(());
     }
@@ -28,16 +28,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     // 2. Quantize with DeepCABAC's RDOQ (eq. 11) and entropy-code with
-    //    CABAC into a self-contained .dcb bitstream.
-    let cand = Candidate {
-        method: Method::DcV2,
-        s: 0.0,
-        delta: 0.02,  // step-size Δ
-        lambda: 1.0,  // rate pressure λ (Δ²-normalized)
-        clusters: 0,
-    };
-    let cfg = SearchConfig::default();
-    let bytes = compress_dc(&net, &cand, &cfg).to_bytes();
+    //    CABAC into a self-contained .dcb bitstream.  Δ is the step-size,
+    //    λ the rate pressure; see Compressor docs for the full knob set.
+    let comp = Compressor::new().delta(0.02).lambda(1.0);
+    let bytes = comp.compress_to_bytes(&net);
     println!(
         "compressed: {} -> {} bytes ({:.2}% of original, x{:.1})",
         net.f32_size_bytes(),
@@ -47,10 +41,26 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     // 3. Decode (anyone with the .dcb can do this — no side channels).
-    let decoded = CompressedNetwork::from_bytes(&bytes)?;
-    let recon = decoded.reconstruct(&net.name);
+    //    The Decoder owns a reusable arena: repeat decodes of same-shaped
+    //    containers allocate nothing.
+    let mut dec = Decoder::new();
+    let recon = dec.decode(&bytes)?.clone();
 
-    // 4. Score original vs decoded through the AOT eval graph (PJRT).
+    // 4. Serve it: register the container in a ModelStore and decode
+    //    through the store's LRU-cached warm arenas (thread-safe, bounded
+    //    admission — see the README "Serving" section).
+    let store = ModelStore::default();
+    let info = store.register(&net.name, bytes)?;
+    let served_params = store.decode(&net.name, |n| n.param_count())?;
+    println!(
+        "serving {}: {} params via arena {:#018x}, stats {:?}",
+        info.name,
+        served_params,
+        info.shape_key,
+        store.stats()
+    );
+
+    // 5. Score original vs decoded through the AOT eval graph (PJRT).
     let host = EvalService::spawn(art.clone(), art.join("dataset.nds"), 2)?;
     let acc0 = host.handle.accuracy(&net)?;
     let acc1 = host.handle.accuracy(&recon)?;

@@ -1,0 +1,286 @@
+//! Consolidated public API facade — the three types most users need:
+//!
+//!  * [`Compressor`] — builder for one-shot DeepCABAC compression
+//!    (RDOQ quantization + CABAC entropy coding into a `.dcb` container).
+//!  * [`Decoder`] — fused container→floats decoding through an owned,
+//!    reusable [`DecodeArena`] (repeat decodes of same-shaped containers
+//!    allocate nothing).
+//!  * [`ModelStore`] — the serving layer: resident containers, an LRU
+//!    cache of warmed arenas, bounded concurrent admission.
+//!
+//! Everything here is a thin veneer over the full crate (`coordinator`,
+//! `model`, `cabac`, …), which stays public for callers who need the
+//! grid search, the rate estimator, or wire-level access.  All fallible
+//! paths return the one crate-wide [`Error`]/[`Result`].
+//!
+//! # Quickstart
+//!
+//! ```
+//! use deepcabac::api::{Compressor, Decoder};
+//! use deepcabac::model::{Kind, Layer, Network};
+//!
+//! let net = Network {
+//!     name: "demo".into(),
+//!     layers: vec![Layer {
+//!         name: "fc".into(),
+//!         kind: Kind::Dense,
+//!         shape: vec![4, 2],
+//!         rows: 2,
+//!         cols: 4,
+//!         weights: vec![0.5, -0.25, 0.0, 1.0, -0.75, 0.0, 0.25, 0.5],
+//!         fisher: None,
+//!         hessian: None,
+//!         bias: None,
+//!     }],
+//! };
+//! let bytes = Compressor::new().delta(0.25).compress_to_bytes(&net);
+//! let mut dec = Decoder::new();
+//! let back = dec.decode(&bytes)?;
+//! assert_eq!(back.name, "demo");
+//! assert_eq!(back.layers[0].weights.len(), 8);
+//! # Ok::<(), deepcabac::Error>(())
+//! ```
+//!
+//! # Serving
+//!
+//! ```
+//! use deepcabac::api::{Compressor, ModelStore};
+//! use deepcabac::model::{Kind, Layer, Network};
+//!
+//! # let net = Network {
+//! #     name: "demo".into(),
+//! #     layers: vec![Layer {
+//! #         name: "fc".into(),
+//! #         kind: Kind::Dense,
+//! #         shape: vec![2, 2],
+//! #         rows: 2,
+//! #         cols: 2,
+//! #         weights: vec![0.5, -0.25, 0.0, 1.0],
+//! #         fisher: None,
+//! #         hessian: None,
+//! #         bias: None,
+//! #     }],
+//! # };
+//! let store = ModelStore::default();
+//! store.register("demo", Compressor::new().compress_to_bytes(&net))?;
+//! // Concurrent-safe: decode through a cached warm arena, borrow the
+//! // reconstructed network inside the closure.
+//! let nonzero = store.decode("demo", |n| {
+//!     n.layers[0].weights.iter().filter(|w| **w != 0.0).count()
+//! })?;
+//! assert!(nonzero > 0);
+//! assert_eq!(store.stats().requests, 1);
+//! # Ok::<(), deepcabac::Error>(())
+//! ```
+
+use crate::coordinator::pipeline::compress_dc;
+use crate::coordinator::{Candidate, Method, SearchConfig};
+use crate::model::bitstream::{decode_network_into, DecodeArena};
+use crate::model::{CompressedNetwork, ContainerPolicy, Network};
+use crate::util::parallel::default_threads;
+
+pub use crate::coordinator::store::{
+    run_client_harness, AdmissionPolicy, HarnessReport, ModelInfo, ModelStore, StoreConfig,
+    StoreStats,
+};
+// Companion pieces a complete compress→serve→score program needs, surfaced
+// here so such programs (e.g. `examples/quickstart.rs`) import only `api`.
+pub use crate::benchutil::{artifacts_dir, artifacts_ready};
+pub use crate::model::read_nwf;
+pub use crate::runtime::{EvalService, EvalServiceHost};
+pub use crate::util::{Error, Result};
+
+/// Builder for one-shot DeepCABAC compression.  Defaults: DC-v2 (global
+/// step-size Δ = 0.01, rate pressure λ = 1.0), v3 sliced container.
+///
+/// The facade covers the two DeepCABAC methods (DC-v1 / DC-v2); the
+/// baseline codecs and the full accuracy-targeted grid search live in
+/// [`crate::coordinator`].
+#[derive(Clone, Copy, Debug)]
+pub struct Compressor {
+    cand: Candidate,
+    cfg: SearchConfig,
+}
+
+impl Default for Compressor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor {
+    pub fn new() -> Self {
+        Self {
+            cand: Candidate {
+                method: Method::DcV2,
+                s: 64.0,
+                delta: 0.01,
+                lambda: 1.0,
+                clusters: 0,
+            },
+            cfg: SearchConfig::default(),
+        }
+    }
+
+    /// Global quantization step-size Δ (DC-v2; reconstruction is
+    /// `w = Δ · i`).  Smaller Δ → higher fidelity, more bits.
+    pub fn delta(mut self, delta: f32) -> Self {
+        self.cand.delta = delta;
+        self
+    }
+
+    /// Rate pressure λ in the RDOQ objective (eq. 11), Δ²-normalized.
+    pub fn lambda(mut self, lambda: f32) -> Self {
+        self.cand.lambda = lambda;
+        self
+    }
+
+    /// Switch to DC-v1: per-layer Δ via the paper's eq. (12) with
+    /// coarseness `s`, Fisher-weighted RDOQ (the input network must carry
+    /// Fisher diagonals).
+    pub fn dc_v1(mut self, s: f32) -> Self {
+        self.cand.method = Method::DcV1;
+        self.cand.s = s;
+        self
+    }
+
+    /// Container policy for the emitted stream (and, for sliced
+    /// containers, the slice geometry the quantizer's rate model aligns
+    /// to).  Build one with [`ContainerPolicy::builder`].
+    pub fn container(mut self, policy: ContainerPolicy) -> Self {
+        self.cfg.container = policy;
+        self
+    }
+
+    /// Worker threads for the encode fan-out (clamped to >= 1).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.container.threads = n.max(1);
+        self.cfg.threads = n.max(1);
+        self
+    }
+
+    /// Quantize + entropy-code `net` (infallible — compression has no
+    /// error paths; serialization happens in
+    /// [`Self::compress_to_bytes`]).
+    pub fn compress(&self, net: &Network) -> CompressedNetwork {
+        compress_dc(net, &self.cand, &self.cfg)
+    }
+
+    /// Quantize, entropy-code and serialize `net` into a self-contained
+    /// `.dcb` container under the configured policy.
+    pub fn compress_to_bytes(&self, net: &Network) -> Vec<u8> {
+        self.compress(net).to_bytes_with(self.cfg.container)
+    }
+}
+
+/// Fused `.dcb` decoder owning a persistent [`DecodeArena`]: the first
+/// decode builds the network skeleton, subsequent decodes of same-shaped
+/// containers reuse it and allocate nothing.  Accepts all container
+/// versions (v1/v2/v3).
+///
+/// For multi-model serving with cross-request arena sharing, use
+/// [`ModelStore`] instead.
+pub struct Decoder {
+    arena: DecodeArena,
+    threads: usize,
+}
+
+impl Default for Decoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Decoder {
+    pub fn new() -> Self {
+        Self {
+            arena: DecodeArena::new(),
+            threads: default_threads(),
+        }
+    }
+
+    /// Fan-out width for the slice decode (clamped to >= 1; `1` decodes
+    /// inline on the calling thread).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Decode a `.dcb` container straight into dequantized `f32` planes
+    /// (single fused CABAC pass, no intermediate integer planes) and
+    /// borrow the reconstructed network.
+    pub fn decode(&mut self, raw: &[u8]) -> Result<&Network> {
+        decode_network_into(raw, self.threads, &mut self.arena)
+    }
+
+    /// The most recently decoded network (empty before the first decode).
+    pub fn network(&self) -> &Network {
+        self.arena.network()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{probe, Kind, Layer};
+
+    fn demo_net(name: &str, rows: usize, cols: usize) -> Network {
+        let weights = (0..rows * cols)
+            .map(|i| ((i % 7) as f32 - 3.0) * 0.05)
+            .collect();
+        Network {
+            name: name.into(),
+            layers: vec![Layer {
+                name: "fc".into(),
+                kind: Kind::Dense,
+                shape: vec![cols, rows],
+                rows,
+                cols,
+                weights,
+                fisher: None,
+                hessian: None,
+                bias: None,
+            }],
+        }
+    }
+
+    #[test]
+    fn facade_roundtrip_matches_core_decode() {
+        let net = demo_net("api", 6, 5);
+        let comp = Compressor::new().delta(0.05).threads(2);
+        let bytes = comp.compress_to_bytes(&net);
+        let mut dec = Decoder::new().threads(1);
+        let back = dec.decode(&bytes).unwrap();
+        assert_eq!(back.name, "api");
+        let core = CompressedNetwork::from_bytes(&bytes)
+            .unwrap()
+            .reconstruct_named();
+        assert_eq!(back.layers[0].weights, core.layers[0].weights);
+    }
+
+    #[test]
+    fn facade_container_policy_controls_version() {
+        let net = demo_net("api", 4, 4);
+        let v1 = ContainerPolicy::builder().v1().build();
+        let bytes = Compressor::new().container(v1).compress_to_bytes(&net);
+        assert_eq!(probe(&bytes).unwrap().version, crate::model::VERSION_V1);
+        // Decoder reads every version through the same arena.
+        let mut dec = Decoder::new();
+        assert!(dec.decode(&bytes).is_ok());
+        assert_eq!(dec.network().name, "api");
+    }
+
+    #[test]
+    fn facade_store_end_to_end() {
+        let net = demo_net("served", 5, 4);
+        let store = ModelStore::default();
+        let info = store
+            .register("served", Compressor::new().compress_to_bytes(&net))
+            .unwrap();
+        assert_eq!(info.param_count, 20);
+        let n = store.decode("served", |n| n.param_count()).unwrap();
+        assert_eq!(n, 20);
+        assert!(store.unregister("served"));
+        assert!(store.decode("served", |_| ()).is_err());
+    }
+}

@@ -138,10 +138,11 @@ pub struct GateReport {
 
 /// Compare a current `BENCH_dcb2.json` against the committed baseline.
 ///
-/// Five checks (the later ones armed only when the baseline carries their
+/// Six checks (the later ones armed only when the baseline carries their
 /// keys — see the numbered comments in the body for RDOQ, estimate-first
-/// search and the fused decode→floats pair), all reading their thresholds
-/// from the *baseline* file so re-baselining never needs a code change:
+/// search, the fused decode→floats pair and the ModelStore serving pair),
+/// all reading their thresholds from the *baseline* file so re-baselining
+/// never needs a code change:
 ///
 /// 1. **Absolute regression** — `v3_t1_msym_s` (single-thread decode
 ///    throughput) must not drop more than `max_regress_pct` (default 15)
@@ -376,6 +377,58 @@ pub fn bench_gate(baseline: &str, current: &str) -> GateReport {
                     "FAIL current BENCH_dcb2.json has no \
                      decode_floats_speedup_fused_vs_twopass field"
                         .into(),
+                );
+            }
+        }
+    }
+    // 6. **ModelStore serving** (added with the serving layer).  Same
+    //    arming pattern as RDOQ/search/decode-floats — both sub-checks
+    //    read their keys from the *baseline*, so pre-metric baselines
+    //    stay valid:
+    //    * absolute `serve_c1_decodes_s` regression (single-client serving
+    //      throughput; same budget as the other absolute checks, skipped
+    //      while the baseline is bootstrap or carries a non-positive
+    //      placeholder);
+    //    * machine-independent same-run floor `serve_speedup_c16_vs_c1 >=
+    //      min_serve_speedup_c16_vs_c1` — 16 concurrent clients over 1 on
+    //      the same store in the same run, which is what the serving
+    //      layer buys (per-request inline decode + shared warm arenas, so
+    //      requests scale across client threads instead of serializing).
+    if let Some(b) = json_num(baseline, "serve_c1_decodes_s") {
+        match json_num(current, "serve_c1_decodes_s") {
+            Some(c) if bootstrap || b <= 0.0 => lines.push(format!(
+                "SKIP serve absolute check: baseline not armed (current {c:.0} decodes/s)"
+            )),
+            Some(c) => {
+                let regress_pct = 100.0 * (b - c) / b;
+                let ok = regress_pct <= max_regress_pct;
+                pass &= ok;
+                lines.push(format!(
+                    "{} serve c1 {c:.0} decodes/s vs baseline {b:.0} ({regress_pct:+.1}% \
+                     regression, limit {max_regress_pct}%)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push("FAIL current BENCH_dcb2.json has no serve_c1_decodes_s field".into());
+            }
+        }
+    }
+    if let Some(floor) = json_num(baseline, "min_serve_speedup_c16_vs_c1") {
+        match json_num(current, "serve_speedup_c16_vs_c1") {
+            Some(r) => {
+                let ok = r >= floor;
+                pass &= ok;
+                lines.push(format!(
+                    "{} same-run serve scaling c16/c1 = {r:.2}x (floor {floor}x)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no serve_speedup_c16_vs_c1 field".into(),
                 );
             }
         }
@@ -682,6 +735,53 @@ mod tests {
             r.lines
         );
         let bad = bench_gate(baseline, &bench_json_rdoq(10.0, 2.4, 3.0, 1.0));
+        assert!(!bad.pass, "{:?}", bad.lines);
+    }
+
+    fn bench_json_serve(msym: f64, speedup: f64, serve_dps: f64, serve_speedup: f64) -> String {
+        format!(
+            "{{\"bench\": \"dcb2\", \"v3_t1_msym_s\": {msym}, \
+             \"decode_speedup_v3_t1_vs_seed_t1\": {speedup}, \
+             \"serve_c1_decodes_s\": {serve_dps}, \
+             \"serve_speedup_c16_vs_c1\": {serve_speedup}}}"
+        )
+    }
+
+    #[test]
+    fn gate_serve_checks_armed_by_baseline_keys() {
+        // Baseline without the serving keys: current values ignored.
+        let old_baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&old_baseline, &bench_json_serve(10.0, 2.4, 1.0, 0.5));
+        assert!(r.pass, "{:?}", r.lines);
+        // Armed baseline: absolute regression + same-run floor enforced.
+        let armed = "{\"v3_t1_msym_s\": 10.0, \"decode_speedup_v3_t1_vs_seed_t1\": 2.4, \
+             \"serve_c1_decodes_s\": 50.0, \"min_serve_speedup_c16_vs_c1\": 2.0}";
+        let good = bench_gate(armed, &bench_json_serve(10.0, 2.4, 46.0, 3.1)); // -8% < 15%
+        assert!(good.pass, "{:?}", good.lines);
+        let regressed = bench_gate(armed, &bench_json_serve(10.0, 2.4, 30.0, 3.1)); // -40%
+        assert!(!regressed.pass, "{:?}", regressed.lines);
+        let collapsed = bench_gate(armed, &bench_json_serve(10.0, 2.4, 50.0, 1.4)); // < 2.0x
+        assert!(!collapsed.pass, "{:?}", collapsed.lines);
+        // Armed baseline + current missing the metric entirely: fail loudly.
+        let missing = bench_gate(armed, &bench_json(10.0, 2.4));
+        assert!(!missing.pass, "{:?}", missing.lines);
+    }
+
+    #[test]
+    fn gate_serve_zero_baseline_skips_absolute_but_keeps_floor() {
+        // The bootstrap placeholder ships serve_c1_decodes_s = 0.0: the
+        // absolute check must SKIP (not vacuously pass via /0), while the
+        // machine-independent c16-over-c1 scaling floor stays enforced.
+        let baseline = "{\"v3_t1_msym_s\": 10.0, \"serve_c1_decodes_s\": 0.0, \
+                        \"min_serve_speedup_c16_vs_c1\": 2.0}";
+        let r = bench_gate(baseline, &bench_json_serve(10.0, 2.4, 40.0, 2.8));
+        assert!(r.pass, "{:?}", r.lines);
+        assert!(
+            r.lines.iter().any(|l| l.contains("SKIP serve")),
+            "{:?}",
+            r.lines
+        );
+        let bad = bench_gate(baseline, &bench_json_serve(10.0, 2.4, 40.0, 1.3));
         assert!(!bad.pass, "{:?}", bad.lines);
     }
 }

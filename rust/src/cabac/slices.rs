@@ -107,22 +107,24 @@ pub(crate) fn walk_sliced(
     mut on_slice: impl FnMut(usize, usize, usize),
 ) -> Result<usize> {
     if raw.len() < 8 {
-        return Err(Error::Format("sliced stream truncated".into()));
+        return Err(Error::Wire("sliced stream truncated".into()));
     }
     let slice_len = u32::from_le_bytes(raw[0..4].try_into().unwrap()) as usize;
     let n_slices = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
     if slice_len == 0 || n_slices != count.div_ceil(slice_len) {
-        return Err(Error::Format("sliced stream header inconsistent".into()));
+        return Err(Error::ShapeMismatch(
+            "sliced stream header inconsistent".into(),
+        ));
     }
     let mut pos = 8usize;
     for i in 0..n_slices {
         if pos + 4 > raw.len() {
-            return Err(Error::Format("sliced stream truncated".into()));
+            return Err(Error::Wire("sliced stream truncated".into()));
         }
         let len = u32::from_le_bytes(raw[pos..pos + 4].try_into().unwrap()) as usize;
         pos += 4;
         if pos + len > raw.len() {
-            return Err(Error::Format("sliced stream truncated".into()));
+            return Err(Error::Wire("sliced stream truncated".into()));
         }
         let n_symbols = if i + 1 == n_slices {
             count - slice_len * (n_slices - 1)
@@ -133,7 +135,7 @@ pub(crate) fn walk_sliced(
         pos += len;
     }
     if pos != raw.len() {
-        return Err(Error::Format("sliced stream has trailing garbage".into()));
+        return Err(Error::Wire("sliced stream has trailing garbage".into()));
     }
     Ok(slice_len)
 }

@@ -13,6 +13,8 @@
 //!  * [`parallel`]    — the thread-pool primitive (offline tokio stand-in;
 //!    lives in `util::parallel`, re-exported here for path stability).
 //!  * [`report`]      — table-shaped rendering for EXPERIMENTS.md.
+//!  * [`store`]       — the `ModelStore` serving layer: resident
+//!    containers, LRU-cached decode arenas, bounded admission.
 
 pub mod config;
 pub mod grid_search;
@@ -20,6 +22,7 @@ pub mod pareto;
 pub mod pipeline;
 pub mod prep;
 pub mod report;
+pub mod store;
 
 pub use crate::util::parallel;
 
@@ -29,3 +32,7 @@ pub use pipeline::{
     run_candidate, run_candidate_estimated, run_candidate_with_arena, CandidateResult,
 };
 pub use prep::CandidatePrep;
+pub use store::{
+    run_client_harness, AdmissionPolicy, HarnessReport, ModelInfo, ModelStore, StoreConfig,
+    StoreStats,
+};

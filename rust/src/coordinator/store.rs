@@ -1,0 +1,519 @@
+//! `ModelStore` — the in-process serving layer.
+//!
+//! A thread-safe registry of compressed `.dcb` containers (N models
+//! resident by name, content-hashed on registration) in front of a
+//! capacity-bounded **LRU cache of warmed [`DecodeArena`]s** keyed by the
+//! container's [`shape_key`](crate::model::ContainerProbe::shape_key).
+//! Concurrent
+//! [`ModelStore::decode`] / [`ModelStore::eval`] requests check an arena
+//! out, run the fused decode on the store's persistent worker [`Pool`]
+//! (or inline for single-threaded requests — the cross-request scaling
+//! configuration), and check it back in; a warm checkout makes the whole
+//! request path **zero heap allocations** (pinned by
+//! `rust/tests/store_alloc.rs`).
+//!
+//! Admission is bounded by a counting [`Semaphore`]: at most
+//! `max_in_flight` requests proceed at once, and callers beyond that
+//! either block ([`AdmissionPolicy::Block`]) or get
+//! [`Error::Backpressure`] back ([`AdmissionPolicy::FailFast`]) — the
+//! serving loop degrades by queueing or shedding, never by unbounded
+//! memory growth.
+//!
+//! Poisoning is impossible by construction: user closures and the CABAC
+//! decode run **outside** the registry mutex (the lock only guards the
+//! name→bytes map and the arena cache, both panic-free), a panicking
+//! request simply drops its checked-out arena (already removed from the
+//! cache) and its RAII admission permit, and the lock helper recovers
+//! from poisoning anyway as a second line of defense.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use crate::model::bitstream::{decode_network_into_on, probe, DecodeArena};
+use crate::model::Network;
+use crate::runtime::EvalService;
+use crate::util::crc32;
+use crate::util::parallel::{Pool, Semaphore};
+use crate::util::{Error, Result};
+
+/// What happens to a request when `max_in_flight` requests are already
+/// running.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Park until a slot frees (bounded queueing).
+    Block,
+    /// Return [`Error::Backpressure`] immediately (load shedding).
+    FailFast,
+}
+
+/// Serving-layer knobs.  `Default` is a sensible single-host setup: 8
+/// cached arenas, 16 in-flight requests, blocking admission, and
+/// single-threaded per-request decode — the configuration where
+/// cross-request scaling comes from client concurrency (each decode runs
+/// inline on its client thread; the pool stays free for wide
+/// single-request decodes via `decode_threads > 1`).
+#[derive(Clone, Copy, Debug)]
+pub struct StoreConfig {
+    /// LRU arena-cache capacity (clamped to >= 1).
+    pub arena_capacity: usize,
+    /// Concurrent-request bound (clamped to >= 1).
+    pub max_in_flight: usize,
+    pub admission: AdmissionPolicy,
+    /// Fan-out width of one request's decode (clamped to >= 1; `1` runs
+    /// inline on the requesting thread without touching the pool).
+    pub decode_threads: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        Self {
+            arena_capacity: 8,
+            max_in_flight: 16,
+            admission: AdmissionPolicy::Block,
+            decode_threads: 1,
+        }
+    }
+}
+
+/// Registry entry: the container bytes plus the registration-time header
+/// probe (wire + CRC validated once, up front).
+struct ModelEntry {
+    bytes: Arc<Vec<u8>>,
+    info: ModelInfo,
+}
+
+/// Snapshot describing one registered model.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    /// Container version byte (1/2/3).
+    pub version: u8,
+    /// CRC-32 over the full container — the content hash `register`
+    /// reports so clients can detect double-registration of new bytes.
+    pub content_crc32: u32,
+    pub param_count: usize,
+    pub container_bytes: usize,
+    /// Arena-identity fingerprint
+    /// ([`shape_key`](crate::model::ContainerProbe::shape_key)); equal
+    /// keys share warmed arenas.
+    pub shape_key: u64,
+}
+
+/// Monotonic serving counters (atomics — readable while requests run).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub requests: u64,
+    /// Requests that checked a warmed same-shape arena out of the cache.
+    pub arena_hits: u64,
+    /// Requests that had to build a cold arena.
+    pub arena_misses: u64,
+    /// Arenas dropped to make room at check-in.
+    pub evictions: u64,
+    /// Requests shed with [`Error::Backpressure`] under
+    /// [`AdmissionPolicy::FailFast`].
+    pub rejected: u64,
+}
+
+#[derive(Default)]
+struct StatCells {
+    requests: AtomicU64,
+    arena_hits: AtomicU64,
+    arena_misses: AtomicU64,
+    evictions: AtomicU64,
+    rejected: AtomicU64,
+}
+
+/// One warmed arena with its identity key and LRU recency stamp.
+struct CachedArena {
+    key: u64,
+    last_used: u64,
+    arena: DecodeArena,
+}
+
+/// Capacity-bounded LRU pool of warmed arenas.  Flat vector by design:
+/// capacity is small (single digits to low tens), so a linear scan beats
+/// pointer-chasing list nodes — and every operation is allocation-free
+/// (the vector is pre-sized to capacity; `swap_remove` + `push` never
+/// grow it).
+struct ArenaCache {
+    slots: Vec<CachedArena>,
+    cap: usize,
+    tick: u64,
+}
+
+impl ArenaCache {
+    fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            slots: Vec::with_capacity(cap),
+            cap,
+            tick: 0,
+        }
+    }
+
+    /// Remove and return the most-recently-used arena matching `key`.
+    /// (Multiple same-key arenas coexist when same-shape requests overlap;
+    /// preferring the most recent keeps the hottest one circulating.)
+    fn checkout(&mut self, key: u64) -> Option<DecodeArena> {
+        let best = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.key == key)
+            .max_by_key(|(_, c)| c.last_used)
+            .map(|(i, _)| i)?;
+        Some(self.slots.swap_remove(best).arena)
+    }
+
+    /// Insert a (now warm) arena, stamping it most-recent; evicts the
+    /// least-recently-used slot when full.  Returns whether an eviction
+    /// happened.
+    fn checkin(&mut self, key: u64, arena: DecodeArena) -> bool {
+        self.tick += 1;
+        let mut evicted = false;
+        if self.slots.len() == self.cap {
+            let lru = self
+                .slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, c)| c.last_used)
+                .map(|(i, _)| i)
+                .expect("cap >= 1, so a full cache is non-empty");
+            self.slots.swap_remove(lru);
+            evicted = true;
+        }
+        self.slots.push(CachedArena {
+            key,
+            last_used: self.tick,
+            arena,
+        });
+        evicted
+    }
+
+    /// Cached-arena keys in LRU→MRU order (tests assert eviction order).
+    fn keys_by_recency(&self) -> Vec<u64> {
+        let mut v: Vec<(u64, u64)> = self.slots.iter().map(|c| (c.last_used, c.key)).collect();
+        v.sort_unstable();
+        v.into_iter().map(|(_, k)| k).collect()
+    }
+}
+
+/// Registry + arena cache — the only state behind the store's mutex.
+struct StoreInner {
+    models: HashMap<String, ModelEntry>,
+    arenas: ArenaCache,
+}
+
+/// Thread-safe model-serving store.  See the module docs for the design;
+/// see [`run_client_harness`] for the synthetic serving benchmark the
+/// `serve` CLI subcommand drives.
+pub struct ModelStore {
+    cfg: StoreConfig,
+    inner: Mutex<StoreInner>,
+    admit: Semaphore,
+    pool: Pool,
+    stats: StatCells,
+}
+
+impl Default for ModelStore {
+    fn default() -> Self {
+        Self::new(StoreConfig::default())
+    }
+}
+
+impl ModelStore {
+    pub fn new(cfg: StoreConfig) -> Self {
+        Self {
+            cfg,
+            inner: Mutex::new(StoreInner {
+                models: HashMap::new(),
+                arenas: ArenaCache::new(cfg.arena_capacity),
+            }),
+            admit: Semaphore::new(cfg.max_in_flight.max(1)),
+            pool: Pool::new(),
+            stats: StatCells::default(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, StoreInner> {
+        // The guarded sections below are panic-free (map/vec bookkeeping
+        // only), but recover from poisoning anyway — a poisoned registry
+        // must never take the serving loop down with it.
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Validate `bytes` as a `.dcb` container (wire structure + CRC, no
+    /// payload decode) and make it resident under `name`, replacing any
+    /// previous container of that name.  Returns the registered model's
+    /// description, including its content hash and arena shape key.
+    pub fn register(&self, name: &str, bytes: Vec<u8>) -> Result<ModelInfo> {
+        let header = probe(&bytes)?;
+        let info = ModelInfo {
+            name: name.to_string(),
+            version: header.version,
+            content_crc32: crc32(&bytes),
+            param_count: header.param_count(),
+            container_bytes: bytes.len(),
+            shape_key: header.shape_key(),
+        };
+        let entry = ModelEntry {
+            bytes: Arc::new(bytes),
+            info: info.clone(),
+        };
+        self.lock().models.insert(name.to_string(), entry);
+        Ok(info)
+    }
+
+    /// Drop `name` from the registry (cached arenas stay — they are keyed
+    /// by shape, not by name, and other models may share them).  Returns
+    /// whether the model was resident.
+    pub fn unregister(&self, name: &str) -> bool {
+        self.lock().models.remove(name).is_some()
+    }
+
+    /// Description of one resident model.
+    pub fn info(&self, name: &str) -> Option<ModelInfo> {
+        self.lock().models.get(name).map(|e| e.info.clone())
+    }
+
+    /// Descriptions of every resident model, sorted by name.
+    pub fn models(&self) -> Vec<ModelInfo> {
+        let g = self.lock();
+        let mut v: Vec<ModelInfo> = g.models.values().map(|e| e.info.clone()).collect();
+        drop(g);
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().models.is_empty()
+    }
+
+    /// Counter snapshot (monotonic; safe to read under load).
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            requests: self.stats.requests.load(Ordering::Relaxed),
+            arena_hits: self.stats.arena_hits.load(Ordering::Relaxed),
+            arena_misses: self.stats.arena_misses.load(Ordering::Relaxed),
+            evictions: self.stats.evictions.load(Ordering::Relaxed),
+            rejected: self.stats.rejected.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Cached-arena shape keys in LRU→MRU order — test/introspection hook
+    /// for the eviction-order contract.
+    pub fn arena_keys_by_recency(&self) -> Vec<u64> {
+        self.lock().arenas.keys_by_recency()
+    }
+
+    /// Serve one decode request: admit, check a warmed arena out (or
+    /// build one cold), fused-decode the container into it, hand the
+    /// reconstructed network to `f`, and check the arena back in.  The
+    /// closure runs without any store lock held; a panic inside it
+    /// unwinds to the caller having released the admission slot (RAII
+    /// permit) and forfeited only the one checked-out arena.
+    pub fn decode<R>(&self, name: &str, f: impl FnOnce(&Network) -> R) -> Result<R> {
+        let _permit = match self.cfg.admission {
+            AdmissionPolicy::Block => self.admit.acquire(),
+            AdmissionPolicy::FailFast => match self.admit.try_acquire() {
+                Some(p) => p,
+                None => {
+                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::Backpressure(format!(
+                        "store at capacity ({} in flight)",
+                        self.cfg.max_in_flight.max(1)
+                    )));
+                }
+            },
+        };
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+
+        // Brief lock #1: resolve the name and check an arena out.
+        let (bytes, key, arena) = {
+            let mut g = self.lock();
+            let entry = g
+                .models
+                .get(name)
+                .ok_or_else(|| Error::Config(format!("unknown model '{name}'")))?;
+            let bytes = Arc::clone(&entry.bytes);
+            let key = entry.info.shape_key;
+            let arena = g.arenas.checkout(key);
+            (bytes, key, arena)
+        };
+        let mut arena = match arena {
+            Some(a) => {
+                self.stats.arena_hits.fetch_add(1, Ordering::Relaxed);
+                a
+            }
+            None => {
+                self.stats.arena_misses.fetch_add(1, Ordering::Relaxed);
+                DecodeArena::new()
+            }
+        };
+
+        // Unlocked: the CABAC decode and the user closure.
+        let threads = self.cfg.decode_threads.max(1);
+        let out = decode_network_into_on(&self.pool, &bytes, threads, &mut arena).map(f);
+
+        // Brief lock #2: return the arena (warm even after a decode error
+        // — only the plane *contents* are unspecified then).
+        let evicted = self.lock().arenas.checkin(key, arena);
+        if evicted {
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Serve one eval request: decode through the arena cache, then score
+    /// the arena-resident network on `svc`.  Same admission, caching and
+    /// panic story as [`Self::decode`].
+    pub fn eval(&self, name: &str, svc: &EvalService) -> Result<f64> {
+        self.decode(name, |net| svc.accuracy(net))?
+    }
+}
+
+/// One synthetic serving run: `clients` threads issuing `requests` decode
+/// requests round-robin over `names`, latency-sampled per request.
+#[derive(Clone, Debug)]
+pub struct HarnessReport {
+    pub clients: usize,
+    /// Requests completed successfully.
+    pub completed: usize,
+    /// Requests that returned an error (backpressure under fail-fast).
+    pub errors: usize,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub wall_s: f64,
+    pub decodes_per_s: f64,
+}
+
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Drive `store` with a synthetic closed-loop client fleet: `clients`
+/// threads issue `requests` total [`ModelStore::decode`] calls (split
+/// evenly, remainder to the first threads), round-robin over `names`,
+/// each touching one decoded weight so the decode cannot be optimized
+/// away.  All clients start together (barrier) so the wall-clock window
+/// measures steady-state concurrency; per-request latencies are sampled
+/// on the client threads and pooled for p50/p99.
+pub fn run_client_harness(
+    store: &ModelStore,
+    names: &[String],
+    clients: usize,
+    requests: usize,
+) -> HarnessReport {
+    let clients = clients.max(1);
+    assert!(!names.is_empty(), "harness needs at least one model name");
+    let start_gate = Barrier::new(clients + 1);
+    let mut per_thread: Vec<(Vec<u64>, usize)> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let n = requests / clients + usize::from(c < requests % clients);
+            let gate = &start_gate;
+            handles.push(s.spawn(move || {
+                let mut lat = Vec::with_capacity(n);
+                let mut errors = 0usize;
+                gate.wait();
+                for i in 0..n {
+                    let name = &names[(c + i) % names.len()];
+                    let t0 = Instant::now();
+                    let r = store.decode(name, |net| {
+                        net.layers.first().and_then(|l| l.weights.first()).copied()
+                    });
+                    match r {
+                        Ok(_) => lat.push(t0.elapsed().as_micros() as u64),
+                        Err(_) => errors += 1,
+                    }
+                }
+                (lat, errors)
+            }));
+        }
+        start_gate.wait();
+        let t0 = Instant::now();
+        for h in handles {
+            per_thread.push(h.join().expect("harness client panicked"));
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut lat: Vec<u64> = Vec::new();
+        let mut errors = 0usize;
+        for (l, e) in &per_thread {
+            lat.extend_from_slice(l);
+            errors += e;
+        }
+        lat.sort_unstable();
+        let decodes_per_s = if wall_s > 0.0 {
+            lat.len() as f64 / wall_s
+        } else {
+            0.0
+        };
+        HarnessReport {
+            clients,
+            completed: lat.len(),
+            errors,
+            p50_us: percentile(&lat, 0.50),
+            p99_us: percentile(&lat, 0.99),
+            wall_s,
+            decodes_per_s,
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_picks_order_statistics() {
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.5), 7);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&v, 0.50), 51); // round((99)*0.5)=50 -> v[50]
+        assert_eq!(percentile(&v, 0.99), 99);
+        assert_eq!(percentile(&v, 1.0), 100);
+    }
+
+    #[test]
+    fn arena_cache_is_lru_and_capacity_bounded() {
+        let mut c = ArenaCache::new(2);
+        assert!(c.checkout(1).is_none());
+        assert!(!c.checkin(1, DecodeArena::new()));
+        assert!(!c.checkin(2, DecodeArena::new()));
+        assert_eq!(c.keys_by_recency(), vec![1, 2]);
+        // Reuse of key 1 refreshes its recency...
+        let a = c.checkout(1).expect("key 1 cached");
+        assert!(!c.checkin(1, a));
+        assert_eq!(c.keys_by_recency(), vec![2, 1]);
+        // ...so key 2 is now the LRU victim when 3 arrives at capacity.
+        assert!(c.checkin(3, DecodeArena::new()));
+        assert_eq!(c.keys_by_recency(), vec![1, 3]);
+        assert!(c.checkout(2).is_none(), "2 was evicted");
+    }
+
+    #[test]
+    fn arena_cache_prefers_most_recent_same_key_copy() {
+        let mut c = ArenaCache::new(3);
+        assert!(!c.checkin(5, DecodeArena::new()));
+        assert!(!c.checkin(5, DecodeArena::new()));
+        assert!(!c.checkin(9, DecodeArena::new()));
+        // Both key-5 copies are distinct slots; checkout removes one,
+        // leaving the other (plus key 9).
+        assert!(c.checkout(5).is_some());
+        assert_eq!(c.keys_by_recency(), vec![5, 9]);
+        assert!(c.checkout(5).is_some());
+        assert_eq!(c.keys_by_recency(), vec![9]);
+    }
+}

@@ -8,6 +8,7 @@
 //! Rust coordinator owning the full compress -> decode -> evaluate request
 //! path; Layers 2 (JAX model graphs) and 1 (Pallas RDOQ kernel) are AOT
 //! compiled to HLO text at build time and executed through [`runtime`].
+pub mod api;
 pub mod benchutil;
 pub mod bitio;
 pub mod cabac;
@@ -20,3 +21,8 @@ pub mod quant;
 pub mod runtime;
 pub mod testutil;
 pub mod util;
+
+// The one public error surface: every fallible path in the crate returns
+// `deepcabac::Error` (wire/CRC/shape/backpressure variants included), so
+// the `api` facade and `ModelStore` signatures compose without glue.
+pub use util::{Error, Result};

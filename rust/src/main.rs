@@ -14,6 +14,13 @@
 //!              phase A, exact re-encode of Pareto survivors) or
 //!              exact-always (trial-encode every candidate)
 //!   info       <model.nwf|model.dcb> [--threads N]  container inspection
+//!   serve      <model.dcb>... [--requests N] [--clients N]
+//!              [--arena-cap N] [--max-in-flight N]
+//!              [--admission block|fail-fast] [--decode-threads N]
+//!              register the containers in a ModelStore and drive it with
+//!              a synthetic client fleet, reporting p50/p99 latency and
+//!              decodes/sec at 1/4/16 concurrent clients (or the single
+//!              --clients count)
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --threads N.
 //! (clap is not in the offline vendor set; this is a small hand-rolled
@@ -22,7 +29,10 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use deepcabac::coordinator::{self, Method, SearchConfig, SearchStrategy};
+use deepcabac::coordinator::{
+    self, run_client_harness, AdmissionPolicy, Method, ModelStore, SearchConfig, SearchStrategy,
+    StoreConfig,
+};
 use deepcabac::model::{
     self, read_nwf, write_nwf, CompressedNetwork, ContainerPolicy, Importance, Network,
 };
@@ -78,7 +88,9 @@ fn usage() -> ExitCode {
            eval       <model.nwf|.dcb> [--artifacts DIR]\n\
            search     <model.nwf> [--method dc-v1|dc-v2|lloyd|uniform|all] [--threads N] [--tolerance PP]\n\
                       [--container v1|v2|v3] [--slice-len N] [--search-mode estimate-first|exact-always]\n\
-           info       <model.nwf|.dcb> [--threads N]\n"
+           info       <model.nwf|.dcb> [--threads N]\n\
+           serve      <model.dcb>... [--requests N] [--clients N] [--arena-cap N]\n\
+                      [--max-in-flight N] [--admission block|fail-fast] [--decode-threads N]\n"
     );
     ExitCode::from(2)
 }
@@ -93,6 +105,7 @@ fn main() -> ExitCode {
         "eval" => cmd_eval(&args),
         "search" => cmd_search(&args),
         "info" => cmd_info(&args),
+        "serve" => cmd_serve(&args),
         _ => return usage(),
     };
     match r {
@@ -123,26 +136,27 @@ fn flag_usize(args: &Args, key: &str) -> Option<usize> {
 }
 
 /// Build the `.dcb` container policy from `--container`, `--slice-len` and
-/// `--threads` (defaults: v3, DEFAULT_SLICE_LEN, all cores).
+/// `--threads` through [`ContainerPolicy::builder`] (defaults: v3,
+/// DEFAULT_SLICE_LEN, all cores).
 fn container_policy(args: &Args) -> Result<ContainerPolicy> {
-    let mut policy = ContainerPolicy::default();
-    match args.flags.get("container").map(String::as_str) {
-        Some("v1") | Some("1") => policy.version = model::VERSION_V1,
-        Some("v2") | Some("2") => policy.version = model::VERSION_V2,
-        Some("v3") | Some("3") | None => policy.version = model::VERSION_V3,
+    let mut b = ContainerPolicy::builder();
+    b = match args.flags.get("container").map(String::as_str) {
+        Some("v1") | Some("1") => b.v1(),
+        Some("v2") | Some("2") => b.v2(),
+        Some("v3") | Some("3") | None => b.v3(),
         Some(other) => {
             return Err(deepcabac::util::Error::Config(format!(
                 "unknown container version '{other}' (expected v1, v2 or v3)"
             )))
         }
-    }
+    };
     if let Some(s) = flag_usize(args, "slice-len") {
-        policy.slice_len = s.max(1);
+        b = b.slice_len(s);
     }
     if let Some(t) = flag_usize(args, "threads") {
-        policy.threads = t.max(1);
+        b = b.threads(t);
     }
-    Ok(policy)
+    Ok(b.build())
 }
 
 fn load_network(path: &str) -> Result<Network> {
@@ -360,6 +374,86 @@ fn cmd_info(args: &Args) -> Result<()> {
                 l.bias.is_some()
             );
         }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.positional.is_empty() {
+        return Err(deepcabac::util::Error::Config(
+            "missing input .dcb container(s)".into(),
+        ));
+    }
+    let mut cfg = StoreConfig::default();
+    if let Some(n) = flag_usize(args, "arena-cap") {
+        cfg.arena_capacity = n.max(1);
+    }
+    if let Some(n) = flag_usize(args, "max-in-flight") {
+        cfg.max_in_flight = n.max(1);
+    }
+    if let Some(n) = flag_usize(args, "decode-threads") {
+        cfg.decode_threads = n.max(1);
+    }
+    match args.flags.get("admission").map(String::as_str) {
+        Some("fail-fast") => cfg.admission = AdmissionPolicy::FailFast,
+        Some("block") | None => cfg.admission = AdmissionPolicy::Block,
+        Some(other) => {
+            return Err(deepcabac::util::Error::Config(format!(
+                "unknown admission policy '{other}' (expected block or fail-fast)"
+            )))
+        }
+    }
+    let store = ModelStore::new(cfg);
+    let mut names: Vec<String> = Vec::new();
+    for (i, path) in args.positional.iter().enumerate() {
+        let raw = std::fs::read(path)?;
+        let stem = std::path::Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .map(String::from)
+            .unwrap_or_else(|| format!("model{i}"));
+        let name = if names.contains(&stem) {
+            format!("{stem}#{i}")
+        } else {
+            stem
+        };
+        let info = store.register(&name, raw)?;
+        println!(
+            "registered {name}: dcb v{}, {} params, {} bytes, shape key {:#018x}",
+            info.version, info.param_count, info.container_bytes, info.shape_key
+        );
+        names.push(name);
+    }
+    let requests = flag_usize(args, "requests").unwrap_or(1000).max(1);
+    let client_counts: Vec<usize> = match flag_usize(args, "clients") {
+        Some(c) => vec![c.max(1)],
+        None => vec![1, 4, 16],
+    };
+    // One pass over the registry warms an arena per distinct shape, so
+    // every measured window below is steady-state serving.
+    for name in &names {
+        store.decode(name, |_| ())?;
+    }
+    let mut total_errors = 0usize;
+    for &clients in &client_counts {
+        let rep = run_client_harness(&store, &names, clients, requests);
+        total_errors += rep.errors;
+        println!(
+            "clients={:<3} completed={} errors={} p50={}us p99={}us {:.0} decodes/s",
+            rep.clients, rep.completed, rep.errors, rep.p50_us, rep.p99_us, rep.decodes_per_s
+        );
+    }
+    let st = store.stats();
+    println!(
+        "store stats: {} requests, {} warm arena hits, {} cold builds, {} evictions, {} rejected",
+        st.requests, st.arena_hits, st.arena_misses, st.evictions, st.rejected
+    );
+    // Under block admission nothing may fail; under fail-fast, shed
+    // requests are the policy working as configured, not a fault.
+    if total_errors > 0 && cfg.admission == AdmissionPolicy::Block {
+        return Err(deepcabac::util::Error::Config(format!(
+            "{total_errors} serving request(s) failed under block admission"
+        )));
     }
     Ok(())
 }

@@ -82,6 +82,17 @@ pub struct ContainerPolicy {
 }
 
 impl ContainerPolicy {
+    /// Fluent policy builder — the preferred construction path:
+    ///
+    /// ```
+    /// use deepcabac::model::bitstream::ContainerPolicy;
+    /// let p = ContainerPolicy::builder().v3().slice_len(4096).threads(2).build();
+    /// assert_eq!(p, ContainerPolicy::v3(4096, 2));
+    /// ```
+    pub fn builder() -> ContainerPolicyBuilder {
+        ContainerPolicyBuilder::default()
+    }
+
     /// Legacy monolithic v1 container.
     pub fn v1() -> Self {
         Self {
@@ -92,21 +103,92 @@ impl ContainerPolicy {
     }
 
     /// Sliced v2 container (legacy bin format) with explicit knobs.
+    ///
+    /// Deprecated construction path: positional knobs are easy to swap at
+    /// call sites — prefer [`ContainerPolicy::builder`].  Kept as a thin
+    /// shim for existing callers.
     pub fn v2(slice_len: usize, threads: usize) -> Self {
-        Self {
-            version: VERSION_V2,
-            slice_len: slice_len.max(1),
-            threads: threads.max(1),
-        }
+        Self::builder()
+            .v2()
+            .slice_len(slice_len)
+            .threads(threads)
+            .build()
     }
 
     /// Sliced v3 container (bypass fast-path bin format) with explicit
     /// knobs.
+    ///
+    /// Deprecated construction path: positional knobs are easy to swap at
+    /// call sites — prefer [`ContainerPolicy::builder`].  Kept as a thin
+    /// shim for existing callers.
     pub fn v3(slice_len: usize, threads: usize) -> Self {
+        Self::builder()
+            .v3()
+            .slice_len(slice_len)
+            .threads(threads)
+            .build()
+    }
+}
+
+/// Builder for [`ContainerPolicy`] ([`ContainerPolicy::builder`]).
+/// Defaults match `ContainerPolicy::default()`: v3 container,
+/// [`DEFAULT_SLICE_LEN`] symbols per slice, [`default_threads`] workers.
+#[derive(Clone, Copy, Debug)]
+pub struct ContainerPolicyBuilder {
+    version: u8,
+    slice_len: usize,
+    threads: Option<usize>,
+}
+
+impl Default for ContainerPolicyBuilder {
+    fn default() -> Self {
         Self {
             version: VERSION_V3,
-            slice_len: slice_len.max(1),
-            threads: threads.max(1),
+            slice_len: DEFAULT_SLICE_LEN,
+            threads: None,
+        }
+    }
+}
+
+impl ContainerPolicyBuilder {
+    /// Emit the legacy monolithic v1 container.
+    pub fn v1(mut self) -> Self {
+        self.version = VERSION_V1;
+        self
+    }
+
+    /// Emit the sliced v2 container (legacy bin format).
+    pub fn v2(mut self) -> Self {
+        self.version = VERSION_V2;
+        self
+    }
+
+    /// Emit the sliced v3 container (bypass fast-path bin format).
+    pub fn v3(mut self) -> Self {
+        self.version = VERSION_V3;
+        self
+    }
+
+    /// Symbols per slice (v2/v3; clamped to >= 1, ignored for v1).
+    pub fn slice_len(mut self, n: usize) -> Self {
+        self.slice_len = n;
+        self
+    }
+
+    /// Worker threads for encode/decode fan-out (clamped to >= 1).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Finalize.  v1 zeroes `slice_len` (monolithic payloads have no slice
+    /// geometry), so builder-made and shim-made policies compare equal.
+    pub fn build(self) -> ContainerPolicy {
+        let v1 = self.version == VERSION_V1;
+        ContainerPolicy {
+            version: self.version,
+            slice_len: if v1 { 0 } else { self.slice_len.max(1) },
+            threads: self.threads.unwrap_or_else(default_threads).max(1),
         }
     }
 }
@@ -177,8 +259,13 @@ pub struct CompressedNetwork {
 #[derive(Clone, Debug)]
 pub struct LayerProbe {
     pub name: String,
+    pub kind: Kind,
+    pub shape: Vec<usize>,
     pub rows: usize,
     pub cols: usize,
+    /// Bias element count (0 when the layer carries no bias) — part of the
+    /// arena warm-path identity, so [`ContainerProbe::shape_key`] needs it.
+    pub bias_len: usize,
     pub n_slices: usize,
     pub payload_bytes: usize,
 }
@@ -201,6 +288,49 @@ impl ContainerProbe {
 
     pub fn total_slices(&self) -> usize {
         self.layers.iter().map(|l| l.n_slices).sum()
+    }
+
+    /// 64-bit fingerprint of the **arena warm-path identity**: model name,
+    /// coding config, and per-layer name/kind/geometry/bias length.  Two
+    /// containers with equal keys can share a warmed [`DecodeArena`]
+    /// (`prepare` will take its zero-allocation path); the container
+    /// *version* and per-layer step-sizes are deliberately excluded, same
+    /// as the warm-path check — v1/v2/v3 encodings of one model, or
+    /// re-quantizations at different deltas, all hit the same arena.
+    ///
+    /// FNV-1a over a length-prefixed field stream, so adjacent variable
+    /// length fields (names, shape dims) cannot alias.
+    pub fn shape_key(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn eat(h: &mut u64, bytes: &[u8]) {
+            for &b in bytes {
+                *h ^= u64::from(b);
+                *h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+        fn eat_u64(h: &mut u64, v: u64) {
+            eat(h, &v.to_le_bytes());
+        }
+        let mut h = FNV_OFFSET;
+        eat_u64(&mut h, self.name.len() as u64);
+        eat(&mut h, self.name.as_bytes());
+        eat_u64(&mut h, u64::from(self.cfg.max_abs_gr));
+        eat_u64(&mut h, u64::from(self.cfg.eg_contexts));
+        eat_u64(&mut h, self.layers.len() as u64);
+        for l in &self.layers {
+            eat_u64(&mut h, l.name.len() as u64);
+            eat(&mut h, l.name.as_bytes());
+            eat_u64(&mut h, u64::from(l.kind.code()));
+            eat_u64(&mut h, l.rows as u64);
+            eat_u64(&mut h, l.cols as u64);
+            eat_u64(&mut h, l.shape.len() as u64);
+            for &d in &l.shape {
+                eat_u64(&mut h, d as u64);
+            }
+            eat_u64(&mut h, l.bias_len as u64);
+        }
+        h
     }
 }
 
@@ -253,7 +383,7 @@ impl<'a> LayerView<'a> {
 
 fn take<'a>(body: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
     if *pos + n > body.len() {
-        return Err(Error::Format("dcb truncated".into()));
+        return Err(Error::Wire("dcb truncated".into()));
     }
     let s = &body[*pos..*pos + n];
     *pos += n;
@@ -287,27 +417,27 @@ struct ContainerWalker<'a> {
 impl<'a> ContainerWalker<'a> {
     fn open(raw: &'a [u8]) -> Result<Self> {
         if raw.len() < 8 || &raw[..4] != MAGIC {
-            return Err(Error::Format("bad dcb magic".into()));
+            return Err(Error::Wire("bad dcb magic".into()));
         }
         let body = &raw[4..raw.len() - 4];
         let crc_stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
         if crc32fast::hash(body) != crc_stored {
-            return Err(Error::Format("dcb crc mismatch".into()));
+            return Err(Error::Crc("dcb crc mismatch".into()));
         }
         let mut pos = 0usize;
         let version = take(body, &mut pos, 1)?[0];
         if !(VERSION_V1..=VERSION_V3).contains(&version) {
-            return Err(Error::Format(format!("dcb version {version} unsupported")));
+            return Err(Error::Wire(format!("dcb version {version} unsupported")));
         }
         let name_len = take_u16(body, &mut pos)? as usize;
         let name = std::str::from_utf8(take(body, &mut pos, name_len)?)
-            .map_err(|e| Error::Format(format!("bad model name: {e}")))?;
+            .map_err(|e| Error::Wire(format!("bad model name: {e}")))?;
         let cfg = CodingConfig {
             max_abs_gr: take_u32(body, &mut pos)?,
             eg_contexts: take_u32(body, &mut pos)?,
         };
         if cfg.max_abs_gr == 0 || cfg.max_abs_gr > 64 || cfg.eg_contexts > 64 {
-            return Err(Error::Format("dcb implausible coding config".into()));
+            return Err(Error::Wire("dcb implausible coding config".into()));
         }
         let n_layers = take_u32(body, &mut pos)? as usize;
         Ok(Self {
@@ -326,7 +456,7 @@ impl<'a> ContainerWalker<'a> {
     fn next_layer(&mut self) -> Result<Option<LayerView<'a>>> {
         if self.emitted == self.n_layers {
             if self.pos != self.body.len() {
-                return Err(Error::Format("dcb trailing garbage".into()));
+                return Err(Error::Wire("dcb trailing garbage".into()));
             }
             return Ok(None);
         }
@@ -334,7 +464,7 @@ impl<'a> ContainerWalker<'a> {
         let pos = &mut self.pos;
         let name_len = take_u16(body, pos)? as usize;
         let name = std::str::from_utf8(take(body, pos, name_len)?)
-            .map_err(|e| Error::Format(format!("bad name: {e}")))?;
+            .map_err(|e| Error::Wire(format!("bad name: {e}")))?;
         let kind_code = take(body, pos, 1)?[0];
         let nd = take(body, pos, 1)?[0] as usize;
         let dims = take(body, pos, nd * 4)?;
@@ -404,8 +534,11 @@ pub fn probe(raw: &[u8]) -> Result<ContainerProbe> {
         };
         layers.push(LayerProbe {
             name: l.name.clone(),
+            kind: l.kind,
+            shape: l.shape.clone(),
             rows: l.rows,
             cols: l.cols,
+            bias_len: l.bias.as_ref().map_or(0, Vec::len),
             n_slices,
             payload_bytes: l.payload.len(),
         });
@@ -1121,6 +1254,82 @@ mod tests {
         let net = sample();
         let header = probe(&net.to_bytes_with(p)).unwrap();
         assert_eq!(header.version, VERSION_V3);
+    }
+
+    #[test]
+    fn builder_matches_positional_shims_and_default() {
+        assert_eq!(ContainerPolicy::builder().build(), ContainerPolicy::default());
+        let b2 = ContainerPolicy::builder().v2().slice_len(128).threads(2);
+        assert_eq!(b2.build(), ContainerPolicy::v2(128, 2));
+        let b3 = ContainerPolicy::builder().v3().slice_len(64).threads(1);
+        assert_eq!(b3.build(), ContainerPolicy::v3(64, 1));
+        // v1 zeroes slice_len so it compares equal to the v1 shim.
+        assert_eq!(
+            ContainerPolicy::builder().v1().slice_len(999).build(),
+            ContainerPolicy::v1()
+        );
+        // Clamps: zero knobs are lifted to 1 (v3 default version).
+        let p = ContainerPolicy::builder().slice_len(0).threads(0).build();
+        assert_eq!((p.slice_len, p.threads), (1, 1));
+    }
+
+    #[test]
+    fn shape_key_invariant_across_versions_and_delta() {
+        let net = sample();
+        let keys: Vec<u64> = [
+            ContainerPolicy::v1(),
+            ContainerPolicy::v2(100, 2),
+            ContainerPolicy::v3(100, 2),
+            ContainerPolicy::v3(DEFAULT_SLICE_LEN, 1),
+        ]
+        .iter()
+        .map(|&p| probe(&net.to_bytes_with(p)).unwrap().shape_key())
+        .collect();
+        assert!(keys.windows(2).all(|w| w[0] == w[1]), "{keys:?}");
+
+        // Delta is excluded: re-quantizing the same geometry keeps the key.
+        let mut requant = net.clone();
+        for l in &mut requant.layers {
+            l.delta *= 2.0;
+        }
+        let k2 = probe(&requant.to_bytes()).unwrap().shape_key();
+        assert_eq!(k2, keys[0]);
+    }
+
+    #[test]
+    fn shape_key_separates_distinct_identities() {
+        let base = sample();
+        let k0 = probe(&base.to_bytes()).unwrap().shape_key();
+
+        let mut renamed = base.clone();
+        renamed.name = "other_arch".into();
+        assert_ne!(probe(&renamed.to_bytes()).unwrap().shape_key(), k0);
+
+        let mut layer_renamed = base.clone();
+        layer_renamed.layers[0].name = "fc1b".into();
+        assert_ne!(probe(&layer_renamed.to_bytes()).unwrap().shape_key(), k0);
+
+        let mut reshaped = base.clone();
+        let l = &mut reshaped.layers[1];
+        // Same element count, transposed geometry — must not collide.
+        std::mem::swap(&mut l.rows, &mut l.cols);
+        l.shape = vec![l.cols, l.rows];
+        assert_ne!(probe(&reshaped.to_bytes()).unwrap().shape_key(), k0);
+
+        let mut no_bias = base.clone();
+        no_bias.layers[0].bias = None;
+        assert_ne!(probe(&no_bias.to_bytes()).unwrap().shape_key(), k0);
+    }
+
+    #[test]
+    fn probe_reports_layer_identity_fields() {
+        let net = sample();
+        let p = probe(&net.to_bytes()).unwrap();
+        for (lp, q) in p.layers.iter().zip(&net.layers) {
+            assert_eq!(lp.kind, q.kind);
+            assert_eq!(lp.shape, q.shape);
+            assert_eq!(lp.bias_len, q.bias.as_ref().map_or(0, Vec::len));
+        }
     }
 
     #[test]

@@ -7,15 +7,32 @@ pub mod rng;
 pub use parallel::{default_threads, parallel_map};
 pub use rng::Pcg64;
 
-/// Crate-wide error type.  (Display/Error are hand-implemented — proc-macro
+/// Crate-wide error type — the ONE public error surface (`deepcabac::Error`
+/// re-exports it at the crate root).  Container/decode/serving paths all
+/// return it, so `api` and `ModelStore` signatures compose without
+/// conversion glue.  (Display/Error are hand-implemented — proc-macro
 /// helper crates are not in the offline vendor set.)
 #[derive(Debug)]
 pub enum Error {
     Io(std::io::Error),
+    /// Malformed file/container framing outside the `.dcb` wire reader
+    /// (e.g. `.nwf` weights files).
     Format(String),
     Xla(String),
     Config(String),
+    /// CABAC payload decode failure (corrupt or truncated coded bins).
     Decode(String),
+    /// Malformed `.dcb` container wire structure: bad magic, truncated or
+    /// inconsistent headers, unsupported version, trailing garbage.
+    Wire(String),
+    /// Container checksum mismatch (bit corruption in transit/storage).
+    Crc(String),
+    /// Decoded geometry disagrees with the advertised geometry (slice
+    /// table vs header symbol counts, plane-length mismatches).
+    ShapeMismatch(String),
+    /// Admission rejected under load: the serving layer's bounded
+    /// in-flight capacity is exhausted and the caller chose fail-fast.
+    Backpressure(String),
 }
 
 impl std::fmt::Display for Error {
@@ -26,6 +43,10 @@ impl std::fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Decode(m) => write!(f, "decode error: {m}"),
+            Error::Wire(m) => write!(f, "container wire error: {m}"),
+            Error::Crc(m) => write!(f, "crc error: {m}"),
+            Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            Error::Backpressure(m) => write!(f, "backpressure: {m}"),
         }
     }
 }
@@ -74,5 +95,17 @@ mod tests {
     fn error_display() {
         let e = Error::Format("bad magic".into());
         assert!(e.to_string().contains("bad magic"));
+    }
+
+    #[test]
+    fn error_display_new_variants() {
+        assert!(Error::Wire("truncated".into()).to_string().contains("wire"));
+        assert!(Error::Crc("mismatch".into()).to_string().contains("crc"));
+        assert!(Error::ShapeMismatch("plane".into())
+            .to_string()
+            .contains("shape mismatch"));
+        assert!(Error::Backpressure("full".into())
+            .to_string()
+            .contains("backpressure"));
     }
 }

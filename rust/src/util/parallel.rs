@@ -347,6 +347,88 @@ impl Drop for Pool {
     }
 }
 
+/// Counting semaphore for **bounded admission** onto the pool and the
+/// serving layer: `n` permits, blocking [`Semaphore::acquire`] and
+/// non-blocking [`Semaphore::try_acquire`], both returning an RAII
+/// [`SemaphorePermit`] that releases on drop (panic-safe — a request that
+/// unwinds cannot leak its permit).
+///
+/// This is the backpressure primitive `ModelStore` admits decode/eval
+/// requests through: at most `n` requests proceed concurrently; callers
+/// beyond that either park on the internal condvar (block policy) or get
+/// `None` back (fail-fast policy).  Hand-rolled on Mutex + Condvar like the
+/// pool itself (tokio is not in the offline vendor set); both primitives
+/// are allocation-free on acquire/release, which the zero-allocation
+/// warm-path serving test depends on.
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    /// A semaphore with `n` permits (clamped to >= 1 — a zero-permit
+    /// semaphore would deadlock every acquirer).
+    pub fn new(n: usize) -> Self {
+        Self {
+            permits: Mutex::new(n.max(1)),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, usize> {
+        // A panic between lock and unlock here is impossible (the guarded
+        // section is a counter update), but recover from poisoning anyway
+        // so one poisoned acquire can never brick the serving layer.
+        self.permits
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Block until a permit is available and take it.
+    pub fn acquire(&self) -> SemaphorePermit<'_> {
+        let mut g = self.lock();
+        while *g == 0 {
+            g = self
+                .cv
+                .wait(g)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        *g -= 1;
+        SemaphorePermit { sem: self }
+    }
+
+    /// Take a permit if one is available right now, else `None` — the
+    /// fail-fast admission shape.
+    pub fn try_acquire(&self) -> Option<SemaphorePermit<'_>> {
+        let mut g = self.lock();
+        if *g == 0 {
+            return None;
+        }
+        *g -= 1;
+        Some(SemaphorePermit { sem: self })
+    }
+
+    /// Permits currently available (racy by nature; for tests/telemetry).
+    pub fn available(&self) -> usize {
+        *self.lock()
+    }
+}
+
+/// RAII permit from [`Semaphore::acquire`]/[`Semaphore::try_acquire`];
+/// dropping it returns the permit and wakes one blocked acquirer.
+#[must_use = "dropping the permit immediately releases the admission slot"]
+pub struct SemaphorePermit<'a> {
+    sem: &'a Semaphore,
+}
+
+impl Drop for SemaphorePermit<'_> {
+    fn drop(&mut self) {
+        let mut g = self.sem.lock();
+        *g += 1;
+        self.sem.cv.notify_one();
+    }
+}
+
 /// Raw-pointer wrapper asserting cross-thread shareability for
 /// disjoint-index writers (each index touched by exactly one claimant).
 #[derive(Clone, Copy)]
@@ -643,5 +725,73 @@ mod tests {
     fn default_threads_is_sane() {
         let t = default_threads();
         assert!((1..=MAX_POOL_WORKERS).contains(&t));
+    }
+
+    #[test]
+    fn semaphore_try_acquire_exhausts_and_replenishes() {
+        let sem = Semaphore::new(2);
+        assert_eq!(sem.available(), 2);
+        let a = sem.try_acquire().expect("first permit");
+        let b = sem.try_acquire().expect("second permit");
+        assert!(sem.try_acquire().is_none(), "third must fail-fast");
+        assert_eq!(sem.available(), 0);
+        drop(a);
+        assert_eq!(sem.available(), 1);
+        let c = sem.try_acquire().expect("released permit reusable");
+        drop(b);
+        drop(c);
+        assert_eq!(sem.available(), 2);
+    }
+
+    #[test]
+    fn semaphore_zero_permits_clamps_to_one() {
+        let sem = Semaphore::new(0);
+        let g = sem.try_acquire();
+        assert!(g.is_some(), "new(0) clamps to one permit, not deadlock");
+        assert!(sem.try_acquire().is_none());
+    }
+
+    #[test]
+    fn semaphore_blocking_acquire_wakes_on_release() {
+        // Holder thread takes the only permit, waiter blocks in acquire();
+        // dropping the holder's guard must wake the waiter.
+        let sem = Arc::new(Semaphore::new(1));
+        let held = sem.try_acquire().expect("permit");
+        let sem2 = Arc::clone(&sem);
+        let waiter = std::thread::spawn(move || {
+            let _g = sem2.acquire(); // blocks until `held` drops
+            7usize
+        });
+        // Give the waiter time to reach the condvar wait, then release.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(held);
+        assert_eq!(waiter.join().unwrap(), 7);
+        assert_eq!(sem.available(), 1);
+    }
+
+    #[test]
+    fn semaphore_bounds_concurrency() {
+        // With 2 permits and 6 threads, the observed in-flight high-water
+        // mark must never exceed 2.
+        let sem = Arc::new(Semaphore::new(2));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            let (sem, in_flight, peak) =
+                (Arc::clone(&sem), Arc::clone(&in_flight), Arc::clone(&peak));
+            handles.push(std::thread::spawn(move || {
+                let _g = sem.acquire();
+                let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2);
+        assert_eq!(sem.available(), 2);
     }
 }

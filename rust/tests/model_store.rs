@@ -1,0 +1,175 @@
+//! ModelStore serving-layer contract suite — deterministic, loom-free.
+//!
+//! Pins the behaviors the serving layer promises: LRU arena eviction in
+//! recency order, warm-arena sharing across same-shape models, fail-fast
+//! backpressure at the admission bound, registration-time container
+//! validation, and the poisoning-impossible panic story (a panicking
+//! request forfeits only its checked-out arena and releases its
+//! admission slot).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Barrier;
+
+use deepcabac::api::{AdmissionPolicy, ModelStore, StoreConfig};
+use deepcabac::cabac::CodingConfig;
+use deepcabac::model::{CompressedNetwork, ContainerPolicy, Kind, QuantizedLayer};
+use deepcabac::util::Pcg64;
+use deepcabac::Error;
+
+/// One-layer `.dcb` container.  The embedded network name participates in
+/// the arena shape key, so same-`name` same-dims containers share warmed
+/// arenas while differing in payload (seeded rng).
+fn container(name: &str, rows: usize, cols: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg64::new(seed);
+    let ints = (0..rows * cols)
+        .map(|_| {
+            if rng.next_f64() < 0.7 {
+                0
+            } else {
+                rng.below(41) as i32 - 20
+            }
+        })
+        .collect();
+    let net = CompressedNetwork {
+        name: name.into(),
+        cfg: CodingConfig::default(),
+        layers: vec![QuantizedLayer {
+            name: "fc".into(),
+            kind: Kind::Dense,
+            shape: vec![cols, rows],
+            rows,
+            cols,
+            ints,
+            delta: 0.01,
+            bias: None,
+        }],
+    };
+    net.to_bytes_with(ContainerPolicy::v3(512, 1))
+}
+
+#[test]
+fn lru_eviction_follows_recency_order() {
+    let store = ModelStore::new(StoreConfig {
+        arena_capacity: 2,
+        ..StoreConfig::default()
+    });
+    let a = store.register("a", container("a", 6, 8, 1)).unwrap();
+    let b = store.register("b", container("b", 7, 9, 2)).unwrap();
+    let c = store.register("c", container("c", 9, 11, 3)).unwrap();
+    assert_ne!(a.shape_key, b.shape_key);
+    assert_ne!(b.shape_key, c.shape_key);
+    assert_ne!(a.shape_key, c.shape_key);
+
+    store.decode("a", |_| ()).unwrap();
+    store.decode("b", |_| ()).unwrap();
+    assert_eq!(store.arena_keys_by_recency(), vec![a.shape_key, b.shape_key]);
+    // Re-serving "a" refreshes its arena's recency...
+    store.decode("a", |_| ()).unwrap();
+    assert_eq!(store.arena_keys_by_recency(), vec![b.shape_key, a.shape_key]);
+    // ...so "b"'s arena is the LRU victim when "c" needs a slot.
+    store.decode("c", |_| ()).unwrap();
+    assert_eq!(store.arena_keys_by_recency(), vec![a.shape_key, c.shape_key]);
+    let st = store.stats();
+    assert_eq!(st.requests, 4);
+    assert_eq!(st.arena_misses, 3);
+    assert_eq!(st.arena_hits, 1);
+    assert_eq!(st.evictions, 1);
+}
+
+#[test]
+fn same_shape_models_share_warm_arenas() {
+    let store = ModelStore::new(StoreConfig::default());
+    let a = store.register("alpha", container("twin", 10, 12, 7)).unwrap();
+    let b = store.register("beta", container("twin", 10, 12, 8)).unwrap();
+    assert_eq!(a.shape_key, b.shape_key, "same identity, same arena key");
+    assert_ne!(a.content_crc32, b.content_crc32, "distinct payloads");
+
+    let wa = store.decode("alpha", |n| n.layers[0].weights.clone()).unwrap();
+    let wb = store.decode("beta", |n| n.layers[0].weights.clone()).unwrap();
+    assert_ne!(wa, wb, "each model's own planes through the shared arena");
+    let st = store.stats();
+    assert_eq!(st.arena_misses, 1, "only the first request built an arena");
+    assert_eq!(st.arena_hits, 1, "the same-shape sibling reused it warm");
+    assert_eq!(store.arena_keys_by_recency(), vec![a.shape_key]);
+}
+
+#[test]
+fn unregister_drops_the_model_but_keeps_shared_arenas() {
+    let store = ModelStore::new(StoreConfig::default());
+    store.register("alpha", container("twin", 8, 8, 11)).unwrap();
+    store.register("beta", container("twin", 8, 8, 12)).unwrap();
+    store.decode("alpha", |_| ()).unwrap();
+    assert!(store.unregister("alpha"));
+    assert!(!store.unregister("alpha"), "already gone");
+    assert_eq!(store.len(), 1);
+    // The arena outlives the model that built it: beta hits it warm.
+    store.decode("beta", |_| ()).unwrap();
+    let st = store.stats();
+    assert_eq!(st.arena_misses, 1);
+    assert_eq!(st.arena_hits, 1);
+}
+
+#[test]
+fn register_validates_and_decode_checks_residency() {
+    let store = ModelStore::default();
+    assert!(store.register("bad", vec![1, 2, 3]).is_err());
+    assert!(store.is_empty());
+    let err = store.decode("ghost", |_| ()).unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err:?}");
+}
+
+#[test]
+fn fail_fast_sheds_requests_at_capacity() {
+    let store = ModelStore::new(StoreConfig {
+        max_in_flight: 1,
+        admission: AdmissionPolicy::FailFast,
+        ..StoreConfig::default()
+    });
+    store.register("m", container("m", 6, 6, 5)).unwrap();
+    let inside = Barrier::new(2);
+    let release = Barrier::new(2);
+    std::thread::scope(|s| {
+        let holder = s.spawn(|| {
+            store.decode("m", |_| {
+                inside.wait();
+                release.wait();
+            })
+        });
+        inside.wait();
+        // The only admission slot is held inside the closure above.
+        let err = store.decode("m", |_| ()).unwrap_err();
+        assert!(matches!(err, Error::Backpressure(_)), "{err:?}");
+        assert_eq!(store.stats().rejected, 1);
+        release.wait();
+        holder.join().unwrap().unwrap();
+    });
+    // Slot released: the store serves again.
+    store.decode("m", |_| ()).unwrap();
+    assert_eq!(store.stats().rejected, 1);
+}
+
+#[test]
+fn panicking_request_poisons_nothing() {
+    let store = ModelStore::new(StoreConfig {
+        max_in_flight: 1,
+        admission: AdmissionPolicy::FailFast,
+        ..StoreConfig::default()
+    });
+    let m = store.register("m", container("m", 6, 6, 9)).unwrap();
+    store.decode("m", |_| ()).unwrap(); // warm one arena
+    assert_eq!(store.arena_keys_by_recency(), vec![m.shape_key]);
+
+    let unwound = catch_unwind(AssertUnwindSafe(|| {
+        store.decode("m", |_| panic!("request blew up"))
+    }));
+    assert!(unwound.is_err(), "the panic reaches the caller");
+
+    // The checked-out arena went down with the panic — forfeited, not
+    // poisoned...
+    assert!(store.arena_keys_by_recency().is_empty());
+    // ...the RAII permit restored the only admission slot (fail-fast
+    // would shed otherwise), and the registry still serves.
+    store.decode("m", |_| ()).unwrap();
+    assert_eq!(store.len(), 1);
+    assert_eq!(store.arena_keys_by_recency(), vec![m.shape_key]);
+}

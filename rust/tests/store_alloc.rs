@@ -1,0 +1,147 @@
+//! Zero-allocation pin for the ModelStore request path: with the arena
+//! pool saturated, warm-hit decode requests from 16 concurrent clients
+//! must not touch the heap at all — admission (semaphore), registry
+//! lookup, arena checkout, the fused inline decode, the user closure and
+//! arena check-in included.
+//!
+//! Same harness discipline as `arena_alloc.rs`: a counting global
+//! allocator, a single `#[test]` so no sibling test thread can allocate
+//! during a measured window, and the MINIMUM allocation delta over
+//! several barrier-bracketed rounds — the steady state is proven by any
+//! round observing zero, while a late arena-pool growth event (the pool
+//! only reaches its high-water size when 16 checkouts actually overlap)
+//! or stray harness activity can only force a retry, never a false PASS.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+use deepcabac::api::{AdmissionPolicy, ModelStore, StoreConfig};
+use deepcabac::cabac::CodingConfig;
+use deepcabac::model::{CompressedNetwork, ContainerPolicy, Kind, QuantizedLayer};
+use deepcabac::util::Pcg64;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const CLIENTS: usize = 16;
+const REQS_PER_ROUND: usize = 8;
+const WARMUP_ROUNDS: usize = 4;
+const MEASURED_ROUNDS: usize = 5;
+
+fn sample_container() -> Vec<u8> {
+    let mut rng = Pcg64::new(0x570_A110C);
+    let ints = (0..48 * 160)
+        .map(|_| {
+            if rng.next_f64() < 0.75 {
+                0
+            } else {
+                rng.below(61) as i32 - 30
+            }
+        })
+        .collect();
+    let net = CompressedNetwork {
+        name: "store_alloc_probe".into(),
+        cfg: CodingConfig::default(),
+        layers: vec![QuantizedLayer {
+            name: "fc".into(),
+            kind: Kind::Dense,
+            shape: vec![160, 48],
+            rows: 48,
+            cols: 160,
+            ints,
+            delta: 0.015625,
+            bias: Some((0..48).map(|r| r as f32 * 0.25).collect()),
+        }],
+    };
+    net.to_bytes_with(ContainerPolicy::v3(1024, 1))
+}
+
+#[test]
+fn warm_store_requests_are_allocation_free_at_16_clients() {
+    let store = ModelStore::new(StoreConfig {
+        // Headroom above the 16-checkout high-water mark: check-ins never
+        // evict, so a warm round is pure swap_remove + push bookkeeping.
+        arena_capacity: 32,
+        max_in_flight: 32,
+        admission: AdmissionPolicy::Block,
+        // Inline per-request decode: the measured window exercises the
+        // cross-request scaling configuration the serve bench gates on.
+        decode_threads: 1,
+    });
+    store.register("probe", sample_container()).unwrap();
+
+    let rounds = WARMUP_ROUNDS + MEASURED_ROUNDS;
+    let start = Barrier::new(CLIENTS + 1);
+    let done = Barrier::new(CLIENTS + 1);
+    let mut min_delta = usize::MAX;
+    std::thread::scope(|s| {
+        for _ in 0..CLIENTS {
+            s.spawn(|| {
+                for _ in 0..rounds {
+                    start.wait();
+                    for _ in 0..REQS_PER_ROUND {
+                        let w = store
+                            .decode("probe", |net| {
+                                net.layers.first().and_then(|l| l.weights.first()).copied()
+                            })
+                            .unwrap();
+                        assert!(w.is_some());
+                    }
+                    done.wait();
+                }
+            });
+        }
+        for round in 0..rounds {
+            // Clients are parked in `start.wait()` here, so the counter
+            // read brackets exactly one round of concurrent serving.
+            let before = ALLOC_CALLS.load(Ordering::SeqCst);
+            start.wait();
+            done.wait();
+            let delta = ALLOC_CALLS.load(Ordering::SeqCst) - before;
+            if round >= WARMUP_ROUNDS {
+                min_delta = min_delta.min(delta);
+            }
+        }
+    });
+    assert_eq!(
+        min_delta, 0,
+        "warm-hit serving round performed {min_delta} heap allocations \
+         across {CLIENTS} concurrent clients"
+    );
+
+    // Sanity on the warm-path accounting: far more hits than the (at most
+    // 16-deep) pool of cold builds, and nothing was ever evicted or shed.
+    let st = store.stats();
+    let total = (rounds * CLIENTS * REQS_PER_ROUND) as u64;
+    assert_eq!(st.requests, total);
+    assert!(st.arena_misses <= CLIENTS as u64, "{st:?}");
+    assert_eq!(st.arena_hits, total - st.arena_misses);
+    assert_eq!(st.evictions, 0);
+    assert_eq!(st.rejected, 0);
+}
