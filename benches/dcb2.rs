@@ -26,8 +26,8 @@ use deepcabac::coordinator::{
     StoreConfig,
 };
 use deepcabac::model::{
-    decode_network_into, CompressedNetwork, ContainerPolicy, DecodeArena, Kind, Layer, Network,
-    QuantizedLayer, DEFAULT_SLICE_LEN, VERSION_V1,
+    decode_network_into, decode_network_into_with, CompressedNetwork, ContainerPolicy,
+    DecodeArena, Kind, Layer, Network, QuantizedLayer, DEFAULT_SLICE_LEN, VERSION_V1,
 };
 use deepcabac::quant::rd::{rd_quantize_layer_sliced_parallel, required_half, RdParams};
 use deepcabac::util::Pcg64;
@@ -272,6 +272,84 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         params as f64 / floats_fused_t4.median_s / 1e6
     );
 
+    // --- interleaved multi-slice decode vs sequential, single thread ---
+    // Same warmed arena, same v3 bytes, threads = 1 both ways: the ratio
+    // isolates exactly what round-robining k slice coders per worker buys
+    // (overlapping the coders' serial renorm/context-load stalls), with no
+    // thread-scaling term mixed in.  The planes are asserted bit-identical
+    // before the ratio is emitted — a schedule that changed output would
+    // make the number meaningless.
+    let interleave_width = 4usize;
+    let mut il_arena = DecodeArena::new();
+    decode_network_into_with(&v3_bytes, 1, 1, &mut il_arena)?; // warm: skeleton + seq scratch
+    decode_network_into_with(&v3_bytes, 1, interleave_width, &mut il_arena)?; // warm: lane scratch
+    let (il_seq_t1, _) = bench(warmup, iters, || {
+        decode_network_into_with(&v3_bytes, 1, 1, &mut il_arena).unwrap();
+    });
+    let seq_planes: Vec<Vec<u32>> = il_arena
+        .network()
+        .layers
+        .iter()
+        .map(|l| l.weights.iter().map(|w| w.to_bits()).collect())
+        .collect();
+    let (il_k_t1, _) = bench(warmup, iters, || {
+        decode_network_into_with(&v3_bytes, 1, interleave_width, &mut il_arena).unwrap();
+    });
+    for (li, l) in il_arena.network().layers.iter().enumerate() {
+        let bits: Vec<u32> = l.weights.iter().map(|w| w.to_bits()).collect();
+        assert_eq!(bits, seq_planes[li], "interleaved plane diverged from sequential");
+    }
+    let interleave_speedup_t1 = il_seq_t1.median_s / il_k_t1.median_s;
+    println!(
+        "interleave: seq@1t {:>6.1} ms ({:.2} Msym/s) | k{interleave_width}@1t {:>6.1} ms \
+         ({:.2} Msym/s, {:.2}x)",
+        il_seq_t1.median_s * 1e3,
+        params as f64 / il_seq_t1.median_s / 1e6,
+        il_k_t1.median_s * 1e3,
+        params as f64 / il_k_t1.median_s / 1e6,
+        interleave_speedup_t1
+    );
+
+    // --- SIMD dequant kernel vs the per-symbol scalar multiply ---
+    // `util::simd::dequant_into` over an L1-resident staged block, against
+    // the pre-staging codegen: one multiply per symbol where the symbol
+    // arrives from a source opaque to the vectorizer (`black_box` stands in
+    // for the serially-dependent CABAC decode the multiply used to be fused
+    // into).  Built WITH `--features simd` the kernel is the portable-SIMD
+    // body and `simd_enabled` is 1 — only then does the gate enforce the
+    // floor; the default build emits `simd_enabled` 0 and the gate SKIPs.
+    let simd_enabled = cfg!(feature = "simd");
+    let dq_n = 16 * 1024usize;
+    let mut dqrng = Pcg64::new(0x51DE);
+    let dq_syms: Vec<i32> = (0..dq_n).map(|_| dqrng.below(65) as i32 - 32).collect();
+    let mut dq_out = vec![0f32; dq_n];
+    let dq_reps = if smoke { 50 } else { 400 };
+    let (dq_kernel, _) = bench(warmup, iters, || {
+        for r in 0..dq_reps {
+            // vary delta per rep so the whole pass can't be hoisted
+            let d = 0.004f32 + r as f32 * 1e-9;
+            deepcabac::util::simd::dequant_into(&dq_syms, d, &mut dq_out);
+            std::hint::black_box(&mut dq_out);
+        }
+    });
+    let (dq_scalar, _) = bench(warmup, iters, || {
+        for r in 0..dq_reps {
+            let d = 0.004f32 + r as f32 * 1e-9;
+            for (o, &s) in dq_out.iter_mut().zip(&dq_syms) {
+                *o = std::hint::black_box(s) as f32 * d;
+            }
+            std::hint::black_box(&mut dq_out);
+        }
+    });
+    let simd_dequant_speedup = dq_scalar.median_s / dq_kernel.median_s;
+    println!(
+        "simd: dequant kernel {:>6.2} ms | per-symbol scalar {:>6.2} ms ({:.2}x, simd {})",
+        dq_kernel.median_s * 1e3,
+        dq_scalar.median_s * 1e3,
+        simd_dequant_speedup,
+        if simd_enabled { "on" } else { "off" }
+    );
+
     // --- slice-aligned RDOQ: the dominant encode-side cost, now parallel ---
     // One synthetic sparse-Laplace plane of the same parameter count; the
     // rate model restarts per slice, so slices fan out across workers and
@@ -444,6 +522,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         params as f64 / floats_fused_t4.median_s / 1e6,
         floats_speedup
     );
+    let simd_fields = format!(
+        "\"simd_enabled\": {},\n  \"simd_dequant_kernel_s\": {:.6},\n  \
+         \"simd_dequant_scalar_s\": {:.6},\n  \
+         \"simd_dequant_speedup_vs_scalar\": {:.4},\n  \
+         \"interleave_width\": {},\n  \"interleave_t1_seq_s\": {:.6},\n  \
+         \"interleave_t1_k_s\": {:.6},\n  \
+         \"interleave_speedup_vs_sequential_t1\": {:.4},",
+        if simd_enabled { 1 } else { 0 },
+        dq_kernel.median_s,
+        dq_scalar.median_s,
+        simd_dequant_speedup,
+        interleave_width,
+        il_seq_t1.median_s,
+        il_k_t1.median_s,
+        interleave_speedup_t1
+    );
     let serve_fields = format!(
         "\"serve_requests\": {},\n  \"serve_c1_decodes_s\": {:.2},\n  \
          \"serve_c1_p50_us\": {},\n  \"serve_c1_p99_us\": {},\n  \
@@ -471,6 +565,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          \"v3_t1_s\": {:.6}, \"v3_t4_s\": {:.6}}},\n  \"decode\": {{\"seed_t1_s\": {:.6}, \
          \"seed_t1_msym_s\": {:.3}, \"v1_t1_s\": {:.6}, \
          \"v1_t1_msym_s\": {:.3}, \"v2_t4_s\": {:.6}, \"v2_t4_msym_s\": {:.3}{}}},\n  \
+         {}\n  \
          {}\n  \
          {}\n  \
          \"rdoq_t1_s\": {:.6},\n  \"rdoq_t1_msym_s\": {:.3},\n  \
@@ -505,6 +600,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         params as f64 / dec_v2_t4.median_s / 1e6,
         dec_fields,
         floats_fields,
+        simd_fields,
         serve_fields,
         rdoq_t1.median_s,
         params as f64 / rdoq_t1.median_s / 1e6,

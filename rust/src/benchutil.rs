@@ -138,9 +138,10 @@ pub struct GateReport {
 
 /// Compare a current `BENCH_dcb2.json` against the committed baseline.
 ///
-/// Six checks (the later ones armed only when the baseline carries their
-/// keys — see the numbered comments in the body for RDOQ, estimate-first
-/// search, the fused decode→floats pair and the ModelStore serving pair),
+/// Eight checks (the later ones armed only when the baseline carries
+/// their keys — see the numbered comments in the body for RDOQ,
+/// estimate-first search, the fused decode→floats pair, the ModelStore
+/// serving pair, the SIMD dequant kernel and the interleaved decoder),
 /// all reading their thresholds from the *baseline* file so re-baselining
 /// never needs a code change:
 ///
@@ -429,6 +430,72 @@ pub fn bench_gate(baseline: &str, current: &str) -> GateReport {
                 pass = false;
                 lines.push(
                     "FAIL current BENCH_dcb2.json has no serve_speedup_c16_vs_c1 field".into(),
+                );
+            }
+        }
+    }
+    // 7. **SIMD dequant kernel** (added with the `simd` feature).  Armed
+    //    by `min_simd_dequant_speedup` in the *baseline*; the same-run
+    //    ratio `simd_dequant_speedup_vs_scalar` compares the staged
+    //    `util::simd::dequant_into` kernel against a per-element scalar
+    //    reference in the same process.  Because the scalar fallback
+    //    build legitimately reports ~1.0x, the check reads the current
+    //    run's `simd_enabled` flag and SKIPs when the feature was
+    //    compiled out — the nightly `--features simd` CI leg is the one
+    //    that enforces the floor.  An armed baseline plus an enabled
+    //    current run missing the ratio still fails loudly.
+    if let Some(floor) = json_num(baseline, "min_simd_dequant_speedup") {
+        let enabled = json_num(current, "simd_enabled").unwrap_or(0.0) != 0.0;
+        match json_num(current, "simd_dequant_speedup_vs_scalar") {
+            Some(r) if !enabled => lines.push(format!(
+                "SKIP simd dequant floor: current run built without --features simd \
+                 (scalar/scalar ratio {r:.2}x; the nightly simd CI leg enforces it)"
+            )),
+            Some(r) => {
+                let ok = r >= floor;
+                pass &= ok;
+                lines.push(format!(
+                    "{} same-run simd dequant speedup vs scalar = {r:.2}x (floor {floor}x)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None if !enabled => lines.push(
+                "SKIP simd dequant floor: current run built without --features simd".into(),
+            ),
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no simd_dequant_speedup_vs_scalar field"
+                        .into(),
+                );
+            }
+        }
+    }
+    // 8. **Interleaved multi-slice decode** (added with the round-robin
+    //    slice-group decoder).  Armed by `min_interleave_speedup_t1` in
+    //    the *baseline*; the same-run ratio
+    //    `interleave_speedup_vs_sequential_t1` compares the fused arena
+    //    decode at the default interleave width against width 1 on the
+    //    same bytes with one worker thread, isolating the
+    //    renorm/LUT-stall overlap the interleaving buys from thread-level
+    //    parallelism.  Machine-independent, so it is enforced even on
+    //    bootstrap baselines.
+    if let Some(floor) = json_num(baseline, "min_interleave_speedup_t1") {
+        match json_num(current, "interleave_speedup_vs_sequential_t1") {
+            Some(r) => {
+                let ok = r >= floor;
+                pass &= ok;
+                lines.push(format!(
+                    "{} same-run interleaved decode speedup k/seq @1t = {r:.2}x (floor {floor}x)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no \
+                     interleave_speedup_vs_sequential_t1 field"
+                        .into(),
                 );
             }
         }
@@ -783,5 +850,88 @@ mod tests {
         );
         let bad = bench_gate(baseline, &bench_json_serve(10.0, 2.4, 40.0, 1.3));
         assert!(!bad.pass, "{:?}", bad.lines);
+    }
+
+    fn bench_json_simd(msym: f64, speedup: f64, enabled: u32, simd_speedup: f64) -> String {
+        format!(
+            "{{\"bench\": \"dcb2\", \"v3_t1_msym_s\": {msym}, \
+             \"decode_speedup_v3_t1_vs_seed_t1\": {speedup}, \
+             \"simd_enabled\": {enabled}, \
+             \"simd_dequant_speedup_vs_scalar\": {simd_speedup}}}"
+        )
+    }
+
+    #[test]
+    fn gate_simd_check_armed_by_baseline_key() {
+        // Baseline without the simd key: current values ignored.
+        let old_baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&old_baseline, &bench_json_simd(10.0, 2.4, 1, 0.5));
+        assert!(r.pass, "{:?}", r.lines);
+        // Armed baseline + simd-enabled current: floor enforced.
+        let armed = "{\"v3_t1_msym_s\": 10.0, \"decode_speedup_v3_t1_vs_seed_t1\": 2.4, \
+             \"min_simd_dequant_speedup\": 1.2}";
+        let good = bench_gate(armed, &bench_json_simd(10.0, 2.4, 1, 1.8));
+        assert!(good.pass, "{:?}", good.lines);
+        let collapsed = bench_gate(armed, &bench_json_simd(10.0, 2.4, 1, 1.05)); // < 1.2x
+        assert!(!collapsed.pass, "{:?}", collapsed.lines);
+        // Armed + enabled + current missing the ratio: fail loudly.
+        let missing = bench_gate(
+            armed,
+            "{\"v3_t1_msym_s\": 10.0, \"decode_speedup_v3_t1_vs_seed_t1\": 2.4, \
+             \"simd_enabled\": 1}",
+        );
+        assert!(!missing.pass, "{:?}", missing.lines);
+    }
+
+    #[test]
+    fn gate_simd_check_skips_when_feature_compiled_out() {
+        // Armed baseline but the current run is a scalar build: the
+        // ~1.0x scalar/scalar ratio must SKIP, not fail — the nightly
+        // --features simd CI leg is where the floor is enforced.
+        let armed = "{\"v3_t1_msym_s\": 10.0, \"decode_speedup_v3_t1_vs_seed_t1\": 2.4, \
+             \"min_simd_dequant_speedup\": 1.2}";
+        let r = bench_gate(armed, &bench_json_simd(10.0, 2.4, 0, 1.0));
+        assert!(r.pass, "{:?}", r.lines);
+        assert!(
+            r.lines.iter().any(|l| l.contains("SKIP simd")),
+            "{:?}",
+            r.lines
+        );
+        // A current file predating the metric entirely also skips.
+        let old_current = bench_json(10.0, 2.4);
+        let r2 = bench_gate(armed, &old_current);
+        assert!(r2.pass, "{:?}", r2.lines);
+        assert!(
+            r2.lines.iter().any(|l| l.contains("SKIP simd")),
+            "{:?}",
+            r2.lines
+        );
+    }
+
+    fn bench_json_interleave(msym: f64, speedup: f64, il_speedup: f64) -> String {
+        format!(
+            "{{\"bench\": \"dcb2\", \"v3_t1_msym_s\": {msym}, \
+             \"decode_speedup_v3_t1_vs_seed_t1\": {speedup}, \
+             \"interleave_speedup_vs_sequential_t1\": {il_speedup}}}"
+        )
+    }
+
+    #[test]
+    fn gate_interleave_floor_armed_by_baseline_key() {
+        // Baseline without the interleave key: current values ignored.
+        let old_baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&old_baseline, &bench_json_interleave(10.0, 2.4, 0.5));
+        assert!(r.pass, "{:?}", r.lines);
+        // Armed baseline: floor enforced (machine-independent, so also
+        // under bootstrap baselines).
+        let armed = "{\"bootstrap\": 1, \"min_self_speedup\": 2.0, \
+             \"min_interleave_speedup_t1\": 1.2}";
+        let good = bench_gate(armed, &bench_json_interleave(0.5, 2.2, 1.5));
+        assert!(good.pass, "{:?}", good.lines);
+        let collapsed = bench_gate(armed, &bench_json_interleave(0.5, 2.2, 1.05)); // < 1.2x
+        assert!(!collapsed.pass, "{:?}", collapsed.lines);
+        // Armed baseline + current missing the metric entirely: fail loudly.
+        let missing = bench_gate(armed, &bench_json(0.5, 2.2));
+        assert!(!missing.pass, "{:?}", missing.lines);
     }
 }

@@ -9,7 +9,13 @@
 use super::arith::Decoder;
 use super::binarize;
 use super::context::{CodingConfig, SigHistory, WeightContexts};
+use crate::util::simd;
 use crate::util::{Error, Result};
+
+/// Symbols staged per dequant block in the fused kernel: big enough to
+/// amortize the staging loop and feed full SIMD lanes, small enough to
+/// live on the stack next to the coder state.
+const DEQUANT_BLOCK: usize = 64;
 
 #[inline]
 fn decode_into_impl<const LEGACY: bool>(
@@ -67,8 +73,18 @@ pub fn decode_layer_dequant_into<const LEGACY: bool>(
     let mut d = Decoder::new(bytes);
     let n = out.len();
     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        for slot in out.iter_mut() {
-            *slot = binarize::decode_int_impl::<LEGACY>(&mut d, ctxs, &mut hist) as f32 * delta;
+        // Symbols are staged in small `i32` blocks so the serially
+        // dependent bin decode and the embarrassingly parallel `sym * Δ`
+        // multiply stay separable: the multiply vectorizes under the
+        // `simd` feature ([`crate::util::simd::dequant_into`]) and its
+        // scalar fallback rounds identically, so the output is
+        // bit-identical in both builds.
+        let mut stage = [0i32; DEQUANT_BLOCK];
+        for chunk in out.chunks_mut(DEQUANT_BLOCK) {
+            for slot in stage[..chunk.len()].iter_mut() {
+                *slot = binarize::decode_int_impl::<LEGACY>(&mut d, ctxs, &mut hist);
+            }
+            simd::dequant_into(&stage[..chunk.len()], delta, chunk);
         }
     }))
     .map_err(|_| Error::Decode(format!("corrupt CABAC stream in {n}-symbol plane")))

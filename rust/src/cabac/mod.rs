@@ -36,7 +36,8 @@ pub use estimator::{
     build_cost_tables, build_cost_tables_into, estimate_int, slice_capacity_hint, CostTable,
 };
 pub use slices::{
-    decode_layer_dequant_sliced_into, decode_layer_dequant_sliced_into_legacy,
-    decode_layer_sliced, decode_layer_sliced_legacy, encode_layer_sliced,
+    decode_layer_dequant_sliced_into, decode_layer_dequant_sliced_into_interleaved,
+    decode_layer_dequant_sliced_into_legacy, decode_layer_sliced,
+    decode_layer_sliced_interleaved, decode_layer_sliced_legacy, encode_layer_sliced,
     encode_layer_sliced_parallel,
 };

@@ -15,6 +15,17 @@
 //! ([`decode_layer_dequant_sliced_into`]) write dequantized `f32` weights
 //! directly — the decode→inference hot path never materializes an integer
 //! plane.
+//!
+//! On top of the thread-level fan-out, each worker **interleaves** a small
+//! group of slice coders ([`decode_interleaved_group`]): one bin decode is
+//! a serial dependency chain (renorm shifts + adaptive-context loads), so
+//! round-robining one symbol across k independent coders gives the core k
+//! overlapping chains to hide those stalls behind.  Slices restart coder
+//! and contexts by construction, so the interleaved schedule touches only
+//! *when* each slice's symbols decode, never *what* they decode to — the
+//! output is identical to the sequential per-slice path (pinned by tests
+//! here and in `rust/tests/simd_identity.rs`).  `DCB_INTERLEAVE=1`
+//! restores the sequential schedule.
 
 //! The slice framing is bin-format agnostic; these standalone entry points
 //! code slices in the **v3** bin format (bypass fast path).  Payloads
@@ -24,11 +35,15 @@
 //! own, so the caller owns that dispatch (the `.dcb` container does it via
 //! its version field).
 
-use super::context::{CodingConfig, WeightContexts};
+use super::arith::Decoder;
+use super::binarize;
+use super::context::{CodingConfig, SigHistory, WeightContexts};
 use super::decoder::{decode_layer_dequant_into, decode_layer_into, decode_layer_into_legacy};
 use super::encoder::{encode_layer, encode_layer_with_cap};
 use super::estimator::{build_cost_tables, slice_capacity_hint, CostTable};
-use crate::util::parallel::{parallel_for_each_mut_with, parallel_map_with};
+use crate::util::parallel::{
+    decode_interleave, parallel_for_each_mut_with, parallel_map_with, MAX_DECODE_INTERLEAVE,
+};
 use crate::util::{Error, Result};
 
 /// Grid half-width of the fresh-context cost tables the encode paths build
@@ -234,23 +249,162 @@ pub(crate) fn run_decode_jobs<T, F>(
     );
 }
 
+/// One lane of an interleaved decode group: a coded slice payload, the
+/// disjoint chunk of the output plane it reconstructs, and the
+/// dequantization step applied to each decoded symbol (the integer paths
+/// pass a `write` closure that ignores it).  Lanes may come from different
+/// layers — each carries its own `delta` — which is how the container's
+/// arena decoder groups slices across layer boundaries.
+pub(crate) struct InterleaveLane<'raw, 'out, T> {
+    pub bytes: &'raw [u8],
+    pub delta: f32,
+    pub out: &'out mut [T],
+}
+
+/// An empty lane (no payload, empty output — drops out of the rotation
+/// immediately).  Lets group decoders build fixed-size stack lane arrays
+/// and fill only the first `k` slots, which is what keeps the arena's
+/// zero-allocation decode contract intact.
+impl<T> Default for InterleaveLane<'_, '_, T> {
+    fn default() -> Self {
+        Self {
+            bytes: &[],
+            delta: 0.0,
+            out: Default::default(),
+        }
+    }
+}
+
+/// Decode up to [`MAX_DECODE_INTERLEAVE`] independent slices by
+/// round-robining one symbol per lane per pass.  A single CABAC decode is
+/// a serial dependency chain — renorm shifts, adaptive-context loads, and
+/// the branchy bin loop all sit on the critical path — so stepping k
+/// coders in lockstep gives the out-of-order core k independent chains to
+/// overlap those stalls.  Lane state (coder, sig history, position) lives
+/// in fixed stack arrays; contexts are caller-owned scratch, reset per
+/// lane on entry.
+///
+/// Slices restart the coder and context models by construction, so the
+/// interleaved schedule changes only the *order* slices' symbols decode
+/// in, never their values: the output is identical to decoding each lane
+/// to completion in sequence.  Short lanes simply drop out of the rotation
+/// as they finish.  One unwind guard covers the whole group, mirroring the
+/// per-plane guard of the sequential kernels.
+pub(crate) fn decode_interleaved_group<'raw, const LEGACY: bool, T, W>(
+    lanes: &mut [InterleaveLane<'raw, '_, T>],
+    ctxs: &mut [WeightContexts],
+    write: W,
+) -> Result<()>
+where
+    W: Fn(i32, f32) -> T,
+{
+    let k = lanes.len();
+    assert!(
+        k <= MAX_DECODE_INTERLEAVE && k <= ctxs.len(),
+        "interleave group of {k} exceeds lane state ({} ctx scratches)",
+        ctxs.len()
+    );
+    let mut decs: [Option<Decoder<'raw>>; MAX_DECODE_INTERLEAVE] = std::array::from_fn(|_| None);
+    let mut hists: [SigHistory; MAX_DECODE_INTERLEAVE] = std::array::from_fn(|_| SigHistory::default());
+    let mut pos = [0usize; MAX_DECODE_INTERLEAVE];
+    let mut remaining = 0usize;
+    for i in 0..k {
+        ctxs[i].reset();
+        decs[i] = Some(Decoder::new(lanes[i].bytes));
+        if !lanes[i].out.is_empty() {
+            remaining += 1;
+        }
+    }
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        while remaining > 0 {
+            for i in 0..k {
+                let lane = &mut lanes[i];
+                if pos[i] >= lane.out.len() {
+                    continue;
+                }
+                let d = decs[i].as_mut().unwrap();
+                let sym = binarize::decode_int_impl::<LEGACY>(d, &mut ctxs[i], &mut hists[i]);
+                lane.out[pos[i]] = write(sym, lane.delta);
+                pos[i] += 1;
+                if pos[i] == lane.out.len() {
+                    remaining -= 1;
+                }
+            }
+        }
+    }))
+    .map_err(|_| Error::Decode("corrupt CABAC stream in interleaved slice group".into()))
+}
+
+/// Fan groups of `interleave` adjacent slice jobs out over `threads`
+/// workers, decoding each group with [`decode_interleaved_group`].  Each
+/// worker owns one context scratch per lane.  A group error is parked on
+/// the group's first job (the caller's first-error scan finds it there).
+pub(crate) fn run_decode_jobs_interleaved<const LEGACY: bool, T, W>(
+    jobs: &mut [SliceDecodeJob<'_, '_, T>],
+    cfg: CodingConfig,
+    threads: usize,
+    interleave: usize,
+    delta: f32,
+    write: W,
+) where
+    T: Send,
+    W: Fn(i32, f32) -> T + Sync,
+{
+    let k = interleave.clamp(1, MAX_DECODE_INTERLEAVE);
+    let mut groups: Vec<&mut [SliceDecodeJob<'_, '_, T>]> = jobs.chunks_mut(k).collect();
+    parallel_for_each_mut_with(
+        &mut groups,
+        threads,
+        || (0..k).map(|_| WeightContexts::new(cfg)).collect::<Vec<_>>(),
+        |ctxs, group| {
+            // mem::take moves each job's output borrow into its lane; the
+            // jobs only surface `err` after this point, so losing the
+            // (already written-through) slice is fine.
+            let mut lanes: Vec<InterleaveLane<'_, '_, T>> = group
+                .iter_mut()
+                .map(|j| InterleaveLane {
+                    bytes: j.bytes,
+                    delta,
+                    out: std::mem::take(&mut j.out),
+                })
+                .collect();
+            if let Err(e) = decode_interleaved_group::<LEGACY, T, _>(&mut lanes, ctxs, &write) {
+                group[0].err = Some(e);
+            }
+        },
+    );
+}
+
 fn decode_layer_sliced_impl(
     raw: &[u8],
     count: usize,
     cfg: CodingConfig,
     threads: usize,
+    interleave: usize,
     legacy: bool,
 ) -> Result<Vec<i32>> {
     let (_, payloads) = parse_sliced(raw, count)?;
     let mut out = vec![0i32; count];
     let mut jobs = make_jobs(payloads, &mut out);
-    run_decode_jobs(&mut jobs, cfg, threads, |b, c, o| {
+    if interleave > 1 && jobs.len() > 1 {
         if legacy {
-            decode_layer_into_legacy(b, c, o)
+            run_decode_jobs_interleaved::<true, _, _>(
+                &mut jobs, cfg, threads, interleave, 0.0, |s, _| s,
+            );
         } else {
-            decode_layer_into(b, c, o)
+            run_decode_jobs_interleaved::<false, _, _>(
+                &mut jobs, cfg, threads, interleave, 0.0, |s, _| s,
+            );
         }
-    });
+    } else {
+        run_decode_jobs(&mut jobs, cfg, threads, |b, c, o| {
+            if legacy {
+                decode_layer_into_legacy(b, c, o)
+            } else {
+                decode_layer_into(b, c, o)
+            }
+        });
+    }
     if let Some(e) = jobs.into_iter().find_map(|j| j.err) {
         return Err(e);
     }
@@ -262,18 +416,33 @@ fn decode_dequant_sliced_impl(
     cfg: CodingConfig,
     delta: f32,
     threads: usize,
+    interleave: usize,
     legacy: bool,
     out: &mut [f32],
 ) -> Result<()> {
     let (_, payloads) = parse_sliced(raw, out.len())?;
     let mut jobs = make_jobs(payloads, out);
-    run_decode_jobs(&mut jobs, cfg, threads, |b, c, o| {
+    if interleave > 1 && jobs.len() > 1 {
+        // `s as f32 * d` is exactly the scalar arm of the block kernel in
+        // `decode_layer_dequant_into`, so the plane is bit-identical.
         if legacy {
-            decode_layer_dequant_into::<true>(b, c, delta, o)
+            run_decode_jobs_interleaved::<true, _, _>(
+                &mut jobs, cfg, threads, interleave, delta, |s, d| s as f32 * d,
+            );
         } else {
-            decode_layer_dequant_into::<false>(b, c, delta, o)
+            run_decode_jobs_interleaved::<false, _, _>(
+                &mut jobs, cfg, threads, interleave, delta, |s, d| s as f32 * d,
+            );
         }
-    });
+    } else {
+        run_decode_jobs(&mut jobs, cfg, threads, |b, c, o| {
+            if legacy {
+                decode_layer_dequant_into::<true>(b, c, delta, o)
+            } else {
+                decode_layer_dequant_into::<false>(b, c, delta, o)
+            }
+        });
+    }
     if let Some(e) = jobs.into_iter().find_map(|j| j.err) {
         return Err(e);
     }
@@ -285,6 +454,8 @@ fn decode_dequant_sliced_impl(
 /// disjoint `&mut [f32]` chunks across `threads` workers — the sliced form
 /// of [`decode_layer_dequant_into`].  No intermediate `i32` plane exists at
 /// any point.  Expects v3-bin slices (what [`encode_layer_sliced`] writes).
+/// Each worker interleaves slices at the `DCB_INTERLEAVE` width (default
+/// 4); the plane is bit-identical at every width.
 pub fn decode_layer_dequant_sliced_into(
     raw: &[u8],
     cfg: CodingConfig,
@@ -292,7 +463,7 @@ pub fn decode_layer_dequant_sliced_into(
     threads: usize,
     out: &mut [f32],
 ) -> Result<()> {
-    decode_dequant_sliced_impl(raw, cfg, delta, threads, false, out)
+    decode_dequant_sliced_impl(raw, cfg, delta, threads, decode_interleave(), false, out)
 }
 
 /// [`decode_layer_dequant_sliced_into`] for legacy-bin (pre-v3 / v2
@@ -304,7 +475,23 @@ pub fn decode_layer_dequant_sliced_into_legacy(
     threads: usize,
     out: &mut [f32],
 ) -> Result<()> {
-    decode_dequant_sliced_impl(raw, cfg, delta, threads, true, out)
+    decode_dequant_sliced_impl(raw, cfg, delta, threads, decode_interleave(), true, out)
+}
+
+/// [`decode_layer_dequant_sliced_into`] with an explicit per-worker
+/// interleave width instead of the `DCB_INTERLEAVE` env default —
+/// `interleave <= 1` forces the sequential per-slice schedule.  Benches
+/// and the identity tests use this to pin interleaved == sequential
+/// without mutating the environment.
+pub fn decode_layer_dequant_sliced_into_interleaved(
+    raw: &[u8],
+    cfg: CodingConfig,
+    delta: f32,
+    threads: usize,
+    interleave: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    decode_dequant_sliced_impl(raw, cfg, delta, threads, interleave, false, out)
 }
 
 /// Decode, fanning slices out over `threads` workers.  The output plane is
@@ -317,7 +504,7 @@ pub fn decode_layer_sliced(
     cfg: CodingConfig,
     threads: usize,
 ) -> Result<Vec<i32>> {
-    decode_layer_sliced_impl(raw, count, cfg, threads, false)
+    decode_layer_sliced_impl(raw, count, cfg, threads, decode_interleave(), false)
 }
 
 /// [`decode_layer_sliced`] for payloads coded with the legacy (pre-v3)
@@ -329,7 +516,19 @@ pub fn decode_layer_sliced_legacy(
     cfg: CodingConfig,
     threads: usize,
 ) -> Result<Vec<i32>> {
-    decode_layer_sliced_impl(raw, count, cfg, threads, true)
+    decode_layer_sliced_impl(raw, count, cfg, threads, decode_interleave(), true)
+}
+
+/// [`decode_layer_sliced`] with an explicit per-worker interleave width
+/// (see [`decode_layer_dequant_sliced_into_interleaved`]).
+pub fn decode_layer_sliced_interleaved(
+    raw: &[u8],
+    count: usize,
+    cfg: CodingConfig,
+    threads: usize,
+    interleave: usize,
+) -> Result<Vec<i32>> {
+    decode_layer_sliced_impl(raw, count, cfg, threads, interleave, false)
 }
 
 /// Compression overhead of slicing vs a monolithic stream, in bytes.
@@ -480,6 +679,81 @@ mod tests {
             &mut floats
         )
         .is_err());
+    }
+
+    #[test]
+    fn interleaved_decode_matches_sequential_all_widths() {
+        // The round-robin schedule must not change a single output value
+        // (or f32 bit pattern) at any interleave width, thread count, or
+        // slice length — including layouts with a short tail slice and a
+        // slice count that doesn't divide the group width.
+        let cfg = CodingConfig::default();
+        let values = plane(13_000, 21);
+        let delta = 0.0078125f32;
+        for slice_len in [257usize, 1000, 4096] {
+            let raw = encode_layer_sliced(&values, cfg, slice_len);
+            let seq = decode_layer_sliced_interleaved(&raw, values.len(), cfg, 1, 1).unwrap();
+            assert_eq!(seq, values);
+            let mut seq_f = vec![f32::NAN; values.len()];
+            decode_layer_dequant_sliced_into_interleaved(&raw, cfg, delta, 1, 1, &mut seq_f)
+                .unwrap();
+            for k in 2..=MAX_DECODE_INTERLEAVE {
+                for threads in [1usize, 4] {
+                    let ints =
+                        decode_layer_sliced_interleaved(&raw, values.len(), cfg, threads, k)
+                            .unwrap();
+                    assert_eq!(ints, seq, "slice_len={slice_len} k={k} threads={threads}");
+                    let mut floats = vec![f32::NAN; values.len()];
+                    decode_layer_dequant_sliced_into_interleaved(
+                        &raw, cfg, delta, threads, k, &mut floats,
+                    )
+                    .unwrap();
+                    for (a, b) in seq_f.iter().zip(&floats) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "slice_len={slice_len} k={k} threads={threads}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_decode_legacy_payloads_match() {
+        // Legacy-bin slices through the interleaved schedule.
+        let cfg = CodingConfig::default();
+        let values = plane(6_000, 22);
+        let payloads: Vec<Vec<u8>> = values
+            .chunks(700)
+            .map(|s| crate::cabac::encoder::encode_layer_legacy(s, cfg))
+            .collect();
+        let raw = assemble_sliced(700, &payloads);
+        let mut jobs_out = vec![f32::NAN; values.len()];
+        decode_layer_dequant_sliced_into_legacy(&raw, cfg, 0.25, 3, &mut jobs_out).unwrap();
+        for (&v, &f) in values.iter().zip(&jobs_out) {
+            assert_eq!(f, v as f32 * 0.25);
+        }
+    }
+
+    #[test]
+    fn interleaved_truncation_surfaces_as_error() {
+        let cfg = CodingConfig::default();
+        let values = plane(8_000, 23);
+        let raw = encode_layer_sliced(&values, cfg, 512);
+        let mut out = vec![0f32; values.len()];
+        for k in [2usize, 4, 8] {
+            assert!(decode_layer_dequant_sliced_into_interleaved(
+                &raw[..raw.len() / 2],
+                cfg,
+                0.1,
+                2,
+                k,
+                &mut out
+            )
+            .is_err());
+        }
     }
 
     #[test]

@@ -508,13 +508,9 @@ mod tests {
         assert_eq!(back.layers[0].ints, comp.layers[0].ints);
         // distortion bounded: |w - Δ·I| can exceed Δ/2 only for rate wins
         let recon = back.reconstruct("tiny");
-        let mse: f64 = net.layers[0]
-            .weights
-            .iter()
-            .zip(&recon.layers[0].weights)
-            .map(|(&a, &b)| ((a - b) as f64).powi(2))
-            .sum::<f64>()
-            / 600.0;
+        let mse: f64 =
+            crate::metrics::squared_error_sum(&net.layers[0].weights, &recon.layers[0].weights)
+                / 600.0;
         assert!(mse < 1e-3, "{mse}");
     }
 

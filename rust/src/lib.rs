@@ -1,3 +1,6 @@
+// `portable_simd` gates the vectorized float kernels in `util::simd`
+// (nightly-only); scalar code is the default and stays bit-identical.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # deepcabac
 //!
 //! A production-grade reimplementation of **DeepCABAC** (Wiedemann et al.,

@@ -58,6 +58,23 @@ pub fn mops(units: usize, secs: f64) -> f64 {
     units as f64 / secs.max(1e-12) / 1e6
 }
 
+/// Σ (a_i − b_i)² in f64 — the distortion accumulation shared by the
+/// reconstruction-error checks.  Vectorized under the `simd` feature with
+/// a bit-identical scalar fallback (see [`crate::util::simd`]): the f32
+/// subtraction is lanewise, the f64 accumulation stays sequential so both
+/// builds round identically.  Panics if the lengths differ.
+pub fn squared_error_sum(a: &[f32], b: &[f32]) -> f64 {
+    crate::util::simd::squared_error_sum(a, b)
+}
+
+/// Mean squared error between two equal-length planes (0.0 when empty).
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    if a.is_empty() {
+        return 0.0;
+    }
+    squared_error_sum(a, b) / a.len() as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +120,22 @@ mod tests {
     #[test]
     fn mops_sane() {
         assert!((mops(2_000_000, 1.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn squared_error_matches_longhand() {
+        let a = [1.0f32, -2.0, 0.5, 0.0];
+        let b = [0.5f32, -2.0, 1.5, -1.0];
+        let want: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| {
+                let e = (x - y) as f64;
+                e * e
+            })
+            .sum();
+        assert_eq!(squared_error_sum(&a, &b).to_bits(), want.to_bits());
+        assert!((mse(&a, &b) - want / 4.0).abs() < 1e-15);
+        assert_eq!(mse(&[], &[]), 0.0);
     }
 }

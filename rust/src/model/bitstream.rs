@@ -50,11 +50,14 @@ use crate::cabac::encoder::{
     encode_layer_legacy_with, encode_layer_legacy_with_cap, encode_layer_with_cap,
 };
 use crate::cabac::slices::{
-    assemble_sliced, hint_tables, make_jobs, parse_sliced, run_decode_jobs, slice_cap,
-    slice_count, walk_sliced, SliceDecodeJob,
+    assemble_sliced, decode_interleaved_group, hint_tables, make_jobs, parse_sliced,
+    run_decode_jobs, run_decode_jobs_interleaved, slice_cap, slice_count, walk_sliced,
+    InterleaveLane, SliceDecodeJob,
 };
 use crate::cabac::{CodingConfig, WeightContexts};
-use crate::util::parallel::{default_threads, parallel_map_with, Pool, SendPtr};
+use crate::util::parallel::{
+    decode_interleave, default_threads, parallel_map_with, Pool, SendPtr, MAX_DECODE_INTERLEAVE,
+};
 use crate::util::{Error, Result};
 
 const MAGIC: &[u8; 4] = b"DCB1";
@@ -758,9 +761,20 @@ impl DecodeArena {
         Ok(())
     }
 
-    /// Fan the prepared slice table out over the pool, decoding each slice
-    /// with the fused dequant kernel straight into the skeleton's planes.
-    fn decode_planes(&mut self, pool: &Pool, raw: &[u8], threads: usize) -> Result<()> {
+    /// Fan the prepared slice table out over the pool, decoding straight
+    /// into the skeleton's planes with the fused dequant kernel.  Each
+    /// worker claims `interleave` adjacent slices at a time and decodes
+    /// them as one round-robin group ([`decode_interleaved_group`]) to
+    /// overlap the coders' serial stalls; `interleave <= 1` keeps the
+    /// per-slice schedule (which uses the block-staged SIMD dequant).
+    /// Both schedules write bit-identical planes.
+    fn decode_planes(
+        &mut self,
+        pool: &Pool,
+        raw: &[u8],
+        threads: usize,
+        interleave: usize,
+    ) -> Result<()> {
         let DecodeArena {
             net,
             cfg,
@@ -776,8 +790,12 @@ impl DecodeArena {
         if n == 0 {
             return Ok(());
         }
-        let threads = threads.max(1).min(n);
-        while scratches.len() < threads {
+        let k = interleave.clamp(1, MAX_DECODE_INTERLEAVE).min(n);
+        let threads = threads.max(1).min(n.div_ceil(k));
+        // One context scratch per lane per worker.  Grown once per
+        // (threads, interleave) high-water mark — steady-state decodes at a
+        // stable width stay allocation-free (rust/tests/arena_alloc.rs).
+        while scratches.len() < threads * k {
             scratches.push(WeightContexts::new(*cfg));
         }
         let legacy = *legacy;
@@ -786,44 +804,94 @@ impl DecodeArena {
         let scratch_base = SendPtr(scratches.as_mut_ptr());
         let slices = &*slices;
         let plane_ptrs = &*plane_ptrs;
-        let work = |widx: usize| {
-            // SAFETY: worker indices are unique within one fan-out, so each
-            // scratch slot has exactly one user; `scratches` outlives the
-            // blocking fan-out.
-            let ctxs = unsafe { &mut *scratch_base.0.add(widx) };
-            loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let s = slices[i];
-                let bytes = &raw[s.byte_off..s.byte_off + s.byte_len];
-                // SAFETY: the slice table partitions every plane into
-                // disjoint [out_off, out_off + out_len) ranges and each
-                // index is claimed exactly once, so no two &mut overlap.
-                let out = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        plane_ptrs[s.layer].0.add(s.out_off),
-                        s.out_len,
-                    )
-                };
-                let r = if legacy {
-                    decode_layer_dequant_into::<true>(bytes, ctxs, s.delta, out)
-                } else {
-                    decode_layer_dequant_into::<false>(bytes, ctxs, s.delta, out)
-                };
-                if let Err(e) = r {
-                    let mut g = first_err.lock().unwrap();
-                    if g.is_none() {
-                        *g = Some(e);
-                    }
-                }
+        let park_err = |e: Error| {
+            let mut g = first_err.lock().unwrap();
+            if g.is_none() {
+                *g = Some(e);
             }
         };
-        if threads <= 1 {
-            work(0);
+        // SAFETY (both schedules): worker indices are unique within one
+        // fan-out, so each worker's scratch slot range [widx*k, widx*k+k)
+        // has exactly one user and `scratches` outlives the blocking
+        // fan-out.  The slice table partitions every plane into disjoint
+        // [out_off, out_off + out_len) ranges and each slice index is
+        // claimed exactly once via the shared cursor, so no two &mut
+        // output slices overlap.
+        if k <= 1 {
+            let work = |widx: usize| {
+                let ctxs = unsafe { &mut *scratch_base.0.add(widx) };
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let s = slices[i];
+                    let bytes = &raw[s.byte_off..s.byte_off + s.byte_len];
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            plane_ptrs[s.layer].0.add(s.out_off),
+                            s.out_len,
+                        )
+                    };
+                    let r = if legacy {
+                        decode_layer_dequant_into::<true>(bytes, ctxs, s.delta, out)
+                    } else {
+                        decode_layer_dequant_into::<false>(bytes, ctxs, s.delta, out)
+                    };
+                    if let Err(e) = r {
+                        park_err(e);
+                    }
+                }
+            };
+            if threads <= 1 {
+                work(0);
+            } else {
+                pool.run(threads, work);
+            }
         } else {
-            pool.run(threads, work);
+            let work = |widx: usize| {
+                let ctxs =
+                    unsafe { std::slice::from_raw_parts_mut(scratch_base.0.add(widx * k), k) };
+                loop {
+                    let g = cursor.fetch_add(k, Ordering::Relaxed);
+                    if g >= n {
+                        break;
+                    }
+                    let m = (n - g).min(k);
+                    // Fixed-size stack lane array (no per-group Vec): fill
+                    // the first m slots, the rest stay empty defaults.
+                    let mut lanes: [InterleaveLane<'_, '_, f32>; MAX_DECODE_INTERLEAVE] =
+                        std::array::from_fn(|_| InterleaveLane::default());
+                    for (j, lane) in lanes[..m].iter_mut().enumerate() {
+                        let s = slices[g + j];
+                        lane.bytes = &raw[s.byte_off..s.byte_off + s.byte_len];
+                        lane.delta = s.delta;
+                        lane.out = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                plane_ptrs[s.layer].0.add(s.out_off),
+                                s.out_len,
+                            )
+                        };
+                    }
+                    let r = if legacy {
+                        decode_interleaved_group::<true, f32, _>(&mut lanes[..m], ctxs, |s, d| {
+                            s as f32 * d
+                        })
+                    } else {
+                        decode_interleaved_group::<false, f32, _>(&mut lanes[..m], ctxs, |s, d| {
+                            s as f32 * d
+                        })
+                    };
+                    if let Err(e) = r {
+                        park_err(e);
+                    }
+                }
+            };
+            if threads <= 1 {
+                work(0);
+            } else {
+                pool.run(threads, work);
+            }
         }
         match first_err.into_inner().unwrap() {
             Some(e) => Err(e),
@@ -848,6 +916,21 @@ pub fn decode_network_into<'a>(
     decode_network_into_on(Pool::global(), raw, threads, arena)
 }
 
+/// [`decode_network_into`] with an explicit per-worker slice-interleave
+/// width instead of the `DCB_INTERLEAVE` env default (`1` = sequential
+/// per-slice schedule; clamped to
+/// [`MAX_DECODE_INTERLEAVE`](crate::util::parallel::MAX_DECODE_INTERLEAVE)).
+/// The reconstructed planes are bit-identical at every width — the knob
+/// trades nothing but schedule.
+pub fn decode_network_into_with<'a>(
+    raw: &[u8],
+    threads: usize,
+    interleave: usize,
+    arena: &'a mut DecodeArena,
+) -> Result<&'a Network> {
+    decode_network_into_on_with(Pool::global(), raw, threads, interleave, arena)
+}
+
 /// [`decode_network_into`] on an explicit (injected) worker pool.
 pub fn decode_network_into_on<'a>(
     pool: &Pool,
@@ -855,11 +938,22 @@ pub fn decode_network_into_on<'a>(
     threads: usize,
     arena: &'a mut DecodeArena,
 ) -> Result<&'a Network> {
+    decode_network_into_on_with(pool, raw, threads, decode_interleave(), arena)
+}
+
+/// [`decode_network_into_with`] on an explicit (injected) worker pool.
+pub fn decode_network_into_on_with<'a>(
+    pool: &Pool,
+    raw: &[u8],
+    threads: usize,
+    interleave: usize,
+    arena: &'a mut DecodeArena,
+) -> Result<&'a Network> {
     if !arena.prepare(raw)? {
         // Cold: one parse builds the skeleton AND the slice table.
         arena.rebuild(raw)?;
     }
-    arena.decode_planes(pool, raw, threads)?;
+    arena.decode_planes(pool, raw, threads, interleave)?;
     Ok(&arena.net)
 }
 
@@ -1009,13 +1103,28 @@ impl CompressedNetwork {
             };
             jobs.extend(make_jobs(slices, plane.as_mut_slice()));
         }
-        run_decode_jobs(&mut jobs, cfg, threads, |b, c, o| {
+        let interleave = decode_interleave();
+        if interleave > 1 && jobs.len() > 1 {
+            // Same interleaved schedule as the fused arena path; the int
+            // write drops the (unused) per-lane delta.
             if legacy {
-                decode_layer_into_legacy(b, c, o)
+                run_decode_jobs_interleaved::<true, _, _>(
+                    &mut jobs, cfg, threads, interleave, 0.0, |s, _| s,
+                );
             } else {
-                decode_layer_into(b, c, o)
+                run_decode_jobs_interleaved::<false, _, _>(
+                    &mut jobs, cfg, threads, interleave, 0.0, |s, _| s,
+                );
             }
-        });
+        } else {
+            run_decode_jobs(&mut jobs, cfg, threads, |b, c, o| {
+                if legacy {
+                    decode_layer_into_legacy(b, c, o)
+                } else {
+                    decode_layer_into(b, c, o)
+                }
+            });
+        }
         if let Some(e) = jobs.into_iter().find_map(|j| j.err) {
             return Err(e);
         }
@@ -1424,6 +1533,39 @@ mod tests {
                     assert_eq!(a.weights, b.weights, "v{} threads={threads}", policy.version);
                     assert_eq!(a.bias, b.bias);
                     assert_eq!(a.shape, b.shape);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_arena_decode_is_bit_identical_at_every_interleave_width() {
+        // The interleave knob reorders only the decode schedule; the
+        // reconstructed planes must match the sequential (width-1) decode
+        // bit for bit, for v2 and v3 containers, mixed thread counts, and
+        // widths past the slice count.
+        let net = sample();
+        for policy in [ContainerPolicy::v2(100, 2), ContainerPolicy::v3(100, 2)] {
+            let bytes = net.to_bytes_with(policy);
+            let mut seq_arena = DecodeArena::new();
+            let seq: Vec<Vec<u32>> = decode_network_into_with(&bytes, 1, 1, &mut seq_arena)
+                .unwrap()
+                .layers
+                .iter()
+                .map(|l| l.weights.iter().map(|w| w.to_bits()).collect())
+                .collect();
+            let mut arena = DecodeArena::new();
+            for k in [2usize, 3, 4, 8, 64] {
+                for threads in [1usize, 4] {
+                    let got = decode_network_into_with(&bytes, threads, k, &mut arena).unwrap();
+                    for (li, l) in got.layers.iter().enumerate() {
+                        let bits: Vec<u32> = l.weights.iter().map(|w| w.to_bits()).collect();
+                        assert_eq!(
+                            bits, seq[li],
+                            "v{} k={k} threads={threads} layer={li}",
+                            policy.version
+                        );
+                    }
                 }
             }
         }

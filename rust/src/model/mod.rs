@@ -7,9 +7,10 @@ pub mod nwf;
 pub mod scan;
 
 pub use bitstream::{
-    decode_network_into, decode_network_into_on, probe, CompressedNetwork, ContainerPolicy,
-    ContainerPolicyBuilder, ContainerProbe, DecodeArena, LayerProbe, QuantizedLayer,
-    DEFAULT_SLICE_LEN, VERSION_V1, VERSION_V2, VERSION_V3,
+    decode_network_into, decode_network_into_on, decode_network_into_on_with,
+    decode_network_into_with, probe, CompressedNetwork, ContainerPolicy, ContainerPolicyBuilder,
+    ContainerProbe, DecodeArena, LayerProbe, QuantizedLayer, DEFAULT_SLICE_LEN, VERSION_V1,
+    VERSION_V2, VERSION_V3,
 };
 pub use network::{Importance, Kind, Layer, Network};
 pub use nwf::{read_nwf, write_nwf};

@@ -426,12 +426,7 @@ mod tests {
         assert_eq!(per.len(), 1);
         assert_eq!(per[0], q.symbols);
         // MSE bounded by codebook resolution.
-        let mse: f64 = weights
-            .iter()
-            .zip(&deq)
-            .map(|(&a, &b)| ((a - b) as f64).powi(2))
-            .sum::<f64>()
-            / weights.len() as f64;
+        let mse = crate::metrics::mse(&weights, &deq);
         assert!(mse < 1e-3, "{mse}");
     }
 }

@@ -38,6 +38,7 @@ use crate::cabac::context::{CodingConfig, SigHistory, WeightContexts};
 use crate::cabac::estimator::{build_cost_tables, build_cost_tables_into, estimate_int, CostTable};
 use crate::model::{Network, QuantizedLayer};
 use crate::util::parallel::parallel_map_with;
+use crate::util::simd;
 
 /// Inner-argmin strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -316,22 +317,13 @@ pub fn rd_quantize_layer_sliced_parallel(
 
 /// Full-scan argmin over the grid — identical semantics to the Pallas
 /// kernel (`python/compile/kernels/rd_assign.py` / `ref.py`): first
-/// occurrence wins ties, scan order is ascending grid position.
+/// occurrence wins ties, scan order is ascending grid position.  The cost
+/// evaluation vectorizes under the `simd` feature
+/// ([`crate::util::simd::argmin_cost_row`]) while the first-win select
+/// stays scalar, so the chosen index is identical in both builds.
 #[inline]
 pub fn argmin_rd(w: f32, f: f32, delta: f32, lambda: f32, table: &CostTable) -> i32 {
-    let half = table.half;
-    let mut best = f32::INFINITY;
-    let mut best_i = -half;
-    for j in 0..table.cost.len() {
-        let i = j as i32 - half;
-        let d = w - delta * i as f32;
-        let cost = f * d * d + lambda * table.cost[j];
-        if cost < best {
-            best = cost;
-            best_i = i;
-        }
-    }
-    best_i
+    simd::argmin_cost_row(&table.cost, table.half, w, f, delta, lambda)
 }
 
 /// Windowed argmin (see [`SearchMode::Window`]): scan 0..=nn+1 on nn's
@@ -353,30 +345,17 @@ pub fn argmin_rd_window(w: f32, f: f32, delta: f32, lambda: f32, table: &CostTab
     // negative side scans cost[base-hi..=base] reversed — either way `a`
     // ascends 0..=hi, so tie-breaking (first win, smallest |index|) is
     // identical across arms.
+    // The per-arm cost scan lives in `util::simd::argmin_arm`: the cost
+    // evaluation vectorizes under the `simd` feature, the first-win select
+    // stays scalar, and the reversed negative arm is handled by lane
+    // reversal — the winning index is identical in both builds.
     let sd = sign * delta;
     let best_a = if sign > 0.0 {
-        scan_arm(table.cost[base..=base + hi].iter().copied(), w, f, sd, lambda)
+        simd::argmin_arm(&table.cost[base..=base + hi], false, w, f, sd, lambda)
     } else {
-        scan_arm(table.cost[base - hi..=base].iter().rev().copied(), w, f, sd, lambda)
+        simd::argmin_arm(&table.cost[base - hi..=base], true, w, f, sd, lambda)
     };
     sign as i32 * best_a as i32
-}
-
-/// One window arm: costs arrive in ascending-|index| order, `a` is the
-/// distance from 0 along the weight's sign side.
-#[inline]
-fn scan_arm(costs: impl Iterator<Item = f32>, w: f32, f: f32, sd: f32, lambda: f32) -> usize {
-    let mut best = f32::INFINITY;
-    let mut best_a = 0usize;
-    for (a, c) in costs.enumerate() {
-        let d = w - sd * a as f32;
-        let cost = f * d * d + lambda * c;
-        if cost < best {
-            best = cost;
-            best_a = a;
-        }
-    }
-    best_a
 }
 
 /// Quantize a whole network with RDOQ.  `layer_params` yields (Δ, F_i

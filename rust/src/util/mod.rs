@@ -3,6 +3,7 @@
 
 pub mod parallel;
 pub mod rng;
+pub mod simd;
 
 pub use parallel::{default_threads, parallel_map};
 pub use rng::Pcg64;

@@ -35,16 +35,20 @@ pub const MAX_POOL_WORKERS: usize = 64;
 
 /// Default worker-thread count: all cores, capped at 16 — unless the
 /// `DCB_THREADS` environment variable overrides it (a positive integer;
-/// anything unparsable falls back to the hardware default).  CI runners and
-/// serving deployments use the override to pin the pool without code
-/// changes.
+/// anything unparsable falls back to the hardware default, and values
+/// above the machine's available cores are clamped with a logged warning
+/// — oversubscribing the CABAC fan-out only adds context-switch churn).
+/// CI runners and serving deployments use the override to pin the pool
+/// without code changes.
 pub fn default_threads() -> usize {
-    let hw = std::thread::available_parallelism()
+    let avail = std::thread::available_parallelism()
         .map(|n| n.get())
-        .unwrap_or(4)
-        .min(16);
+        .unwrap_or(4);
+    let hw = avail.min(16);
     match std::env::var("DCB_THREADS") {
-        Ok(v) => parse_thread_override(&v).unwrap_or(hw),
+        Ok(v) => parse_thread_override(&v)
+            .map(|n| clamp_thread_override(n, avail))
+            .unwrap_or(hw),
         Err(_) => hw,
     }
 }
@@ -59,6 +63,57 @@ pub fn parse_thread_override(v: &str) -> Option<usize> {
         Ok(n) if n >= 1 => Some(n.min(MAX_POOL_WORKERS)),
         _ => None,
     }
+}
+
+/// Clamp a parsed thread override to the machine's `available` cores,
+/// warning on stderr when the requested count exceeds them.  Pure in its
+/// inputs ([`default_threads`] passes the live core count) so the clamp
+/// is unit-testable without mutating environment state.
+pub fn clamp_thread_override(n: usize, available: usize) -> usize {
+    let available = available.max(1);
+    if n > available {
+        eprintln!(
+            "deepcabac: DCB_THREADS={n} exceeds the {available} available core(s); clamping to {available}"
+        );
+        available
+    } else {
+        n
+    }
+}
+
+/// Hard cap on how many slice coders one worker round-robins in the
+/// grouped (interleaved) container decode paths.
+pub const MAX_DECODE_INTERLEAVE: usize = 8;
+
+/// Default interleave width: enough independent renorm/LUT dependency
+/// chains to keep a superscalar core busy, small enough that the per-lane
+/// coder state stays register/L1-resident.
+pub const DEFAULT_DECODE_INTERLEAVE: usize = 4;
+
+/// Parse a `DCB_INTERLEAVE`-style override: `Some(k)` for a positive
+/// integer (clamped to [`MAX_DECODE_INTERLEAVE`]), `None` for
+/// empty/zero/garbage input — the caller falls back to
+/// [`DEFAULT_DECODE_INTERLEAVE`].  `1` disables interleaving (sequential
+/// per-slice decode).
+pub fn parse_interleave_override(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n.min(MAX_DECODE_INTERLEAVE)),
+        _ => None,
+    }
+}
+
+/// Per-worker slice interleave width for the container decode paths:
+/// `DCB_INTERLEAVE` or [`DEFAULT_DECODE_INTERLEAVE`].  Read once and
+/// cached for the life of the process — the zero-allocation serving warm
+/// path must not re-read (and possibly allocate) environment state per
+/// decode.  Callers that need an explicit width (benches, tests) use the
+/// `*_with` decode entry points instead of this knob.
+pub fn decode_interleave() -> usize {
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| match std::env::var("DCB_INTERLEAVE") {
+        Ok(v) => parse_interleave_override(&v).unwrap_or(DEFAULT_DECODE_INTERLEAVE),
+        Err(_) => DEFAULT_DECODE_INTERLEAVE,
+    })
 }
 
 thread_local! {
@@ -725,6 +780,34 @@ mod tests {
     fn default_threads_is_sane() {
         let t = default_threads();
         assert!((1..=MAX_POOL_WORKERS).contains(&t));
+    }
+
+    #[test]
+    fn thread_override_clamps_to_available_cores() {
+        // At or below the core count: untouched.
+        assert_eq!(clamp_thread_override(4, 8), 4);
+        assert_eq!(clamp_thread_override(8, 8), 8);
+        // Above it: clamped (with a stderr warning) instead of silently
+        // oversubscribing the fan-out.
+        assert_eq!(clamp_thread_override(12, 8), 8);
+        assert_eq!(clamp_thread_override(MAX_POOL_WORKERS, 2), 2);
+        // Degenerate core count still yields a usable worker.
+        assert_eq!(clamp_thread_override(3, 0), 1);
+    }
+
+    #[test]
+    fn interleave_override_parsing() {
+        assert_eq!(parse_interleave_override("1"), Some(1));
+        assert_eq!(parse_interleave_override("4"), Some(4));
+        assert_eq!(parse_interleave_override(" 2 "), Some(2));
+        // clamp to the lane cap
+        assert_eq!(parse_interleave_override("99"), Some(MAX_DECODE_INTERLEAVE));
+        // fallback cases: caller uses DEFAULT_DECODE_INTERLEAVE
+        assert_eq!(parse_interleave_override("0"), None);
+        assert_eq!(parse_interleave_override(""), None);
+        assert_eq!(parse_interleave_override("fast"), None);
+        assert!((1..=MAX_DECODE_INTERLEAVE).contains(&decode_interleave()));
+        assert!((1..=MAX_DECODE_INTERLEAVE).contains(&DEFAULT_DECODE_INTERLEAVE));
     }
 
     #[test]

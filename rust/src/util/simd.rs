@@ -1,0 +1,379 @@
+//! Vectorized float kernels for the hot loops, behind the `simd` cargo
+//! feature (portable `core::simd`, nightly-only).  Without the feature the
+//! same entry points compile to the plain scalar loops, so stable/MSRV
+//! builds are untouched.
+//!
+//! **Bit-identity contract**: every kernel here produces bit-identical
+//! results in both builds, for every input — including NaN, subnormals and
+//! negative zero.  The recipe is to vectorize only the *elementwise map*
+//! (each lane performs exactly the scalar op sequence, and IEEE-754 ops
+//! are deterministic per element) while keeping the *select/reduce order*
+//! scalar: argmins stage lane costs into a small buffer and run the
+//! original first-win comparison over it, and the distortion sum keeps the
+//! sequential `f64` accumulation.  `rust/tests/simd_identity.rs` pins this
+//! contract with adversarial inputs; the golden-vector suite pins it at
+//! the container level.
+//!
+//! No FMA anywhere: `core::simd` `*`/`+` are strict lanewise IEEE mul/add,
+//! so `f * d * d + lambda * c` rounds exactly like the scalar expression.
+
+#[cfg(feature = "simd")]
+const LANES: usize = 8;
+
+/// Dequantize a block of decoded symbols: `out[i] = syms[i] as f32 * delta`.
+///
+/// The fused decode paths ([`crate::cabac::decoder`], the arena fan-out)
+/// stage CABAC symbols into small `i32` blocks and hand them here, so the
+/// serially-dependent bin decode and the embarrassingly-parallel multiply
+/// stay separable.
+///
+/// Panics if the lengths differ.
+pub fn dequant_into(syms: &[i32], delta: f32, out: &mut [f32]) {
+    assert_eq!(syms.len(), out.len(), "dequant block length mismatch");
+    #[cfg(feature = "simd")]
+    {
+        use core::simd::prelude::*;
+        let n = syms.len();
+        let d = Simd::<f32, LANES>::splat(delta);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let v = Simd::<i32, LANES>::from_slice(&syms[i..i + LANES]);
+            (v.cast::<f32>() * d).copy_to_slice(&mut out[i..i + LANES]);
+            i += LANES;
+        }
+        for j in i..n {
+            out[j] = syms[j] as f32 * delta;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for (o, &s) in out.iter_mut().zip(syms) {
+        *o = s as f32 * delta;
+    }
+}
+
+/// First-win argmin of the RDOQ arm cost `f·(w − sd·a)² + λ·c_a` over
+/// `a = 0..costs.len()`, where `c_a` reads `costs` forward (`rev ==
+/// false`) or backward from the last element (`rev == true` — the
+/// negative-sign arm walks its table toward smaller indices).
+///
+/// Ties keep the smallest `a` and NaN costs are never selected (`cost <
+/// best` is false for NaN) — exactly the scalar scan's semantics, which
+/// the SIMD body preserves by staging lane costs and comparing in order.
+pub fn argmin_arm(costs: &[f32], rev: bool, w: f32, f: f32, sd: f32, lambda: f32) -> usize {
+    let n = costs.len();
+    let mut best = f32::INFINITY;
+    let mut best_a = 0usize;
+    #[cfg(feature = "simd")]
+    {
+        use core::simd::prelude::*;
+        const IOTA: [f32; LANES] = [0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let (wv, fv, sdv, lv) = (
+            Simd::<f32, LANES>::splat(w),
+            Simd::<f32, LANES>::splat(f),
+            Simd::<f32, LANES>::splat(sd),
+            Simd::<f32, LANES>::splat(lambda),
+        );
+        let mut staged = [0f32; LANES];
+        let mut a0 = 0usize;
+        while a0 + LANES <= n {
+            let c = if rev {
+                Simd::<f32, LANES>::from_slice(&costs[n - a0 - LANES..n - a0]).reverse()
+            } else {
+                Simd::<f32, LANES>::from_slice(&costs[a0..a0 + LANES])
+            };
+            // a as f32 per lane: a0 and the lane offsets are small exact
+            // integers, so IOTA + splat(a0) equals the scalar cast.
+            let idx = Simd::from_array(IOTA) + Simd::splat(a0 as f32);
+            let d = wv - sdv * idx;
+            (fv * d * d + lv * c).copy_to_slice(&mut staged);
+            for (j, &cost) in staged.iter().enumerate() {
+                if cost < best {
+                    best = cost;
+                    best_a = a0 + j;
+                }
+            }
+            a0 += LANES;
+        }
+        for a in a0..n {
+            let c = costs[if rev { n - 1 - a } else { a }];
+            let d = w - sd * a as f32;
+            let cost = f * d * d + lambda * c;
+            if cost < best {
+                best = cost;
+                best_a = a;
+            }
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for a in 0..n {
+        let c = costs[if rev { n - 1 - a } else { a }];
+        let d = w - sd * a as f32;
+        let cost = f * d * d + lambda * c;
+        if cost < best {
+            best = cost;
+            best_a = a;
+        }
+    }
+    best_a
+}
+
+/// First-win argmin of the full RDOQ row cost `f·(w − Δ·i)² + λ·costs[j]`
+/// with `i = j − half`, over the whole table.  Returns the winning grid
+/// index `i` (`-half` when every cost is NaN/∞, matching the scalar
+/// initialisation).  Same tie/NaN semantics as [`argmin_arm`].
+pub fn argmin_cost_row(costs: &[f32], half: i32, w: f32, f: f32, delta: f32, lambda: f32) -> i32 {
+    let n = costs.len();
+    let mut best = f32::INFINITY;
+    let mut best_i = -half;
+    #[cfg(feature = "simd")]
+    {
+        use core::simd::prelude::*;
+        const IOTA: [i32; LANES] = [0, 1, 2, 3, 4, 5, 6, 7];
+        let (wv, fv, dv, lv) = (
+            Simd::<f32, LANES>::splat(w),
+            Simd::<f32, LANES>::splat(f),
+            Simd::<f32, LANES>::splat(delta),
+            Simd::<f32, LANES>::splat(lambda),
+        );
+        let mut staged = [0f32; LANES];
+        let mut j0 = 0usize;
+        while j0 + LANES <= n {
+            let c = Simd::<f32, LANES>::from_slice(&costs[j0..j0 + LANES]);
+            let iv = Simd::from_array(IOTA) + Simd::splat(j0 as i32 - half);
+            let d = wv - dv * iv.cast::<f32>();
+            (fv * d * d + lv * c).copy_to_slice(&mut staged);
+            for (k, &cost) in staged.iter().enumerate() {
+                if cost < best {
+                    best = cost;
+                    best_i = (j0 + k) as i32 - half;
+                }
+            }
+            j0 += LANES;
+        }
+        for j in j0..n {
+            let i = j as i32 - half;
+            let d = w - delta * i as f32;
+            let cost = f * d * d + lambda * costs[j];
+            if cost < best {
+                best = cost;
+                best_i = i;
+            }
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for j in 0..n {
+        let i = j as i32 - half;
+        let d = w - delta * i as f32;
+        let cost = f * d * d + lambda * costs[j];
+        if cost < best {
+            best = cost;
+            best_i = i;
+        }
+    }
+    best_i
+}
+
+/// Σ ((a_i − b_i) as f64)² — the distortion accumulation.  The `f32`
+/// subtraction is vectorized; the `f64` convert/square/add stays strictly
+/// sequential so the accumulated rounding is bit-identical to the scalar
+/// loop.  Panics if the lengths differ.
+pub fn squared_error_sum(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "distortion operand length mismatch");
+    let mut acc = 0f64;
+    #[cfg(feature = "simd")]
+    {
+        use core::simd::prelude::*;
+        let n = a.len();
+        let mut staged = [0f32; LANES];
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let d = Simd::<f32, LANES>::from_slice(&a[i..i + LANES])
+                - Simd::<f32, LANES>::from_slice(&b[i..i + LANES]);
+            d.copy_to_slice(&mut staged);
+            for &dv in &staged {
+                let e = dv as f64;
+                acc += e * e;
+            }
+            i += LANES;
+        }
+        for j in i..n {
+            let e = (a[j] - b[j]) as f64;
+            acc += e * e;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for (&x, &y) in a.iter().zip(b) {
+        let e = (x - y) as f64;
+        acc += e * e;
+    }
+    acc
+}
+
+/// Elementwise `(x / div).clamp(lo, hi)` — the importance-normalisation
+/// map of `quant::stepsize::dc_v1_importance`.  `simd_clamp` matches
+/// scalar `f32::clamp` lanewise (NaN propagates), so both builds agree
+/// bit-for-bit.
+pub fn div_clamp(src: &[f32], div: f32, lo: f32, hi: f32) -> Vec<f32> {
+    let mut out = vec![0f32; src.len()];
+    #[cfg(feature = "simd")]
+    {
+        use core::simd::prelude::*;
+        let n = src.len();
+        let (dv, lov, hiv) = (
+            Simd::<f32, LANES>::splat(div),
+            Simd::<f32, LANES>::splat(lo),
+            Simd::<f32, LANES>::splat(hi),
+        );
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let v = Simd::<f32, LANES>::from_slice(&src[i..i + LANES]);
+            (v / dv).simd_clamp(lov, hiv).copy_to_slice(&mut out[i..i + LANES]);
+            i += LANES;
+        }
+        for j in i..n {
+            out[j] = (src[j] / div).clamp(lo, hi);
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for (o, &x) in out.iter_mut().zip(src) {
+        *o = (x / div).clamp(lo, hi);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Scalar references written out longhand: with `--features simd` these
+    // tests pin the vector kernels against the scalar semantics; without
+    // it they are self-consistency checks on the fallback.
+
+    fn adversarial_floats() -> Vec<f32> {
+        vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 2.0, // subnormal
+            -f32::MIN_POSITIVE / 4.0,
+            3.4e38,
+            -2.7e-20,
+            0.125,
+            -0.1,
+            7.75,
+            -1234.5,
+            1e-8,
+        ]
+    }
+
+    #[test]
+    fn dequant_matches_scalar_reference() {
+        let syms: Vec<i32> = (-40..=40).chain([i32::MAX, i32::MIN, 0, 7]).collect();
+        for delta in [0.02f32, -0.5, 0.0, f32::MIN_POSITIVE, 1e30] {
+            let mut out = vec![0f32; syms.len()];
+            dequant_into(&syms, delta, &mut out);
+            for (&s, &o) in syms.iter().zip(&out) {
+                assert_eq!(o.to_bits(), (s as f32 * delta).to_bits(), "sym {s} delta {delta}");
+            }
+        }
+    }
+
+    #[test]
+    fn argmin_arm_matches_scalar_reference_both_directions() {
+        let mut costs: Vec<f32> = (0..37).map(|i| (i as f32 * 0.37).sin().abs() * 3.0).collect();
+        costs[5] = f32::NAN;
+        costs[11] = costs[3]; // tie material
+        for &rev in &[false, true] {
+            for &w in &adversarial_floats() {
+                let (f, sd, lambda) = (0.7f32, 0.02, 0.11);
+                let got = argmin_arm(&costs, rev, w, f, sd, lambda);
+                // longhand reference
+                let n = costs.len();
+                let mut best = f32::INFINITY;
+                let mut best_a = 0usize;
+                for a in 0..n {
+                    let c = costs[if rev { n - 1 - a } else { a }];
+                    let d = w - sd * a as f32;
+                    let cost = f * d * d + lambda * c;
+                    if cost < best {
+                        best = cost;
+                        best_a = a;
+                    }
+                }
+                assert_eq!(got, best_a, "w={w} rev={rev}");
+            }
+        }
+    }
+
+    #[test]
+    fn argmin_cost_row_matches_scalar_reference() {
+        let half = 9i32;
+        let mut costs: Vec<f32> = (0..(2 * half + 1)).map(|i| (i as f32).sqrt()).collect();
+        costs[2] = f32::NAN;
+        for &w in &adversarial_floats() {
+            let (f, delta, lambda) = (1.3f32, 0.05, 0.4);
+            let got = argmin_cost_row(&costs, half, w, f, delta, lambda);
+            let mut best = f32::INFINITY;
+            let mut best_i = -half;
+            for j in 0..costs.len() {
+                let i = j as i32 - half;
+                let d = w - delta * i as f32;
+                let cost = f * d * d + lambda * costs[j];
+                if cost < best {
+                    best = cost;
+                    best_i = i;
+                }
+            }
+            assert_eq!(got, best_i, "w={w}");
+        }
+    }
+
+    #[test]
+    fn all_nan_costs_select_scalar_defaults() {
+        let costs = vec![f32::NAN; 13];
+        assert_eq!(argmin_arm(&costs, false, 1.0, f32::NAN, 0.1, 1.0), 0);
+        assert_eq!(argmin_cost_row(&costs, 6, 1.0, f32::NAN, 0.1, 1.0), -6);
+    }
+
+    #[test]
+    fn squared_error_sum_matches_sequential_accumulation() {
+        let a = adversarial_floats();
+        let b: Vec<f32> = a.iter().rev().copied().collect();
+        // Extend past one SIMD chunk so both the vector body and the tail run.
+        let (mut xa, mut xb) = (a.clone(), b.clone());
+        for k in 0..23 {
+            xa.push(k as f32 * 0.3 - 1.0);
+            xb.push(k as f32 * -0.7 + 0.5);
+        }
+        let got = squared_error_sum(&xa, &xb);
+        let mut want = 0f64;
+        for (&x, &y) in xa.iter().zip(&xb) {
+            let e = (x - y) as f64;
+            want += e * e;
+        }
+        assert_eq!(got.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn div_clamp_matches_scalar_reference() {
+        let src = adversarial_floats();
+        let out = div_clamp(&src, 0.37, 1e-6, 1e6);
+        for (&x, &o) in src.iter().zip(&out) {
+            let want = (x / 0.37).clamp(1e-6, 1e6);
+            assert_eq!(o.to_bits(), want.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        dequant_into(&[], 1.0, &mut []);
+        assert_eq!(squared_error_sum(&[], &[]), 0.0);
+        assert_eq!(argmin_arm(&[], false, 1.0, 1.0, 1.0, 1.0), 0);
+        assert!(div_clamp(&[], 1.0, 0.0, 1.0).is_empty());
+    }
+}
