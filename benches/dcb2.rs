@@ -5,9 +5,12 @@
 //! speedup the CI perf gate tracks, the slice-aligned RDOQ legs, and the
 //! end-to-end grid-search legs (estimate-first vs exact-always pricing on
 //! the identical grid — `search_speedup_est_vs_exact` is the tentpole
-//! same-run floor the gate enforces), and the ModelStore serving legs
+//! same-run floor the gate enforces), the ModelStore serving legs
 //! (1/4/16 concurrent clients over shared warm arenas —
-//! `serve_speedup_c16_vs_c1` is the serving layer's same-run floor).
+//! `serve_speedup_c16_vs_c1` is the serving layer's same-run floor), and
+//! the DCB4 delta legs (sparse-update container bytes vs the full
+//! re-encode — `delta_bytes_ratio_vs_full` is gated as a **ceiling** —
+//! plus fused base+residual apply throughput).
 //!
 //! Emits `BENCH_dcb2.json` (workspace root) for the perf trajectory; the
 //! CI bench-gate job runs it with `--smoke` (smaller network, fewer
@@ -26,8 +29,9 @@ use deepcabac::coordinator::{
     StoreConfig,
 };
 use deepcabac::model::{
-    decode_network_into, decode_network_into_with, CompressedNetwork, ContainerPolicy,
-    DecodeArena, Kind, Layer, Network, QuantizedLayer, DEFAULT_SLICE_LEN, VERSION_V1,
+    apply_delta_network_into, decode_network_into, decode_network_into_with, CompressedNetwork,
+    ContainerPolicy, DecodeArena, Kind, Layer, Network, QuantizedLayer, DEFAULT_SLICE_LEN,
+    VERSION_V1,
 };
 use deepcabac::quant::rd::{rd_quantize_layer_sliced_parallel, required_half, RdParams};
 use deepcabac::util::Pcg64;
@@ -499,6 +503,75 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         serve_stats.arena_hits, serve_stats.arena_misses, serve_stats.requests
     );
 
+    // --- DCB4 delta: sparse incremental update vs shipping the full model ---
+    // The update lives in the quantized domain (~3% of symbols nudged on
+    // the base's own Δ-grid, one layer left untouched to exercise the
+    // skip table), so `diff` at near-zero λ recovers it exactly and the
+    // delta container is directly comparable to the full v3 re-encode of
+    // the updated network — same grid, same coding config.  The ratio is
+    // a deterministic size-over-size number, which is why the gate can
+    // enforce it as a machine-independent CEILING
+    // (`max_delta_bytes_ratio_vs_full`).
+    let updated_cn = {
+        let mut u = net.clone();
+        let mut urng = Pcg64::new(0xDE17A);
+        for (li, l) in u.layers.iter_mut().enumerate() {
+            if li == 3 {
+                continue; // untouched layer → rides the skip-flag table
+            }
+            for v in l.ints.iter_mut() {
+                if urng.next_f64() < 0.03 {
+                    *v += urng.below(7) as i32 - 3;
+                }
+            }
+        }
+        u
+    };
+    let updated_net = updated_cn.reconstruct_named();
+    let residual_step = updated_cn.layers[0].delta;
+    let (diff_t4, delta_cn) = bench(warmup, iters, || {
+        coordinator::diff_network(
+            &v3_bytes,
+            &updated_net,
+            residual_step,
+            0.01,
+            ContainerPolicy::v3(slice_len, 4),
+        )
+        .unwrap()
+    });
+    let delta_bytes = delta_cn.to_bytes_with(ContainerPolicy::v3(slice_len, 4));
+    let delta_full_bytes = updated_cn.to_bytes_with(ContainerPolicy::v3(slice_len, 4));
+    let delta_ratio = delta_bytes.len() as f64 / delta_full_bytes.len() as f64;
+    let mut delta_arena = DecodeArena::new();
+    apply_delta_network_into(&v3_bytes, &delta_bytes, 1, &mut delta_arena)?; // warm
+    apply_delta_network_into(&v3_bytes, &delta_bytes, 4, &mut delta_arena)?;
+    {
+        // correctness guard: fused base+residual == the eager update
+        let patched = apply_delta_network_into(&v3_bytes, &delta_bytes, 4, &mut delta_arena)?;
+        for (p, u) in patched.layers.iter().zip(&updated_net.layers) {
+            assert_eq!(p.weights, u.weights, "delta apply diverged from eager update");
+        }
+    }
+    let (apply_t1, _) = bench(warmup, iters, || {
+        apply_delta_network_into(&v3_bytes, &delta_bytes, 1, &mut delta_arena).unwrap();
+    });
+    let (apply_t4, _) = bench(warmup, iters, || {
+        apply_delta_network_into(&v3_bytes, &delta_bytes, 4, &mut delta_arena).unwrap();
+    });
+    println!(
+        "delta: {} B vs full {} B (ratio {delta_ratio:.3}, {} of {} layers skipped) | \
+         diff@4t {:.1} ms | apply@1t {:.1} ms ({:.2} Msym/s) | apply@4t {:.1} ms ({:.2} Msym/s)",
+        delta_bytes.len(),
+        delta_full_bytes.len(),
+        delta_cn.skipped_layers(),
+        delta_cn.layers.len(),
+        diff_t4.median_s * 1e3,
+        apply_t1.median_s * 1e3,
+        params as f64 / apply_t1.median_s / 1e6,
+        apply_t4.median_s * 1e3,
+        params as f64 / apply_t4.median_s / 1e6
+    );
+
     // --- JSON for the perf trajectory + the CI bench gate ---
     let mut dec_fields = String::new();
     for (t, s) in &dec_v3 {
@@ -557,6 +630,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         serve_stats.arena_misses,
         serve_speedup_c16
     );
+    let delta_fields = format!(
+        "\"delta_bytes\": {},\n  \"delta_full_bytes\": {},\n  \
+         \"delta_bytes_ratio_vs_full\": {:.4},\n  \"delta_skipped_layers\": {},\n  \
+         \"delta_diff_t4_s\": {:.6},\n  \
+         \"delta_apply_t1_s\": {:.6},\n  \"delta_apply_t1_msym_s\": {:.3},\n  \
+         \"delta_apply_t4_s\": {:.6},\n  \"delta_apply_t4_msym_s\": {:.3},",
+        delta_bytes.len(),
+        delta_full_bytes.len(),
+        delta_ratio,
+        delta_cn.skipped_layers(),
+        diff_t4.median_s,
+        apply_t1.median_s,
+        params as f64 / apply_t1.median_s / 1e6,
+        apply_t4.median_s,
+        params as f64 / apply_t4.median_s / 1e6
+    );
     let json = format!(
         "{{\n  \"bench\": \"dcb2\",\n  \"mode\": \"{}\",\n  \"params\": {},\n  \
          \"layers\": {},\n  \"slice_len\": {},\n  \"v1_bytes\": {},\n  \"v2_bytes\": {},\n  \
@@ -565,6 +654,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          \"v3_t1_s\": {:.6}, \"v3_t4_s\": {:.6}}},\n  \"decode\": {{\"seed_t1_s\": {:.6}, \
          \"seed_t1_msym_s\": {:.3}, \"v1_t1_s\": {:.6}, \
          \"v1_t1_msym_s\": {:.3}, \"v2_t4_s\": {:.6}, \"v2_t4_msym_s\": {:.3}{}}},\n  \
+         {}\n  \
          {}\n  \
          {}\n  \
          {}\n  \
@@ -602,6 +692,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         floats_fields,
         simd_fields,
         serve_fields,
+        delta_fields,
         rdoq_t1.median_s,
         params as f64 / rdoq_t1.median_s / 1e6,
         rdoq_t4.median_s,

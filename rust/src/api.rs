@@ -74,8 +74,8 @@
 //! ```
 
 use crate::coordinator::pipeline::compress_dc;
-use crate::coordinator::{Candidate, Method, SearchConfig};
-use crate::model::bitstream::{decode_network_into, DecodeArena};
+use crate::coordinator::{diff_network, Candidate, Method, SearchConfig};
+use crate::model::bitstream::{apply_delta_network_into, decode_network_into, DecodeArena};
 use crate::model::{CompressedNetwork, ContainerPolicy, Network};
 use crate::util::parallel::default_threads;
 
@@ -83,6 +83,7 @@ pub use crate::coordinator::store::{
     run_client_harness, AdmissionPolicy, HarnessReport, ModelInfo, ModelStore, StoreConfig,
     StoreStats,
 };
+pub use crate::model::{CompressedDelta, DeltaHeader, DeltaLayer};
 // Companion pieces a complete compress→serve→score program needs, surfaced
 // here so such programs (e.g. `examples/quickstart.rs`) import only `api`.
 pub use crate::benchutil::{artifacts_dir, artifacts_ready};
@@ -171,6 +172,27 @@ impl Compressor {
     pub fn compress_to_bytes(&self, net: &Network) -> Vec<u8> {
         self.compress(net).to_bytes_with(self.cfg.container)
     }
+
+    /// Diff `updated` against a serialized base container into a DCB4
+    /// delta: residuals vs the base reconstruction are RDOQ-quantized at
+    /// the configured Δ/λ and CABAC-coded through the sliced path, layers
+    /// with no change ride the skip-flag table.  Apply with
+    /// [`Decoder::patch`], [`crate::coordinator::patch_network`], or
+    /// [`ModelStore::register_delta`].
+    pub fn diff(&self, base: &[u8], updated: &Network) -> Result<CompressedDelta> {
+        diff_network(
+            base,
+            updated,
+            self.cand.delta,
+            self.cand.lambda,
+            self.cfg.container,
+        )
+    }
+
+    /// [`Self::diff`] + serialization into self-contained delta bytes.
+    pub fn diff_to_bytes(&self, base: &[u8], updated: &Network) -> Result<Vec<u8>> {
+        Ok(self.diff(base, updated)?.to_bytes_with(self.cfg.container))
+    }
 }
 
 /// Fused `.dcb` decoder owning a persistent [`DecodeArena`]: the first
@@ -211,6 +233,16 @@ impl Decoder {
     /// borrow the reconstructed network.
     pub fn decode(&mut self, raw: &[u8]) -> Result<&Network> {
         decode_network_into(raw, self.threads, &mut self.arena)
+    }
+
+    /// Apply a DCB4 delta onto its base container — fused base decode +
+    /// residual accumulate in one arena pass — and borrow the patched
+    /// network.  The base bytes must hash to the CRC pinned in the delta
+    /// header ([`Error::Crc`] otherwise) and match its shape key
+    /// ([`Error::ShapeMismatch`]).  Bit-identical to decoding an eagerly
+    /// re-encoded `base + residual` network.
+    pub fn patch(&mut self, base: &[u8], delta: &[u8]) -> Result<&Network> {
+        apply_delta_network_into(base, delta, self.threads, &mut self.arena)
     }
 
     /// The most recently decoded network (empty before the first decode).
@@ -268,6 +300,35 @@ mod tests {
         let mut dec = Decoder::new();
         assert!(dec.decode(&bytes).is_ok());
         assert_eq!(dec.network().name, "api");
+    }
+
+    #[test]
+    fn facade_diff_patch_roundtrip() {
+        let net = demo_net("upd", 8, 6);
+        let comp = Compressor::new().delta(0.05).threads(2);
+        let base = comp.compress_to_bytes(&net);
+        let mut dec = Decoder::new().threads(1);
+        let mut updated = dec.decode(&base).unwrap().clone();
+        updated.layers[0].weights[3] += 0.1;
+        updated.layers[0].weights[17] -= 0.05;
+        let delta = comp
+            .delta(0.05)
+            .lambda(0.01)
+            .diff_to_bytes(&base, &updated)
+            .unwrap();
+        assert!(delta.len() < base.len());
+        assert_eq!(probe(&delta).unwrap().version, crate::model::VERSION_V4);
+        let patched = dec.patch(&base, &delta).unwrap();
+        assert_eq!(patched.layers[0].weights, updated.layers[0].weights);
+        // a delta is not decodable on its own
+        assert!(dec.decode(&delta).is_err());
+        // and the store serves it only against the right base
+        let store = ModelStore::default();
+        store.register("base", base).unwrap();
+        let info = store.register_delta("upd", delta, "base").unwrap();
+        assert_eq!(info.delta_of.as_deref(), Some("base"));
+        let w = store.decode("upd", |n| n.layers[0].weights[3]).unwrap();
+        assert_eq!(w.to_bits(), updated.layers[0].weights[3].to_bits());
     }
 
     #[test]

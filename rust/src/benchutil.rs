@@ -138,10 +138,11 @@ pub struct GateReport {
 
 /// Compare a current `BENCH_dcb2.json` against the committed baseline.
 ///
-/// Eight checks (the later ones armed only when the baseline carries
+/// Nine checks (the later ones armed only when the baseline carries
 /// their keys — see the numbered comments in the body for RDOQ,
 /// estimate-first search, the fused decode→floats pair, the ModelStore
-/// serving pair, the SIMD dequant kernel and the interleaved decoder),
+/// serving pair, the SIMD dequant kernel, the interleaved decoder and
+/// the DCB4 delta pair),
 /// all reading their thresholds from the *baseline* file so re-baselining
 /// never needs a code change:
 ///
@@ -497,6 +498,57 @@ pub fn bench_gate(baseline: &str, current: &str) -> GateReport {
                      interleave_speedup_vs_sequential_t1 field"
                         .into(),
                 );
+            }
+        }
+    }
+    // 9. **DCB4 delta containers** (added with the versioned-codec
+    //    refactor).  Two sub-checks, each armed by its baseline key:
+    //    * `delta_bytes_ratio_vs_full <= max_delta_bytes_ratio_vs_full` —
+    //      a CEILING, not a floor: the sparse-update delta container must
+    //      stay at or below the given fraction of the full re-encode of
+    //      the updated network.  A pure size ratio on deterministic
+    //      inputs, machine-independent, so it is enforced even on
+    //      bootstrap baselines.
+    //    * absolute `delta_apply_t1_msym_s` regression (fused
+    //      base+residual apply throughput; same budget as the other
+    //      absolute checks, skipped while the baseline is bootstrap or
+    //      carries a non-positive placeholder).
+    if let Some(ceiling) = json_num(baseline, "max_delta_bytes_ratio_vs_full") {
+        match json_num(current, "delta_bytes_ratio_vs_full") {
+            Some(r) => {
+                let ok = r <= ceiling;
+                pass &= ok;
+                lines.push(format!(
+                    "{} delta bytes / full re-encode = {r:.3} (ceiling {ceiling})",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no delta_bytes_ratio_vs_full field".into(),
+                );
+            }
+        }
+    }
+    if let Some(b) = json_num(baseline, "delta_apply_t1_msym_s") {
+        match json_num(current, "delta_apply_t1_msym_s") {
+            Some(c) if bootstrap || b <= 0.0 => lines.push(format!(
+                "SKIP delta-apply absolute check: baseline not armed (current {c:.3} Msym/s)"
+            )),
+            Some(c) => {
+                let regress_pct = 100.0 * (b - c) / b;
+                let ok = regress_pct <= max_regress_pct;
+                pass &= ok;
+                lines.push(format!(
+                    "{} delta apply@1t {c:.3} Msym/s vs baseline {b:.3} ({regress_pct:+.1}% \
+                     regression, limit {max_regress_pct}%)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push("FAIL current BENCH_dcb2.json has no delta_apply_t1_msym_s field".into());
             }
         }
     }
@@ -933,5 +985,52 @@ mod tests {
         // Armed baseline + current missing the metric entirely: fail loudly.
         let missing = bench_gate(armed, &bench_json(0.5, 2.2));
         assert!(!missing.pass, "{:?}", missing.lines);
+    }
+
+    fn bench_json_delta(msym: f64, speedup: f64, ratio: f64, apply: f64) -> String {
+        format!(
+            "{{\"bench\": \"dcb2\", \"v3_t1_msym_s\": {msym}, \
+             \"decode_speedup_v3_t1_vs_seed_t1\": {speedup}, \
+             \"delta_bytes_ratio_vs_full\": {ratio}, \
+             \"delta_apply_t1_msym_s\": {apply}}}"
+        )
+    }
+
+    #[test]
+    fn gate_delta_checks_armed_by_baseline_keys() {
+        // Baseline without the delta keys: current values ignored.
+        let old_baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&old_baseline, &bench_json_delta(10.0, 2.4, 0.9, 1.0));
+        assert!(r.pass, "{:?}", r.lines);
+
+        // Armed ratio ceiling: enforced even on bootstrap baselines
+        // (the ratio check is a CEILING — a small ratio passes, a large
+        // one fails — unlike every min_* floor).
+        let armed = "{\"bootstrap\": 1, \"min_self_speedup\": 2.0, \
+             \"max_delta_bytes_ratio_vs_full\": 0.35, \
+             \"delta_apply_t1_msym_s\": 0.0}";
+        let good = bench_gate(armed, &bench_json_delta(0.5, 2.2, 0.12, 3.0));
+        assert!(good.pass, "{:?}", good.lines);
+        let bloated = bench_gate(armed, &bench_json_delta(0.5, 2.2, 0.6, 3.0)); // > 0.35
+        assert!(!bloated.pass, "{:?}", bloated.lines);
+        // Non-positive apply placeholder: absolute check armed-but-skipped.
+        assert!(
+            good.lines.iter().any(|l| l.contains("SKIP delta-apply")),
+            "{:?}",
+            good.lines
+        );
+        // Armed baseline + current missing the metrics entirely: fail loudly.
+        let missing = bench_gate(armed, &bench_json(0.5, 2.2));
+        assert!(!missing.pass, "{:?}", missing.lines);
+
+        // Real (non-bootstrap) baseline with a committed apply throughput:
+        // regression budget enforced.
+        let real = "{\"min_self_speedup\": 2.0, \"v3_t1_msym_s\": 0.5, \
+             \"max_delta_bytes_ratio_vs_full\": 0.35, \
+             \"delta_apply_t1_msym_s\": 4.0}";
+        let held = bench_gate(real, &bench_json_delta(0.5, 2.2, 0.12, 3.8));
+        assert!(held.pass, "{:?}", held.lines);
+        let regressed = bench_gate(real, &bench_json_delta(0.5, 2.2, 0.12, 2.0)); // -50%
+        assert!(!regressed.pass, "{:?}", regressed.lines);
     }
 }

@@ -90,6 +90,38 @@ pub fn decode_layer_dequant_into<const LEGACY: bool>(
     .map_err(|_| Error::Decode(format!("corrupt CABAC stream in {n}-symbol plane")))
 }
 
+/// Fused decode + dequantize + **accumulate** plane kernel: decode each
+/// residual symbol and add `symbol as f32 * delta` onto the value already
+/// in `out` — the DCB4 delta-apply hot loop
+/// (`model::apply_delta_network_into`), where `out` holds the decoded
+/// base plane.  Same staging structure as [`decode_layer_dequant_into`],
+/// but the combine is a scalar read-modify-write (the SIMD dequant twin
+/// is a pure store), so `base + r·Δ` is computed in plain f32 ops in
+/// plane order — bit-identical to the eager two-pass reconstruction.
+pub fn decode_layer_dequant_add_into<const LEGACY: bool>(
+    bytes: &[u8],
+    ctxs: &mut WeightContexts,
+    delta: f32,
+    out: &mut [f32],
+) -> Result<()> {
+    ctxs.reset();
+    let mut hist = SigHistory::default();
+    let mut d = Decoder::new(bytes);
+    let n = out.len();
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut stage = [0i32; DEQUANT_BLOCK];
+        for chunk in out.chunks_mut(DEQUANT_BLOCK) {
+            for slot in stage[..chunk.len()].iter_mut() {
+                *slot = binarize::decode_int_impl::<LEGACY>(&mut d, ctxs, &mut hist);
+            }
+            for (o, &s) in chunk.iter_mut().zip(&stage[..chunk.len()]) {
+                *o += s as f32 * delta;
+            }
+        }
+    }))
+    .map_err(|_| Error::Decode(format!("corrupt CABAC stream in {n}-symbol plane")))
+}
+
 /// Decode `count` integers from a CABAC layer bitstream (v3 bin format).
 pub fn decode_layer(bytes: &[u8], count: usize, cfg: CodingConfig) -> Result<Vec<i32>> {
     let mut out = vec![0i32; count];
@@ -176,6 +208,34 @@ mod tests {
             assert_eq!(f, i as f32 * delta);
         }
         assert_eq!(ints, values);
+    }
+
+    #[test]
+    fn fused_dequant_add_accumulates_onto_base() {
+        // The add kernel must be bit-exactly `base + decoded·Δ` in plane
+        // order, for both bin formats.
+        let values: Vec<i32> = (0..300).map(|i| (i % 19) as i32 - 9).collect();
+        let cfg = CodingConfig::default();
+        let delta = 0.0078125f32;
+        let mut scratch = WeightContexts::new(cfg);
+        let base: Vec<f32> = (0..300).map(|i| i as f32 * 0.01 - 1.5).collect();
+        for legacy in [false, true] {
+            let bytes = if legacy {
+                encode_layer_legacy(&values, cfg)
+            } else {
+                encode_layer(&values, cfg)
+            };
+            let mut out = base.clone();
+            let r = if legacy {
+                decode_layer_dequant_add_into::<true>(&bytes, &mut scratch, delta, &mut out)
+            } else {
+                decode_layer_dequant_add_into::<false>(&bytes, &mut scratch, delta, &mut out)
+            };
+            r.unwrap();
+            for ((&b, &o), &v) in base.iter().zip(&out).zip(&values) {
+                assert_eq!(o, b + v as f32 * delta, "legacy={legacy}");
+            }
+        }
     }
 
     #[test]

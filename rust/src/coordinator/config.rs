@@ -130,22 +130,22 @@ impl SearchConfig {
     /// (whose per-layer context chain is what [`crate::quant::rd::rd_quantize_network`]
     /// models).
     pub fn quantizer_slicing(&self) -> Option<(usize, usize)> {
-        if self.container.version == crate::model::VERSION_V1 {
-            None
-        } else {
+        if self.container.format().sliced() {
             Some((self.container.slice_len.max(1), self.container.threads.max(1)))
+        } else {
+            None
         }
     }
 
     /// Whether the grid search prices `method`'s candidates estimate-first.
     /// Only the DC methods have a CABAC rate estimator, and the estimator
-    /// models the **v3** bin format — legacy containers (v1/v2) fall back to
-    /// exact-always rather than ranking candidates under costs the emitted
-    /// stream would not spend.
+    /// models the **bypass** bin format — legacy-bin containers (v1/v2)
+    /// fall back to exact-always rather than ranking candidates under
+    /// costs the emitted stream would not spend.
     pub fn use_estimate_first(&self, method: Method) -> bool {
         self.strategy == SearchStrategy::EstimateFirst
             && matches!(method, Method::DcV1 | Method::DcV2)
-            && self.container.version == crate::model::VERSION_V3
+            && !self.container.format().legacy_bins()
     }
 }
 

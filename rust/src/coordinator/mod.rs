@@ -6,6 +6,8 @@
 //!    pricing strategy (estimate-first vs exact-always).
 //!  * [`pipeline`]    — one candidate end to end (true decode path) and the
 //!    estimator-priced phase-A variant.
+//!  * [`delta`]       — DCB4 incremental updates: diff a retrained network
+//!    against a resident base container, patch deltas back into networks.
 //!  * [`prep`]        — per-Δ candidate memo (plans, importances, tables).
 //!  * [`grid_search`] — β-grid fan-out over the worker pool; two-phase
 //!    estimate-first pricing with exact re-encode of the Pareto survivors.
@@ -17,6 +19,7 @@
 //!    containers, LRU-cached decode arenas, bounded admission.
 
 pub mod config;
+pub mod delta;
 pub mod grid_search;
 pub mod pareto;
 pub mod pipeline;
@@ -27,6 +30,7 @@ pub mod store;
 pub use crate::util::parallel;
 
 pub use config::{Candidate, Method, SearchConfig, SearchStrategy};
+pub use delta::{diff_network, patch_network};
 pub use grid_search::{search, SearchOutcome};
 pub use pipeline::{
     run_candidate, run_candidate_estimated, run_candidate_with_arena, CandidateResult,

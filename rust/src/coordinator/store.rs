@@ -31,7 +31,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
-use crate::model::bitstream::{decode_network_into_on, probe, DecodeArena};
+use crate::model::bitstream::{
+    apply_delta_network_into_on, decode_network_into_on, probe, DecodeArena,
+};
 use crate::model::Network;
 use crate::runtime::EvalService;
 use crate::util::crc32;
@@ -78,9 +80,15 @@ impl Default for StoreConfig {
 }
 
 /// Registry entry: the container bytes plus the registration-time header
-/// probe (wire + CRC validated once, up front).
+/// probe (wire + CRC validated once, up front).  Delta entries
+/// ([`ModelStore::register_delta`]) additionally pin their base
+/// container's bytes, so the patched model keeps serving even if the
+/// base model is later unregistered by name.
 struct ModelEntry {
     bytes: Arc<Vec<u8>>,
+    /// `Some(base container bytes)` when `bytes` is a DCB4 delta that
+    /// decodes as `base + residual`.
+    base: Option<Arc<Vec<u8>>>,
     info: ModelInfo,
 }
 
@@ -88,17 +96,30 @@ struct ModelEntry {
 #[derive(Clone, Debug)]
 pub struct ModelInfo {
     pub name: String,
-    /// Container version byte (1/2/3).
+    /// Container version byte (1/2/3 full, 4 delta).
     pub version: u8,
     /// CRC-32 over the full container — the content hash `register`
     /// reports so clients can detect double-registration of new bytes.
+    /// This is also the hash a DCB4 delta pins in its header: a delta is
+    /// accepted only against the exact base bytes it was diffed from.
     pub content_crc32: u32,
     pub param_count: usize,
     pub container_bytes: usize,
     /// Arena-identity fingerprint
     /// ([`shape_key`](crate::model::ContainerProbe::shape_key)); equal
     /// keys share warmed arenas.
+    ///
+    /// **Delta-compat contract**: the key covers network name, coding
+    /// config and per-layer geometry but excludes the version byte and
+    /// every step-size Δ, so a base and a delta diffed from it hash
+    /// identically — a patched model checks the *same* warmed arenas out
+    /// of the cache as its base.  Key equality is necessary but not
+    /// sufficient for applying a delta: exact base identity is enforced
+    /// separately through [`ModelInfo::content_crc32`].
     pub shape_key: u64,
+    /// Base model name for delta entries registered via
+    /// [`ModelStore::register_delta`]; `None` for full containers.
+    pub delta_of: Option<String>,
 }
 
 /// Monotonic serving counters (atomics — readable while requests run).
@@ -250,6 +271,12 @@ impl ModelStore {
     /// description, including its content hash and arena shape key.
     pub fn register(&self, name: &str, bytes: Vec<u8>) -> Result<ModelInfo> {
         let header = probe(&bytes)?;
+        if header.delta.is_some() {
+            return Err(Error::Config(format!(
+                "'{name}' is a delta (v4) container: register it with register_delta \
+                 against its resident base"
+            )));
+        }
         let info = ModelInfo {
             name: name.to_string(),
             version: header.version,
@@ -257,9 +284,76 @@ impl ModelStore {
             param_count: header.param_count(),
             container_bytes: bytes.len(),
             shape_key: header.shape_key(),
+            delta_of: None,
         };
         let entry = ModelEntry {
             bytes: Arc::new(bytes),
+            base: None,
+            info: info.clone(),
+        };
+        self.lock().models.insert(name.to_string(), entry);
+        Ok(info)
+    }
+
+    /// Make a DCB4 delta resident under `name`, to be served as
+    /// `base + residual` through the fused arena path.  `base_name` must
+    /// resolve to a resident **full** container (delta-on-delta is
+    /// rejected) whose exact bytes the delta was diffed from: the delta
+    /// header's base CRC must equal the base's
+    /// [`content_crc32`](ModelInfo::content_crc32) ([`Error::Crc`]
+    /// otherwise) and the shape keys must agree ([`Error::ShapeMismatch`])
+    /// — see the [`shape_key`](ModelInfo::shape_key) delta-compat
+    /// contract.  The entry pins the base bytes, so later
+    /// [`Self::unregister`] of the base only removes the *name*; decode
+    /// requests are validated per call against the pinned bytes too, as
+    /// defense in depth.
+    pub fn register_delta(&self, name: &str, bytes: Vec<u8>, base_name: &str) -> Result<ModelInfo> {
+        let header = probe(&bytes)?;
+        let hdr = header.delta.ok_or_else(|| {
+            Error::Config(format!(
+                "'{name}' is not a delta container: register full models with register"
+            ))
+        })?;
+        let (base_bytes, base_info) = {
+            let g = self.lock();
+            let e = g
+                .models
+                .get(base_name)
+                .ok_or_else(|| Error::Config(format!("unknown base model '{base_name}'")))?;
+            (Arc::clone(&e.bytes), e.info.clone())
+        };
+        if base_info.delta_of.is_some() {
+            return Err(Error::Config(format!(
+                "base '{base_name}' is itself a delta: deltas chain only off full containers"
+            )));
+        }
+        if hdr.base_crc32 != base_info.content_crc32 {
+            return Err(Error::Crc(format!(
+                "delta '{name}' was diffed from base crc32 {:08x}, but '{base_name}' has {:08x}",
+                hdr.base_crc32, base_info.content_crc32
+            )));
+        }
+        if hdr.base_shape_key != base_info.shape_key {
+            return Err(Error::ShapeMismatch(format!(
+                "delta '{name}' shape key {:016x} does not match base '{base_name}' ({:016x})",
+                hdr.base_shape_key, base_info.shape_key
+            )));
+        }
+        let info = ModelInfo {
+            name: name.to_string(),
+            version: header.version,
+            content_crc32: crc32(&bytes),
+            param_count: header.param_count(),
+            container_bytes: bytes.len(),
+            // Key of the *base* (== the delta's own key by the compat
+            // contract): the patched model shares the base's warmed
+            // arenas.
+            shape_key: base_info.shape_key,
+            delta_of: Some(base_name.to_string()),
+        };
+        let entry = ModelEntry {
+            bytes: Arc::new(bytes),
+            base: Some(base_bytes),
             info: info.clone(),
         };
         self.lock().models.insert(name.to_string(), entry);
@@ -335,16 +429,17 @@ impl ModelStore {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
 
         // Brief lock #1: resolve the name and check an arena out.
-        let (bytes, key, arena) = {
+        let (bytes, base, key, arena) = {
             let mut g = self.lock();
             let entry = g
                 .models
                 .get(name)
                 .ok_or_else(|| Error::Config(format!("unknown model '{name}'")))?;
             let bytes = Arc::clone(&entry.bytes);
+            let base = entry.base.as_ref().map(Arc::clone);
             let key = entry.info.shape_key;
             let arena = g.arenas.checkout(key);
-            (bytes, key, arena)
+            (bytes, base, key, arena)
         };
         let mut arena = match arena {
             Some(a) => {
@@ -357,9 +452,16 @@ impl ModelStore {
             }
         };
 
-        // Unlocked: the CABAC decode and the user closure.
+        // Unlocked: the CABAC decode and the user closure.  Delta entries
+        // run base-decode + residual-accumulate fused into the same arena
+        // their base would use (identical shape key).
         let threads = self.cfg.decode_threads.max(1);
-        let out = decode_network_into_on(&self.pool, &bytes, threads, &mut arena).map(f);
+        let out = match &base {
+            Some(b) => {
+                apply_delta_network_into_on(&self.pool, b, &bytes, threads, &mut arena).map(f)
+            }
+            None => decode_network_into_on(&self.pool, &bytes, threads, &mut arena).map(f),
+        };
 
         // Brief lock #2: return the arena (warm even after a decode error
         // — only the plane *contents* are unspecified then).
@@ -501,6 +603,70 @@ mod tests {
         assert!(c.checkin(3, DecodeArena::new()));
         assert_eq!(c.keys_by_recency(), vec![1, 3]);
         assert!(c.checkout(2).is_none(), "2 was evicted");
+    }
+
+    #[test]
+    fn delta_registration_validates_and_serves_patched_model() {
+        use crate::coordinator::delta::diff_network;
+        use crate::model::{CompressedNetwork, ContainerPolicy, Kind, QuantizedLayer};
+        use crate::util::Pcg64;
+
+        let mut rng = Pcg64::new(881);
+        let cn = CompressedNetwork {
+            name: "srv".into(),
+            cfg: Default::default(),
+            layers: vec![QuantizedLayer {
+                name: "l0".into(),
+                kind: Kind::Dense,
+                shape: vec![12, 9],
+                rows: 9,
+                cols: 12,
+                ints: (0..108).map(|_| rng.below(15) as i32 - 7).collect(),
+                delta: 0.02,
+                bias: None,
+            }],
+        };
+        let raw = cn.to_bytes_with(ContainerPolicy::v3(32, 1));
+        let mut updated = cn.reconstruct_named();
+        updated.layers[0].weights[5] += 0.008;
+        let d = diff_network(&raw, &updated, 0.008, 0.01, ContainerPolicy::v3(32, 1)).unwrap();
+        let draw = d.to_bytes_with(ContainerPolicy::v3(32, 1));
+
+        let store = ModelStore::default();
+        // a delta cannot come in through the full-container door
+        assert!(store.register("d", draw.clone()).is_err());
+        // ...nor land on an absent or wrong base
+        assert!(store.register_delta("d", draw.clone(), "base").is_err());
+        let base_info = store.register("base", raw.clone()).unwrap();
+        // same network re-sliced: same shape key, different bytes
+        let other = cn.to_bytes_with(ContainerPolicy::v3(16, 1));
+        store.register("other", other).unwrap();
+        assert!(
+            matches!(store.register_delta("d", draw.clone(), "other"), Err(Error::Crc(_))),
+            "same shape, different bytes: CRC must catch it"
+        );
+
+        let dinfo = store.register_delta("d", draw.clone(), "base").unwrap();
+        assert_eq!(dinfo.version, crate::model::VERSION_V4);
+        assert_eq!(dinfo.delta_of.as_deref(), Some("base"));
+        assert_eq!(dinfo.shape_key, base_info.shape_key);
+        // delta-on-delta is rejected
+        assert!(store.register_delta("dd", draw.clone(), "d").is_err());
+
+        let got = store.decode("d", |n| n.layers[0].weights.clone()).unwrap();
+        let want: Vec<f32> = updated.layers[0].weights.clone();
+        assert_eq!(
+            got.iter().map(|w| w.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|w| w.to_bits()).collect::<Vec<_>>()
+        );
+        // the patched model and its base share warmed arenas (one key)
+        store.decode("base", |_| ()).unwrap();
+        store.decode("d", |_| ()).unwrap();
+        let s = store.stats();
+        assert!(s.arena_hits >= 2, "hits {}", s.arena_hits);
+        // base bytes are pinned: dropping the base name keeps 'd' serving
+        assert!(store.unregister("base"));
+        store.decode("d", |_| ()).unwrap();
     }
 
     #[test]

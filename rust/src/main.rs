@@ -14,13 +14,25 @@
 //!              phase A, exact re-encode of Pareto survivors) or
 //!              exact-always (trial-encode every candidate)
 //!   info       <model.nwf|model.dcb> [--threads N]  container inspection
+//!              (v4 deltas show skip flags and the pinned base hash)
+//!   diff       <base.dcb> <updated.nwf> [-o out.dcb] [--delta D]
+//!              [--lambda L] [--slice-len N] [--threads N]  encode the
+//!              update as a DCB4 delta container: residuals vs the base
+//!              go through the same slice-aligned RDOQ + CABAC path as
+//!              full containers, unchanged layers ride a skip-flag table
+//!   patch      <base.dcb> <delta.dcb> [-o out.nwf] [--threads N]
+//!              apply a DCB4 delta onto its base (the base bytes must
+//!              hash to the CRC pinned in the delta header) and write
+//!              the reconstructed network
 //!   serve      <model.dcb>... [--requests N] [--clients N]
 //!              [--arena-cap N] [--max-in-flight N]
 //!              [--admission block|fail-fast] [--decode-threads N]
 //!              register the containers in a ModelStore and drive it with
 //!              a synthetic client fleet, reporting p50/p99 latency and
 //!              decodes/sec at 1/4/16 concurrent clients (or the single
-//!              --clients count)
+//!              --clients count); v4 delta positionals are auto-linked
+//!              against the already-listed base whose content hash the
+//!              delta header pins, and served patched
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --threads N.
 //! (clap is not in the offline vendor set; this is a small hand-rolled
@@ -34,7 +46,8 @@ use deepcabac::coordinator::{
     StoreConfig,
 };
 use deepcabac::model::{
-    self, read_nwf, write_nwf, CompressedNetwork, ContainerPolicy, Importance, Network,
+    self, read_nwf, write_nwf, CompressedDelta, CompressedNetwork, ContainerPolicy, Importance,
+    Network,
 };
 use deepcabac::runtime::EvalService;
 use deepcabac::util::Result;
@@ -89,7 +102,10 @@ fn usage() -> ExitCode {
            search     <model.nwf> [--method dc-v1|dc-v2|lloyd|uniform|all] [--threads N] [--tolerance PP]\n\
                       [--container v1|v2|v3] [--slice-len N] [--search-mode estimate-first|exact-always]\n\
            info       <model.nwf|.dcb> [--threads N]\n\
-           serve      <model.dcb>... [--requests N] [--clients N] [--arena-cap N]\n\
+           diff       <base.dcb> <updated.nwf> [-o out.dcb] [--delta D] [--lambda L]\n\
+                      [--slice-len N] [--threads N]\n\
+           patch      <base.dcb> <delta.dcb> [-o out.nwf] [--threads N]\n\
+           serve      <model.dcb|delta.dcb>... [--requests N] [--clients N] [--arena-cap N]\n\
                       [--max-in-flight N] [--admission block|fail-fast] [--decode-threads N]\n"
     );
     ExitCode::from(2)
@@ -105,6 +121,8 @@ fn main() -> ExitCode {
         "eval" => cmd_eval(&args),
         "search" => cmd_search(&args),
         "info" => cmd_info(&args),
+        "diff" => cmd_diff(&args),
+        "patch" => cmd_patch(&args),
         "serve" => cmd_serve(&args),
         _ => return usage(),
     };
@@ -329,6 +347,44 @@ fn cmd_info(args: &Args) -> Result<()> {
         let threads = flag_usize(args, "threads")
             .unwrap_or_else(coordinator::config::default_threads)
             .max(1);
+        if let Some(hdr) = header.delta {
+            let d = CompressedDelta::from_bytes_with(&raw, threads)?;
+            println!(
+                "{input}: dcb v{} delta, coding(n={}, eg_ctx={}), {} layers ({} skipped), \
+                 {} residual symbols, base crc32 {:08x}, shape key {:#018x}, {} bytes",
+                header.version,
+                d.cfg.max_abs_gr,
+                d.cfg.eg_contexts,
+                d.layers.len(),
+                d.skipped_layers(),
+                d.coded_symbols(),
+                hdr.base_crc32,
+                hdr.base_shape_key,
+                raw.len()
+            );
+            for (l, p) in d.layers.iter().zip(&header.layers) {
+                if l.skipped() {
+                    println!("  {:<12} {:>4}x{:<6} skipped", l.name, l.rows, l.cols);
+                } else {
+                    let nz = l
+                        .residual
+                        .as_ref()
+                        .map_or(0, |r| r.iter().filter(|&&i| i != 0).count());
+                    println!(
+                        "  {:<12} {:>4}x{:<6} Δ={:<10.6} nz={:.1}% bias={} slices={} payload={}B",
+                        l.name,
+                        l.rows,
+                        l.cols,
+                        l.delta,
+                        100.0 * nz as f64 / (l.rows * l.cols).max(1) as f64,
+                        l.bias.is_some(),
+                        p.n_slices,
+                        p.payload_bytes
+                    );
+                }
+            }
+            return Ok(());
+        }
         let c = CompressedNetwork::from_bytes_with(&raw, threads)?;
         println!(
             "{input}: dcb v{}, coding(n={}, eg_ctx={}), {} layers, {} params, {} slices, {} bytes",
@@ -378,6 +434,70 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_diff(args: &Args) -> Result<()> {
+    let base_path = args
+        .positional
+        .first()
+        .ok_or_else(|| deepcabac::util::Error::Config("missing base .dcb".into()))?;
+    let updated_path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| deepcabac::util::Error::Config("missing updated .nwf".into()))?;
+    let base_raw = std::fs::read(base_path)?;
+    let updated = load_network(updated_path)?;
+    let policy = container_policy(args)?;
+    let delta = flag_f32(args, "delta", 0.01);
+    let lambda = flag_f32(args, "lambda", 1.0);
+    let d = coordinator::diff_network(&base_raw, &updated, delta, lambda, policy)?;
+    let bytes = d.to_bytes_with(policy);
+    let out = args
+        .flags
+        .get("o")
+        .cloned()
+        .unwrap_or_else(|| format!("{updated_path}.delta.dcb"));
+    std::fs::write(&out, &bytes)?;
+    println!(
+        "{base_path} + {updated_path} -> {out}: {} bytes ({:.1}% of the {}-byte base \
+         container), {}/{} layers skipped, {} residual symbols, Δ={delta}",
+        bytes.len(),
+        100.0 * bytes.len() as f64 / base_raw.len() as f64,
+        base_raw.len(),
+        d.skipped_layers(),
+        d.layers.len(),
+        d.coded_symbols()
+    );
+    Ok(())
+}
+
+fn cmd_patch(args: &Args) -> Result<()> {
+    let base_path = args
+        .positional
+        .first()
+        .ok_or_else(|| deepcabac::util::Error::Config("missing base .dcb".into()))?;
+    let delta_path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| deepcabac::util::Error::Config("missing delta .dcb".into()))?;
+    let base_raw = std::fs::read(base_path)?;
+    let delta_raw = std::fs::read(delta_path)?;
+    let threads = flag_usize(args, "threads")
+        .unwrap_or_else(coordinator::config::default_threads)
+        .max(1);
+    let net = coordinator::patch_network(&base_raw, &delta_raw, threads)?;
+    let out = args
+        .flags
+        .get("o")
+        .cloned()
+        .unwrap_or_else(|| format!("{delta_path}.nwf"));
+    write_nwf(&out, &net)?;
+    println!(
+        "{base_path} + {delta_path} -> {out}: {} layers, {} params",
+        net.layers.len(),
+        net.param_count()
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     if args.positional.is_empty() {
         return Err(deepcabac::util::Error::Config(
@@ -417,11 +537,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             stem
         };
-        let info = store.register(&name, raw)?;
-        println!(
-            "registered {name}: dcb v{}, {} params, {} bytes, shape key {:#018x}",
-            info.version, info.param_count, info.container_bytes, info.shape_key
-        );
+        // A v4 positional is a delta: link it against the already-listed
+        // base whose content hash its header pins.
+        match model::delta_header(&raw).ok() {
+            Some(hdr) => {
+                let base = store
+                    .models()
+                    .into_iter()
+                    .find(|m| m.delta_of.is_none() && m.content_crc32 == hdr.base_crc32)
+                    .ok_or_else(|| {
+                        deepcabac::util::Error::Config(format!(
+                            "{path}: no registered base hashes to the delta's pinned crc32 \
+                             {:08x} (list the base .dcb before its deltas)",
+                            hdr.base_crc32
+                        ))
+                    })?;
+                let info = store.register_delta(&name, raw, &base.name)?;
+                println!(
+                    "registered {name}: dcb v4 delta of '{}', {} params, {} bytes, \
+                     shape key {:#018x}",
+                    base.name, info.param_count, info.container_bytes, info.shape_key
+                );
+            }
+            None => {
+                let info = store.register(&name, raw)?;
+                println!(
+                    "registered {name}: dcb v{}, {} params, {} bytes, shape key {:#018x}",
+                    info.version, info.param_count, info.container_bytes, info.shape_key
+                );
+            }
+        }
         names.push(name);
     }
     let requests = flag_usize(args, "requests").unwrap_or(1000).max(1);

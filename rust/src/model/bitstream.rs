@@ -4,16 +4,22 @@
 //! reconstruct the quantized network (weights = Δ · I per layer, biases as
 //! uncompressed side info) and hand it to the PJRT eval graph.
 //!
-//! Three container versions share one layout; they differ in the per-layer
+//! Four container versions share one layout; they differ in the per-layer
 //! payload structure and the bin-level wire format (little-endian
-//! throughout):
+//! throughout).  Every per-version decision is answered by the
+//! [`ContainerFormat`] dispatch layer (`model/format.rs`) — no call site
+//! re-derives behaviour from the raw version byte.
 //! ```text
-//! magic 'DCB1' | u8 version (1|2|3) | u16 name_len | model name (utf-8)
-//! | u32 max_abs_gr | u32 eg_contexts | u32 n_layers
+//! magic 'DCB1' | u8 version (1|2|3|4) | u16 name_len | model name (utf-8)
+//! | u32 max_abs_gr | u32 eg_contexts
+//! | [v4 only: u32 base_crc32 | u64 base_shape_key]
+//! | u32 n_layers
+//! | [v4 only: skip_flags ((n_layers+7)/8 bytes, LSB-first)]
 //! per layer:
 //!   u16 name_len | name | u8 kind | u8 n_dims | u32 dims[] | u32 rows | u32 cols
 //!   | f32 delta | u8 has_bias | [u32 blen | f32 bias[]] | u32 payload_len
-//!   | payload
+//!   | payload            (v4: payload fields absent when the layer's
+//!                          skip flag is set)
 //! u32 crc32 (over everything after the magic)
 //! ```
 //! *Version 1* payloads are one monolithic CABAC stream per layer.
@@ -27,9 +33,17 @@
 //! the **bypass fast-path bin format**: signFlag and the Exp-Golomb
 //! suffix are bypass bins and the suffix is batched through the multi-bit
 //! bypass API (`cabac::arith`), roughly doubling single-thread decode
-//! throughput at ≲1% size cost.  Decoding dispatches on the version byte,
-//! so v1/v2 streams remain first-class and re-encode byte-exact (pinned
-//! by `rust/tests/golden_vectors.rs`).
+//! throughput at ≲1% size cost.  Decoding dispatches on the version byte
+//! (via [`ContainerFormat`]), so v1/v2 streams remain first-class and
+//! re-encode byte-exact (pinned by `rust/tests/golden_vectors.rs`).
+//! *Version 4* (DCB4) is the **delta** container
+//! ([`crate::model::CompressedDelta`]): the same per-layer geometry
+//! headers, but payloads code *residual* symbols against a base container
+//! in the v3 bypass bins, the head pins the base's content CRC and
+//! [`ContainerProbe::shape_key`] ([`DeltaHeader`]), and a skip-flag table
+//! marks unchanged layers (no payload at all).  A v4 stream cannot be
+//! decoded stand-alone — [`apply_delta_network_into`] reconstructs
+//! `base + residual` through the fused arena path.
 //!
 //! Two decode shapes share the version dispatch: the classic two-pass
 //! [`CompressedNetwork::from_bytes_with`] (ints, then
@@ -42,9 +56,11 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use super::format::ContainerFormat;
 use super::network::{Kind, Layer, Network};
 use crate::cabac::decoder::{
-    decode_layer_dequant_into, decode_layer_into, decode_layer_into_legacy,
+    decode_layer_dequant_add_into, decode_layer_dequant_into, decode_layer_into,
+    decode_layer_into_legacy,
 };
 use crate::cabac::encoder::{
     encode_layer_legacy_with, encode_layer_legacy_with_cap, encode_layer_with_cap,
@@ -60,13 +76,10 @@ use crate::util::parallel::{
 };
 use crate::util::{Error, Result};
 
-const MAGIC: &[u8; 4] = b"DCB1";
-/// Legacy monolithic container.
-pub const VERSION_V1: u8 = 1;
-/// Sliced parallel container (DCB2), legacy bin format.
-pub const VERSION_V2: u8 = 2;
-/// Sliced parallel container with the bypass fast-path bin format (DCB3).
-pub const VERSION_V3: u8 = 3;
+pub(crate) const MAGIC: &[u8; 4] = b"DCB1";
+// The version-byte constants live with the dispatch layer; re-exported
+// here so `model::bitstream::VERSION_*` paths keep working.
+pub use super::format::{VERSION_V1, VERSION_V2, VERSION_V3, VERSION_V4};
 /// Default symbols per slice for v2 payloads: small enough that a
 /// million-parameter layer fans out over ~60 slices, large enough that the
 /// per-slice cost (context restart + coder tail + 4-byte length) stays
@@ -76,7 +89,11 @@ pub const DEFAULT_SLICE_LEN: usize = 16_384;
 /// Container coding policy: which version to emit and how wide to fan out.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ContainerPolicy {
-    /// `VERSION_V1`, `VERSION_V2` or `VERSION_V3`.
+    /// `VERSION_V1`, `VERSION_V2` or `VERSION_V3` (anything else encodes
+    /// as v3 — see [`ContainerFormat::for_encoding`]).  Full-network
+    /// policies never emit v4; delta serialization
+    /// ([`crate::model::CompressedDelta::to_bytes_with`]) writes the v4
+    /// byte itself and uses the policy only for `slice_len`/`threads`.
     pub version: u8,
     /// Symbols per slice (v2/v3 only; clamped to >= 1).
     pub slice_len: usize,
@@ -131,6 +148,12 @@ impl ContainerPolicy {
             .threads(threads)
             .build()
     }
+
+    /// The [`ContainerFormat`] this policy encodes under (encode-side
+    /// sanitization: out-of-range version bytes emit v3).
+    pub fn format(&self) -> ContainerFormat {
+        ContainerFormat::for_encoding(self.version)
+    }
 }
 
 /// Builder for [`ContainerPolicy`] ([`ContainerPolicy::builder`]).
@@ -184,13 +207,14 @@ impl ContainerPolicyBuilder {
         self
     }
 
-    /// Finalize.  v1 zeroes `slice_len` (monolithic payloads have no slice
-    /// geometry), so builder-made and shim-made policies compare equal.
+    /// Finalize.  Unsliced formats (v1) zero `slice_len` (monolithic
+    /// payloads have no slice geometry), so builder-made and shim-made
+    /// policies compare equal.
     pub fn build(self) -> ContainerPolicy {
-        let v1 = self.version == VERSION_V1;
+        let sliced = ContainerFormat::for_encoding(self.version).sliced();
         ContainerPolicy {
             version: self.version,
-            slice_len: if v1 { 0 } else { self.slice_len.max(1) },
+            slice_len: if sliced { self.slice_len.max(1) } else { 0 },
             threads: self.threads.unwrap_or_else(default_threads).max(1),
         }
     }
@@ -269,8 +293,28 @@ pub struct LayerProbe {
     /// Bias element count (0 when the layer carries no bias) — part of the
     /// arena warm-path identity, so [`ContainerProbe::shape_key`] needs it.
     pub bias_len: usize,
+    /// `0` for a skipped delta layer (no payload at all).
     pub n_slices: usize,
     pub payload_bytes: usize,
+    /// v4 only: the layer's skip flag was set (unchanged vs the base —
+    /// no residual payload on the wire).  Always `false` for v1/v2/v3.
+    pub skipped: bool,
+}
+
+/// DCB4 delta head fields: the identity of the exact base container the
+/// delta was diffed against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeltaHeader {
+    /// CRC-32 over the base's **complete container bytes** (magic through
+    /// trailing CRC) — the same value `ModelInfo::content_crc32` records.
+    /// Pins the exact base stream: applying onto any other bytes fails
+    /// with [`Error::Crc`] before any payload work.
+    pub base_crc32: u32,
+    /// The base's [`ContainerProbe::shape_key`].  Redundant with the CRC
+    /// against the true base; it exists so geometry mismatches report as
+    /// [`Error::ShapeMismatch`] and so stores can pre-validate deltas
+    /// against resident metadata without hashing bytes.
+    pub base_shape_key: u64,
 }
 
 /// Header-only view of a `.dcb` stream: version, coding config and the
@@ -281,10 +325,17 @@ pub struct ContainerProbe {
     pub version: u8,
     pub name: String,
     pub cfg: CodingConfig,
+    /// Present iff the container is a v4 delta.
+    pub delta: Option<DeltaHeader>,
     pub layers: Vec<LayerProbe>,
 }
 
 impl ContainerProbe {
+    /// The dispatch-layer view of the version byte (always valid for a
+    /// probe built by [`probe`] — the walker rejected unknown bytes).
+    pub fn format(&self) -> Result<ContainerFormat> {
+        ContainerFormat::from_version(self.version)
+    }
     pub fn param_count(&self) -> usize {
         self.layers.iter().map(|l| l.rows * l.cols).sum()
     }
@@ -296,45 +347,111 @@ impl ContainerProbe {
     /// 64-bit fingerprint of the **arena warm-path identity**: model name,
     /// coding config, and per-layer name/kind/geometry/bias length.  Two
     /// containers with equal keys can share a warmed [`DecodeArena`]
-    /// (`prepare` will take its zero-allocation path); the container
-    /// *version* and per-layer step-sizes are deliberately excluded, same
-    /// as the warm-path check — v1/v2/v3 encodings of one model, or
-    /// re-quantizations at different deltas, all hit the same arena.
+    /// (`prepare` will take its zero-allocation path).
+    ///
+    /// This is also the **delta-compat contract** DCB4 relies on: the
+    /// container *version* and per-layer step-sizes Δ are deliberately
+    /// excluded, same as the warm-path check — v1/v2/v3/v4 encodings of
+    /// one model, re-quantizations at different deltas, and a base plus
+    /// its patched successors all produce the same key, so a delta's
+    /// [`DeltaHeader::base_shape_key`] matches any re-encode of the base
+    /// geometry and patched models reuse the base's warm arenas.  The key
+    /// therefore does **not** pin base *bytes*; that is what the separate
+    /// [`DeltaHeader::base_crc32`] check is for.  (A delta container's
+    /// *own* probe key is not part of the contract: a delta that elides
+    /// an unchanged bias hashes `bias_len = 0` where the base hashes the
+    /// real length — always compare against the pinned
+    /// [`DeltaHeader::base_shape_key`].)
     ///
     /// FNV-1a over a length-prefixed field stream, so adjacent variable
     /// length fields (names, shape dims) cannot alias.
     pub fn shape_key(&self) -> u64 {
-        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-        fn eat(h: &mut u64, bytes: &[u8]) {
-            for &b in bytes {
-                *h ^= u64::from(b);
-                *h = h.wrapping_mul(FNV_PRIME);
-            }
-        }
-        fn eat_u64(h: &mut u64, v: u64) {
-            eat(h, &v.to_le_bytes());
-        }
-        let mut h = FNV_OFFSET;
-        eat_u64(&mut h, self.name.len() as u64);
-        eat(&mut h, self.name.as_bytes());
-        eat_u64(&mut h, u64::from(self.cfg.max_abs_gr));
-        eat_u64(&mut h, u64::from(self.cfg.eg_contexts));
-        eat_u64(&mut h, self.layers.len() as u64);
+        let mut h = Fnv::new();
+        h.eat_u64(self.name.len() as u64);
+        h.eat(self.name.as_bytes());
+        h.eat_u64(u64::from(self.cfg.max_abs_gr));
+        h.eat_u64(u64::from(self.cfg.eg_contexts));
+        h.eat_u64(self.layers.len() as u64);
         for l in &self.layers {
-            eat_u64(&mut h, l.name.len() as u64);
-            eat(&mut h, l.name.as_bytes());
-            eat_u64(&mut h, u64::from(l.kind.code()));
-            eat_u64(&mut h, l.rows as u64);
-            eat_u64(&mut h, l.cols as u64);
-            eat_u64(&mut h, l.shape.len() as u64);
+            h.eat_u64(l.name.len() as u64);
+            h.eat(l.name.as_bytes());
+            h.eat_u64(u64::from(l.kind.code()));
+            h.eat_u64(l.rows as u64);
+            h.eat_u64(l.cols as u64);
+            h.eat_u64(l.shape.len() as u64);
             for &d in &l.shape {
-                eat_u64(&mut h, d as u64);
+                h.eat_u64(d as u64);
             }
-            eat_u64(&mut h, l.bias_len as u64);
+            h.eat_u64(l.bias_len as u64);
         }
-        h
+        h.finish()
     }
+}
+
+/// FNV-1a accumulator shared by [`ContainerProbe::shape_key`] and the
+/// allocation-free [`container_shape_key`] — one definition of the key's
+/// byte stream.
+struct Fnv(u64);
+
+impl Fnv {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    fn new() -> Self {
+        Self(Self::OFFSET)
+    }
+
+    fn eat(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    fn eat_u64(&mut self, v: u64) {
+        self.eat(&v.to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// [`ContainerProbe::shape_key`] computed straight off the wire bytes —
+/// same key, no probe allocation.  Walks headers only (no payload
+/// decode); works for all container versions including v4 deltas.
+pub fn container_shape_key(raw: &[u8]) -> Result<u64> {
+    let mut w = ContainerWalker::open(raw)?;
+    let mut h = Fnv::new();
+    h.eat_u64(w.name.len() as u64);
+    h.eat(w.name.as_bytes());
+    h.eat_u64(u64::from(w.cfg.max_abs_gr));
+    h.eat_u64(u64::from(w.cfg.eg_contexts));
+    h.eat_u64(w.n_layers as u64);
+    while let Some(v) = w.next_layer()? {
+        // Validation parity with `probe` (which rejects unknown kinds).
+        Kind::from_code(v.kind_code)?;
+        h.eat_u64(v.name.len() as u64);
+        h.eat(v.name.as_bytes());
+        h.eat_u64(u64::from(v.kind_code));
+        h.eat_u64(v.rows as u64);
+        h.eat_u64(v.cols as u64);
+        h.eat_u64(v.n_dims() as u64);
+        for d in v.dims_iter() {
+            h.eat_u64(d as u64);
+        }
+        h.eat_u64(v.bias.map_or(0, |b| b.len() / 4) as u64);
+    }
+    Ok(h.finish())
+}
+
+/// Read the [`DeltaHeader`] of a v4 delta container (header walk only —
+/// validates magic/CRC/head fields, decodes no payload).  Errors with
+/// [`Error::Format`] on non-delta containers.
+pub fn delta_header(raw: &[u8]) -> Result<DeltaHeader> {
+    ContainerWalker::open(raw)?
+        .delta
+        .ok_or_else(|| Error::Format("not a delta (v4) container".into()))
 }
 
 /// Parsed-but-not-decoded layer: headers plus the raw payload slice.
@@ -347,37 +464,42 @@ struct RawLayer<'a> {
     delta: f32,
     bias: Option<Vec<f32>>,
     payload: &'a [u8],
+    skipped: bool,
 }
 
 /// Parsed container: everything except the CABAC payload decode.
 struct ParsedContainer<'a> {
-    version: u8,
+    format: ContainerFormat,
     name: String,
     cfg: CodingConfig,
+    delta: Option<DeltaHeader>,
     layers: Vec<RawLayer<'a>>,
 }
 
 /// Borrowed, allocation-free view of one layer's header fields + payload,
 /// yielded by [`ContainerWalker`] in wire order.
-struct LayerView<'a> {
-    name: &'a str,
-    kind_code: u8,
+pub(crate) struct LayerView<'a> {
+    pub(crate) name: &'a str,
+    pub(crate) kind_code: u8,
     /// n_dims × u32 LE bytes.
-    dims: &'a [u8],
-    rows: usize,
-    cols: usize,
-    delta: f32,
+    pub(crate) dims: &'a [u8],
+    pub(crate) rows: usize,
+    pub(crate) cols: usize,
+    pub(crate) delta: f32,
     /// blen × f32 LE bytes (`None` = no bias).
-    bias: Option<&'a [u8]>,
-    payload: &'a [u8],
+    pub(crate) bias: Option<&'a [u8]>,
+    /// Empty for a skipped delta layer (no payload fields on the wire).
+    pub(crate) payload: &'a [u8],
+    /// v4 skip flag: the layer is unchanged vs the base.
+    pub(crate) skipped: bool,
 }
 
 impl<'a> LayerView<'a> {
-    fn n_dims(&self) -> usize {
+    pub(crate) fn n_dims(&self) -> usize {
         self.dims.len() / 4
     }
 
-    fn dims_iter(&self) -> impl Iterator<Item = usize> + 'a {
+    pub(crate) fn dims_iter(&self) -> impl Iterator<Item = usize> + 'a {
         let dims = self.dims;
         dims.chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
@@ -401,24 +523,33 @@ fn take_u32(body: &[u8], pos: &mut usize) -> Result<u32> {
     Ok(u32::from_le_bytes(take(body, pos, 4)?.try_into().unwrap()))
 }
 
+fn take_u64(body: &[u8], pos: &mut usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(take(body, pos, 8)?.try_into().unwrap()))
+}
+
 /// Streaming container walker: validates magic + CRC + head fields on
 /// `open`, then yields one borrowed [`LayerView`] per layer — **no heap
 /// allocation anywhere** (names are validated in place as `&str`, dims and
 /// bias stay raw LE bytes).  Both the allocating [`parse_container`] and
 /// the zero-allocation [`DecodeArena`] warm path are built on this walker,
 /// so there is exactly one wire-format reader.
-struct ContainerWalker<'a> {
-    version: u8,
-    name: &'a str,
-    cfg: CodingConfig,
-    n_layers: usize,
+pub(crate) struct ContainerWalker<'a> {
+    pub(crate) format: ContainerFormat,
+    pub(crate) name: &'a str,
+    pub(crate) cfg: CodingConfig,
+    pub(crate) n_layers: usize,
+    /// v4 only: the base-identity head fields.
+    pub(crate) delta: Option<DeltaHeader>,
+    /// v4 only: the skip-flag table, one bit per layer, LSB-first within
+    /// each byte.  Empty for v1/v2/v3.
+    skip: &'a [u8],
     body: &'a [u8],
     pos: usize,
     emitted: usize,
 }
 
 impl<'a> ContainerWalker<'a> {
-    fn open(raw: &'a [u8]) -> Result<Self> {
+    pub(crate) fn open(raw: &'a [u8]) -> Result<Self> {
         if raw.len() < 8 || &raw[..4] != MAGIC {
             return Err(Error::Wire("bad dcb magic".into()));
         }
@@ -428,10 +559,7 @@ impl<'a> ContainerWalker<'a> {
             return Err(Error::Crc("dcb crc mismatch".into()));
         }
         let mut pos = 0usize;
-        let version = take(body, &mut pos, 1)?[0];
-        if !(VERSION_V1..=VERSION_V3).contains(&version) {
-            return Err(Error::Wire(format!("dcb version {version} unsupported")));
-        }
+        let format = ContainerFormat::from_version(take(body, &mut pos, 1)?[0])?;
         let name_len = take_u16(body, &mut pos)? as usize;
         let name = std::str::from_utf8(take(body, &mut pos, name_len)?)
             .map_err(|e| Error::Wire(format!("bad model name: {e}")))?;
@@ -442,12 +570,27 @@ impl<'a> ContainerWalker<'a> {
         if cfg.max_abs_gr == 0 || cfg.max_abs_gr > 64 || cfg.eg_contexts > 64 {
             return Err(Error::Wire("dcb implausible coding config".into()));
         }
+        let delta = if format.is_delta() {
+            Some(DeltaHeader {
+                base_crc32: take_u32(body, &mut pos)?,
+                base_shape_key: take_u64(body, &mut pos)?,
+            })
+        } else {
+            None
+        };
         let n_layers = take_u32(body, &mut pos)? as usize;
+        let skip: &[u8] = if format.is_delta() {
+            take(body, &mut pos, n_layers.div_ceil(8))?
+        } else {
+            &[]
+        };
         Ok(Self {
-            version,
+            format,
             name,
             cfg,
             n_layers,
+            delta,
+            skip,
             body,
             pos,
             emitted: 0,
@@ -456,13 +599,15 @@ impl<'a> ContainerWalker<'a> {
 
     /// The next layer's header view, or `None` once all advertised layers
     /// were walked (at which point trailing garbage is rejected).
-    fn next_layer(&mut self) -> Result<Option<LayerView<'a>>> {
+    pub(crate) fn next_layer(&mut self) -> Result<Option<LayerView<'a>>> {
         if self.emitted == self.n_layers {
             if self.pos != self.body.len() {
                 return Err(Error::Wire("dcb trailing garbage".into()));
             }
             return Ok(None);
         }
+        let skipped = self.format.is_delta()
+            && (self.skip[self.emitted / 8] >> (self.emitted % 8)) & 1 == 1;
         let body = self.body;
         let pos = &mut self.pos;
         let name_len = take_u16(body, pos)? as usize;
@@ -481,8 +626,13 @@ impl<'a> ContainerWalker<'a> {
         } else {
             None
         };
-        let plen = take_u32(body, pos)? as usize;
-        let payload = take(body, pos, plen)?;
+        // A set skip flag elides the payload fields entirely.
+        let payload: &[u8] = if skipped {
+            &[]
+        } else {
+            let plen = take_u32(body, pos)? as usize;
+            take(body, pos, plen)?
+        };
         self.emitted += 1;
         Ok(Some(LayerView {
             name,
@@ -493,6 +643,7 @@ impl<'a> ContainerWalker<'a> {
             delta,
             bias,
             payload,
+            skipped,
         }))
     }
 }
@@ -516,12 +667,14 @@ fn parse_container(raw: &[u8]) -> Result<ParsedContainer<'_>> {
                     .collect()
             }),
             payload: v.payload,
+            skipped: v.skipped,
         });
     }
     Ok(ParsedContainer {
-        version: w.version,
+        format: w.format,
         name: w.name.to_string(),
         cfg: w.cfg,
+        delta: w.delta,
         layers,
     })
 }
@@ -531,9 +684,12 @@ pub fn probe(raw: &[u8]) -> Result<ContainerProbe> {
     let parsed = parse_container(raw)?;
     let mut layers = Vec::with_capacity(parsed.layers.len());
     for l in &parsed.layers {
-        let n_slices = match parsed.version {
-            VERSION_V1 => usize::from(l.rows * l.cols > 0),
-            _ => parse_sliced(l.payload, l.rows * l.cols)?.1.len(),
+        let n_slices = if l.skipped {
+            0
+        } else if parsed.format.sliced() {
+            parse_sliced(l.payload, l.rows * l.cols)?.1.len()
+        } else {
+            usize::from(l.rows * l.cols > 0)
         };
         layers.push(LayerProbe {
             name: l.name.clone(),
@@ -544,12 +700,14 @@ pub fn probe(raw: &[u8]) -> Result<ContainerProbe> {
             bias_len: l.bias.as_ref().map_or(0, Vec::len),
             n_slices,
             payload_bytes: l.payload.len(),
+            skipped: l.skipped,
         });
     }
     Ok(ContainerProbe {
-        version: parsed.version,
+        version: parsed.format.version(),
         name: parsed.name,
         cfg: parsed.cfg,
+        delta: parsed.delta,
         layers,
     })
 }
@@ -607,6 +765,14 @@ fn push_slice_refs(
         });
     }
     Ok(())
+}
+
+fn delta_decode_err() -> Error {
+    Error::Format(
+        "delta (v4) container cannot be decoded stand-alone: apply it onto its \
+         base with apply_delta_network_into / CompressedDelta"
+            .into(),
+    )
 }
 
 /// Reusable decode→inference scratch for the **fused** container decode
@@ -667,6 +833,9 @@ impl DecodeArena {
     /// container is corrupt.
     fn prepare(&mut self, raw: &[u8]) -> Result<bool> {
         let mut w = ContainerWalker::open(raw)?;
+        if w.format.is_delta() {
+            return Err(delta_decode_err());
+        }
         if !self.valid
             || w.cfg != self.cfg
             || w.name != self.net.name
@@ -674,8 +843,8 @@ impl DecodeArena {
         {
             return Ok(false);
         }
-        self.legacy = w.version != VERSION_V3;
-        let sliced = w.version != VERSION_V1;
+        self.legacy = w.format.legacy_bins();
+        let sliced = w.format.sliced();
         self.slices.clear();
         let raw_base = raw.as_ptr() as usize;
         let mut li = 0usize;
@@ -720,9 +889,12 @@ impl DecodeArena {
     /// the warm-up cost `prepare` then avoids on subsequent decodes).
     fn rebuild(&mut self, raw: &[u8]) -> Result<()> {
         let parsed = parse_container(raw)?;
+        if parsed.format.is_delta() {
+            return Err(delta_decode_err());
+        }
         self.cfg = parsed.cfg;
-        self.legacy = parsed.version != VERSION_V3;
-        let sliced = parsed.version != VERSION_V1;
+        self.legacy = parsed.format.legacy_bins();
+        let sliced = parsed.format.sliced();
         self.slices.clear();
         let raw_base = raw.as_ptr() as usize;
         for (li, l) in parsed.layers.iter().enumerate() {
@@ -898,6 +1070,152 @@ impl DecodeArena {
             None => Ok(()),
         }
     }
+
+    /// Walk a v4 delta container against the base network currently held
+    /// in the planes: validate per-layer geometry, install replacement
+    /// biases, and rebuild the slice table from the **residual** payloads
+    /// (skipped layers contribute nothing).  The caller has already
+    /// validated the base identity ([`DeltaHeader`]); this guards the
+    /// per-layer contract and reports drift as [`Error::ShapeMismatch`].
+    fn apply_residuals(&mut self, pool: &Pool, raw: &[u8], threads: usize) -> Result<()> {
+        let mut w = ContainerWalker::open(raw)?;
+        if !w.format.is_delta() {
+            return Err(Error::Format("not a delta (v4) container".into()));
+        }
+        if w.cfg != self.cfg {
+            return Err(Error::ShapeMismatch(
+                "delta coding config differs from base".into(),
+            ));
+        }
+        if w.n_layers != self.net.layers.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "delta has {} layers, base has {}",
+                w.n_layers,
+                self.net.layers.len()
+            )));
+        }
+        self.slices.clear();
+        let raw_base = raw.as_ptr() as usize;
+        let mut li = 0usize;
+        while let Some(v) = w.next_layer()? {
+            let l = &mut self.net.layers[li];
+            if v.name != l.name
+                || v.kind_code != l.kind.code()
+                || v.rows != l.rows
+                || v.cols != l.cols
+                || v.n_dims() != l.shape.len()
+                || !v.dims_iter().eq(l.shape.iter().copied())
+            {
+                return Err(Error::ShapeMismatch(format!(
+                    "delta layer '{}' does not match base geometry",
+                    v.name
+                )));
+            }
+            // A delta bias *replaces* the base bias (biases are
+            // uncompressed side info, so diffing them buys nothing).
+            if let Some(src) = v.bias {
+                match &mut l.bias {
+                    Some(dst) if dst.len() * 4 == src.len() => {
+                        for (d, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
+                            *d = f32::from_le_bytes(c.try_into().unwrap());
+                        }
+                    }
+                    _ => {
+                        return Err(Error::ShapeMismatch(format!(
+                            "delta bias length mismatch on '{}'",
+                            v.name
+                        )))
+                    }
+                }
+            }
+            if !v.skipped {
+                push_slice_refs(
+                    &mut self.slices,
+                    li,
+                    raw_base,
+                    v.payload,
+                    v.rows * v.cols,
+                    v.delta,
+                    true,
+                )?;
+            }
+            li += 1;
+        }
+        self.accumulate_planes(pool, raw, threads)
+    }
+
+    /// Fan the residual slice table out over the pool, decoding each
+    /// residual symbol and **accumulating** `w += r·Δ` into the base
+    /// planes ([`decode_layer_dequant_add_into`]).  Per-slice schedule
+    /// only: the interleaved group decoder writes through a pure
+    /// `sym → T` map and cannot read-modify-write the plane.
+    fn accumulate_planes(&mut self, pool: &Pool, raw: &[u8], threads: usize) -> Result<()> {
+        let DecodeArena {
+            net,
+            cfg,
+            slices,
+            plane_ptrs,
+            scratches,
+            ..
+        } = self;
+        plane_ptrs.clear();
+        plane_ptrs.extend(net.layers.iter_mut().map(|l| SendPtr(l.weights.as_mut_ptr())));
+        let n = slices.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let threads = threads.max(1).min(n);
+        while scratches.len() < threads {
+            scratches.push(WeightContexts::new(*cfg));
+        }
+        let cursor = AtomicUsize::new(0);
+        let first_err: Mutex<Option<Error>> = Mutex::new(None);
+        let scratch_base = SendPtr(scratches.as_mut_ptr());
+        let slices = &*slices;
+        let plane_ptrs = &*plane_ptrs;
+        let park_err = |e: Error| {
+            let mut g = first_err.lock().unwrap();
+            if g.is_none() {
+                *g = Some(e);
+            }
+        };
+        // SAFETY: identical disjointness argument to `decode_planes`'
+        // per-slice schedule — unique worker indices own unique scratch
+        // slots, and the slice table partitions every plane into disjoint
+        // [out_off, out_off + out_len) ranges, each claimed exactly once
+        // via the shared cursor.
+        let work = |widx: usize| {
+            let ctxs = unsafe { &mut *scratch_base.0.add(widx) };
+            loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let s = slices[i];
+                let bytes = &raw[s.byte_off..s.byte_off + s.byte_len];
+                let out = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        plane_ptrs[s.layer].0.add(s.out_off),
+                        s.out_len,
+                    )
+                };
+                // v4 residuals are always bypass-bin (ContainerFormat::V4).
+                if let Err(e) = decode_layer_dequant_add_into::<false>(bytes, ctxs, s.delta, out)
+                {
+                    park_err(e);
+                }
+            }
+        };
+        if threads <= 1 {
+            work(0);
+        } else {
+            pool.run(threads, work);
+        }
+        match first_err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
 }
 
 /// Fused decode→inference: CABAC-decode a serialized `.dcb` container
@@ -957,6 +1275,54 @@ pub fn decode_network_into_on_with<'a>(
     Ok(&arena.net)
 }
 
+/// Fused delta application: decode `base_raw` into the arena's planes
+/// ([`decode_network_into`]), then CABAC-decode the v4 `delta_raw`'s
+/// residual slices and accumulate `w += r·Δ` straight into those planes —
+/// no intermediate residual buffer.  Validates the delta's base identity
+/// first: [`DeltaHeader::base_crc32`] against a CRC-32 of the full base
+/// bytes ([`Error::Crc`] on mismatch), then [`DeltaHeader::base_shape_key`]
+/// against [`container_shape_key`] ([`Error::ShapeMismatch`]).  The
+/// result is **bit-identical** to eagerly reconstructing
+/// `base + residual·Δ` in f32 ([`crate::model::CompressedDelta::apply_to`])
+/// — same ops, same order, pinned by the golden v4 fixture and
+/// `rust/tests/delta_roundtrip.rs`.
+pub fn apply_delta_network_into<'a>(
+    base_raw: &[u8],
+    delta_raw: &[u8],
+    threads: usize,
+    arena: &'a mut DecodeArena,
+) -> Result<&'a Network> {
+    apply_delta_network_into_on(Pool::global(), base_raw, delta_raw, threads, arena)
+}
+
+/// [`apply_delta_network_into`] on an explicit (injected) worker pool.
+pub fn apply_delta_network_into_on<'a>(
+    pool: &Pool,
+    base_raw: &[u8],
+    delta_raw: &[u8],
+    threads: usize,
+    arena: &'a mut DecodeArena,
+) -> Result<&'a Network> {
+    let hdr = delta_header(delta_raw)?;
+    let crc = crate::util::crc32(base_raw);
+    if crc != hdr.base_crc32 {
+        return Err(Error::Crc(format!(
+            "delta was diffed against base crc32 {:08x}, these base bytes hash {:08x}",
+            hdr.base_crc32, crc
+        )));
+    }
+    let key = container_shape_key(base_raw)?;
+    if key != hdr.base_shape_key {
+        return Err(Error::ShapeMismatch(format!(
+            "delta base shape key {:016x} does not match base {:016x}",
+            hdr.base_shape_key, key
+        )));
+    }
+    decode_network_into_on(pool, base_raw, threads, arena)?;
+    arena.apply_residuals(pool, delta_raw, threads)?;
+    Ok(arena.network())
+}
+
 impl CompressedNetwork {
     /// CABAC-encode every layer payload under `policy` (slices and layers
     /// fan out over `policy.threads` workers, one context scratch per
@@ -965,19 +1331,16 @@ impl CompressedNetwork {
     /// legacy bins, v3 the bypass fast path.
     fn layer_payloads(&self, policy: ContainerPolicy) -> Vec<Vec<u8>> {
         let cfg = self.cfg;
-        let legacy = policy.version != VERSION_V3;
-        // Build the chunk list per version (v1 = one whole-layer chunk per
-        // layer; v2/v3 = slice_len chunks), then run ONE fan-out with one
-        // format dispatch.
+        let format = policy.format();
+        let legacy = format.legacy_bins();
+        // Build the chunk list per format (unsliced = one whole-layer
+        // chunk per layer; sliced = slice_len chunks), then run ONE
+        // fan-out with one format dispatch.
         let slice_len = policy.slice_len.max(1);
         let mut chunks: Vec<&[i32]> = Vec::new();
         // Chunks per layer; None = monolithic v1 (no slice framing).
-        let per_layer: Option<Vec<usize>> = match policy.version {
-            VERSION_V1 => {
-                chunks.extend(self.layers.iter().map(|l| l.ints.as_slice()));
-                None
-            }
-            _ => Some(
+        let per_layer: Option<Vec<usize>> = if format.sliced() {
+            Some(
                 self.layers
                     .iter()
                     .map(|l| {
@@ -986,14 +1349,17 @@ impl CompressedNetwork {
                         chunks.len() - before
                     })
                     .collect(),
-            ),
+            )
+        } else {
+            chunks.extend(self.layers.iter().map(|l| l.ints.as_slice()));
+            None
         };
         // Sliced chunks get estimator-seeded output capacities (fresh-table
         // hints are bin-format agnostic at p0 = 0.5, so one table set serves
         // v2's legacy bins too); v1's whole-layer payloads keep the generic
         // heuristic — a monolithic hint would scan the full plane twice for
         // a single allocation.
-        let hints = (policy.version != VERSION_V1).then(|| hint_tables(cfg));
+        let hints = format.sliced().then(|| hint_tables(cfg));
         let coded = parallel_map_with(
             &chunks,
             policy.threads,
@@ -1028,11 +1394,7 @@ impl CompressedNetwork {
 
     /// Serialize under an explicit [`ContainerPolicy`].
     pub fn to_bytes_with(&self, policy: ContainerPolicy) -> Vec<u8> {
-        let version = match policy.version {
-            VERSION_V1 => VERSION_V1,
-            VERSION_V2 => VERSION_V2,
-            _ => VERSION_V3,
-        };
+        let version = policy.format().version();
         let payloads = self.layer_payloads(ContainerPolicy { version, ..policy });
         let mut body = Vec::new();
         body.push(version);
@@ -1086,8 +1448,11 @@ impl CompressedNetwork {
     /// context scratch per worker.
     pub fn from_bytes_with(raw: &[u8], threads: usize) -> Result<Self> {
         let parsed = parse_container(raw)?;
+        if parsed.format.is_delta() {
+            return Err(delta_decode_err());
+        }
         let cfg = parsed.cfg;
-        let legacy = parsed.version != VERSION_V3;
+        let legacy = parsed.format.legacy_bins();
         let mut planes: Vec<Vec<i32>> = parsed
             .layers
             .iter()
@@ -1095,11 +1460,12 @@ impl CompressedNetwork {
             .collect();
         let mut jobs: Vec<SliceDecodeJob<'_, '_, i32>> = Vec::new();
         for (l, plane) in parsed.layers.iter().zip(planes.iter_mut()) {
-            // v1 is "one slice spanning the whole plane"; v2/v3 get their
-            // slice table from the payload framing.
-            let slices = match parsed.version {
-                VERSION_V1 => vec![(l.payload, l.rows * l.cols)],
-                _ => parse_sliced(l.payload, l.rows * l.cols)?.1,
+            // v1 is "one slice spanning the whole plane"; sliced formats
+            // get their slice table from the payload framing.
+            let slices = if parsed.format.sliced() {
+                parse_sliced(l.payload, l.rows * l.cols)?.1
+            } else {
+                vec![(l.payload, l.rows * l.cols)]
             };
             jobs.extend(make_jobs(slices, plane.as_mut_slice()));
         }

@@ -1,0 +1,502 @@
+//! DCB4 **delta containers**: compressed residual updates against a base
+//! `.dcb` container (the federated-learning story of the companion
+//! DeepCABAC paper — ship sparse weight updates, not full models).
+//!
+//! A delta reuses the container family's layout and CABAC machinery
+//! wholesale (see `model/bitstream.rs` for the wire grammar): per-layer
+//! geometry headers are identical, payloads are the v3 sliced bypass-bin
+//! streams, and slice-aligned RDOQ applies to residuals unchanged
+//! (`coordinator::delta::diff_network`).  Three things are new on the
+//! wire, all in the head:
+//!
+//! * [`DeltaHeader`] — the base container's content CRC-32 (pins exact
+//!   bytes; [`Error::Crc`] on mismatch) and its
+//!   [`shape_key`](super::bitstream::ContainerProbe::shape_key)
+//!   (geometry contract; [`Error::ShapeMismatch`]),
+//! * a **skip-flag table** — one bit per layer, LSB-first; a set bit
+//!   means the layer is byte-free on the wire (no payload fields at
+//!   all): unchanged layers in a sparse update cost ~0 bytes,
+//! * payload symbols are **residual** grid indices `r`, reconstructed as
+//!   `w = base_w + r·Δ` (per-layer residual step-size Δ); a delta bias,
+//!   when present, *replaces* the base bias.
+//!
+//! Two application paths produce bit-identical networks: the eager
+//! [`CompressedDelta::apply_to`] (reference), and the fused
+//! [`apply_delta_network_into`](super::bitstream::apply_delta_network_into)
+//! arena path that accumulates residuals straight onto the decoded base
+//! planes (the serving path — `coordinator::store` patches through warm
+//! arenas).
+
+use super::bitstream::{
+    container_shape_key, ContainerPolicy, ContainerWalker, DeltaHeader, MAGIC, VERSION_V4,
+};
+use super::network::{Kind, Layer, Network};
+use crate::cabac::slices::{decode_layer_sliced, encode_layer_sliced_parallel};
+use crate::cabac::CodingConfig;
+use crate::util::parallel::default_threads;
+use crate::util::{crc32, Error, Result};
+
+/// One layer of a delta: full geometry (so a delta is self-describing and
+/// validatable without its base) plus the optional residual and bias.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaLayer {
+    pub name: String,
+    pub kind: Kind,
+    pub shape: Vec<usize>,
+    pub rows: usize,
+    pub cols: usize,
+    /// Residual step-size Δ: reconstruction adds `r_i · Δ` to the base
+    /// weight.  `0.0` for skipped layers.
+    pub delta: f32,
+    /// Replacement bias (`None` = base bias kept verbatim).  Biases are
+    /// uncompressed side info, so they are replaced, not diffed.
+    pub bias: Option<Vec<f32>>,
+    /// Residual grid indices (`rows·cols` of them), or `None` for a
+    /// **skipped** layer — unchanged vs the base, no payload on the wire.
+    pub residual: Option<Vec<i32>>,
+}
+
+impl DeltaLayer {
+    /// Whether the layer rides the skip-flag table (no wire payload).
+    pub fn skipped(&self) -> bool {
+        self.residual.is_none()
+    }
+}
+
+/// A parsed (or to-be-serialized) DCB4 delta container.
+///
+/// Wire round-trips are byte-exact and thread-count independent, same as
+/// [`CompressedNetwork`](super::bitstream::CompressedNetwork) — pinned by
+/// the committed `golden_v4.dcb` fixture.
+#[derive(Clone, Debug)]
+pub struct CompressedDelta {
+    /// Model name — must equal the base container's name (it participates
+    /// in the shape key, so a mismatch fails base validation).
+    pub name: String,
+    /// Coding config for the residual payloads — must equal the base's
+    /// (also shape-key-covered).
+    pub cfg: CodingConfig,
+    /// CRC-32 of the complete base container bytes.
+    pub base_crc32: u32,
+    /// The base's shape key (version- and Δ-agnostic geometry contract).
+    pub base_shape_key: u64,
+    pub layers: Vec<DeltaLayer>,
+}
+
+impl CompressedDelta {
+    /// The head fields as a [`DeltaHeader`].
+    pub fn header(&self) -> DeltaHeader {
+        DeltaHeader {
+            base_crc32: self.base_crc32,
+            base_shape_key: self.base_shape_key,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.rows * l.cols).sum()
+    }
+
+    /// Residual symbols actually coded (skipped layers contribute 0).
+    pub fn coded_symbols(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| !l.skipped())
+            .map(|l| l.rows * l.cols)
+            .sum()
+    }
+
+    /// Number of layers riding the skip-flag table.
+    pub fn skipped_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.skipped()).count()
+    }
+
+    /// Validate this delta's base identity against candidate base bytes:
+    /// content CRC first ([`Error::Crc`] — wrong/modified base stream),
+    /// then shape key ([`Error::ShapeMismatch`] — header/geometry drift).
+    pub fn validate_base(&self, base_raw: &[u8]) -> Result<()> {
+        let crc = crc32(base_raw);
+        if crc != self.base_crc32 {
+            return Err(Error::Crc(format!(
+                "delta was diffed against base crc32 {:08x}, these base bytes hash {:08x}",
+                self.base_crc32, crc
+            )));
+        }
+        let key = container_shape_key(base_raw)?;
+        if key != self.base_shape_key {
+            return Err(Error::ShapeMismatch(format!(
+                "delta base shape key {:016x} does not match base {:016x}",
+                self.base_shape_key, key
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize as a v4 container.  The policy contributes only
+    /// `slice_len` and `threads` — deltas always write the v4 version
+    /// byte and the v3 bypass bin format, whatever `policy.version` says.
+    /// Output bytes are independent of the thread count.
+    pub fn to_bytes_with(&self, policy: ContainerPolicy) -> Vec<u8> {
+        let slice_len = policy.slice_len.max(1);
+        let threads = policy.threads.max(1);
+        let mut body = Vec::new();
+        body.push(VERSION_V4);
+        body.extend((self.name.len() as u16).to_le_bytes());
+        body.extend(self.name.as_bytes());
+        body.extend(self.cfg.max_abs_gr.to_le_bytes());
+        body.extend(self.cfg.eg_contexts.to_le_bytes());
+        body.extend(self.base_crc32.to_le_bytes());
+        body.extend(self.base_shape_key.to_le_bytes());
+        body.extend((self.layers.len() as u32).to_le_bytes());
+        let mut skip = vec![0u8; self.layers.len().div_ceil(8)];
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.skipped() {
+                skip[i / 8] |= 1 << (i % 8);
+            }
+        }
+        body.extend(&skip);
+        for l in &self.layers {
+            body.extend((l.name.len() as u16).to_le_bytes());
+            body.extend(l.name.as_bytes());
+            body.push(l.kind.code());
+            body.push(l.shape.len() as u8);
+            for &d in &l.shape {
+                body.extend((d as u32).to_le_bytes());
+            }
+            body.extend((l.rows as u32).to_le_bytes());
+            body.extend((l.cols as u32).to_le_bytes());
+            body.extend(l.delta.to_le_bytes());
+            body.push(l.bias.is_some() as u8);
+            if let Some(b) = &l.bias {
+                body.extend((b.len() as u32).to_le_bytes());
+                for &x in b {
+                    body.extend(x.to_le_bytes());
+                }
+            }
+            if let Some(residual) = &l.residual {
+                assert_eq!(
+                    residual.len(),
+                    l.rows * l.cols,
+                    "residual plane length mismatch on '{}'",
+                    l.name
+                );
+                let payload = encode_layer_sliced_parallel(residual, self.cfg, slice_len, threads);
+                body.extend((payload.len() as u32).to_le_bytes());
+                body.extend(payload);
+            }
+            // skipped layers: no payload fields at all
+        }
+        let mut out = Vec::with_capacity(body.len() + 8);
+        out.extend(MAGIC);
+        out.extend(&body);
+        out.extend(crc32fast::hash(&body).to_le_bytes());
+        out
+    }
+
+    /// Deserialize + CABAC-decode a v4 container with an explicit decoder
+    /// thread count.  Non-delta containers fail with [`Error::Format`].
+    pub fn from_bytes_with(raw: &[u8], threads: usize) -> Result<Self> {
+        let mut w = ContainerWalker::open(raw)?;
+        let hdr = w
+            .delta
+            .ok_or_else(|| Error::Format("not a delta (v4) container".into()))?;
+        let cfg = w.cfg;
+        let name = w.name.to_string();
+        let mut layers = Vec::with_capacity(w.n_layers.min(4096));
+        while let Some(v) = w.next_layer()? {
+            let residual = if v.skipped {
+                None
+            } else {
+                Some(decode_layer_sliced(
+                    v.payload,
+                    v.rows * v.cols,
+                    cfg,
+                    threads,
+                )?)
+            };
+            layers.push(DeltaLayer {
+                name: v.name.to_string(),
+                kind: Kind::from_code(v.kind_code)?,
+                shape: v.dims_iter().collect(),
+                rows: v.rows,
+                cols: v.cols,
+                delta: v.delta,
+                bias: v.bias.map(|b| {
+                    b.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect()
+                }),
+                residual,
+            });
+        }
+        Ok(Self {
+            name,
+            cfg,
+            base_crc32: hdr.base_crc32,
+            base_shape_key: hdr.base_shape_key,
+            layers,
+        })
+    }
+
+    /// Deserialize + CABAC-decode (default decoder fan-out).
+    pub fn from_bytes(raw: &[u8]) -> Result<Self> {
+        Self::from_bytes_with(raw, default_threads())
+    }
+
+    /// Eager reference application: reconstruct the updated network as
+    /// `base_w + r·Δ` per weight (bias replaced where present, skipped
+    /// layers copied verbatim).  `base` must be the decoded base network
+    /// — then the result is bit-identical to the fused
+    /// [`apply_delta_network_into`](super::bitstream::apply_delta_network_into)
+    /// path (same f32 ops in the same order).  Validates per-layer
+    /// geometry; it does **not** check the base *bytes* (no bytes here) —
+    /// callers holding the base container should [`Self::validate_base`]
+    /// first.
+    pub fn apply_to(&self, base: &Network) -> Result<Network> {
+        if base.layers.len() != self.layers.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "delta has {} layers, base has {}",
+                self.layers.len(),
+                base.layers.len()
+            )));
+        }
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for (d, b) in self.layers.iter().zip(&base.layers) {
+            if d.name != b.name
+                || d.kind != b.kind
+                || d.rows != b.rows
+                || d.cols != b.cols
+                || d.shape != b.shape
+            {
+                return Err(Error::ShapeMismatch(format!(
+                    "delta layer '{}' does not match base geometry",
+                    d.name
+                )));
+            }
+            let bias = match (&d.bias, &b.bias) {
+                (Some(nb), Some(ob)) if nb.len() == ob.len() => Some(nb.clone()),
+                (None, old) => old.clone(),
+                _ => {
+                    return Err(Error::ShapeMismatch(format!(
+                        "delta bias length mismatch on '{}'",
+                        d.name
+                    )))
+                }
+            };
+            let weights = match &d.residual {
+                Some(r) => {
+                    if r.len() != b.weights.len() {
+                        return Err(Error::ShapeMismatch(format!(
+                            "residual plane length mismatch on '{}'",
+                            d.name
+                        )));
+                    }
+                    b.weights
+                        .iter()
+                        .zip(r)
+                        .map(|(&w, &s)| w + s as f32 * d.delta)
+                        .collect()
+                }
+                None => b.weights.clone(),
+            };
+            layers.push(Layer {
+                name: b.name.clone(),
+                kind: b.kind,
+                shape: b.shape.clone(),
+                rows: b.rows,
+                cols: b.cols,
+                weights,
+                fisher: None,
+                hessian: None,
+                bias,
+            });
+        }
+        Ok(Network {
+            name: base.name.clone(),
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::bitstream::{
+        apply_delta_network_into, delta_header, probe, CompressedNetwork, DecodeArena,
+        QuantizedLayer,
+    };
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn base_net() -> CompressedNetwork {
+        let mut rng = Pcg64::new(412);
+        let mk = |name: &str, rows: usize, cols: usize, delta: f32, rng: &mut Pcg64| {
+            QuantizedLayer {
+                name: name.into(),
+                kind: Kind::Dense,
+                shape: vec![cols, rows],
+                rows,
+                cols,
+                ints: (0..rows * cols)
+                    .map(|_| {
+                        if rng.next_f64() < 0.5 {
+                            0
+                        } else {
+                            rng.below(31) as i32 - 15
+                        }
+                    })
+                    .collect(),
+                delta,
+                bias: Some(rng.normal_vec(rows, 0.02)),
+            }
+        };
+        CompressedNetwork {
+            name: "delta_arch".into(),
+            cfg: CodingConfig::default(),
+            layers: vec![
+                mk("fc1", 24, 31, 0.02, &mut rng),
+                mk("fc2", 12, 24, 0.015, &mut rng),
+                mk("fc3", 7, 12, 0.01, &mut rng),
+            ],
+        }
+    }
+
+    fn sparse_delta(base_raw: &[u8], base: &CompressedNetwork) -> CompressedDelta {
+        let mut rng = Pcg64::new(413);
+        let mut layers = Vec::new();
+        for (i, l) in base.layers.iter().enumerate() {
+            // middle layer unchanged -> skipped
+            let residual = (i != 1).then(|| {
+                (0..l.rows * l.cols)
+                    .map(|_| {
+                        if rng.next_f64() < 0.9 {
+                            0
+                        } else {
+                            rng.below(7) as i32 - 3
+                        }
+                    })
+                    .collect::<Vec<i32>>()
+            });
+            layers.push(DeltaLayer {
+                name: l.name.clone(),
+                kind: l.kind,
+                shape: l.shape.clone(),
+                rows: l.rows,
+                cols: l.cols,
+                delta: if residual.is_some() { 0.004 } else { 0.0 },
+                bias: (i == 0).then(|| rng.normal_vec(l.rows, 0.02)),
+                residual,
+            });
+        }
+        CompressedDelta {
+            name: base.name.clone(),
+            cfg: base.cfg,
+            base_crc32: crc32(base_raw),
+            base_shape_key: probe(base_raw).unwrap().shape_key(),
+            layers,
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_and_thread_independence() {
+        let base = base_net();
+        let base_raw = base.to_bytes_with(ContainerPolicy::v3(64, 2));
+        let d = sparse_delta(&base_raw, &base);
+        let p1 = ContainerPolicy::v3(50, 1);
+        let p8 = ContainerPolicy::v3(50, 8);
+        let bytes = d.to_bytes_with(p1);
+        assert_eq!(bytes, d.to_bytes_with(p8), "thread-count dependence");
+        for threads in [1usize, 4] {
+            let back = CompressedDelta::from_bytes_with(&bytes, threads).unwrap();
+            assert_eq!(back.name, d.name);
+            assert_eq!(back.cfg, d.cfg);
+            assert_eq!(back.base_crc32, d.base_crc32);
+            assert_eq!(back.base_shape_key, d.base_shape_key);
+            assert_eq!(back.layers, d.layers);
+            // and the re-encode is byte-exact
+            assert_eq!(back.to_bytes_with(p1), bytes);
+        }
+    }
+
+    #[test]
+    fn probe_and_header_see_the_delta_head() {
+        let base = base_net();
+        let base_raw = base.to_bytes_with(ContainerPolicy::v3(64, 2));
+        let d = sparse_delta(&base_raw, &base);
+        let bytes = d.to_bytes_with(ContainerPolicy::v3(50, 2));
+        let hdr = delta_header(&bytes).unwrap();
+        assert_eq!(hdr, d.header());
+        let p = probe(&bytes).unwrap();
+        assert_eq!(p.version, VERSION_V4);
+        assert_eq!(p.delta, Some(d.header()));
+        assert_eq!(
+            p.layers.iter().map(|l| l.skipped).collect::<Vec<_>>(),
+            vec![false, true, false]
+        );
+        assert_eq!(p.layers[1].n_slices, 0);
+        assert_eq!(p.layers[1].payload_bytes, 0);
+        // the pinned key ignores version, slicing and Δ: it matches any
+        // re-encode of the base geometry (the delta container's *own*
+        // probe key is not the contract — eliding an unchanged bias
+        // changes its bias_len field)
+        assert_eq!(
+            probe(&base.to_bytes_with(ContainerPolicy::v1()))
+                .unwrap()
+                .shape_key(),
+            d.base_shape_key
+        );
+        // non-delta containers have no delta header
+        assert!(delta_header(&base_raw).is_err());
+        assert_eq!(probe(&base_raw).unwrap().delta, None);
+    }
+
+    #[test]
+    fn fused_apply_matches_eager_apply_bit_exact() {
+        let base = base_net();
+        let base_raw = base.to_bytes_with(ContainerPolicy::v3(64, 2));
+        let d = sparse_delta(&base_raw, &base);
+        let bytes = d.to_bytes_with(ContainerPolicy::v3(50, 2));
+        d.validate_base(&base_raw).unwrap();
+        let eager = d.apply_to(&base.reconstruct_named()).unwrap();
+        let mut arena = DecodeArena::new();
+        for threads in [1usize, 4] {
+            let fused = apply_delta_network_into(&base_raw, &bytes, threads, &mut arena).unwrap();
+            assert_eq!(fused.layers.len(), eager.layers.len());
+            for (f, e) in fused.layers.iter().zip(&eager.layers) {
+                let fb: Vec<u32> = f.weights.iter().map(|w| w.to_bits()).collect();
+                let eb: Vec<u32> = e.weights.iter().map(|w| w.to_bits()).collect();
+                assert_eq!(fb, eb, "layer {} threads {threads}", f.name);
+                assert_eq!(f.bias, e.bias);
+            }
+        }
+    }
+
+    #[test]
+    fn stand_alone_decode_of_delta_is_rejected() {
+        let base = base_net();
+        let base_raw = base.to_bytes_with(ContainerPolicy::v3(64, 2));
+        let d = sparse_delta(&base_raw, &base);
+        let bytes = d.to_bytes_with(ContainerPolicy::v3(50, 2));
+        let err = CompressedNetwork::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("base"), "{err}");
+        let mut arena = DecodeArena::new();
+        assert!(crate::model::decode_network_into(&bytes, 2, &mut arena).is_err());
+    }
+
+    #[test]
+    fn wrong_base_is_rejected_crc_first() {
+        let base = base_net();
+        let base_raw = base.to_bytes_with(ContainerPolicy::v3(64, 2));
+        let d = sparse_delta(&base_raw, &base);
+        let bytes = d.to_bytes_with(ContainerPolicy::v3(50, 2));
+        // same geometry, different stream bytes (other slice_len): shape
+        // key matches, content CRC must not
+        let other = base.to_bytes_with(ContainerPolicy::v3(128, 2));
+        let mut arena = DecodeArena::new();
+        let err = apply_delta_network_into(&other, &bytes, 2, &mut arena).unwrap_err();
+        assert!(matches!(err, Error::Crc(_)), "{err}");
+        let err = CompressedDelta::from_bytes(&bytes)
+            .unwrap()
+            .validate_base(&other)
+            .unwrap_err();
+        assert!(matches!(err, Error::Crc(_)), "{err}");
+    }
+}

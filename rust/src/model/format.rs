@@ -1,0 +1,168 @@
+//! The versioned-codec dispatch layer: every per-version decision the
+//! `.dcb` container family makes — bin-level wire format, slice framing,
+//! delta header fields — is answered by [`ContainerFormat`], in one place.
+//!
+//! Before this layer existed the version byte was re-interpreted at every
+//! consumer (`ContainerWalker`, `DecodeArena`, the sliced encode/decode
+//! fan-outs, `probe()`, the quantizer's slicing policy), each deriving its
+//! own `legacy` / `sliced` booleans from `version == VERSION_*`
+//! comparisons.  Adding the DCB4 delta container would have tripled that
+//! sprawl; instead those call sites now ask the format object.  The
+//! mapping is pinned by tests here and byte-pinned end to end by the
+//! golden vectors (`rust/tests/golden_vectors.rs`): routing v1/v2/v3
+//! through this layer changed no stream by a single byte.
+
+use crate::util::{Error, Result};
+
+/// Legacy monolithic container.
+pub const VERSION_V1: u8 = 1;
+/// Sliced parallel container (DCB2), legacy bin format.
+pub const VERSION_V2: u8 = 2;
+/// Sliced parallel container with the bypass fast-path bin format (DCB3).
+pub const VERSION_V3: u8 = 3;
+/// Sliced **delta** container (DCB4): residuals against a base container,
+/// coded with the v3 bypass bins; carries the base's content CRC + shape
+/// key and a per-layer skip-flag table.
+pub const VERSION_V4: u8 = 4;
+
+/// Bin-level wire format of a container's CABAC payloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinFormat {
+    /// All bins context-coded (v1/v2): signFlag and the Exp-Golomb suffix
+    /// go through adaptive contexts.
+    Legacy,
+    /// Bypass fast path (v3/v4): signFlag and the EG suffix are bypass
+    /// bins, the suffix batched through the multi-bit bypass API.
+    Bypass,
+}
+
+/// One `.dcb` container version's complete set of wire-format decisions.
+///
+/// Decode-side construction goes through [`ContainerFormat::from_version`]
+/// (rejects unknown version bytes); encode-side policies go through
+/// [`ContainerFormat::for_encoding`], which sanitizes out-of-range
+/// requests to v3 (the historical `to_bytes_with` behaviour).  Delta
+/// containers are never emitted by the full-network encoder — only
+/// [`crate::model::CompressedDelta`] writes v4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ContainerFormat {
+    V1,
+    V2,
+    V3,
+    V4,
+}
+
+impl ContainerFormat {
+    /// Decode-side dispatch: map a wire version byte to its format.
+    pub fn from_version(version: u8) -> Result<Self> {
+        match version {
+            VERSION_V1 => Ok(Self::V1),
+            VERSION_V2 => Ok(Self::V2),
+            VERSION_V3 => Ok(Self::V3),
+            VERSION_V4 => Ok(Self::V4),
+            v => Err(Error::Wire(format!("dcb version {v} unsupported"))),
+        }
+    }
+
+    /// Encode-side dispatch for **full-network** containers: v1 and v2 are
+    /// honoured, anything else (including v4 — deltas have their own
+    /// serializer) becomes v3.  This preserves the pre-refactor
+    /// `to_bytes_with` behaviour byte for byte.
+    pub fn for_encoding(version: u8) -> Self {
+        match version {
+            VERSION_V1 => Self::V1,
+            VERSION_V2 => Self::V2,
+            _ => Self::V3,
+        }
+    }
+
+    /// The wire version byte.
+    pub const fn version(self) -> u8 {
+        match self {
+            Self::V1 => VERSION_V1,
+            Self::V2 => VERSION_V2,
+            Self::V3 => VERSION_V3,
+            Self::V4 => VERSION_V4,
+        }
+    }
+
+    /// Bin-level wire format of the CABAC payloads.
+    pub const fn bin_format(self) -> BinFormat {
+        match self {
+            Self::V1 | Self::V2 => BinFormat::Legacy,
+            Self::V3 | Self::V4 => BinFormat::Bypass,
+        }
+    }
+
+    /// Whether payloads use the legacy (fully context-coded) bin format —
+    /// the `LEGACY` const-generic the decode kernels monomorphize on.
+    pub const fn legacy_bins(self) -> bool {
+        matches!(self.bin_format(), BinFormat::Legacy)
+    }
+
+    /// Whether per-layer payloads carry the slice framing
+    /// (`u32 slice_len | u32 n_slices | {u32 byte_len | slice}*`).
+    pub const fn sliced(self) -> bool {
+        !matches!(self, Self::V1)
+    }
+
+    /// Whether the container is a **delta** against a base container: the
+    /// head carries a [`DeltaHeader`](crate::model::bitstream::DeltaHeader)
+    /// (base content CRC + shape key) and a per-layer skip-flag table, and
+    /// payloads code residual symbols rather than absolute ones.
+    pub const fn is_delta(self) -> bool {
+        matches!(self, Self::V4)
+    }
+
+    /// Human-readable format summary (CLI `info` output).
+    pub const fn describe(self) -> &'static str {
+        match self {
+            Self::V1 => "monolithic, legacy bins",
+            Self::V2 => "sliced, legacy bins",
+            Self::V3 => "sliced, bypass fast path",
+            Self::V4 => "sliced delta, bypass fast path",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn version_byte_roundtrip() {
+        for v in [VERSION_V1, VERSION_V2, VERSION_V3, VERSION_V4] {
+            assert_eq!(ContainerFormat::from_version(v).unwrap().version(), v);
+        }
+        for v in [0u8, 5, 9, 255] {
+            let err = ContainerFormat::from_version(v).unwrap_err();
+            assert!(err.to_string().contains("version"), "{err}");
+        }
+    }
+
+    #[test]
+    fn dispatch_table_matches_pre_refactor_rules() {
+        // The exact booleans the scattered `version == VERSION_*` sites
+        // used to derive: legacy = version != V3 (now: != V3 && != V4),
+        // sliced = version != V1.
+        use ContainerFormat::*;
+        assert!(V1.legacy_bins() && !V1.sliced() && !V1.is_delta());
+        assert!(V2.legacy_bins() && V2.sliced() && !V2.is_delta());
+        assert!(!V3.legacy_bins() && V3.sliced() && !V3.is_delta());
+        assert!(!V4.legacy_bins() && V4.sliced() && V4.is_delta());
+        assert_eq!(V2.bin_format(), BinFormat::Legacy);
+        assert_eq!(V4.bin_format(), BinFormat::Bypass);
+    }
+
+    #[test]
+    fn encode_sanitization_matches_legacy_to_bytes_with() {
+        assert_eq!(ContainerFormat::for_encoding(1), ContainerFormat::V1);
+        assert_eq!(ContainerFormat::for_encoding(2), ContainerFormat::V2);
+        assert_eq!(ContainerFormat::for_encoding(3), ContainerFormat::V3);
+        // out-of-range (and v4) requests emit v3, as `to_bytes_with`
+        // always did for unknown bytes
+        assert_eq!(ContainerFormat::for_encoding(0), ContainerFormat::V3);
+        assert_eq!(ContainerFormat::for_encoding(4), ContainerFormat::V3);
+        assert_eq!(ContainerFormat::for_encoding(200), ContainerFormat::V3);
+    }
+}

@@ -2,16 +2,21 @@
 //! compressed-network bitstream (DESIGN.md §4).
 
 pub mod bitstream;
+pub mod delta;
+pub mod format;
 pub mod network;
 pub mod nwf;
 pub mod scan;
 
 pub use bitstream::{
+    apply_delta_network_into, apply_delta_network_into_on, container_shape_key,
     decode_network_into, decode_network_into_on, decode_network_into_on_with,
-    decode_network_into_with, probe, CompressedNetwork, ContainerPolicy, ContainerPolicyBuilder,
-    ContainerProbe, DecodeArena, LayerProbe, QuantizedLayer, DEFAULT_SLICE_LEN, VERSION_V1,
-    VERSION_V2, VERSION_V3,
+    decode_network_into_with, delta_header, probe, CompressedNetwork, ContainerPolicy,
+    ContainerPolicyBuilder, ContainerProbe, DecodeArena, DeltaHeader, LayerProbe, QuantizedLayer,
+    DEFAULT_SLICE_LEN, VERSION_V1, VERSION_V2, VERSION_V3, VERSION_V4,
 };
+pub use delta::{CompressedDelta, DeltaLayer};
+pub use format::{BinFormat, ContainerFormat};
 pub use network::{Importance, Kind, Layer, Network};
 pub use nwf::{read_nwf, write_nwf};
 pub use scan::ScanOrder;

@@ -1,0 +1,237 @@
+//! Cross-version container identity and delta-application properties.
+//!
+//! Two families of guarantees ride here:
+//!
+//! * **Refactor identity** — every full-container version (v1/v2/v3) now
+//!   routes its wire decisions through [`ContainerFormat`]; these tests
+//!   pin that encode→decode→re-encode is byte-identical per version and
+//!   that all versions decode to the same network with the same
+//!   version-agnostic shape key (absolute bytes are pinned separately by
+//!   the golden-vector suite).
+//! * **Delta equivalence** — for *every* base version pairing, applying a
+//!   DCB4 delta through the fused arena path equals the eager
+//!   `base + residual·Δ` reconstruction bit for bit, and equals the
+//!   eagerly-updated network the delta was diffed from.
+
+use deepcabac::coordinator::{diff_network, patch_network};
+use deepcabac::model::{
+    apply_delta_network_into, container_shape_key, probe, CompressedNetwork, ContainerFormat,
+    ContainerPolicy, DecodeArena, Kind, Network, QuantizedLayer, VERSION_V1, VERSION_V2,
+    VERSION_V3, VERSION_V4,
+};
+use deepcabac::util::{Error, Pcg64};
+
+const SLICE_LEN: usize = 64;
+
+/// Three-layer synthetic network: mixed kinds, mixed bias presence,
+/// sparse integer planes — enough structure to exercise slice framing
+/// and the skip table without being slow under the legacy v1 bins.
+fn synth_network(seed: u64) -> CompressedNetwork {
+    let mut rng = Pcg64::new(seed);
+    let mut mk = |name: &str, kind: Kind, rows: usize, cols: usize, biased: bool| {
+        let ints = (0..rows * cols)
+            .map(|_| {
+                if rng.next_f64() < 0.6 {
+                    0
+                } else {
+                    rng.below(31) as i32 - 15
+                }
+            })
+            .collect();
+        QuantizedLayer {
+            name: name.into(),
+            kind,
+            shape: vec![cols, rows],
+            rows,
+            cols,
+            ints,
+            delta: 0.02,
+            bias: biased.then(|| rng.normal_vec(rows, 0.05)),
+        }
+    };
+    CompressedNetwork {
+        name: "xver".into(),
+        cfg: Default::default(),
+        layers: vec![
+            mk("conv0", Kind::Conv, 12, 27, true),
+            mk("fc1", Kind::Dense, 20, 18, true),
+            mk("head", Kind::Dense, 6, 20, false),
+        ],
+    }
+}
+
+fn versions() -> [(u8, ContainerPolicy); 3] {
+    [
+        (VERSION_V1, ContainerPolicy::v1()),
+        (VERSION_V2, ContainerPolicy::v2(SLICE_LEN, 2)),
+        (VERSION_V3, ContainerPolicy::v3(SLICE_LEN, 2)),
+    ]
+}
+
+/// On-grid perturbation of ~10% of one layer's weights, in residual
+/// steps of `delta` — reproducible exactly by RDOQ at near-zero λ.
+fn perturb(net: &mut Network, layer: usize, delta: f32, seed: u64) {
+    let mut rng = Pcg64::new(seed);
+    for w in net.layers[layer].weights.iter_mut() {
+        if rng.next_f64() < 0.1 {
+            let k = rng.below(5) as i32 - 2;
+            *w += k as f32 * delta;
+        }
+    }
+}
+
+fn bits(net: &Network) -> Vec<Vec<u32>> {
+    net.layers
+        .iter()
+        .map(|l| l.weights.iter().map(|w| w.to_bits()).collect())
+        .collect()
+}
+
+#[test]
+fn every_version_reencodes_byte_identical_through_container_format() {
+    let net = synth_network(71);
+    for (version, policy) in versions() {
+        let raw = net.to_bytes_with(policy);
+        let header = probe(&raw).unwrap();
+        assert_eq!(header.version, version);
+        assert!(header.delta.is_none());
+        // the dispatch object agrees with what landed on the wire
+        let fmt = ContainerFormat::from_version(version).unwrap();
+        assert_eq!(fmt.version(), version);
+        assert!(!fmt.is_delta());
+        assert_eq!(fmt.sliced(), version != VERSION_V1);
+        assert_eq!(fmt.legacy_bins(), version != VERSION_V3);
+        for threads in [1usize, 4] {
+            let got = CompressedNetwork::from_bytes_with(&raw, threads).unwrap();
+            assert_eq!(got.name, net.name, "v{version}");
+            assert_eq!(got.layers, net.layers, "v{version} threads={threads}");
+        }
+        assert_eq!(net.to_bytes_with(policy), raw, "v{version} re-encode drifted");
+    }
+}
+
+#[test]
+fn all_versions_share_one_shape_key() {
+    let net = synth_network(72);
+    let keys: Vec<u64> = versions()
+        .iter()
+        .map(|(_, p)| container_shape_key(&net.to_bytes_with(*p)).unwrap())
+        .collect();
+    assert_eq!(keys[0], keys[1]);
+    assert_eq!(keys[1], keys[2], "shape key must ignore the version byte");
+
+    // Δ is excluded too: a re-quantized sibling stays delta-compatible…
+    let mut requant = net.clone();
+    for l in requant.layers.iter_mut() {
+        l.delta *= 0.5;
+    }
+    let requant_key =
+        container_shape_key(&requant.to_bytes_with(ContainerPolicy::v3(SLICE_LEN, 2))).unwrap();
+    assert_eq!(requant_key, keys[0]);
+
+    // …but geometry is not: a renamed layer breaks the key.
+    let mut renamed = net.clone();
+    renamed.layers[1].name = "fc1b".into();
+    let renamed_key =
+        container_shape_key(&renamed.to_bytes_with(ContainerPolicy::v3(SLICE_LEN, 2))).unwrap();
+    assert_ne!(renamed_key, keys[0]);
+}
+
+#[test]
+fn delta_apply_matches_eager_for_every_base_version() {
+    let net = synth_network(73);
+    let step = 0.005f32;
+    for (version, policy) in versions() {
+        let base_raw = net.to_bytes_with(policy);
+        let mut updated = net.reconstruct_named();
+        perturb(&mut updated, 0, step, 90 + version as u64);
+        perturb(&mut updated, 2, step, 91 + version as u64);
+
+        let d = diff_network(&base_raw, &updated, step, 0.01, ContainerPolicy::v3(SLICE_LEN, 2))
+            .unwrap();
+        let delta_raw = d.to_bytes_with(ContainerPolicy::v3(SLICE_LEN, 2));
+        assert_eq!(probe(&delta_raw).unwrap().version, VERSION_V4);
+        assert!(d.layers[1].skipped(), "v{version}: untouched layer must skip");
+
+        let eager = d.apply_to(&net.reconstruct_named()).unwrap();
+        let expect = bits(&updated);
+        assert_eq!(bits(&eager), expect, "v{version}: eager apply != eager update");
+        let mut arena = DecodeArena::new();
+        for threads in [1usize, 4] {
+            let fused =
+                apply_delta_network_into(&base_raw, &delta_raw, threads, &mut arena).unwrap();
+            assert_eq!(
+                bits(fused),
+                expect,
+                "v{version} threads={threads}: fused apply != eager update"
+            );
+            for (f, u) in fused.layers.iter().zip(&updated.layers) {
+                assert_eq!(f.bias, u.bias, "v{version}");
+            }
+        }
+        // the convenience wrapper rides the same path
+        let patched = patch_network(&base_raw, &delta_raw, 2).unwrap();
+        assert_eq!(bits(&patched), expect, "v{version}");
+    }
+}
+
+#[test]
+fn deltas_pin_exact_base_bytes_not_just_geometry() {
+    // A delta diffed against the v1 serialization must refuse the v2/v3
+    // serializations of the *same network*: shape keys match, content
+    // CRCs do not — and the CRC gate fires first.
+    let net = synth_network(74);
+    let v1_raw = net.to_bytes_with(ContainerPolicy::v1());
+    let mut updated = net.reconstruct_named();
+    perturb(&mut updated, 1, 0.005, 95);
+    let d =
+        diff_network(&v1_raw, &updated, 0.005, 0.01, ContainerPolicy::v3(SLICE_LEN, 2)).unwrap();
+    let delta_raw = d.to_bytes_with(ContainerPolicy::v3(SLICE_LEN, 2));
+    for policy in [
+        ContainerPolicy::v2(SLICE_LEN, 2),
+        ContainerPolicy::v3(SLICE_LEN, 2),
+    ] {
+        let other_raw = net.to_bytes_with(policy);
+        assert_eq!(
+            container_shape_key(&other_raw).unwrap(),
+            d.base_shape_key,
+            "same network ⇒ same shape key regardless of version"
+        );
+        let mut arena = DecodeArena::new();
+        let err = apply_delta_network_into(&other_raw, &delta_raw, 2, &mut arena).unwrap_err();
+        assert!(matches!(err, Error::Crc(_)), "{err}");
+    }
+}
+
+#[test]
+fn skip_flags_on_the_wire_match_the_unchanged_layers() {
+    let net = synth_network(75);
+    let base_raw = net.to_bytes_with(ContainerPolicy::v3(SLICE_LEN, 2));
+    let mut updated = net.reconstruct_named();
+    perturb(&mut updated, 1, 0.005, 96);
+    let d =
+        diff_network(&base_raw, &updated, 0.005, 0.01, ContainerPolicy::v3(SLICE_LEN, 2)).unwrap();
+    let delta_raw = d.to_bytes_with(ContainerPolicy::v3(SLICE_LEN, 2));
+
+    let expected_skips = vec![true, false, true];
+    assert_eq!(
+        d.layers.iter().map(|l| l.skipped()).collect::<Vec<_>>(),
+        expected_skips
+    );
+    let header = probe(&delta_raw).unwrap();
+    assert_eq!(
+        header.layers.iter().map(|l| l.skipped).collect::<Vec<_>>(),
+        expected_skips,
+        "probe must report the wire skip table, not re-derive it"
+    );
+    for l in header.layers.iter().filter(|l| l.skipped) {
+        assert_eq!(l.n_slices, 0);
+        assert_eq!(l.payload_bytes, 0);
+    }
+    assert!(
+        delta_raw.len() * 2 < base_raw.len(),
+        "one perturbed layer out of three should compress far below full ({} vs {})",
+        delta_raw.len(),
+        base_raw.len()
+    );
+}

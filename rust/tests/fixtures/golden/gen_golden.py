@@ -11,6 +11,17 @@ container wire formats as checked-in fixtures:
   golden_v3.dcb  - sliced container (slice_len 512), bypass fast path
                    (bypass sign, batched EG suffix)
 
+and the DCB4 delta-container format (rust/src/model/delta.rs):
+
+  golden_v4_base.dcb - a second network (fresh LCG seed, same geometry
+                       family), v3 sliced container: the base the delta
+                       below is pinned against
+  golden_v4.dcb      - v4 delta onto golden_v4_base.dcb: fc1 carries a
+                       sparse residual plane (sliced bypass payload),
+                       big rides the skip-flag table (geometry header
+                       only, no payload fields); header pins the base's
+                       crc32 and FNV-1a shape key
+
 The generator decodes everything back with an independent Python decoder
 mirror and CRC-checks the containers before writing, so a transcription slip
 fails here rather than in CI.  The network payload is derived from the same
@@ -332,6 +343,142 @@ def to_bytes(net, version):
     return b"DCB1" + bytes(body) + struct.pack("<I", zlib.crc32(bytes(body)) & M32)
 
 
+def fnv_shape_key(net):
+    """Mirror of ContainerProbe::shape_key / container_shape_key: FNV-1a
+    over a length-prefixed field stream (version and deltas excluded)."""
+    h = 0xCBF29CE484222325
+
+    def eat(bs):
+        nonlocal h
+        for b in bs:
+            h = ((h ^ b) * 0x100000001B3) & M64
+
+    def eat_u64(v):
+        eat(struct.pack("<Q", v & M64))
+
+    eat_u64(len(net["name"]))
+    eat(net["name"].encode())
+    eat_u64(MAX_ABS_GR)
+    eat_u64(EG_CONTEXTS)
+    eat_u64(len(net["layers"]))
+    for l in net["layers"]:
+        eat_u64(len(l["name"]))
+        eat(l["name"].encode())
+        eat_u64(l["kind"])
+        eat_u64(l["rows"])
+        eat_u64(l["cols"])
+        eat_u64(len(l["shape"]))
+        for d in l["shape"]:
+            eat_u64(d)
+        eat_u64(len(l["bias"]) if l["bias"] is not None else 0)
+    return h
+
+
+def delta_to_bytes(delta, base_crc32, base_shape_key):
+    """Mirror of CompressedDelta::to_bytes_with (v4 wire layout): base
+    hash + shape key after the coding config, LSB-first skip-flag table
+    after the layer count, geometry headers always, payload fields only
+    for coded (non-skipped) layers."""
+    body = bytearray()
+    body.append(4)
+    body += struct.pack("<H", len(delta["name"]))
+    body += delta["name"].encode()
+    body += struct.pack("<I", MAX_ABS_GR)
+    body += struct.pack("<I", EG_CONTEXTS)
+    body += struct.pack("<I", base_crc32 & M32)
+    body += struct.pack("<Q", base_shape_key & M64)
+    body += struct.pack("<I", len(delta["layers"]))
+    skip = bytearray(-(-len(delta["layers"]) // 8))
+    for i, l in enumerate(delta["layers"]):
+        if l["ints"] is None:
+            skip[i // 8] |= 1 << (i % 8)
+    body += skip
+    for l in delta["layers"]:
+        body += struct.pack("<H", len(l["name"]))
+        body += l["name"].encode()
+        body.append(l["kind"])
+        body.append(len(l["shape"]))
+        for d in l["shape"]:
+            body += struct.pack("<I", d)
+        body += struct.pack("<I", l["rows"])
+        body += struct.pack("<I", l["cols"])
+        body += struct.pack("<f", l["delta"])
+        body.append(1 if l["bias"] is not None else 0)
+        if l["bias"] is not None:
+            body += struct.pack("<I", len(l["bias"]))
+            for x in l["bias"]:
+                body += struct.pack("<f", x)
+        if l["ints"] is not None:
+            # residual payloads always use the sliced bypass path
+            chunks = [l["ints"][i:i + SLICE_LEN]
+                      for i in range(0, len(l["ints"]), SLICE_LEN)]
+            payload = assemble_sliced(
+                SLICE_LEN, [encode_layer(c, False) for c in chunks])
+            body += struct.pack("<I", len(payload))
+            body += payload
+    return b"DCB1" + bytes(body) + struct.pack("<I", zlib.crc32(bytes(body)) & M32)
+
+
+def parse_and_decode_delta(raw):
+    """Independent decode mirror of CompressedDelta::from_bytes."""
+    assert raw[:4] == b"DCB1"
+    body = raw[4:-4]
+    assert struct.unpack("<I", raw[-4:])[0] == zlib.crc32(body) & M32, "crc"
+    pos = 0
+
+    def take(n):
+        nonlocal pos
+        assert pos + n <= len(body), "truncated"
+        s = body[pos:pos + n]
+        pos += n
+        return s
+
+    assert take(1)[0] == 4
+    name = take(struct.unpack("<H", take(2))[0]).decode()
+    assert struct.unpack("<I", take(4))[0] == MAX_ABS_GR
+    assert struct.unpack("<I", take(4))[0] == EG_CONTEXTS
+    base_crc32 = struct.unpack("<I", take(4))[0]
+    base_shape_key = struct.unpack("<Q", take(8))[0]
+    n_layers = struct.unpack("<I", take(4))[0]
+    skip = take(-(-n_layers // 8))
+    layers = []
+    for idx in range(n_layers):
+        skipped = (skip[idx // 8] >> (idx % 8)) & 1 == 1
+        lname = take(struct.unpack("<H", take(2))[0]).decode()
+        kind = take(1)[0]
+        nd = take(1)[0]
+        shape = [struct.unpack("<I", take(4))[0] for _ in range(nd)]
+        rows = struct.unpack("<I", take(4))[0]
+        cols = struct.unpack("<I", take(4))[0]
+        delta = struct.unpack("<f", take(4))[0]
+        bias = None
+        if take(1)[0]:
+            blen = struct.unpack("<I", take(4))[0]
+            bias = [struct.unpack("<f", take(4))[0] for _ in range(blen)]
+        ints = None
+        if not skipped:
+            payload = take(struct.unpack("<I", take(4))[0])
+            count = rows * cols
+            slice_len, n_slices = struct.unpack("<II", payload[:8])
+            assert slice_len == SLICE_LEN
+            assert n_slices == -(-count // slice_len)
+            p, ints = 8, []
+            for i in range(n_slices):
+                ln = struct.unpack("<I", payload[p:p + 4])[0]
+                p += 4
+                nsym = count - slice_len * (n_slices - 1) if i + 1 == n_slices else slice_len
+                ints += decode_layer(payload[p:p + ln], nsym, False)
+                p += ln
+            assert p == len(payload)
+        layers.append(
+            dict(name=lname, kind=kind, shape=shape, rows=rows, cols=cols,
+                 ints=ints, delta=delta, bias=bias)
+        )
+    assert pos == len(body), "trailing garbage"
+    return dict(name=name, base_crc32=base_crc32,
+                base_shape_key=base_shape_key, layers=layers)
+
+
 def parse_and_decode(raw):
     """Independent decode mirror of CompressedNetwork::from_bytes."""
     assert raw[:4] == b"DCB1"
@@ -429,6 +576,54 @@ def golden_network():
     return dict(name="golden_net", layers=[fc1, big])
 
 
+def golden_v4_base_network():
+    """Fresh-seed sibling of golden_network (same geometry family) — the
+    base container the golden delta is pinned against."""
+    lcg = Lcg(0xDCB4)
+    fc1 = dict(
+        name="fc1", kind=0, shape=[50, 40], rows=40, cols=50,
+        ints=gen_ints(lcg, 2000, 35), delta=0.03125,
+        bias=[float(int(lcg.next() % 64) - 32) / 16.0 for _ in range(40)],
+    )
+    big = dict(
+        name="big", kind=1, shape=[50, 30], rows=30, cols=50,
+        ints=gen_ints(lcg, 1500, 250000), delta=0.0078125, bias=None,
+    )
+    return dict(name="golden_base", layers=[fc1, big])
+
+
+def gen_residual(lcg, count, mag_cap):
+    """Sparse residual plane (~10% nonzero, small magnitudes) — mirrored
+    verbatim in golden_vectors.rs."""
+    out = []
+    for _ in range(count):
+        if lcg.next() % 10 == 0:
+            mag = int(lcg.next() % mag_cap) + 1
+            out.append(-mag if lcg.next() & 1 else mag)
+        else:
+            out.append(0)
+    return out
+
+
+def golden_v4_delta(base):
+    """Delta onto golden_v4_base: fc1 carries a sparse residual, big is
+    skipped (geometry header only).  No replacement biases."""
+    lcg = Lcg(0xDCB5)
+    fc1, big = base["layers"]
+    return dict(
+        name=base["name"],
+        layers=[
+            dict(name=fc1["name"], kind=fc1["kind"], shape=fc1["shape"],
+                 rows=fc1["rows"], cols=fc1["cols"],
+                 ints=gen_residual(lcg, fc1["rows"] * fc1["cols"], 4),
+                 delta=0.015625, bias=None),
+            dict(name=big["name"], kind=big["kind"], shape=big["shape"],
+                 rows=big["rows"], cols=big["cols"],
+                 ints=None, delta=0.0, bias=None),
+        ],
+    )
+
+
 def main():
     here = os.path.dirname(os.path.abspath(__file__))
     net = golden_network()
@@ -459,6 +654,37 @@ def main():
             f.write(raw)
         print(f"golden_v{version}.dcb: {len(raw)} bytes, "
               f"crc32 {zlib.crc32(raw) & M32:08x}")
+
+    # --- DCB4 delta fixtures -------------------------------------------
+    base = golden_v4_base_network()
+    base_raw = to_bytes(base, 3)
+    back = parse_and_decode(base_raw)
+    for l, b in zip(base["layers"], back["layers"]):
+        assert l["ints"] == b["ints"], ("v4 base", l["name"])
+    base_crc = zlib.crc32(base_raw) & M32
+    base_key = fnv_shape_key(base)
+
+    delta = golden_v4_delta(base)
+    draw = delta_to_bytes(delta, base_crc, base_key)
+    dback = parse_and_decode_delta(draw)
+    assert dback["name"] == delta["name"]
+    assert dback["base_crc32"] == base_crc
+    assert dback["base_shape_key"] == base_key
+    for l, b in zip(delta["layers"], dback["layers"]):
+        for key in ("name", "kind", "shape", "rows", "cols", "ints"):
+            assert l[key] == b[key], ("v4", l["name"], key)
+        assert struct.pack("<f", l["delta"]) == struct.pack("<f", b["delta"])
+        assert l["bias"] is None and b["bias"] is None
+    assert dback["layers"][0]["ints"] is not None
+    assert dback["layers"][1]["ints"] is None, "big must ride the skip table"
+    nz = sum(1 for v in delta["layers"][0]["ints"] if v != 0)
+    assert 0 < nz < len(delta["layers"][0]["ints"]) // 5, f"nz={nz}"
+
+    for fname, raw in (("golden_v4_base.dcb", base_raw), ("golden_v4.dcb", draw)):
+        with open(os.path.join(here, fname), "wb") as f:
+            f.write(raw)
+        print(f"{fname}: {len(raw)} bytes, crc32 {zlib.crc32(raw) & M32:08x}")
+    print(f"base crc32 {base_crc:08x}, base shape key {base_key:016x}")
 
 
 if __name__ == "__main__":

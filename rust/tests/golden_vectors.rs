@@ -11,15 +11,21 @@
 //!   `CompressedNetwork::from_bytes` path;
 //! * re-encoding the decoded network under the fixture's own policy is
 //!   **byte-exact** — v1/v2 via the retained legacy bin format, v3 via the
-//!   bypass fast path — so none of the three formats can silently drift.
+//!   bypass fast path — so none of the three formats can silently drift;
+//! * the DCB4 delta fixture (`golden_v4.dcb` onto `golden_v4_base.dcb`)
+//!   decodes, re-encodes byte-exact, applies bit-identically through the
+//!   fused and eager paths, and **rejects** a wrong base (CRC), a
+//!   tampered shape key, and a truncated skip-flag table.
 
 use std::path::PathBuf;
 
 use deepcabac::cabac::CodingConfig;
 use deepcabac::model::{
-    probe, CompressedNetwork, ContainerPolicy, Kind, QuantizedLayer, VERSION_V1, VERSION_V2,
-    VERSION_V3,
+    apply_delta_network_into, delta_header, probe, CompressedDelta, CompressedNetwork,
+    ContainerPolicy, DecodeArena, DeltaLayer, Kind, QuantizedLayer, VERSION_V1, VERSION_V2,
+    VERSION_V3, VERSION_V4,
 };
+use deepcabac::util::{crc32, Error};
 
 const SLICE_LEN: usize = 512;
 
@@ -155,6 +161,215 @@ fn golden_v2_decodes_and_reencodes_byte_exact() {
 #[test]
 fn golden_v3_decodes_and_reencodes_byte_exact() {
     check_golden("golden_v3.dcb", VERSION_V3);
+}
+
+/// The v4 base network (gen_golden.py `golden_v4_base_network`): a
+/// fresh-seed sibling of `golden_network` with the same geometry family.
+fn golden_v4_base_network() -> CompressedNetwork {
+    let mut lcg = Lcg::new(0xDCB4);
+    let fc1_ints = gen_ints(&mut lcg, 2000, 35);
+    let fc1_bias: Vec<f32> = (0..40)
+        .map(|_| ((lcg.next() % 64) as i64 - 32) as f32 / 16.0)
+        .collect();
+    let big_ints = gen_ints(&mut lcg, 1500, 250_000);
+    CompressedNetwork {
+        name: "golden_base".into(),
+        cfg: CodingConfig::default(),
+        layers: vec![
+            QuantizedLayer {
+                name: "fc1".into(),
+                kind: Kind::Dense,
+                shape: vec![50, 40],
+                rows: 40,
+                cols: 50,
+                ints: fc1_ints,
+                delta: 0.03125,
+                bias: Some(fc1_bias),
+            },
+            QuantizedLayer {
+                name: "big".into(),
+                kind: Kind::Conv,
+                shape: vec![50, 30],
+                rows: 30,
+                cols: 50,
+                ints: big_ints,
+                delta: 0.0078125,
+                bias: None,
+            },
+        ],
+    }
+}
+
+/// Sparse residual plane (gen_golden.py `gen_residual`): ~10% nonzero,
+/// magnitudes 1..=4.
+fn gen_residual(lcg: &mut Lcg, count: usize, mag_cap: u64) -> Vec<i32> {
+    (0..count)
+        .map(|_| {
+            if lcg.next() % 10 == 0 {
+                let mag = (lcg.next() % mag_cap) as i32 + 1;
+                if lcg.next() & 1 == 1 {
+                    -mag
+                } else {
+                    mag
+                }
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+/// The expected delta (gen_golden.py `golden_v4_delta`), pinned against
+/// the checked-in base fixture bytes: fc1 coded, big skipped.
+fn golden_delta(base_raw: &[u8]) -> CompressedDelta {
+    let base = golden_v4_base_network();
+    let mut lcg = Lcg::new(0xDCB5);
+    let fc1 = &base.layers[0];
+    let big = &base.layers[1];
+    CompressedDelta {
+        name: base.name.clone(),
+        cfg: base.cfg,
+        base_crc32: crc32(base_raw),
+        base_shape_key: probe(base_raw).unwrap().shape_key(),
+        layers: vec![
+            DeltaLayer {
+                name: fc1.name.clone(),
+                kind: fc1.kind,
+                shape: fc1.shape.clone(),
+                rows: fc1.rows,
+                cols: fc1.cols,
+                delta: 0.015625,
+                bias: None,
+                residual: Some(gen_residual(&mut lcg, fc1.rows * fc1.cols, 4)),
+            },
+            DeltaLayer {
+                name: big.name.clone(),
+                kind: big.kind,
+                shape: big.shape.clone(),
+                rows: big.rows,
+                cols: big.cols,
+                delta: 0.0,
+                bias: None,
+                residual: None,
+            },
+        ],
+    }
+}
+
+/// Re-stamp a tampered container body with a valid trailing CRC, so the
+/// negative tests hit the semantic check they target rather than the
+/// outer CRC gate.
+fn restamp_crc(raw: &mut Vec<u8>) {
+    let body_end = raw.len() - 4;
+    let crc = crc32(&raw[4..body_end]);
+    raw[body_end..].copy_from_slice(&crc.to_le_bytes());
+}
+
+#[test]
+fn golden_v4_base_decodes_and_reencodes_byte_exact() {
+    let raw = fixture("golden_v4_base.dcb");
+    let expected = golden_v4_base_network();
+    let header = probe(&raw).unwrap();
+    assert_eq!(header.version, VERSION_V3);
+    for threads in [1usize, 4] {
+        let got = CompressedNetwork::from_bytes_with(&raw, threads).unwrap();
+        assert_eq!(got.name, expected.name);
+        assert_eq!(got.layers, expected.layers, "threads={threads}");
+    }
+    assert_eq!(expected.to_bytes_with(ContainerPolicy::v3(SLICE_LEN, 2)), raw);
+}
+
+#[test]
+fn golden_v4_decodes_and_reencodes_byte_exact() {
+    let base_raw = fixture("golden_v4_base.dcb");
+    let raw = fixture("golden_v4.dcb");
+    let expected = golden_delta(&base_raw);
+
+    let header = probe(&raw).unwrap();
+    assert_eq!(header.version, VERSION_V4);
+    assert_eq!(header.delta, Some(expected.header()));
+    assert_eq!(
+        header.layers.iter().map(|l| l.skipped).collect::<Vec<_>>(),
+        vec![false, true]
+    );
+    assert_eq!(delta_header(&raw).unwrap(), expected.header());
+
+    for threads in [1usize, 4] {
+        let got = CompressedDelta::from_bytes_with(&raw, threads).unwrap();
+        assert_eq!(got.name, expected.name);
+        assert_eq!(got.cfg, expected.cfg);
+        assert_eq!(got.base_crc32, expected.base_crc32);
+        assert_eq!(got.base_shape_key, expected.base_shape_key);
+        assert_eq!(got.layers, expected.layers, "threads={threads}");
+    }
+    assert_eq!(
+        expected.to_bytes_with(ContainerPolicy::v3(SLICE_LEN, 2)),
+        raw,
+        "golden_v4.dcb: re-encode is not byte-exact (delta wire format \
+         drifted — bump the container version instead, and regenerate via \
+         gen_golden.py)"
+    );
+}
+
+#[test]
+fn golden_v4_fused_apply_matches_eager_bit_exact() {
+    let base_raw = fixture("golden_v4_base.dcb");
+    let raw = fixture("golden_v4.dcb");
+    let eager = golden_delta(&base_raw)
+        .apply_to(&golden_v4_base_network().reconstruct_named())
+        .unwrap();
+    let mut arena = DecodeArena::new();
+    for threads in [1usize, 4] {
+        let fused = apply_delta_network_into(&base_raw, &raw, threads, &mut arena).unwrap();
+        for (f, e) in fused.layers.iter().zip(&eager.layers) {
+            let fb: Vec<u32> = f.weights.iter().map(|w| w.to_bits()).collect();
+            let eb: Vec<u32> = e.weights.iter().map(|w| w.to_bits()).collect();
+            assert_eq!(fb, eb, "layer {} threads {threads}", f.name);
+            assert_eq!(f.bias, e.bias);
+        }
+    }
+}
+
+#[test]
+fn golden_v4_rejects_wrong_base_crc() {
+    // golden_v3.dcb has different bytes AND different geometry; the CRC
+    // gate must fire first (defense order: identity before shape).
+    let raw = fixture("golden_v4.dcb");
+    let mut arena = DecodeArena::new();
+    let err = apply_delta_network_into(&fixture("golden_v3.dcb"), &raw, 2, &mut arena).unwrap_err();
+    assert!(matches!(err, Error::Crc(_)), "{err}");
+}
+
+#[test]
+fn golden_v4_rejects_tampered_shape_key() {
+    let base_raw = fixture("golden_v4_base.dcb");
+    let mut raw = fixture("golden_v4.dcb");
+    // base_shape_key sits after magic(4) + version(1) + name_len(2) +
+    // name + max_abs_gr(4) + eg_contexts(4) + base_crc32(4).
+    let name_len = u16::from_le_bytes([raw[5], raw[6]]) as usize;
+    let off = 4 + 1 + 2 + name_len + 4 + 4 + 4;
+    raw[off] ^= 0xFF;
+    restamp_crc(&mut raw);
+    // the delta itself still parses; only the base linkage is broken
+    let hdr = delta_header(&raw).unwrap();
+    assert_eq!(hdr.base_crc32, crc32(&base_raw));
+    let mut arena = DecodeArena::new();
+    let err = apply_delta_network_into(&base_raw, &raw, 2, &mut arena).unwrap_err();
+    assert!(matches!(err, Error::ShapeMismatch(_)), "{err}");
+}
+
+#[test]
+fn golden_v4_rejects_truncated_skip_table() {
+    let raw = fixture("golden_v4.dcb");
+    let name_len = u16::from_le_bytes([raw[5], raw[6]]) as usize;
+    // keep the head through n_layers, drop the skip-flag table (and all
+    // layers) — then re-stamp the CRC so the wire check is what fires
+    let keep = 4 + 1 + 2 + name_len + 4 + 4 + 4 + 8 + 4;
+    let mut truncated = raw[..keep].to_vec();
+    truncated.extend([0u8; 4]);
+    restamp_crc(&mut truncated);
+    let err = probe(&truncated).unwrap_err();
+    assert!(matches!(err, Error::Wire(_)), "{err}");
 }
 
 #[test]
