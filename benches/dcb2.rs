@@ -10,7 +10,10 @@
 //! `serve_speedup_c16_vs_c1` is the serving layer's same-run floor), and
 //! the DCB4 delta legs (sparse-update container bytes vs the full
 //! re-encode — `delta_bytes_ratio_vs_full` is gated as a **ceiling** —
-//! plus fused base+residual apply throughput).
+//! plus fused base+residual apply throughput), and the hardened-decode leg
+//! (budgets + deadline armed vs panic-guard only —
+//! `decode_hardened_vs_prev` is floored so the typed-error hardening stays
+//! effectively free).
 //!
 //! Emits `BENCH_dcb2.json` (workspace root) for the perf trajectory; the
 //! CI bench-gate job runs it with `--smoke` (smaller network, fewer
@@ -30,8 +33,8 @@ use deepcabac::coordinator::{
 };
 use deepcabac::model::{
     apply_delta_network_into, decode_network_into, decode_network_into_with, CompressedNetwork,
-    ContainerPolicy, DecodeArena, Kind, Layer, Network, QuantizedLayer, DEFAULT_SLICE_LEN,
-    VERSION_V1,
+    ContainerPolicy, DecodeArena, DecodeLimits, Kind, Layer, Network, QuantizedLayer,
+    DEFAULT_SLICE_LEN,
 };
 use deepcabac::quant::rd::{rd_quantize_layer_sliced_parallel, required_half, RdParams};
 use deepcabac::util::Pcg64;
@@ -53,7 +56,8 @@ fn seed_style_decode_layer(bytes: &[u8], count: usize, cfg: CodingConfig) -> Vec
         let v = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             binarize::decode_int_legacy(&mut d, &mut ctxs, &mut hist)
         }))
-        .expect("bench stream is well-formed");
+        .expect("bench stream is well-formed")
+        .expect("bench stream decodes cleanly");
         out.push(v);
     }
     out
@@ -129,9 +133,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // --- serialize: v1 monolithic | v2 sliced legacy | v3 bypass path ---
     let v1_policy = ContainerPolicy {
-        version: VERSION_V1,
-        slice_len: 0,
         threads: 1,
+        ..ContainerPolicy::v1()
     };
     let (enc_v1, v1_bytes) = bench(warmup, iters, || net.to_bytes_with(v1_policy));
     let v2_bytes = net.to_bytes_with(ContainerPolicy::v2(slice_len, 4));
@@ -274,6 +277,44 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         floats_speedup,
         floats_fused_t4.median_s * 1e3,
         params as f64 / floats_fused_t4.median_s / 1e6
+    );
+
+    // --- hardened decode: armed budgets + deadline vs panic-guard only ---
+    // Prev-style = the pre-hardening containment discipline: the same fused
+    // decode behind a whole-call `catch_unwind` backstop, deadline unarmed
+    // (the cooperative checkpoints reduce to a branch on `None`).  Hardened
+    // = the shipped typed-error path with a tight-but-sufficient
+    // `DecodeLimits` budget and a live deadline armed on the arena, so every
+    // slice-claim checkpoint performs its real `Instant::now()` comparison.
+    // Same bytes, same warmed arena, threads = 1 both ways: the same-run
+    // ratio isolates exactly what arming the hardening costs, and the gate
+    // floors it at 0.90 (`min_decode_hardened_vs_prev`: <= ~11% overhead).
+    let (hardened_prev_t1, _) = bench(warmup, iters, || {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            decode_network_into(&v3_bytes, 1, &mut arena).unwrap();
+        }))
+        .expect("bench container is well-formed");
+    });
+    arena.set_limits(DecodeLimits {
+        max_symbols: 2 * params as u64,
+        max_payload_bytes: 2 * v3_bytes.len(),
+        ..DecodeLimits::default()
+    });
+    arena.set_deadline(Some(
+        std::time::Instant::now() + std::time::Duration::from_secs(3600),
+    ));
+    let (hardened_t1, _) = bench(warmup, iters, || {
+        decode_network_into(&v3_bytes, 1, &mut arena).unwrap();
+    });
+    arena.set_limits(DecodeLimits::default());
+    arena.set_deadline(None);
+    let decode_hardened_vs_prev = hardened_prev_t1.median_s / hardened_t1.median_s;
+    let decode_hardened_t1_msym_s = params as f64 / hardened_t1.median_s / 1e6;
+    println!(
+        "hardened: prev-style@1t {:>6.1} ms | armed@1t {:>6.1} ms \
+         ({decode_hardened_t1_msym_s:.2} Msym/s, {decode_hardened_vs_prev:.2}x vs prev)",
+        hardened_prev_t1.median_s * 1e3,
+        hardened_t1.median_s * 1e3
     );
 
     // --- interleaved multi-slice decode vs sequential, single thread ---
@@ -477,6 +518,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         max_in_flight: 32,
         admission: AdmissionPolicy::Block,
         decode_threads: 1,
+        ..StoreConfig::default()
     });
     store.register("dcb2_v3", v3_bytes.clone())?;
     store.register("dcb2_v2", v2_bytes.clone())?;
@@ -666,6 +708,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          \"search_t4_exact_s\": {:.6},\n  \"search_t4_exact_msym_s\": {:.3},\n  \
          \"search_t4_est_s\": {:.6},\n  \"search_t4_est_msym_s\": {:.3},\n  \
          \"search_speedup_est_vs_exact\": {:.4},\n  \
+         \"decode_hardened_prev_t1_s\": {:.6},\n  \
+         \"decode_hardened_t1_s\": {:.6},\n  \
+         \"decode_hardened_t1_msym_s\": {:.3},\n  \
+         \"decode_hardened_vs_prev\": {:.4},\n  \
          \"decode_speedup_v2_t4_vs_v1_t1\": {:.4},\n  \
          \"decode_speedup_v3_t1_vs_v1_t1\": {:.4},\n  \
          \"decode_speedup_v3_t4_vs_v1_t1\": {:.4},\n  \
@@ -706,6 +752,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         s_est.median_s,
         search_syms as f64 / s_est.median_s / 1e6,
         search_speedup,
+        hardened_prev_t1.median_s,
+        hardened_t1.median_s,
+        decode_hardened_t1_msym_s,
+        decode_hardened_vs_prev,
         speedup_v2_t4,
         speedup_v3_t1,
         speedup_v3_t4,

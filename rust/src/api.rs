@@ -80,10 +80,10 @@ use crate::model::{CompressedNetwork, ContainerPolicy, Network};
 use crate::util::parallel::default_threads;
 
 pub use crate::coordinator::store::{
-    run_client_harness, AdmissionPolicy, HarnessReport, ModelInfo, ModelStore, StoreConfig,
-    StoreStats,
+    run_client_harness, AdmissionPolicy, HarnessReport, ModelHealth, ModelInfo, ModelStore,
+    StoreConfig, StoreStats,
 };
-pub use crate::model::{CompressedDelta, DeltaHeader, DeltaLayer};
+pub use crate::model::{CompressedDelta, DecodeLimits, DeltaHeader, DeltaLayer};
 // Companion pieces a complete compress→serve→score program needs, surfaced
 // here so such programs (e.g. `examples/quickstart.rs`) import only `api`.
 pub use crate::benchutil::{artifacts_dir, artifacts_ready};

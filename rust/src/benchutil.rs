@@ -138,11 +138,11 @@ pub struct GateReport {
 
 /// Compare a current `BENCH_dcb2.json` against the committed baseline.
 ///
-/// Nine checks (the later ones armed only when the baseline carries
+/// Ten checks (the later ones armed only when the baseline carries
 /// their keys — see the numbered comments in the body for RDOQ,
 /// estimate-first search, the fused decode→floats pair, the ModelStore
-/// serving pair, the SIMD dequant kernel, the interleaved decoder and
-/// the DCB4 delta pair),
+/// serving pair, the SIMD dequant kernel, the interleaved decoder, the
+/// DCB4 delta pair and the hardened-decode pair),
 /// all reading their thresholds from the *baseline* file so re-baselining
 /// never needs a code change:
 ///
@@ -549,6 +549,63 @@ pub fn bench_gate(baseline: &str, current: &str) -> GateReport {
             None => {
                 pass = false;
                 lines.push("FAIL current BENCH_dcb2.json has no delta_apply_t1_msym_s field".into());
+            }
+        }
+    }
+    // 10. **Hardened decode** (added with the panic-free hardening of the
+    //     untrusted-input path).  Two sub-checks, each armed by its
+    //     baseline key:
+    //     * same-run floor `decode_hardened_vs_prev >=
+    //       min_decode_hardened_vs_prev` — the fused decode with budgets
+    //       and a live deadline armed on the arena, over the same decode
+    //       behind a bare panic-guard backstop (the pre-hardening
+    //       containment discipline).  A floor of 0.90 bounds the
+    //       typed-error hardening (budget bookkeeping on the header walk,
+    //       per-slice-claim deadline checks, valued error plumbing) at
+    //       ~11% overhead.  Machine-independent, so it is enforced even
+    //       on bootstrap baselines.
+    //     * absolute `decode_hardened_t1_msym_s` regression (hardened
+    //       decode throughput with the checks armed; same budget as the
+    //       other absolute checks, skipped while the baseline is
+    //       bootstrap or carries a non-positive placeholder).
+    if let Some(b) = json_num(baseline, "decode_hardened_t1_msym_s") {
+        match json_num(current, "decode_hardened_t1_msym_s") {
+            Some(c) if bootstrap || b <= 0.0 => lines.push(format!(
+                "SKIP hardened-decode absolute check: baseline not armed (current {c:.3} Msym/s)"
+            )),
+            Some(c) => {
+                let regress_pct = 100.0 * (b - c) / b;
+                let ok = regress_pct <= max_regress_pct;
+                pass &= ok;
+                lines.push(format!(
+                    "{} hardened decode@1t {c:.3} Msym/s vs baseline {b:.3} ({regress_pct:+.1}% \
+                     regression, limit {max_regress_pct}%)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no decode_hardened_t1_msym_s field".into(),
+                );
+            }
+        }
+    }
+    if let Some(floor) = json_num(baseline, "min_decode_hardened_vs_prev") {
+        match json_num(current, "decode_hardened_vs_prev") {
+            Some(r) => {
+                let ok = r >= floor;
+                pass &= ok;
+                lines.push(format!(
+                    "{} same-run hardened/prev decode ratio @1t = {r:.2}x (floor {floor}x)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no decode_hardened_vs_prev field".into(),
+                );
             }
         }
     }
@@ -1031,6 +1088,52 @@ mod tests {
         let held = bench_gate(real, &bench_json_delta(0.5, 2.2, 0.12, 3.8));
         assert!(held.pass, "{:?}", held.lines);
         let regressed = bench_gate(real, &bench_json_delta(0.5, 2.2, 0.12, 2.0)); // -50%
+        assert!(!regressed.pass, "{:?}", regressed.lines);
+    }
+
+    fn bench_json_hardened(msym: f64, speedup: f64, h_msym: f64, h_ratio: f64) -> String {
+        format!(
+            "{{\"bench\": \"dcb2\", \"v3_t1_msym_s\": {msym}, \
+             \"decode_speedup_v3_t1_vs_seed_t1\": {speedup}, \
+             \"decode_hardened_t1_msym_s\": {h_msym}, \
+             \"decode_hardened_vs_prev\": {h_ratio}}}"
+        )
+    }
+
+    #[test]
+    fn gate_hardened_checks_armed_by_baseline_keys() {
+        // Baseline without the hardened keys: current values ignored.
+        let old_baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&old_baseline, &bench_json_hardened(10.0, 2.4, 1.0, 0.5));
+        assert!(r.pass, "{:?}", r.lines);
+
+        // Armed floor: machine-independent, enforced even on bootstrap
+        // baselines; the 0.0 absolute placeholder is armed-but-skipped.
+        let armed = "{\"bootstrap\": 1, \"min_self_speedup\": 2.0, \
+             \"decode_hardened_t1_msym_s\": 0.0, \
+             \"min_decode_hardened_vs_prev\": 0.9}";
+        let good = bench_gate(armed, &bench_json_hardened(0.5, 2.2, 9.0, 0.99));
+        assert!(good.pass, "{:?}", good.lines);
+        assert!(
+            good.lines.iter().any(|l| l.contains("SKIP hardened-decode")),
+            "{:?}",
+            good.lines
+        );
+        // Hardening got expensive: ratio under the floor must fail.
+        let slowed = bench_gate(armed, &bench_json_hardened(0.5, 2.2, 9.0, 0.7));
+        assert!(!slowed.pass, "{:?}", slowed.lines);
+        // Armed baseline + current missing the metrics entirely: fail loudly.
+        let missing = bench_gate(armed, &bench_json(0.5, 2.2));
+        assert!(!missing.pass, "{:?}", missing.lines);
+
+        // Real (non-bootstrap) baseline with a committed throughput:
+        // regression budget enforced.
+        let real = "{\"min_self_speedup\": 2.0, \"v3_t1_msym_s\": 0.5, \
+             \"decode_hardened_t1_msym_s\": 10.0, \
+             \"min_decode_hardened_vs_prev\": 0.9}";
+        let held = bench_gate(real, &bench_json_hardened(0.5, 2.2, 9.2, 0.99)); // -8%
+        assert!(held.pass, "{:?}", held.lines);
+        let regressed = bench_gate(real, &bench_json_hardened(0.5, 2.2, 6.0, 0.99)); // -40%
         assert!(!regressed.pass, "{:?}", regressed.lines);
     }
 }

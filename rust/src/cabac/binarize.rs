@@ -145,17 +145,25 @@ pub fn encode_int_legacy(
 }
 
 /// Shared decode body (inverse of [`encode_int_impl`]).
+///
+/// **Fallible by construction**: a corrupt or truncated stream can steer
+/// the Exp-Golomb remainder into states no encoder emits — a prefix of 32+
+/// one-bins, or a magnitude that overflows `i32`.  Those return `None`
+/// (the plane decoders map it to a typed [`crate::util::Error::Wire`])
+/// instead of panicking; earlier revisions used an `assert!` here and
+/// relied on per-plane `catch_unwind` containment.  `None` is a niche of
+/// `Option<i32>`, so the happy path costs one predictable branch.
 #[inline]
 pub(crate) fn decode_int_impl<const LEGACY: bool>(
     d: &mut Decoder,
     ctxs: &mut WeightContexts,
     hist: &mut SigHistory,
-) -> i32 {
+) -> Option<i32> {
     let sig_idx = hist.ctx_index();
     let sig = d.decode(&mut ctxs.sig[sig_idx]);
     hist.push(sig);
     if !sig {
-        return 0;
+        return Some(0);
     }
     let neg = if LEGACY {
         d.decode(&mut ctxs.sign)
@@ -186,7 +194,11 @@ pub(crate) fn decode_int_impl<const LEGACY: bool>(
                 break;
             }
             k += 1;
-            assert!(k < 32, "corrupt stream: EG prefix overflow");
+            if k >= 32 {
+                // corrupt stream: EG prefix overflow (no encoder emits
+                // a magnitude this wide — |v| maxes out at 31 prefix bins)
+                return None;
+            }
         }
         let suffix = if LEGACY {
             d.decode_bypass_bits_serial(k) as u32
@@ -194,26 +206,41 @@ pub(crate) fn decode_int_impl<const LEGACY: bool>(
             d.decode_bypass_bits(k) as u32
         };
         let u = (1u32 << k) | suffix;
-        a = u + n;
+        // corrupt stream: magnitude overflows the 32-bit symbol domain
+        a = u.checked_add(n)?;
     }
     if neg {
-        -(a as i32)
+        // |i32::MIN| is representable only as a negative value.
+        if a > 1u32 << 31 {
+            return None;
+        }
+        Some(0i32.wrapping_sub(a as i32))
     } else {
-        a as i32
+        if a > i32::MAX as u32 {
+            return None;
+        }
+        Some(a as i32)
     }
 }
 
 /// Decode one integer weight (inverse of [`encode_int`], v3 format).
-pub fn decode_int(d: &mut Decoder, ctxs: &mut WeightContexts, hist: &mut SigHistory) -> i32 {
+/// `None` means the stream is corrupt (Exp-Golomb prefix overflow or a
+/// magnitude outside the `i32` symbol domain) — never a panic.
+pub fn decode_int(
+    d: &mut Decoder,
+    ctxs: &mut WeightContexts,
+    hist: &mut SigHistory,
+) -> Option<i32> {
     decode_int_impl::<false>(d, ctxs, hist)
 }
 
 /// Decode one integer weight from the legacy DCB v1/v2 wire format.
+/// `None` signals a corrupt stream, as for [`decode_int`].
 pub fn decode_int_legacy(
     d: &mut Decoder,
     ctxs: &mut WeightContexts,
     hist: &mut SigHistory,
-) -> i32 {
+) -> Option<i32> {
     decode_int_impl::<true>(d, ctxs, hist)
 }
 
@@ -327,7 +354,7 @@ mod tests {
                 } else {
                     decode_int(&mut d, &mut ctxs2, &mut hist2)
                 };
-                assert_eq!(got, v, "legacy={legacy}");
+                assert_eq!(got, Some(v), "legacy={legacy}");
             }
             assert_eq!(ctxs, ctxs2, "legacy={legacy}");
         }

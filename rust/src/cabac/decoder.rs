@@ -2,9 +2,13 @@
 //!
 //! The hot loop decodes straight into a caller-provided `&mut [i32]` (the
 //! container paths pre-allocate one buffer per layer and hand each worker a
-//! disjoint slice chunk), reuses caller-owned context scratch, and wraps
-//! the *whole plane* in a single `catch_unwind` — the seed code paid for a
-//! panic guard per symbol, which dominated single-thread decode profiles.
+//! disjoint slice chunk) and reuses caller-owned context scratch.  Corrupt
+//! streams surface as typed [`Error::Wire`] results from the fallible
+//! symbol decoder ([`binarize::decode_int_impl`] returns `None` on
+//! Exp-Golomb overflow) — the single per-plane `catch_unwind` remains only
+//! as a last-resort backstop for genuine bugs, not as corrupt-stream
+//! control flow.  (The seed code paid for a panic guard per *symbol*,
+//! which dominated single-thread decode profiles.)
 
 use super::arith::Decoder;
 use super::binarize;
@@ -17,6 +21,24 @@ use crate::util::{Error, Result};
 /// live on the stack next to the coder state.
 const DEQUANT_BLOCK: usize = 64;
 
+/// Typed corrupt-stream error for a plane whose symbol decoder returned
+/// `None` — the expected failure mode for adversarial input.
+#[cold]
+fn corrupt_symbol(n: usize) -> Error {
+    Error::Wire(format!(
+        "corrupt CABAC stream in {n}-symbol plane: Exp-Golomb magnitude out of range"
+    ))
+}
+
+/// Backstop error for a panic that escaped the fallible decode path — a
+/// decoder *bug*, not expected corrupt-stream behaviour.
+#[cold]
+fn plane_panic(n: usize) -> Error {
+    Error::Decode(format!(
+        "decoder panicked in {n}-symbol plane (internal-bug backstop, not corrupt-stream handling)"
+    ))
+}
+
 #[inline]
 fn decode_into_impl<const LEGACY: bool>(
     bytes: &[u8],
@@ -27,14 +49,16 @@ fn decode_into_impl<const LEGACY: bool>(
     let mut hist = SigHistory::default();
     let mut d = Decoder::new(bytes);
     let n = out.len();
-    // One unwind guard for the whole plane: corrupt streams (EG prefix
-    // overflow asserts) become an Err without taxing every symbol.
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+    // Corrupt streams return a typed Err from the fallible symbol decoder;
+    // the unwind guard only backstops genuine bugs.
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Result<()> {
         for slot in out.iter_mut() {
-            *slot = binarize::decode_int_impl::<LEGACY>(&mut d, ctxs, &mut hist);
+            *slot = binarize::decode_int_impl::<LEGACY>(&mut d, ctxs, &mut hist)
+                .ok_or_else(|| corrupt_symbol(n))?;
         }
+        Ok(())
     }))
-    .map_err(|_| Error::Decode(format!("corrupt CABAC stream in {n}-symbol plane")))
+    .unwrap_or_else(|_| Err(plane_panic(n)))
 }
 
 /// Decode a CABAC layer bitstream (v3 bin format) into `out`, reusing
@@ -72,7 +96,7 @@ pub fn decode_layer_dequant_into<const LEGACY: bool>(
     let mut hist = SigHistory::default();
     let mut d = Decoder::new(bytes);
     let n = out.len();
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Result<()> {
         // Symbols are staged in small `i32` blocks so the serially
         // dependent bin decode and the embarrassingly parallel `sym * Δ`
         // multiply stay separable: the multiply vectorizes under the
@@ -82,12 +106,14 @@ pub fn decode_layer_dequant_into<const LEGACY: bool>(
         let mut stage = [0i32; DEQUANT_BLOCK];
         for chunk in out.chunks_mut(DEQUANT_BLOCK) {
             for slot in stage[..chunk.len()].iter_mut() {
-                *slot = binarize::decode_int_impl::<LEGACY>(&mut d, ctxs, &mut hist);
+                *slot = binarize::decode_int_impl::<LEGACY>(&mut d, ctxs, &mut hist)
+                    .ok_or_else(|| corrupt_symbol(n))?;
             }
             simd::dequant_into(&stage[..chunk.len()], delta, chunk);
         }
+        Ok(())
     }))
-    .map_err(|_| Error::Decode(format!("corrupt CABAC stream in {n}-symbol plane")))
+    .unwrap_or_else(|_| Err(plane_panic(n)))
 }
 
 /// Fused decode + dequantize + **accumulate** plane kernel: decode each
@@ -108,18 +134,20 @@ pub fn decode_layer_dequant_add_into<const LEGACY: bool>(
     let mut hist = SigHistory::default();
     let mut d = Decoder::new(bytes);
     let n = out.len();
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Result<()> {
         let mut stage = [0i32; DEQUANT_BLOCK];
         for chunk in out.chunks_mut(DEQUANT_BLOCK) {
             for slot in stage[..chunk.len()].iter_mut() {
-                *slot = binarize::decode_int_impl::<LEGACY>(&mut d, ctxs, &mut hist);
+                *slot = binarize::decode_int_impl::<LEGACY>(&mut d, ctxs, &mut hist)
+                    .ok_or_else(|| corrupt_symbol(n))?;
             }
             for (o, &s) in chunk.iter_mut().zip(&stage[..chunk.len()]) {
                 *o += s as f32 * delta;
             }
         }
+        Ok(())
     }))
-    .map_err(|_| Error::Decode(format!("corrupt CABAC stream in {n}-symbol plane")))
+    .unwrap_or_else(|_| Err(plane_panic(n)))
 }
 
 /// Decode `count` integers from a CABAC layer bitstream (v3 bin format).

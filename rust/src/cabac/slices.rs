@@ -127,9 +127,11 @@ pub(crate) fn walk_sliced(
     let slice_len = u32::from_le_bytes(raw[0..4].try_into().unwrap()) as usize;
     let n_slices = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
     if slice_len == 0 || n_slices != count.div_ceil(slice_len) {
-        return Err(Error::ShapeMismatch(
-            "sliced stream header inconsistent".into(),
-        ));
+        return Err(Error::ShapeMismatch(format!(
+            "sliced stream header inconsistent: {count} symbols at slice_len {slice_len} \
+             implies {} slices, header claims {n_slices}",
+            if slice_len == 0 { 0 } else { count.div_ceil(slice_len) }
+        )));
     }
     let mut pos = 8usize;
     for i in 0..n_slices {
@@ -315,7 +317,7 @@ where
             remaining += 1;
         }
     }
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Result<()> {
         while remaining > 0 {
             for i in 0..k {
                 let lane = &mut lanes[i];
@@ -323,7 +325,13 @@ where
                     continue;
                 }
                 let d = decs[i].as_mut().unwrap();
-                let sym = binarize::decode_int_impl::<LEGACY>(d, &mut ctxs[i], &mut hists[i]);
+                let sym = binarize::decode_int_impl::<LEGACY>(d, &mut ctxs[i], &mut hists[i])
+                    .ok_or_else(|| {
+                        Error::Wire(format!(
+                            "corrupt CABAC stream in interleaved slice group (lane {i}): \
+                             Exp-Golomb magnitude out of range"
+                        ))
+                    })?;
                 lane.out[pos[i]] = write(sym, lane.delta);
                 pos[i] += 1;
                 if pos[i] == lane.out.len() {
@@ -331,8 +339,13 @@ where
                 }
             }
         }
+        Ok(())
     }))
-    .map_err(|_| Error::Decode("corrupt CABAC stream in interleaved slice group".into()))
+    .unwrap_or_else(|_| {
+        Err(Error::Decode(
+            "decoder panicked in interleaved slice group (internal-bug backstop)".into(),
+        ))
+    })
 }
 
 /// Fan groups of `interleave` adjacent slice jobs out over `threads`

@@ -37,6 +37,6 @@ pub use pipeline::{
 };
 pub use prep::CandidatePrep;
 pub use store::{
-    run_client_harness, AdmissionPolicy, HarnessReport, ModelInfo, ModelStore, StoreConfig,
-    StoreStats,
+    run_client_harness, AdmissionPolicy, HarnessReport, ModelHealth, ModelInfo, ModelStore,
+    StoreConfig, StoreStats,
 };

@@ -29,10 +29,10 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex, MutexGuard, PoisonError};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::model::bitstream::{
-    apply_delta_network_into_on, decode_network_into_on, probe, DecodeArena,
+    apply_delta_network_into_on, decode_network_into_on, probe, DecodeArena, DecodeLimits,
 };
 use crate::model::Network;
 use crate::runtime::EvalService;
@@ -66,6 +66,24 @@ pub struct StoreConfig {
     /// Fan-out width of one request's decode (clamped to >= 1; `1` runs
     /// inline on the requesting thread without touching the pool).
     pub decode_threads: usize,
+    /// Per-request decode latency budget: each decode gets
+    /// `Instant::now() + deadline`, checked cooperatively at slice-claim
+    /// checkpoints ([`DecodeArena::set_deadline`] — no watchdog thread).
+    /// Expiry surfaces as [`Error::Deadline`] and counts toward the
+    /// model's failure streak.  `None` (default) disables the budget.
+    pub decode_deadline: Option<Duration>,
+    /// Consecutive decode failures before a model is quarantined
+    /// ([`ModelHealth::Quarantined`]): further requests are refused with
+    /// [`Error::Quarantined`] without touching the decode path, so one
+    /// bad container cannot keep burning decode capacity.  `0` disables
+    /// quarantining.  A successful decode resets the streak.
+    pub max_failures: u32,
+    /// Decode-resource budget applied to every request
+    /// ([`DecodeLimits`]; the generous defaults are a sensible serving
+    /// posture — tighten per deployment for stricter isolation).
+    /// Registration validates containers against the *default* budget,
+    /// so a model can be resident yet refused at decode time.
+    pub limits: DecodeLimits,
 }
 
 impl Default for StoreConfig {
@@ -75,8 +93,22 @@ impl Default for StoreConfig {
             max_in_flight: 16,
             admission: AdmissionPolicy::Block,
             decode_threads: 1,
+            decode_deadline: None,
+            max_failures: 3,
+            limits: DecodeLimits::default(),
         }
     }
+}
+
+/// Per-model serving health, tracked across requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelHealth {
+    /// Serving normally.
+    Healthy,
+    /// Refused with [`Error::Quarantined`] after
+    /// [`StoreConfig::max_failures`] consecutive decode failures.
+    /// Re-registering the name (or [`ModelStore::reinstate`]) clears it.
+    Quarantined,
 }
 
 /// Registry entry: the container bytes plus the registration-time header
@@ -90,6 +122,14 @@ struct ModelEntry {
     /// decodes as `base + residual`.
     base: Option<Arc<Vec<u8>>>,
     info: ModelInfo,
+    health: ModelHealth,
+    /// Consecutive decode failures; a success resets it to 0.
+    consecutive_failures: u32,
+    /// Pending injected faults ([`ModelStore::set_fault`]): each request
+    /// consumes one and fails with [`Error::Decode`] without decoding —
+    /// the deterministic fault-injection hook behind the `serve` CLI's
+    /// `DCB_FAULT` knob and the harness tests.
+    injected_faults: u32,
 }
 
 /// Snapshot describing one registered model.
@@ -135,6 +175,20 @@ pub struct StoreStats {
     /// Requests shed with [`Error::Backpressure`] under
     /// [`AdmissionPolicy::FailFast`].
     pub rejected: u64,
+    /// Requests whose decode (or injected fault) returned an error —
+    /// includes deadline expiries, excludes quarantine refusals (those
+    /// never reach the decode path).
+    pub decode_errors: u64,
+    /// Subset of `decode_errors` that were [`Error::Deadline`] expiries.
+    pub deadline_expiries: u64,
+    /// Requests refused with [`Error::Quarantined`] (distinct from
+    /// `rejected`: capacity was available, the model was the problem).
+    pub quarantine_rejections: u64,
+    /// Healthy→Quarantined transitions.
+    pub quarantine_events: u64,
+    /// Eval retries after a transient evaluation error
+    /// ([`ModelStore::eval`] retry-once).
+    pub retries: u64,
 }
 
 #[derive(Default)]
@@ -144,6 +198,11 @@ struct StatCells {
     arena_misses: AtomicU64,
     evictions: AtomicU64,
     rejected: AtomicU64,
+    decode_errors: AtomicU64,
+    deadline_expiries: AtomicU64,
+    quarantine_rejections: AtomicU64,
+    quarantine_events: AtomicU64,
+    retries: AtomicU64,
 }
 
 /// One warmed arena with its identity key and LRU recency stamp.
@@ -290,6 +349,9 @@ impl ModelStore {
             bytes: Arc::new(bytes),
             base: None,
             info: info.clone(),
+            health: ModelHealth::Healthy,
+            consecutive_failures: 0,
+            injected_faults: 0,
         };
         self.lock().models.insert(name.to_string(), entry);
         Ok(info)
@@ -355,6 +417,9 @@ impl ModelStore {
             bytes: Arc::new(bytes),
             base: Some(base_bytes),
             info: info.clone(),
+            health: ModelHealth::Healthy,
+            consecutive_failures: 0,
+            injected_faults: 0,
         };
         self.lock().models.insert(name.to_string(), entry);
         Ok(info)
@@ -397,6 +462,47 @@ impl ModelStore {
             arena_misses: self.stats.arena_misses.load(Ordering::Relaxed),
             evictions: self.stats.evictions.load(Ordering::Relaxed),
             rejected: self.stats.rejected.load(Ordering::Relaxed),
+            decode_errors: self.stats.decode_errors.load(Ordering::Relaxed),
+            deadline_expiries: self.stats.deadline_expiries.load(Ordering::Relaxed),
+            quarantine_rejections: self.stats.quarantine_rejections.load(Ordering::Relaxed),
+            quarantine_events: self.stats.quarantine_events.load(Ordering::Relaxed),
+            retries: self.stats.retries.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Current health of one resident model (`None` = not resident).
+    pub fn health(&self, name: &str) -> Option<ModelHealth> {
+        self.lock().models.get(name).map(|e| e.health)
+    }
+
+    /// Clear a quarantined model back to [`ModelHealth::Healthy`] (and
+    /// zero its failure streak) — the operator's "I fixed it" override.
+    /// Returns whether the model was resident.
+    pub fn reinstate(&self, name: &str) -> bool {
+        match self.lock().models.get_mut(name) {
+            Some(e) => {
+                e.health = ModelHealth::Healthy;
+                e.consecutive_failures = 0;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Arm `count` injected faults on a resident model: each of the next
+    /// `count` decode requests for it fails with [`Error::Decode`] before
+    /// any decode work, exercising the exact failure-bookkeeping path a
+    /// corrupt container would (streak, quarantine, counters).  This is
+    /// the deterministic fault-injection hook the `serve` CLI's
+    /// `DCB_FAULT` env knob and the resilience tests drive.  Returns
+    /// whether the model was resident.
+    pub fn set_fault(&self, name: &str, count: u32) -> bool {
+        match self.lock().models.get_mut(name) {
+            Some(e) => {
+                e.injected_faults = count;
+                true
+            }
+            None => false,
         }
     }
 
@@ -406,12 +512,20 @@ impl ModelStore {
         self.lock().arenas.keys_by_recency()
     }
 
-    /// Serve one decode request: admit, check a warmed arena out (or
-    /// build one cold), fused-decode the container into it, hand the
+    /// Serve one decode request: admit, refuse quarantined models, check
+    /// a warmed arena out (or build one cold), fused-decode the container
+    /// into it under the store's [`DecodeLimits`] and deadline, hand the
     /// reconstructed network to `f`, and check the arena back in.  The
     /// closure runs without any store lock held; a panic inside it
     /// unwinds to the caller having released the admission slot (RAII
     /// permit) and forfeited only the one checked-out arena.
+    ///
+    /// Failure accounting: any decode error (including a deadline expiry
+    /// or an injected fault) extends the model's consecutive-failure
+    /// streak; at [`StoreConfig::max_failures`] the model flips to
+    /// [`ModelHealth::Quarantined`] and subsequent requests fail fast
+    /// with [`Error::Quarantined`] — healthy models keep serving
+    /// throughout (degraded serving, not a poisoned store).
     pub fn decode<R>(&self, name: &str, f: impl FnOnce(&Network) -> R) -> Result<R> {
         let _permit = match self.cfg.admission {
             AdmissionPolicy::Block => self.admit.acquire(),
@@ -428,18 +542,34 @@ impl ModelStore {
         };
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
 
-        // Brief lock #1: resolve the name and check an arena out.
-        let (bytes, base, key, arena) = {
+        // Brief lock #1: resolve the name, gate on health, and check an
+        // arena out.  An armed injected fault is consumed here so the
+        // failure it produces is attributed even if the entry is
+        // unregistered while the request is in flight.
+        let (bytes, base, key, arena, inject) = {
             let mut g = self.lock();
             let entry = g
                 .models
-                .get(name)
+                .get_mut(name)
                 .ok_or_else(|| Error::Config(format!("unknown model '{name}'")))?;
+            if entry.health == ModelHealth::Quarantined {
+                self.stats
+                    .quarantine_rejections
+                    .fetch_add(1, Ordering::Relaxed);
+                return Err(Error::Quarantined(format!(
+                    "model '{name}' is quarantined after {} consecutive decode failures",
+                    entry.consecutive_failures
+                )));
+            }
+            let inject = entry.injected_faults > 0;
+            if inject {
+                entry.injected_faults -= 1;
+            }
             let bytes = Arc::clone(&entry.bytes);
             let base = entry.base.as_ref().map(Arc::clone);
             let key = entry.info.shape_key;
             let arena = g.arenas.checkout(key);
-            (bytes, base, key, arena)
+            (bytes, base, key, arena, inject)
         };
         let mut arena = match arena {
             Some(a) => {
@@ -451,32 +581,71 @@ impl ModelStore {
                 DecodeArena::new()
             }
         };
+        arena.set_limits(self.cfg.limits);
+        arena.set_deadline(self.cfg.decode_deadline.map(|d| Instant::now() + d));
 
         // Unlocked: the CABAC decode and the user closure.  Delta entries
         // run base-decode + residual-accumulate fused into the same arena
         // their base would use (identical shape key).
         let threads = self.cfg.decode_threads.max(1);
-        let out = match &base {
-            Some(b) => {
-                apply_delta_network_into_on(&self.pool, b, &bytes, threads, &mut arena).map(f)
+        let out = if inject {
+            Err(Error::Decode(format!(
+                "injected fault on model '{name}' (set_fault / DCB_FAULT)"
+            )))
+        } else {
+            match &base {
+                Some(b) => {
+                    apply_delta_network_into_on(&self.pool, b, &bytes, threads, &mut arena).map(f)
+                }
+                None => decode_network_into_on(&self.pool, &bytes, threads, &mut arena).map(f),
             }
-            None => decode_network_into_on(&self.pool, &bytes, threads, &mut arena).map(f),
         };
 
         // Brief lock #2: return the arena (warm even after a decode error
-        // — only the plane *contents* are unspecified then).
-        let evicted = self.lock().arenas.checkin(key, arena);
-        if evicted {
+        // — only the plane *contents* are unspecified then) and settle
+        // the model's failure streak.
+        if let Err(e) = &out {
+            self.stats.decode_errors.fetch_add(1, Ordering::Relaxed);
+            if matches!(e, Error::Deadline(_)) {
+                self.stats.deadline_expiries.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let mut g = self.lock();
+        if g.arenas.checkin(key, arena) {
             self.stats.evictions.fetch_add(1, Ordering::Relaxed);
         }
+        if let Some(entry) = g.models.get_mut(name) {
+            if out.is_ok() {
+                entry.consecutive_failures = 0;
+            } else {
+                entry.consecutive_failures = entry.consecutive_failures.saturating_add(1);
+                if self.cfg.max_failures > 0
+                    && entry.consecutive_failures >= self.cfg.max_failures
+                    && entry.health == ModelHealth::Healthy
+                {
+                    entry.health = ModelHealth::Quarantined;
+                    self.stats.quarantine_events.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        drop(g);
         out
     }
 
     /// Serve one eval request: decode through the arena cache, then score
     /// the arena-resident network on `svc`.  Same admission, caching and
-    /// panic story as [`Self::decode`].
+    /// panic story as [`Self::decode`], plus **retry-once** on a
+    /// transient evaluation error ([`Error::Xla`] from the runtime — the
+    /// decode succeeded, so the container is not at fault and the retry
+    /// does not touch the failure streak).
     pub fn eval(&self, name: &str, svc: &EvalService) -> Result<f64> {
-        self.decode(name, |net| svc.accuracy(net))?
+        match self.decode(name, |net| svc.accuracy(net))? {
+            Err(Error::Xla(_)) => {
+                self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                self.decode(name, |net| svc.accuracy(net))?
+            }
+            other => other,
+        }
     }
 }
 
@@ -487,8 +656,15 @@ pub struct HarnessReport {
     pub clients: usize,
     /// Requests completed successfully.
     pub completed: usize,
-    /// Requests that returned an error (backpressure under fail-fast).
+    /// Requests that returned any error (the three named subsets below
+    /// plus decode/limit failures on the container itself).
     pub errors: usize,
+    /// Subset of `errors` refused because the model was quarantined.
+    pub quarantined: usize,
+    /// Subset of `errors` that expired the decode deadline.
+    pub deadlined: usize,
+    /// Subset of `errors` rejected by fail-fast admission backpressure.
+    pub backpressure: usize,
     pub p50_us: u64,
     pub p99_us: u64,
     pub wall_s: f64,
@@ -519,7 +695,7 @@ pub fn run_client_harness(
     let clients = clients.max(1);
     assert!(!names.is_empty(), "harness needs at least one model name");
     let start_gate = Barrier::new(clients + 1);
-    let mut per_thread: Vec<(Vec<u64>, usize)> = Vec::new();
+    let mut per_thread: Vec<(Vec<u64>, [usize; 4])> = Vec::new();
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(clients);
         for c in 0..clients {
@@ -527,7 +703,8 @@ pub fn run_client_harness(
             let gate = &start_gate;
             handles.push(s.spawn(move || {
                 let mut lat = Vec::with_capacity(n);
-                let mut errors = 0usize;
+                // [errors, quarantined, deadlined, backpressure]
+                let mut tallies = [0usize; 4];
                 gate.wait();
                 for i in 0..n {
                     let name = &names[(c + i) % names.len()];
@@ -537,10 +714,18 @@ pub fn run_client_harness(
                     });
                     match r {
                         Ok(_) => lat.push(t0.elapsed().as_micros() as u64),
-                        Err(_) => errors += 1,
+                        Err(e) => {
+                            tallies[0] += 1;
+                            match e {
+                                Error::Quarantined(_) => tallies[1] += 1,
+                                Error::Deadline(_) => tallies[2] += 1,
+                                Error::Backpressure(_) => tallies[3] += 1,
+                                _ => {}
+                            }
+                        }
                     }
                 }
-                (lat, errors)
+                (lat, tallies)
             }));
         }
         start_gate.wait();
@@ -550,10 +735,12 @@ pub fn run_client_harness(
         }
         let wall_s = t0.elapsed().as_secs_f64();
         let mut lat: Vec<u64> = Vec::new();
-        let mut errors = 0usize;
-        for (l, e) in &per_thread {
+        let mut tallies = [0usize; 4];
+        for (l, t) in &per_thread {
             lat.extend_from_slice(l);
-            errors += e;
+            for (acc, n) in tallies.iter_mut().zip(t) {
+                *acc += n;
+            }
         }
         lat.sort_unstable();
         let decodes_per_s = if wall_s > 0.0 {
@@ -564,7 +751,10 @@ pub fn run_client_harness(
         HarnessReport {
             clients,
             completed: lat.len(),
-            errors,
+            errors: tallies[0],
+            quarantined: tallies[1],
+            deadlined: tallies[2],
+            backpressure: tallies[3],
             p50_us: percentile(&lat, 0.50),
             p99_us: percentile(&lat, 0.99),
             wall_s,
@@ -667,6 +857,68 @@ mod tests {
         // base bytes are pinned: dropping the base name keeps 'd' serving
         assert!(store.unregister("base"));
         store.decode("d", |_| ()).unwrap();
+    }
+
+    #[test]
+    fn injected_faults_quarantine_model_and_reinstate_clears_it() {
+        use crate::model::{CompressedNetwork, ContainerPolicy, Kind, QuantizedLayer};
+        use crate::util::Pcg64;
+
+        let mut rng = Pcg64::new(417);
+        let make = |name: &str| {
+            let cn = CompressedNetwork {
+                name: name.into(),
+                cfg: Default::default(),
+                layers: vec![QuantizedLayer {
+                    name: "l0".into(),
+                    kind: Kind::Dense,
+                    shape: vec![8, 6],
+                    rows: 6,
+                    cols: 8,
+                    ints: (0..48).map(|_| rng.below(11) as i32 - 5).collect(),
+                    delta: 0.05,
+                    bias: None,
+                }],
+            };
+            cn.to_bytes_with(ContainerPolicy::v3(16, 1))
+        };
+        let store = ModelStore::new(StoreConfig {
+            max_failures: 2,
+            ..StoreConfig::default()
+        });
+        store.register("flaky", make("flaky")).unwrap();
+        store.register("steady", make("steady")).unwrap();
+
+        assert_eq!(store.health("flaky"), Some(ModelHealth::Healthy));
+        assert!(store.set_fault("flaky", 2));
+        assert!(!store.set_fault("nope", 1), "unknown model");
+
+        // Two armed faults: both surface as decode errors, the second
+        // one trips the max_failures=2 quarantine threshold.
+        for _ in 0..2 {
+            assert!(matches!(store.decode("flaky", |_| ()), Err(Error::Decode(_))));
+        }
+        assert_eq!(store.health("flaky"), Some(ModelHealth::Quarantined));
+        // Further requests are refused without decoding...
+        assert!(matches!(
+            store.decode("flaky", |_| ()),
+            Err(Error::Quarantined(_))
+        ));
+        // ...while the healthy neighbour keeps serving.
+        store.decode("steady", |_| ()).unwrap();
+
+        let s = store.stats();
+        assert_eq!(s.decode_errors, 2);
+        assert_eq!(s.quarantine_events, 1);
+        assert_eq!(s.quarantine_rejections, 1);
+        assert_eq!(s.deadline_expiries, 0);
+
+        // Reinstatement clears the streak; faults are spent, so the
+        // model serves again and stays healthy.
+        assert!(store.reinstate("flaky"));
+        store.decode("flaky", |_| ()).unwrap();
+        assert_eq!(store.health("flaky"), Some(ModelHealth::Healthy));
+        assert_eq!(store.health("nope"), None);
     }
 
     #[test]

@@ -27,12 +27,19 @@
 //!   serve      <model.dcb>... [--requests N] [--clients N]
 //!              [--arena-cap N] [--max-in-flight N]
 //!              [--admission block|fail-fast] [--decode-threads N]
+//!              [--deadline-ms N] [--max-failures N]
 //!              register the containers in a ModelStore and drive it with
 //!              a synthetic client fleet, reporting p50/p99 latency and
 //!              decodes/sec at 1/4/16 concurrent clients (or the single
 //!              --clients count); v4 delta positionals are auto-linked
 //!              against the already-listed base whose content hash the
-//!              delta header pins, and served patched
+//!              delta header pins, and served patched.  --deadline-ms
+//!              bounds each decode (expiries surface as Error::Deadline),
+//!              --max-failures sets the consecutive-failure quarantine
+//!              threshold (0 disables), and DCB_FAULT=N (or name=N) arms
+//!              N injected decode faults to exercise the quarantine path;
+//!              the end-of-run summary reports quarantine refusals and
+//!              deadline expiries distinctly from backpressure sheds
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --threads N.
 //! (clap is not in the offline vendor set; this is a small hand-rolled
@@ -106,7 +113,8 @@ fn usage() -> ExitCode {
                       [--slice-len N] [--threads N]\n\
            patch      <base.dcb> <delta.dcb> [-o out.nwf] [--threads N]\n\
            serve      <model.dcb|delta.dcb>... [--requests N] [--clients N] [--arena-cap N]\n\
-                      [--max-in-flight N] [--admission block|fail-fast] [--decode-threads N]\n"
+                      [--max-in-flight N] [--admission block|fail-fast] [--decode-threads N]\n\
+                      [--deadline-ms N] [--max-failures N]  (env DCB_FAULT=N|name=N injects faults)\n"
     );
     ExitCode::from(2)
 }
@@ -523,6 +531,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )))
         }
     }
+    if let Some(ms) = flag_usize(args, "deadline-ms") {
+        cfg.decode_deadline = Some(std::time::Duration::from_millis(ms as u64));
+    }
+    if let Some(n) = flag_usize(args, "max-failures") {
+        cfg.max_failures = n as u32; // 0 disables quarantine
+    }
     let store = ModelStore::new(cfg);
     let mut names: Vec<String> = Vec::new();
     for (i, path) in args.positional.iter().enumerate() {
@@ -579,13 +593,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for name in &names {
         store.decode(name, |_| ())?;
     }
-    let mut total_errors = 0usize;
+    // DCB_FAULT=N (first model) or DCB_FAULT=name=N arms N injected decode
+    // faults — a deterministic way to exercise the quarantine path from
+    // the CLI.  Armed after the warm pass so warming never consumes one.
+    let fault_armed = match std::env::var("DCB_FAULT") {
+        Ok(spec) => {
+            let (target, count) = match spec.split_once('=') {
+                Some((n, c)) => (n.to_string(), c.trim().parse::<u32>()),
+                None => (names[0].clone(), spec.trim().parse::<u32>()),
+            };
+            let count = count.map_err(|_| {
+                deepcabac::util::Error::Config(format!(
+                    "DCB_FAULT='{spec}' is not a fault count N or name=N"
+                ))
+            })?;
+            if !store.set_fault(&target, count) {
+                return Err(deepcabac::util::Error::Config(format!(
+                    "DCB_FAULT targets unknown model '{target}'"
+                )));
+            }
+            println!("armed {count} injected decode fault(s) on '{target}' (DCB_FAULT)");
+            true
+        }
+        Err(_) => false,
+    };
+    let mut totals = [0usize; 4]; // errors, quarantined, deadlined, backpressure
     for &clients in &client_counts {
         let rep = run_client_harness(&store, &names, clients, requests);
-        total_errors += rep.errors;
+        for (acc, n) in totals.iter_mut().zip([
+            rep.errors,
+            rep.quarantined,
+            rep.deadlined,
+            rep.backpressure,
+        ]) {
+            *acc += n;
+        }
         println!(
-            "clients={:<3} completed={} errors={} p50={}us p99={}us {:.0} decodes/s",
-            rep.clients, rep.completed, rep.errors, rep.p50_us, rep.p99_us, rep.decodes_per_s
+            "clients={:<3} completed={} errors={} (quarantined={} deadlined={} backpressure={}) \
+             p50={}us p99={}us {:.0} decodes/s",
+            rep.clients,
+            rep.completed,
+            rep.errors,
+            rep.quarantined,
+            rep.deadlined,
+            rep.backpressure,
+            rep.p50_us,
+            rep.p99_us,
+            rep.decodes_per_s
         );
     }
     let st = store.stats();
@@ -593,11 +647,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "store stats: {} requests, {} warm arena hits, {} cold builds, {} evictions, {} rejected",
         st.requests, st.arena_hits, st.arena_misses, st.evictions, st.rejected
     );
-    // Under block admission nothing may fail; under fail-fast, shed
-    // requests are the policy working as configured, not a fault.
-    if total_errors > 0 && cfg.admission == AdmissionPolicy::Block {
+    println!(
+        "resilience:  {} decode errors, {} deadline expiries, {} quarantine refusals, \
+         {} quarantine events, {} eval retries",
+        st.decode_errors, st.deadline_expiries, st.quarantine_rejections, st.quarantine_events,
+        st.retries
+    );
+    // Exit-code audit: backpressure sheds under fail-fast are the policy
+    // working, and quarantine refusals / deadline expiries / injected
+    // faults are configured degradation — only errors none of those
+    // explain fail the run under block admission.
+    let unexplained = totals[0].saturating_sub(totals[1] + totals[2] + totals[3]);
+    if unexplained > 0 && cfg.admission == AdmissionPolicy::Block && !fault_armed {
         return Err(deepcabac::util::Error::Config(format!(
-            "{total_errors} serving request(s) failed under block admission"
+            "{unexplained} serving request(s) failed under block admission \
+             with no quarantine, deadline or fault to explain them"
         )));
     }
     Ok(())

@@ -86,6 +86,48 @@ pub use super::format::{VERSION_V1, VERSION_V2, VERSION_V3, VERSION_V4};
 /// well under 1% of typical payloads.
 pub const DEFAULT_SLICE_LEN: usize = 16_384;
 
+/// Resource budget for decoding **untrusted** containers: every header
+/// walk threads one of these, so a corrupt or adversarial stream fails
+/// with a typed [`Error::Limit`] before it can demand unbounded header
+/// work, symbol decode, or plane allocation.  Defaults are generous —
+/// far above any model this crate targets — so trusted workflows never
+/// notice them; serving layers tighten them per deployment via
+/// [`ContainerPolicy`] / [`DecodeArena::set_limits`] /
+/// `coordinator::store::StoreConfig`.
+///
+/// The symbol budget is enforced where the work is *committed* (the
+/// header walk that sums `rows * cols`), not inside the per-symbol
+/// decode loops: the CABAC kernels decode exactly the advertised symbol
+/// count (the arithmetic decoder reads zero bits past its payload, it
+/// never over-runs), so bounding the advertisement bounds the work
+/// without any hot-path check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeLimits {
+    /// Maximum layer count a container may advertise.
+    pub max_layers: usize,
+    /// Maximum total slice-table entries across all layers.
+    pub max_slices: usize,
+    /// Maximum total symbols (weights) across all layers.
+    pub max_symbols: u64,
+    /// Maximum total coded payload bytes across all layers.
+    pub max_payload_bytes: usize,
+    /// Maximum bytes of decoded plane + bias storage the container may
+    /// require (bounds the arena / two-pass `f32` allocations).
+    pub max_arena_bytes: usize,
+}
+
+impl Default for DecodeLimits {
+    fn default() -> Self {
+        Self {
+            max_layers: 65_536,
+            max_slices: 1 << 20,
+            max_symbols: 1 << 33,
+            max_payload_bytes: 4 << 30,
+            max_arena_bytes: 32 << 30,
+        }
+    }
+}
+
 /// Container coding policy: which version to emit and how wide to fan out.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ContainerPolicy {
@@ -99,6 +141,9 @@ pub struct ContainerPolicy {
     pub slice_len: usize,
     /// Worker threads for encode/decode fan-out (clamped to >= 1).
     pub threads: usize,
+    /// Decode-resource budget applied when this policy drives a decode
+    /// (ignored on encode — the encoder writes what it is given).
+    pub limits: DecodeLimits,
 }
 
 impl ContainerPolicy {
@@ -119,6 +164,7 @@ impl ContainerPolicy {
             version: VERSION_V1,
             slice_len: 0,
             threads: default_threads(),
+            limits: DecodeLimits::default(),
         }
     }
 
@@ -164,6 +210,7 @@ pub struct ContainerPolicyBuilder {
     version: u8,
     slice_len: usize,
     threads: Option<usize>,
+    limits: DecodeLimits,
 }
 
 impl Default for ContainerPolicyBuilder {
@@ -172,6 +219,7 @@ impl Default for ContainerPolicyBuilder {
             version: VERSION_V3,
             slice_len: DEFAULT_SLICE_LEN,
             threads: None,
+            limits: DecodeLimits::default(),
         }
     }
 }
@@ -207,6 +255,12 @@ impl ContainerPolicyBuilder {
         self
     }
 
+    /// Decode-resource budget ([`DecodeLimits`]; defaults are generous).
+    pub fn limits(mut self, limits: DecodeLimits) -> Self {
+        self.limits = limits;
+        self
+    }
+
     /// Finalize.  Unsliced formats (v1) zero `slice_len` (monolithic
     /// payloads have no slice geometry), so builder-made and shim-made
     /// policies compare equal.
@@ -216,6 +270,7 @@ impl ContainerPolicyBuilder {
             version: self.version,
             slice_len: if sliced { self.slice_len.max(1) } else { 0 },
             threads: self.threads.unwrap_or_else(default_threads).max(1),
+            limits: self.limits,
         }
     }
 }
@@ -546,17 +601,32 @@ pub(crate) struct ContainerWalker<'a> {
     body: &'a [u8],
     pos: usize,
     emitted: usize,
+    limits: DecodeLimits,
+    /// Running budget accumulators (see [`DecodeLimits`]).
+    symbols: u64,
+    payload_bytes: u64,
+    arena_bytes: u64,
 }
 
 impl<'a> ContainerWalker<'a> {
     pub(crate) fn open(raw: &'a [u8]) -> Result<Self> {
+        Self::open_with(raw, DecodeLimits::default())
+    }
+
+    /// [`ContainerWalker::open`] under an explicit decode budget: the head
+    /// fields are checked here, the per-layer accumulators as each layer
+    /// is walked ([`ContainerWalker::next_layer`]).
+    pub(crate) fn open_with(raw: &'a [u8], limits: DecodeLimits) -> Result<Self> {
         if raw.len() < 8 || &raw[..4] != MAGIC {
             return Err(Error::Wire("bad dcb magic".into()));
         }
         let body = &raw[4..raw.len() - 4];
         let crc_stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
-        if crc32fast::hash(body) != crc_stored {
-            return Err(Error::Crc("dcb crc mismatch".into()));
+        let crc_actual = crc32fast::hash(body);
+        if crc_actual != crc_stored {
+            return Err(Error::Crc(format!(
+                "dcb crc mismatch: stream claims {crc_stored:08x}, body hashes {crc_actual:08x}"
+            )));
         }
         let mut pos = 0usize;
         let format = ContainerFormat::from_version(take(body, &mut pos, 1)?[0])?;
@@ -579,6 +649,12 @@ impl<'a> ContainerWalker<'a> {
             None
         };
         let n_layers = take_u32(body, &mut pos)? as usize;
+        if n_layers > limits.max_layers {
+            return Err(Error::Limit(format!(
+                "container advertises {n_layers} layers, budget allows {}",
+                limits.max_layers
+            )));
+        }
         let skip: &[u8] = if format.is_delta() {
             take(body, &mut pos, n_layers.div_ceil(8))?
         } else {
@@ -594,6 +670,10 @@ impl<'a> ContainerWalker<'a> {
             body,
             pos,
             emitted: 0,
+            limits,
+            symbols: 0,
+            payload_bytes: 0,
+            arena_bytes: 0,
         })
     }
 
@@ -633,6 +713,30 @@ impl<'a> ContainerWalker<'a> {
             let plen = take_u32(body, pos)? as usize;
             take(body, pos, plen)?
         };
+        // Budget accounting: rows/cols come off the wire as u32, so the
+        // u64 products cannot overflow; exceeding a cap is a typed refusal
+        // *before* any plane allocation or payload decode is committed.
+        self.symbols += rows as u64 * cols as u64;
+        if self.symbols > self.limits.max_symbols {
+            return Err(Error::Limit(format!(
+                "container advertises {} total symbols, budget allows {}",
+                self.symbols, self.limits.max_symbols
+            )));
+        }
+        self.arena_bytes += rows as u64 * cols as u64 * 4 + bias.map_or(0, |b| b.len() as u64);
+        if self.arena_bytes > self.limits.max_arena_bytes as u64 {
+            return Err(Error::Limit(format!(
+                "container requires {} plane/bias bytes, budget allows {}",
+                self.arena_bytes, self.limits.max_arena_bytes
+            )));
+        }
+        self.payload_bytes += payload.len() as u64;
+        if self.payload_bytes > self.limits.max_payload_bytes as u64 {
+            return Err(Error::Limit(format!(
+                "container carries {} payload bytes, budget allows {}",
+                self.payload_bytes, self.limits.max_payload_bytes
+            )));
+        }
         self.emitted += 1;
         Ok(Some(LayerView {
             name,
@@ -651,7 +755,12 @@ impl<'a> ContainerWalker<'a> {
 /// Validate magic + CRC and walk every header field (allocating form of
 /// [`ContainerWalker`] — owned names/shapes/bias, payloads still borrowed).
 fn parse_container(raw: &[u8]) -> Result<ParsedContainer<'_>> {
-    let mut w = ContainerWalker::open(raw)?;
+    parse_container_with(raw, DecodeLimits::default())
+}
+
+/// [`parse_container`] under an explicit decode budget.
+fn parse_container_with(raw: &[u8], limits: DecodeLimits) -> Result<ParsedContainer<'_>> {
+    let mut w = ContainerWalker::open_with(raw, limits)?;
     let mut layers = Vec::with_capacity(w.n_layers.min(4096));
     while let Some(v) = w.next_layer()? {
         layers.push(RawLayer {
@@ -728,7 +837,9 @@ struct SliceRef {
 /// Append one layer's fused-decode jobs to the flattened slice table —
 /// shared by the arena's warm (`prepare`) and cold (`rebuild`) paths so
 /// the slice geometry has exactly one builder.  `payload` must borrow
-/// from the container buffer `raw_base` points into.
+/// from the container buffer `raw_base` points into.  `max_slices` caps
+/// the *total* table size ([`DecodeLimits::max_slices`]) so an
+/// adversarial slice_len cannot inflate the table unboundedly.
 fn push_slice_refs(
     slices: &mut Vec<SliceRef>,
     layer: usize,
@@ -737,6 +848,7 @@ fn push_slice_refs(
     count: usize,
     delta: f32,
     sliced: bool,
+    max_slices: usize,
 ) -> Result<()> {
     let payload_off = payload.as_ptr() as usize - raw_base;
     if sliced {
@@ -763,6 +875,12 @@ fn push_slice_refs(
             out_len: count,
             delta,
         });
+    }
+    if slices.len() > max_slices {
+        return Err(Error::Limit(format!(
+            "slice table has {} entries, budget allows {max_slices}",
+            slices.len()
+        )));
     }
     Ok(())
 }
@@ -797,6 +915,8 @@ pub struct DecodeArena {
     slices: Vec<SliceRef>,
     plane_ptrs: Vec<SendPtr<f32>>,
     scratches: Vec<WeightContexts>,
+    limits: DecodeLimits,
+    deadline: Option<std::time::Instant>,
 }
 
 impl Default for DecodeArena {
@@ -818,7 +938,38 @@ impl DecodeArena {
             slices: Vec::new(),
             plane_ptrs: Vec::new(),
             scratches: Vec::new(),
+            limits: DecodeLimits::default(),
+            deadline: None,
         }
+    }
+
+    /// Arena enforcing a non-default decode budget from the first decode.
+    pub fn with_limits(limits: DecodeLimits) -> Self {
+        let mut a = Self::new();
+        a.limits = limits;
+        a
+    }
+
+    /// Replace the decode-resource budget enforced by subsequent decodes
+    /// through this arena ([`DecodeLimits`]).
+    pub fn set_limits(&mut self, limits: DecodeLimits) {
+        self.limits = limits;
+    }
+
+    /// The budget currently enforced by this arena.
+    pub fn limits(&self) -> DecodeLimits {
+        self.limits
+    }
+
+    /// Install (or clear) a **cooperative** decode deadline: the
+    /// slice-claim loops check it before claiming each slice (v1
+    /// containers decode one slice per layer, so granularity is per
+    /// layer there) and surface [`Error::Deadline`] once it has passed.
+    /// No watchdog thread is involved; an expired deadline stops work at
+    /// the next claim, it does not interrupt a slice mid-decode.  The
+    /// deadline persists across decodes until replaced or cleared.
+    pub fn set_deadline(&mut self, deadline: Option<std::time::Instant>) {
+        self.deadline = deadline;
     }
 
     /// The most recently decoded network (empty before the first decode).
@@ -832,7 +983,7 @@ impl DecodeArena {
     /// the key did not match (the caller rebuilds cold); `Err` means the
     /// container is corrupt.
     fn prepare(&mut self, raw: &[u8]) -> Result<bool> {
-        let mut w = ContainerWalker::open(raw)?;
+        let mut w = ContainerWalker::open_with(raw, self.limits)?;
         if w.format.is_delta() {
             return Err(delta_decode_err());
         }
@@ -878,6 +1029,7 @@ impl DecodeArena {
                 v.rows * v.cols,
                 v.delta,
                 sliced,
+                self.limits.max_slices,
             )?;
             li += 1;
         }
@@ -888,7 +1040,7 @@ impl DecodeArena {
     /// headers AND the flattened slice table in one parse (allocates —
     /// the warm-up cost `prepare` then avoids on subsequent decodes).
     fn rebuild(&mut self, raw: &[u8]) -> Result<()> {
-        let parsed = parse_container(raw)?;
+        let parsed = parse_container_with(raw, self.limits)?;
         if parsed.format.is_delta() {
             return Err(delta_decode_err());
         }
@@ -908,6 +1060,7 @@ impl DecodeArena {
                 l.rows * l.cols,
                 l.delta,
                 sliced,
+                self.limits.max_slices,
             )?;
         }
         self.net = Network {
@@ -947,6 +1100,7 @@ impl DecodeArena {
         threads: usize,
         interleave: usize,
     ) -> Result<()> {
+        let deadline = self.deadline;
         let DecodeArena {
             net,
             cfg,
@@ -982,6 +1136,18 @@ impl DecodeArena {
                 *g = Some(e);
             }
         };
+        // Cooperative deadline checkpoint: checked before each slice (or
+        // slice-group) claim, so an expired budget stops a worker at
+        // slice granularity without a watchdog thread.  The hot no-
+        // deadline path pays one branch; the expiry path may allocate
+        // (error formatting), which is fine — the zero-allocation pin
+        // covers successful decodes only.
+        let expired = || {
+            deadline.is_some_and(|dl| std::time::Instant::now() >= dl)
+        };
+        let deadline_err = || {
+            Error::Deadline("decode deadline passed before slice claim".into())
+        };
         // SAFETY (both schedules): worker indices are unique within one
         // fan-out, so each worker's scratch slot range [widx*k, widx*k+k)
         // has exactly one user and `scratches` outlives the blocking
@@ -993,6 +1159,10 @@ impl DecodeArena {
             let work = |widx: usize| {
                 let ctxs = unsafe { &mut *scratch_base.0.add(widx) };
                 loop {
+                    if expired() {
+                        park_err(deadline_err());
+                        break;
+                    }
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
@@ -1025,6 +1195,10 @@ impl DecodeArena {
                 let ctxs =
                     unsafe { std::slice::from_raw_parts_mut(scratch_base.0.add(widx * k), k) };
                 loop {
+                    if expired() {
+                        park_err(deadline_err());
+                        break;
+                    }
                     let g = cursor.fetch_add(k, Ordering::Relaxed);
                     if g >= n {
                         break;
@@ -1078,7 +1252,7 @@ impl DecodeArena {
     /// validated the base identity ([`DeltaHeader`]); this guards the
     /// per-layer contract and reports drift as [`Error::ShapeMismatch`].
     fn apply_residuals(&mut self, pool: &Pool, raw: &[u8], threads: usize) -> Result<()> {
-        let mut w = ContainerWalker::open(raw)?;
+        let mut w = ContainerWalker::open_with(raw, self.limits)?;
         if !w.format.is_delta() {
             return Err(Error::Format("not a delta (v4) container".into()));
         }
@@ -1137,6 +1311,7 @@ impl DecodeArena {
                     v.rows * v.cols,
                     v.delta,
                     true,
+                    self.limits.max_slices,
                 )?;
             }
             li += 1;
@@ -1150,6 +1325,7 @@ impl DecodeArena {
     /// only: the interleaved group decoder writes through a pure
     /// `sym → T` map and cannot read-modify-write the plane.
     fn accumulate_planes(&mut self, pool: &Pool, raw: &[u8], threads: usize) -> Result<()> {
+        let deadline = self.deadline;
         let DecodeArena {
             net,
             cfg,
@@ -1187,6 +1363,13 @@ impl DecodeArena {
         let work = |widx: usize| {
             let ctxs = unsafe { &mut *scratch_base.0.add(widx) };
             loop {
+                // Same cooperative deadline checkpoint as `decode_planes`.
+                if deadline.is_some_and(|dl| std::time::Instant::now() >= dl) {
+                    park_err(Error::Deadline(
+                        "decode deadline passed before slice claim".into(),
+                    ));
+                    break;
+                }
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
@@ -1447,7 +1630,18 @@ impl CompressedNetwork {
     /// workers decode straight into disjoint chunks of it, reusing one
     /// context scratch per worker.
     pub fn from_bytes_with(raw: &[u8], threads: usize) -> Result<Self> {
-        let parsed = parse_container(raw)?;
+        Self::from_bytes_with_limits(raw, threads, DecodeLimits::default())
+    }
+
+    /// [`Self::from_bytes_with`] under an explicit [`DecodeLimits`]
+    /// budget — the two-pass analogue of [`DecodeArena::set_limits`] for
+    /// callers decoding untrusted bytes without an arena.
+    pub fn from_bytes_with_limits(
+        raw: &[u8],
+        threads: usize,
+        limits: DecodeLimits,
+    ) -> Result<Self> {
+        let parsed = parse_container_with(raw, limits)?;
         if parsed.format.is_delta() {
             return Err(delta_decode_err());
         }
@@ -1468,6 +1662,13 @@ impl CompressedNetwork {
                 vec![(l.payload, l.rows * l.cols)]
             };
             jobs.extend(make_jobs(slices, plane.as_mut_slice()));
+            if jobs.len() > limits.max_slices {
+                return Err(Error::Limit(format!(
+                    "slice table has {} entries, budget allows {}",
+                    jobs.len(),
+                    limits.max_slices
+                )));
+            }
         }
         let interleave = decode_interleave();
         if interleave > 1 && jobs.len() > 1 {
@@ -1997,6 +2198,132 @@ mod tests {
         let good = net.to_bytes_with(ContainerPolicy::default());
         let got = decode_network_into(&good, 2, &mut arena).unwrap();
         assert_eq!(got.layers.len(), net.layers.len());
+    }
+
+    #[test]
+    fn decode_limits_reject_over_budget_containers() {
+        let net = sample();
+        let bytes = net.to_bytes_with(ContainerPolicy::default());
+        let params = net.param_count() as u64;
+
+        // Default (generous) budget decodes fine.
+        assert!(CompressedNetwork::from_bytes_with_limits(
+            &bytes,
+            2,
+            DecodeLimits::default()
+        )
+        .is_ok());
+
+        // Each axis of the budget is enforced as a typed Error::Limit.
+        let tight_symbols = DecodeLimits {
+            max_symbols: params - 1,
+            ..DecodeLimits::default()
+        };
+        let tight_layers = DecodeLimits {
+            max_layers: net.layers.len() - 1,
+            ..DecodeLimits::default()
+        };
+        let tight_payload = DecodeLimits {
+            max_payload_bytes: 8,
+            ..DecodeLimits::default()
+        };
+        let tight_arena = DecodeLimits {
+            max_arena_bytes: 64,
+            ..DecodeLimits::default()
+        };
+        let tight_slices = DecodeLimits {
+            max_slices: 0,
+            ..DecodeLimits::default()
+        };
+        for limits in [
+            tight_symbols,
+            tight_layers,
+            tight_payload,
+            tight_arena,
+            tight_slices,
+        ] {
+            let err =
+                CompressedNetwork::from_bytes_with_limits(&bytes, 2, limits).unwrap_err();
+            assert!(matches!(err, Error::Limit(_)), "{err}");
+            // and the fused arena path refuses identically
+            let mut arena = DecodeArena::with_limits(limits);
+            let err = decode_network_into(&bytes, 2, &mut arena).unwrap_err();
+            assert!(matches!(err, Error::Limit(_)), "{err}");
+        }
+
+        // An exact-fit budget passes (boundary, not off-by-one).
+        let exact = DecodeLimits {
+            max_symbols: params,
+            max_layers: net.layers.len(),
+            ..DecodeLimits::default()
+        };
+        assert!(CompressedNetwork::from_bytes_with_limits(&bytes, 2, exact).is_ok());
+    }
+
+    #[test]
+    fn arena_recovers_after_limit_refusal() {
+        let net = sample();
+        let bytes = net.to_bytes_with(ContainerPolicy::default());
+        let mut arena = DecodeArena::new();
+        decode_network_into(&bytes, 2, &mut arena).unwrap(); // warm
+        arena.set_limits(DecodeLimits {
+            max_symbols: 1,
+            ..DecodeLimits::default()
+        });
+        assert!(matches!(
+            decode_network_into(&bytes, 2, &mut arena),
+            Err(Error::Limit(_))
+        ));
+        arena.set_limits(DecodeLimits::default());
+        let expected = CompressedNetwork::from_bytes(&bytes).unwrap().reconstruct_named();
+        let got = decode_network_into(&bytes, 2, &mut arena).unwrap();
+        for (a, b) in got.layers.iter().zip(&expected.layers) {
+            assert_eq!(a.weights, b.weights);
+        }
+    }
+
+    #[test]
+    fn expired_deadline_surfaces_and_clears() {
+        let net = sample();
+        let bytes = net.to_bytes_with(ContainerPolicy::default());
+        let mut arena = DecodeArena::new();
+        // An already-passed deadline fails at the first slice claim.
+        arena.set_deadline(Some(
+            std::time::Instant::now() - std::time::Duration::from_millis(1),
+        ));
+        for threads in [1usize, 4] {
+            let err = decode_network_into(&bytes, threads, &mut arena).unwrap_err();
+            assert!(matches!(err, Error::Deadline(_)), "{err}");
+        }
+        // Clearing it restores normal decodes on the same arena.
+        arena.set_deadline(None);
+        assert!(decode_network_into(&bytes, 2, &mut arena).is_ok());
+        // A far-future deadline never fires.
+        arena.set_deadline(Some(
+            std::time::Instant::now() + std::time::Duration::from_secs(3600),
+        ));
+        assert!(decode_network_into(&bytes, 2, &mut arena).is_ok());
+    }
+
+    #[test]
+    fn crc_error_reports_expected_and_actual() {
+        let mut bytes = sample().to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        let err = CompressedNetwork::from_bytes(&bytes).unwrap_err();
+        match err {
+            Error::Crc(m) => {
+                // Both the stored and the recomputed CRC appear in the
+                // message (8 hex digits each) so quarantine logs are
+                // actionable.
+                let body = &bytes[4..bytes.len() - 4];
+                let actual = format!("{:08x}", crate::util::crc32(body));
+                assert!(m.contains(&actual), "{m}");
+                let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+                assert!(m.contains(&format!("{stored:08x}")), "{m}");
+            }
+            other => panic!("expected Error::Crc, got {other}"),
+        }
     }
 
     #[test]

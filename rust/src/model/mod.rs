@@ -12,8 +12,8 @@ pub use bitstream::{
     apply_delta_network_into, apply_delta_network_into_on, container_shape_key,
     decode_network_into, decode_network_into_on, decode_network_into_on_with,
     decode_network_into_with, delta_header, probe, CompressedNetwork, ContainerPolicy,
-    ContainerPolicyBuilder, ContainerProbe, DecodeArena, DeltaHeader, LayerProbe, QuantizedLayer,
-    DEFAULT_SLICE_LEN, VERSION_V1, VERSION_V2, VERSION_V3, VERSION_V4,
+    ContainerPolicyBuilder, ContainerProbe, DecodeArena, DecodeLimits, DeltaHeader, LayerProbe,
+    QuantizedLayer, DEFAULT_SLICE_LEN, VERSION_V1, VERSION_V2, VERSION_V3, VERSION_V4,
 };
 pub use delta::{CompressedDelta, DeltaLayer};
 pub use format::{BinFormat, ContainerFormat};

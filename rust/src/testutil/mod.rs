@@ -11,6 +11,8 @@
 
 use crate::util::Pcg64;
 
+pub mod fuzz;
+
 /// Configuration for one property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {

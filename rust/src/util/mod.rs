@@ -34,6 +34,20 @@ pub enum Error {
     /// Admission rejected under load: the serving layer's bounded
     /// in-flight capacity is exhausted and the caller chose fail-fast.
     Backpressure(String),
+    /// A decode-resource budget was exceeded (layer/slice/symbol/payload/
+    /// arena-byte caps — see `model::DecodeLimits`).  Distinct from
+    /// [`Error::Wire`]: the stream may be well-formed but asks for more
+    /// resources than the decoder is willing to spend on untrusted input.
+    Limit(String),
+    /// A cooperative decode deadline expired mid-request (serving-layer
+    /// latency budget, checked at slice-claim checkpoints — no watchdog
+    /// thread involved).
+    Deadline(String),
+    /// The serving layer refused the request because the model is
+    /// quarantined after repeated decode failures (`ModelStore`
+    /// health-state policy).  Distinct from [`Error::Backpressure`]:
+    /// capacity is available, the *model* is the problem.
+    Quarantined(String),
 }
 
 impl std::fmt::Display for Error {
@@ -48,6 +62,9 @@ impl std::fmt::Display for Error {
             Error::Crc(m) => write!(f, "crc error: {m}"),
             Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
             Error::Backpressure(m) => write!(f, "backpressure: {m}"),
+            Error::Limit(m) => write!(f, "decode limit exceeded: {m}"),
+            Error::Deadline(m) => write!(f, "decode deadline expired: {m}"),
+            Error::Quarantined(m) => write!(f, "model quarantined: {m}"),
         }
     }
 }
@@ -108,5 +125,18 @@ mod tests {
         assert!(Error::Backpressure("full".into())
             .to_string()
             .contains("backpressure"));
+    }
+
+    #[test]
+    fn error_display_hardening_variants() {
+        assert!(Error::Limit("4 layers over budget".into())
+            .to_string()
+            .contains("limit exceeded"));
+        assert!(Error::Deadline("15ms budget".into())
+            .to_string()
+            .contains("deadline expired"));
+        assert!(Error::Quarantined("model 'm'".into())
+            .to_string()
+            .contains("quarantined"));
     }
 }

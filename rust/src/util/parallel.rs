@@ -46,11 +46,24 @@ pub fn default_threads() -> usize {
         .unwrap_or(4);
     let hw = avail.min(16);
     match std::env::var("DCB_THREADS") {
-        Ok(v) => parse_thread_override(&v)
-            .map(|n| clamp_thread_override(n, avail))
-            .unwrap_or(hw),
+        Ok(v) => match parse_thread_override(&v) {
+            Some(n) => clamp_thread_override(n, avail),
+            None => {
+                eprintln!("{}", env_fallback_warning("DCB_THREADS", &v, hw));
+                hw
+            }
+        },
         Err(_) => hw,
     }
+}
+
+/// One-line stderr warning for an unparsable env override — names the
+/// variable and echoes the rejected value so an operator can spot the
+/// typo, mirroring the [`clamp_thread_override`] clamp warning.  Split
+/// from the `eprintln!` so the message is unit-testable without mutating
+/// process-global environment state.
+pub fn env_fallback_warning(var: &str, value: &str, fallback: usize) -> String {
+    format!("deepcabac: {var}='{value}' is not a positive integer; using the default ({fallback})")
 }
 
 /// Parse a `DCB_THREADS`-style override: `Some(n)` for a positive integer
@@ -111,7 +124,16 @@ pub fn parse_interleave_override(v: &str) -> Option<usize> {
 pub fn decode_interleave() -> usize {
     static CACHED: OnceLock<usize> = OnceLock::new();
     *CACHED.get_or_init(|| match std::env::var("DCB_INTERLEAVE") {
-        Ok(v) => parse_interleave_override(&v).unwrap_or(DEFAULT_DECODE_INTERLEAVE),
+        Ok(v) => match parse_interleave_override(&v) {
+            Some(k) => k,
+            None => {
+                eprintln!(
+                    "{}",
+                    env_fallback_warning("DCB_INTERLEAVE", &v, DEFAULT_DECODE_INTERLEAVE)
+                );
+                DEFAULT_DECODE_INTERLEAVE
+            }
+        },
         Err(_) => DEFAULT_DECODE_INTERLEAVE,
     })
 }
@@ -774,6 +796,18 @@ mod tests {
         assert_eq!(parse_thread_override("all"), None);
         assert_eq!(parse_thread_override("-2"), None);
         assert_eq!(parse_thread_override("3.5"), None);
+    }
+
+    #[test]
+    fn env_fallback_warning_names_variable_and_value() {
+        let w = env_fallback_warning("DCB_THREADS", "all", 8);
+        assert!(w.contains("DCB_THREADS"), "{w}");
+        assert!(w.contains("'all'"), "{w}");
+        assert!(w.contains("(8)"), "{w}");
+        assert!(!w.contains('\n'), "one line, one warning: {w}");
+        let w = env_fallback_warning("DCB_INTERLEAVE", "-3", DEFAULT_DECODE_INTERLEAVE);
+        assert!(w.contains("DCB_INTERLEAVE"), "{w}");
+        assert!(w.contains("'-3'"), "{w}");
     }
 
     #[test]

@@ -200,6 +200,13 @@ fn deltas_pin_exact_base_bytes_not_just_geometry() {
         let mut arena = DecodeArena::new();
         let err = apply_delta_network_into(&other_raw, &delta_raw, 2, &mut arena).unwrap_err();
         assert!(matches!(err, Error::Crc(_)), "{err}");
+        // the refusal names both sides: the CRC the delta pinned (the v1
+        // bytes) and what the offered serialization hashes to
+        let msg = err.to_string();
+        let pinned = format!("{:08x}", d.base_crc32);
+        let offered = format!("{:08x}", deepcabac::util::crc32(&other_raw));
+        assert!(msg.contains(&pinned), "missing pinned crc {pinned}: {msg}");
+        assert!(msg.contains(&offered), "missing offered crc {offered}: {msg}");
     }
 }
 

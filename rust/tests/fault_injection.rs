@@ -1,0 +1,288 @@
+//! Fault-injection property suite for the hardened decode path.
+//!
+//! The contract under test: feeding **any** corrupted container to the
+//! decode entry points produces either a correct decode or a typed
+//! [`Error`] — never a panic escape, never allocation beyond the arena
+//! budget, never unbounded work.  Three layers of attack:
+//!
+//! * an **exhaustive single-byte sweep** over all five golden fixtures
+//!   (`golden_v1/v2/v3/v4_base/v4.dcb`), each flipped byte tried both
+//!   as-is (the CRC gate's job) and CRC-restamped (penetrating to the
+//!   header/payload validation behind the gate);
+//! * a **seeded mutation engine** ([`deepcabac::testutil::fuzz`]) drawing
+//!   bit flips, truncations, splices, length-field inflation and header
+//!   corruption over the fixtures plus fresh encodes — `DCB_FUZZ_ITERS`
+//!   scales the iteration count (CI's fault-smoke step pins it);
+//! * a **counting allocator** asserting every attempt stays far below the
+//!   [`DecodeLimits`] arena budget — a length-field inflation that slipped
+//!   past validation would show up here as a multi-gigabyte allocation.
+//!
+//! Debug builds stride-sample the big fixtures to keep `cargo test`
+//! snappy; release builds (CI fault-smoke, `--release`) sweep every byte.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use deepcabac::cabac::CodingConfig;
+use deepcabac::model::{
+    apply_delta_network_into, decode_network_into, CompressedNetwork, ContainerPolicy,
+    DecodeArena, DecodeLimits, Kind, QuantizedLayer,
+};
+use deepcabac::testutil::fuzz::{flip_bit, restamp, Mutator};
+use deepcabac::util::Pcg64;
+
+struct CountingAlloc;
+
+static ALLOC_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(new_size, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Per-attempt allocation ceiling.  Legitimate decodes of the test corpus
+/// allocate a few tens of KB; an inflation attack that slipped past the
+/// budget checks would claim gigabytes.  The gap leaves room for
+/// allocator cross-talk from concurrently running tests in this binary.
+const ALLOC_CAP_BYTES: usize = 128 << 20;
+
+/// Tight-but-sufficient budgets for the corpus: every pristine container
+/// here fits comfortably, every advertised-size attack is refused long
+/// before [`ALLOC_CAP_BYTES`].
+fn limits() -> DecodeLimits {
+    DecodeLimits {
+        max_layers: 1 << 10,
+        max_slices: 1 << 16,
+        max_symbols: 1 << 22,
+        max_payload_bytes: 1 << 24,
+        max_arena_bytes: 64 << 20,
+    }
+}
+
+fn fixture(name: &str) -> Vec<u8> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/golden")
+        .join(name);
+    std::fs::read(&path).unwrap_or_else(|e| panic!("missing fixture {path:?}: {e}"))
+}
+
+/// Debug builds sample every 7th byte; release sweeps exhaustively.
+fn sweep_stride() -> usize {
+    if cfg!(debug_assertions) {
+        7
+    } else {
+        1
+    }
+}
+
+/// One contained decode attempt: must return (never unwind) and stay
+/// under the allocation cap.  The `Result` itself is unconstrained — a
+/// mutation the format cannot distinguish from a valid stream decoding
+/// successfully is fine; a panic escape or allocation blow-up is not.
+fn attempt_full(arena: &mut DecodeArena, raw: &[u8], threads: usize, label: &str) {
+    let before = ALLOC_BYTES.load(Ordering::Relaxed);
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        decode_network_into(raw, threads, arena).map(|n| n.param_count())
+    }));
+    let spent = ALLOC_BYTES.load(Ordering::Relaxed).wrapping_sub(before);
+    assert!(r.is_ok(), "panic escaped the hardened decode path: {label}");
+    assert!(
+        spent < ALLOC_CAP_BYTES,
+        "{label}: decode allocated {spent} bytes (cap {ALLOC_CAP_BYTES})"
+    );
+}
+
+/// Same contract for the fused v4 apply path.
+fn attempt_apply(arena: &mut DecodeArena, base: &[u8], delta: &[u8], label: &str) {
+    let before = ALLOC_BYTES.load(Ordering::Relaxed);
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        apply_delta_network_into(base, delta, 1, arena).map(|n| n.param_count())
+    }));
+    let spent = ALLOC_BYTES.load(Ordering::Relaxed).wrapping_sub(before);
+    assert!(r.is_ok(), "panic escaped the hardened apply path: {label}");
+    assert!(
+        spent < ALLOC_CAP_BYTES,
+        "{label}: apply allocated {spent} bytes (cap {ALLOC_CAP_BYTES})"
+    );
+}
+
+/// And for the two-pass (`from_bytes`) decode, which exercises
+/// `parse_container` rather than the arena walker.
+fn attempt_two_pass(raw: &[u8], label: &str) {
+    let before = ALLOC_BYTES.load(Ordering::Relaxed);
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        CompressedNetwork::from_bytes_with_limits(raw, 1, limits()).map(|c| c.param_count())
+    }));
+    let spent = ALLOC_BYTES.load(Ordering::Relaxed).wrapping_sub(before);
+    assert!(r.is_ok(), "panic escaped the two-pass decode path: {label}");
+    assert!(
+        spent < ALLOC_CAP_BYTES,
+        "{label}: decode allocated {spent} bytes (cap {ALLOC_CAP_BYTES})"
+    );
+}
+
+#[test]
+fn exhaustive_single_byte_flips_never_escape_typed_errors() {
+    let mut arena = DecodeArena::with_limits(limits());
+    for file in [
+        "golden_v1.dcb",
+        "golden_v2.dcb",
+        "golden_v3.dcb",
+        "golden_v4_base.dcb",
+    ] {
+        let raw = fixture(file);
+        for i in (0..raw.len()).step_by(sweep_stride()) {
+            // whole-byte flip, stale CRC: the outer gate's territory
+            let mut m = raw.clone();
+            m[i] ^= 0xFF;
+            attempt_full(&mut arena, &m, 1, &format!("{file} byte {i}"));
+            // restamped: the mutation penetrates to header/payload checks
+            restamp(&mut m);
+            attempt_full(&mut arena, &m, 1, &format!("{file} byte {i} restamped"));
+            // single-bit flip, restamped: the subtlest corruption class
+            let mut b = raw.clone();
+            flip_bit(&mut b, i, (i % 8) as u32);
+            restamp(&mut b);
+            attempt_full(&mut arena, &b, 1, &format!("{file} bit {i}.{}", i % 8));
+        }
+    }
+}
+
+#[test]
+fn exhaustive_delta_byte_flips_never_escape_typed_errors() {
+    let base = fixture("golden_v4_base.dcb");
+    let delta = fixture("golden_v4.dcb");
+    let mut arena = DecodeArena::with_limits(limits());
+    // The delta fixture is small — always sweep it exhaustively, through
+    // the fused apply path (skip table, residual planes, base linkage).
+    for i in 0..delta.len() {
+        let mut m = delta.clone();
+        m[i] ^= 0xFF;
+        attempt_apply(&mut arena, &base, &m, &format!("golden_v4 byte {i}"));
+        restamp(&mut m);
+        attempt_apply(&mut arena, &base, &m, &format!("golden_v4 byte {i} restamped"));
+        let mut b = delta.clone();
+        flip_bit(&mut b, i, (i % 8) as u32);
+        restamp(&mut b);
+        attempt_apply(&mut arena, &base, &b, &format!("golden_v4 bit {i}.{}", i % 8));
+    }
+    // A corrupted *base* under a pristine delta must also fail typed (the
+    // base-CRC pin), never panic.
+    for i in (0..base.len()).step_by(sweep_stride()) {
+        let mut m = base.clone();
+        m[i] ^= 0xFF;
+        attempt_apply(&mut arena, &m, &delta, &format!("v4_base byte {i}"));
+        restamp(&mut m);
+        attempt_apply(&mut arena, &m, &delta, &format!("v4_base byte {i} restamped"));
+    }
+}
+
+/// Fresh encodes widen the corpus beyond the fixtures' fixed geometry:
+/// multiple versions, slice lengths, magnitudes and bias layouts.
+fn fresh_corpus() -> Vec<Vec<u8>> {
+    let mut rng = Pcg64::new(0xC0FFEE);
+    let mut make = |name: &str, rows: usize, cols: usize, mag: u64| {
+        let ints = (0..rows * cols)
+            .map(|_| {
+                if rng.below(10) < 6 {
+                    0
+                } else {
+                    let m = rng.below(mag) as i32 + 1;
+                    if rng.below(2) == 1 {
+                        -m
+                    } else {
+                        m
+                    }
+                }
+            })
+            .collect();
+        CompressedNetwork {
+            name: name.into(),
+            cfg: CodingConfig::default(),
+            layers: vec![QuantizedLayer {
+                name: "l0".into(),
+                kind: Kind::Dense,
+                shape: vec![cols, rows],
+                rows,
+                cols,
+                ints,
+                delta: 0.01,
+                bias: Some((0..rows).map(|r| r as f32 * 0.25).collect()),
+            }],
+        }
+    };
+    vec![
+        make("f1", 20, 30, 9).to_bytes_with(ContainerPolicy {
+            threads: 1,
+            ..ContainerPolicy::v1()
+        }),
+        make("f2", 16, 40, 200).to_bytes_with(ContainerPolicy::v2(64, 1)),
+        make("f3", 24, 24, 40_000).to_bytes_with(ContainerPolicy::v3(64, 1)),
+        make("f4", 32, 32, 5).to_bytes_with(ContainerPolicy::v3(4096, 1)),
+    ]
+}
+
+#[test]
+fn seeded_fuzzer_mutations_never_escape_typed_errors() {
+    let iters: usize = std::env::var("DCB_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if cfg!(debug_assertions) { 128 } else { 1024 });
+    let mut corpus = vec![
+        fixture("golden_v1.dcb"),
+        fixture("golden_v2.dcb"),
+        fixture("golden_v3.dcb"),
+        fixture("golden_v4_base.dcb"),
+    ];
+    corpus.extend(fresh_corpus());
+    let base = fixture("golden_v4_base.dcb");
+    let delta = fixture("golden_v4.dcb");
+
+    let mut mutator = Mutator::new(0xFA57_F00D);
+    let mut arena = DecodeArena::with_limits(limits());
+    for it in 0..iters {
+        let src = &corpus[it % corpus.len()];
+        let (m, rep) = mutator.mutate(src);
+        // Rotate threads so both the sequential and the grouped
+        // (interleaved) slice schedules face every mutation class.
+        let threads = if it % 3 == 0 { 4 } else { 1 };
+        let label = format!("iter {it} {rep:?}");
+        attempt_full(&mut arena, &m, threads, &label);
+        attempt_two_pass(&m, &label);
+        // Every few iterations, mutate the delta and drive the apply path.
+        if it % 5 == 0 {
+            let (dm, drep) = mutator.mutate(&delta);
+            attempt_apply(&mut arena, &base, &dm, &format!("iter {it} {drep:?}"));
+        }
+    }
+
+    // The arena that absorbed the whole campaign still decodes pristine
+    // streams correctly — refusals must not wedge serving state.
+    let good = fixture("golden_v3.dcb");
+    let expect = CompressedNetwork::from_bytes(&good).unwrap().param_count();
+    let got = decode_network_into(&good, 1, &mut arena)
+        .expect("pristine decode after fuzz campaign")
+        .param_count();
+    assert_eq!(got, expect);
+}

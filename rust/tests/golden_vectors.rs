@@ -112,9 +112,8 @@ fn fixture(name: &str) -> Vec<u8> {
 fn policy(version: u8) -> ContainerPolicy {
     match version {
         VERSION_V1 => ContainerPolicy {
-            version: VERSION_V1,
-            slice_len: 0,
             threads: 1,
+            ..ContainerPolicy::v1()
         },
         VERSION_V2 => ContainerPolicy::v2(SLICE_LEN, 2),
         _ => ContainerPolicy::v3(SLICE_LEN, 2),
@@ -335,9 +334,17 @@ fn golden_v4_rejects_wrong_base_crc() {
     // golden_v3.dcb has different bytes AND different geometry; the CRC
     // gate must fire first (defense order: identity before shape).
     let raw = fixture("golden_v4.dcb");
+    let wrong_base = fixture("golden_v3.dcb");
     let mut arena = DecodeArena::new();
-    let err = apply_delta_network_into(&fixture("golden_v3.dcb"), &raw, 2, &mut arena).unwrap_err();
+    let err = apply_delta_network_into(&wrong_base, &raw, 2, &mut arena).unwrap_err();
     assert!(matches!(err, Error::Crc(_)), "{err}");
+    // the error names both sides: the CRC the delta pinned and what the
+    // offered base bytes actually hash to
+    let msg = err.to_string();
+    let pinned = format!("{:08x}", delta_header(&raw).unwrap().base_crc32);
+    let actual = format!("{:08x}", crc32(&wrong_base));
+    assert!(msg.contains(&pinned), "missing pinned crc {pinned}: {msg}");
+    assert!(msg.contains(&actual), "missing actual crc {actual}: {msg}");
 }
 
 #[test]
@@ -356,6 +363,13 @@ fn golden_v4_rejects_tampered_shape_key() {
     let mut arena = DecodeArena::new();
     let err = apply_delta_network_into(&base_raw, &raw, 2, &mut arena).unwrap_err();
     assert!(matches!(err, Error::ShapeMismatch(_)), "{err}");
+    // the error names both keys: the (tampered) one the delta expects and
+    // the one the offered base actually has
+    let msg = err.to_string();
+    let expected_key = format!("{:016x}", delta_header(&raw).unwrap().base_shape_key);
+    let actual_key = format!("{:016x}", probe(&base_raw).unwrap().shape_key());
+    assert!(msg.contains(&expected_key), "missing tampered key {expected_key}: {msg}");
+    assert!(msg.contains(&actual_key), "missing base key {actual_key}: {msg}");
 }
 
 #[test]

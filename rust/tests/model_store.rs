@@ -173,3 +173,74 @@ fn panicking_request_poisons_nothing() {
     assert_eq!(store.len(), 1);
     assert_eq!(store.arena_keys_by_recency(), vec![m.shape_key]);
 }
+
+#[test]
+fn failing_container_quarantines_while_healthy_models_keep_serving() {
+    use deepcabac::api::{DecodeLimits, ModelHealth};
+
+    // A symbol budget between the two models' parameter counts makes the
+    // big container fail *deterministically* at decode time: registration
+    // validates under the default (generous) limits, so the bad model is
+    // resident yet refused on every serve attempt.
+    let small = container("small", 6, 6, 21); // 36 symbols
+    let big = container("big", 40, 40, 22); // 1600 symbols
+    let store = ModelStore::new(StoreConfig {
+        limits: DecodeLimits {
+            max_symbols: 200,
+            ..DecodeLimits::default()
+        },
+        max_failures: 2,
+        ..StoreConfig::default()
+    });
+    store.register("small", small).unwrap();
+    store.register("big", big).unwrap();
+    assert_eq!(store.health("big"), Some(ModelHealth::Healthy));
+
+    // Two over-budget decodes trip the max_failures=2 threshold...
+    for i in 0..2 {
+        let err = store.decode("big", |_| ()).unwrap_err();
+        assert!(matches!(err, Error::Limit(_)), "attempt {i}: {err}");
+        // ...with healthy traffic interleaved and unaffected throughout.
+        store.decode("small", |_| ()).unwrap();
+    }
+    assert_eq!(store.health("big"), Some(ModelHealth::Quarantined));
+
+    // Quarantined requests are refused up front (no decode work), and are
+    // accounted separately from decode failures.
+    let err = store.decode("big", |_| ()).unwrap_err();
+    assert!(matches!(err, Error::Quarantined(_)), "{err}");
+    store.decode("small", |_| ()).unwrap();
+
+    let st = store.stats();
+    assert_eq!(st.decode_errors, 2);
+    assert_eq!(st.quarantine_events, 1);
+    assert_eq!(st.quarantine_rejections, 1);
+
+    // Reinstating clears the refusal, but the container is still over
+    // budget — the streak restarts at one, below the threshold.
+    assert!(store.reinstate("big"));
+    assert!(matches!(store.decode("big", |_| ()), Err(Error::Limit(_))));
+    assert_eq!(store.health("big"), Some(ModelHealth::Healthy));
+}
+
+#[test]
+fn expired_deadline_is_typed_counted_and_nonsticky() {
+    let store = ModelStore::new(StoreConfig {
+        decode_deadline: Some(std::time::Duration::ZERO),
+        max_failures: 0, // quarantine disabled: expiries must not quarantine
+        ..StoreConfig::default()
+    });
+    store.register("m", container("m", 12, 12, 31)).unwrap();
+    for _ in 0..3 {
+        let err = store.decode("m", |_| ()).unwrap_err();
+        assert!(matches!(err, Error::Deadline(_)), "{err}");
+    }
+    let st = store.stats();
+    assert_eq!(st.deadline_expiries, 3);
+    assert_eq!(st.decode_errors, 3);
+    assert_eq!(st.quarantine_events, 0, "max_failures=0 disables quarantine");
+    assert_eq!(
+        store.health("m"),
+        Some(deepcabac::api::ModelHealth::Healthy)
+    );
+}

@@ -93,6 +93,10 @@ fn warm_store_requests_are_allocation_free_at_16_clients() {
         // Inline per-request decode: the measured window exercises the
         // cross-request scaling configuration the serve bench gates on.
         decode_threads: 1,
+        // Default limits/deadline/quarantine: the hardened bookkeeping
+        // (Copy fields + atomic counters) must itself stay allocation-free
+        // on the warm path — that's part of what this pin now covers.
+        ..StoreConfig::default()
     });
     store.register("probe", sample_container()).unwrap();
 
