@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Ablations of DeepCABAC's design choices (DESIGN.md calls these out):
 //!
 //!  1. AbsGr flag budget n (paper App. A-C fixes n = 10)

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! CI perf-regression gate over the `BENCH_dcb2.json` artifacts.
 //!
 //! Compares a freshly produced `BENCH_dcb2.json` (run `cargo bench --bench

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! DCB container throughput bench: monolithic v1 vs sliced v2 (legacy
 //! bins) vs sliced v3 (bypass fast path) on a multi-million-parameter
 //! network — decode fan-out at 1/2/4 threads, the size overhead each
@@ -13,7 +14,10 @@
 //! plus fused base+residual apply throughput), and the hardened-decode leg
 //! (budgets + deadline armed vs panic-guard only —
 //! `decode_hardened_vs_prev` is floored so the typed-error hardening stays
-//! effectively free).
+//! effectively free), and the encode-side hardening legs (`ingest_mb_s`
+//! budgeted NWF parse throughput; `encode_hardened_vs_prev` floors the
+//! policy wrapper — candidate validation + finiteness scan — against the
+//! bare `compress_dc` entry point the same way).
 //!
 //! Emits `BENCH_dcb2.json` (workspace root) for the perf trajectory; the
 //! CI bench-gate job runs it with `--smoke` (smaller network, fewer
@@ -28,13 +32,13 @@
 use deepcabac::benchutil::bench;
 use deepcabac::cabac::{binarize, CodingConfig, Decoder, SigHistory, WeightContexts};
 use deepcabac::coordinator::{
-    self, run_client_harness, AdmissionPolicy, Method, ModelStore, SearchConfig, SearchStrategy,
-    StoreConfig,
+    self, run_client_harness, AdmissionPolicy, Candidate, Method, ModelStore, SearchConfig,
+    SearchStrategy, StoreConfig,
 };
 use deepcabac::model::{
-    apply_delta_network_into, decode_network_into, decode_network_into_with, CompressedNetwork,
-    ContainerPolicy, DecodeArena, DecodeLimits, Kind, Layer, Network, QuantizedLayer,
-    DEFAULT_SLICE_LEN,
+    apply_delta_network_into, decode_network_into, decode_network_into_with, parse_nwf, write_nwf,
+    CompressedNetwork, ContainerPolicy, DecodeArena, DecodeLimits, IngestLimits, Kind, Layer,
+    Network, QuantizedLayer, DEFAULT_SLICE_LEN,
 };
 use deepcabac::quant::rd::{rd_quantize_layer_sliced_parallel, required_half, RdParams};
 use deepcabac::util::Pcg64;
@@ -506,6 +510,65 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         out_est.est_real_max_rel.unwrap_or(0.0) * 100.0
     );
 
+    // --- hardened encode: policy wrapper armed vs the bare entry point ---
+    // Prev-style = the pre-hardening entry point `compress_dc` (no
+    // candidate validation, no finiteness scan).  Hardened =
+    // `compress_dc_policy` under the default Reject policy on the same
+    // clean network — the scan-only fast path every well-formed checkpoint
+    // takes (no clone, no rewrite).  Same candidate, same single thread:
+    // the same-run ratio isolates exactly what arming the encode-side
+    // hardening costs, and the gate floors it at 0.90
+    // (`min_encode_hardened_vs_prev`: <= ~11% overhead).
+    let enc_cand = Candidate {
+        method: Method::DcV2,
+        s: 0.0,
+        delta: 0.004,
+        lambda: 2.0 * 0.004 * 0.004,
+        clusters: 0,
+    };
+    let enc_cfg = SearchConfig {
+        threads: 1,
+        ..SearchConfig::default()
+    };
+    let (enc_prev_t1, _) = bench(warmup, iters, || {
+        coordinator::pipeline::compress_dc(&fnet, &enc_cand, &enc_cfg)
+    });
+    let (enc_hard_t1, hard_out) = bench(warmup, iters, || {
+        coordinator::pipeline::compress_dc_policy(&fnet, &enc_cand, &enc_cfg).expect("clean net")
+    });
+    assert!(hard_out.1.is_clean(), "bench network must take the fast path");
+    let encode_hardened_vs_prev = enc_prev_t1.median_s / enc_hard_t1.median_s;
+    let encode_hardened_t1_msym_s = params as f64 / enc_hard_t1.median_s / 1e6;
+    println!(
+        "hardened-enc: prev-style@1t {:>6.1} ms | armed@1t {:>6.1} ms \
+         ({encode_hardened_t1_msym_s:.2} Msym/s, {encode_hardened_vs_prev:.2}x vs prev)",
+        enc_prev_t1.median_s * 1e3,
+        enc_hard_t1.median_s * 1e3
+    );
+
+    // --- budgeted NWF ingest throughput ---
+    // The same float network serialized once to the `.nwf` wire format,
+    // then parsed from memory under the default `IngestLimits` budget —
+    // header-walk budget checks, CRC validation, and plane reads all
+    // included.  This is the MB/s an external checkpoint pays at the door
+    // (`ingest` CLI verb / `read_nwf`), tracked as an absolute trajectory
+    // number.
+    let nwf_path =
+        std::env::temp_dir().join(format!("dcb2_ingest_{}.nwf", std::process::id()));
+    write_nwf(&nwf_path, &fnet)?;
+    let nwf_raw = std::fs::read(&nwf_path)?;
+    std::fs::remove_file(&nwf_path).ok();
+    let (ingest_t, ingested) = bench(warmup, iters, || {
+        parse_nwf(&nwf_raw, IngestLimits::default()).expect("bench nwf is well-formed")
+    });
+    assert_eq!(ingested.param_count(), fnet.param_count(), "ingest roundtrip");
+    let ingest_mb_s = nwf_raw.len() as f64 / ingest_t.median_s / 1e6;
+    println!(
+        "ingest: {} B in {:>6.2} ms ({ingest_mb_s:.1} MB/s budgeted parse)",
+        nwf_raw.len(),
+        ingest_t.median_s * 1e3
+    );
+
     // --- ModelStore serving: concurrent clients over shared warm arenas ---
     // The v2 and v3 containers of the same network registered side by side
     // (same shape key, so one warm-arena pool serves both); per-request
@@ -708,6 +771,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          \"search_t4_exact_s\": {:.6},\n  \"search_t4_exact_msym_s\": {:.3},\n  \
          \"search_t4_est_s\": {:.6},\n  \"search_t4_est_msym_s\": {:.3},\n  \
          \"search_speedup_est_vs_exact\": {:.4},\n  \
+         \"ingest_bytes\": {},\n  \"ingest_s\": {:.6},\n  \"ingest_mb_s\": {:.2},\n  \
+         \"encode_hardened_prev_t1_s\": {:.6},\n  \
+         \"encode_hardened_t1_s\": {:.6},\n  \
+         \"encode_hardened_t1_msym_s\": {:.3},\n  \
+         \"encode_hardened_vs_prev\": {:.4},\n  \
          \"decode_hardened_prev_t1_s\": {:.6},\n  \
          \"decode_hardened_t1_s\": {:.6},\n  \
          \"decode_hardened_t1_msym_s\": {:.3},\n  \
@@ -752,6 +820,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         s_est.median_s,
         search_syms as f64 / s_est.median_s / 1e6,
         search_speedup,
+        nwf_raw.len(),
+        ingest_t.median_s,
+        ingest_mb_s,
+        enc_prev_t1.median_s,
+        enc_hard_t1.median_s,
+        encode_hardened_t1_msym_s,
+        encode_hardened_vs_prev,
         hardened_prev_t1.median_s,
         hardened_t1.median_s,
         decode_hardened_t1_msym_s,

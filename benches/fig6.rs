@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Fig. 6 regeneration: the weight distribution of the last layer of the
 //! (Small)VGG model after uniform quantization, against CABAC's learned
 //! probability estimate — showing the context-adaptive region around 0 and

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Fig. 8 regeneration: rate–accuracy curves for the weighted Lloyd
 //! algorithm on a pretrained LeNet5 under different importance measures —
 //! unweighted (F=1), variance-based (empirical Fisher, DC-v1's measure),

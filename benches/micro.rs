@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Microbenchmarks for the hot paths (the §Perf harness):
 //!  * CABAC encode / decode throughput (MB/s of payload, Msym/s)
 //!  * RDOQ assignment throughput (Mweights/s), table vs exact refresh

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Table I regeneration: compression ratio (percent of original size) at no
 //! accuracy loss (±0.5 pp) for DC-v1, DC-v2, weighted Lloyd and Uniform,
 //! across the model zoo — dense and sparse variants.

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Table II regeneration: average bits per parameter at *fixed* step-sizes
 //! on SmallVGG (dense + sparse) — isolating the assignment map Q's effect
 //! from the step-size choice.

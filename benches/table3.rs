@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Table III regeneration: the universal lossless coder shoot-out.
 //!
 //! Quantize SmallVGG (dense + sparse) three ways — Uniform (NN), weighted

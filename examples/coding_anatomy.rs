@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Coding anatomy: the paper's worked examples, executed.
 //!
 //!  * Fig. 7 — the DeepCABAC binarization of 1, -4 and 7 at n = 1.

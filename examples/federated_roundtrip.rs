@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Federated-learning round-trip (the paper's §I motivation and stated
 //! future work): clients send weight *updates* over a constrained uplink;
 //! DeepCABAC compresses each round's update as a **DCB4 delta container**.
@@ -65,7 +66,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Round 0: one full container goes out and becomes the shared base.
     let delta_q = 0.002f32;
     let comp = Compressor::new().delta(delta_q).lambda(0.5);
-    let base_bytes = comp.compress_to_bytes(&server);
+    let base_bytes = comp.compress_to_bytes(&server)?;
     let store = ModelStore::default();
     store.register("base", base_bytes.clone())?;
     // The fleet's reference weights are the *decoded* base — client and
@@ -102,7 +103,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
         // --- uplink: DCB4 delta vs what a full re-push would cost ---
         let delta_bytes = comp.diff_to_bytes(&base_bytes, &client)?;
-        let full_bytes = comp.compress_to_bytes(&client);
+        let full_bytes = comp.compress_to_bytes(&client)?;
         total_delta += delta_bytes.len();
         total_full += full_bytes.len();
 

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! End-to-end driver (DESIGN.md experiment P1): the complete DeepCABAC
 //! system on a real trained model — grid-search over β = (Δ, λ) / (S, λ)
 //! with PJRT accuracy evaluation in the loop, reporting the paper's

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Rate–accuracy Pareto sweep: quantify the accuracy-vs-size plane of one
 //! model under DC-v2 across the full (Δ, λ) product, and print the Pareto
 //! front as CSV (plus write artifacts/bench_pareto.csv).

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Quickstart: compress a trained network with DeepCABAC, decode it,
 //! serve it from a `ModelStore`, and check the accuracy cost — the
 //! 60-second tour of the public API, using only `deepcabac::api`.
@@ -31,7 +32,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     //    CABAC into a self-contained .dcb bitstream.  Δ is the step-size,
     //    λ the rate pressure; see Compressor docs for the full knob set.
     let comp = Compressor::new().delta(0.02).lambda(1.0);
-    let bytes = comp.compress_to_bytes(&net);
+    let bytes = comp.compress_to_bytes(&net)?;
     println!(
         "compressed: {} -> {} bytes ({:.2}% of original, x{:.1})",
         net.f32_size_bytes(),

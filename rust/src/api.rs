@@ -33,7 +33,7 @@
 //!         bias: None,
 //!     }],
 //! };
-//! let bytes = Compressor::new().delta(0.25).compress_to_bytes(&net);
+//! let bytes = Compressor::new().delta(0.25).compress_to_bytes(&net)?;
 //! let mut dec = Decoder::new();
 //! let back = dec.decode(&bytes)?;
 //! assert_eq!(back.name, "demo");
@@ -62,7 +62,7 @@
 //! #     }],
 //! # };
 //! let store = ModelStore::default();
-//! store.register("demo", Compressor::new().compress_to_bytes(&net))?;
+//! store.register("demo", Compressor::new().compress_to_bytes(&net)?)?;
 //! // Concurrent-safe: decode through a cached warm arena, borrow the
 //! // reconstructed network inside the closure.
 //! let nonzero = store.decode("demo", |n| {
@@ -73,10 +73,10 @@
 //! # Ok::<(), deepcabac::Error>(())
 //! ```
 
-use crate::coordinator::pipeline::compress_dc;
+use crate::coordinator::pipeline::compress_dc_policy;
 use crate::coordinator::{diff_network, Candidate, Method, SearchConfig};
 use crate::model::bitstream::{apply_delta_network_into, decode_network_into, DecodeArena};
-use crate::model::{CompressedNetwork, ContainerPolicy, Network};
+use crate::model::{CompressedNetwork, ContainerPolicy, Network, NonFinitePolicy, SanitizeReport};
 use crate::util::parallel::default_threads;
 
 pub use crate::coordinator::store::{
@@ -87,7 +87,7 @@ pub use crate::model::{CompressedDelta, DecodeLimits, DeltaHeader, DeltaLayer};
 // Companion pieces a complete compress→serve→score program needs, surfaced
 // here so such programs (e.g. `examples/quickstart.rs`) import only `api`.
 pub use crate::benchutil::{artifacts_dir, artifacts_ready};
-pub use crate::model::read_nwf;
+pub use crate::model::{read_nwf, read_nwf_with_limits, IngestLimits};
 pub use crate::runtime::{EvalService, EvalServiceHost};
 pub use crate::util::{Error, Result};
 
@@ -160,17 +160,37 @@ impl Compressor {
         self
     }
 
-    /// Quantize + entropy-code `net` (infallible — compression has no
-    /// error paths; serialization happens in
-    /// [`Self::compress_to_bytes`]).
-    pub fn compress(&self, net: &Network) -> CompressedNetwork {
-        compress_dc(net, &self.cand, &self.cfg)
+    /// What to do with NaN/±Inf weights in the input network:
+    /// [`NonFinitePolicy::Reject`] (default — typed [`Error::NonFinite`]),
+    /// `Sanitize` (rewrite to 0), or `Clamp` (±Inf to the plane's max
+    /// finite magnitude, NaN to 0).
+    pub fn nonfinite(mut self, policy: NonFinitePolicy) -> Self {
+        self.cfg.nonfinite = policy;
+        self
+    }
+
+    /// Quantize + entropy-code `net`.  Fails typed — never panics — on
+    /// non-finite weights under the default [`NonFinitePolicy::Reject`],
+    /// on degenerate hyper-parameters (Δ ≤ 0, non-finite λ), and on
+    /// malformed layer shapes.  Serialization happens in
+    /// [`Self::compress_to_bytes`].
+    pub fn compress(&self, net: &Network) -> Result<CompressedNetwork> {
+        Ok(self.compress_with_report(net)?.0)
+    }
+
+    /// [`Self::compress`] that also returns the per-layer non-finite
+    /// sanitization counts (empty when the input was already clean).
+    pub fn compress_with_report(
+        &self,
+        net: &Network,
+    ) -> Result<(CompressedNetwork, SanitizeReport)> {
+        compress_dc_policy(net, &self.cand, &self.cfg)
     }
 
     /// Quantize, entropy-code and serialize `net` into a self-contained
     /// `.dcb` container under the configured policy.
-    pub fn compress_to_bytes(&self, net: &Network) -> Vec<u8> {
-        self.compress(net).to_bytes_with(self.cfg.container)
+    pub fn compress_to_bytes(&self, net: &Network) -> Result<Vec<u8>> {
+        Ok(self.compress(net)?.to_bytes_with(self.cfg.container))
     }
 
     /// Diff `updated` against a serialized base container into a DCB4
@@ -280,7 +300,7 @@ mod tests {
     fn facade_roundtrip_matches_core_decode() {
         let net = demo_net("api", 6, 5);
         let comp = Compressor::new().delta(0.05).threads(2);
-        let bytes = comp.compress_to_bytes(&net);
+        let bytes = comp.compress_to_bytes(&net).unwrap();
         let mut dec = Decoder::new().threads(1);
         let back = dec.decode(&bytes).unwrap();
         assert_eq!(back.name, "api");
@@ -294,7 +314,7 @@ mod tests {
     fn facade_container_policy_controls_version() {
         let net = demo_net("api", 4, 4);
         let v1 = ContainerPolicy::builder().v1().build();
-        let bytes = Compressor::new().container(v1).compress_to_bytes(&net);
+        let bytes = Compressor::new().container(v1).compress_to_bytes(&net).unwrap();
         assert_eq!(probe(&bytes).unwrap().version, crate::model::VERSION_V1);
         // Decoder reads every version through the same arena.
         let mut dec = Decoder::new();
@@ -306,7 +326,7 @@ mod tests {
     fn facade_diff_patch_roundtrip() {
         let net = demo_net("upd", 8, 6);
         let comp = Compressor::new().delta(0.05).threads(2);
-        let base = comp.compress_to_bytes(&net);
+        let base = comp.compress_to_bytes(&net).unwrap();
         let mut dec = Decoder::new().threads(1);
         let mut updated = dec.decode(&base).unwrap().clone();
         updated.layers[0].weights[3] += 0.1;
@@ -332,11 +352,28 @@ mod tests {
     }
 
     #[test]
+    fn facade_rejects_nonfinite_by_default() {
+        let mut net = demo_net("bad", 4, 4);
+        net.layers[0].weights[2] = f32::NAN;
+        let comp = Compressor::new();
+        assert!(matches!(comp.compress(&net), Err(Error::NonFinite(_))));
+        // opt-in sanitize: compresses, reports the rewrite, decodes to 0
+        let (c, report) = comp
+            .nonfinite(NonFinitePolicy::Sanitize)
+            .compress_with_report(&net)
+            .unwrap();
+        assert_eq!(report.total(), 1);
+        let bytes = c.to_bytes_with(ContainerPolicy::default());
+        let mut dec = Decoder::new();
+        assert_eq!(dec.decode(&bytes).unwrap().layers[0].weights[2], 0.0);
+    }
+
+    #[test]
     fn facade_store_end_to_end() {
         let net = demo_net("served", 5, 4);
         let store = ModelStore::default();
         let info = store
-            .register("served", Compressor::new().compress_to_bytes(&net))
+            .register("served", Compressor::new().compress_to_bytes(&net).unwrap())
             .unwrap();
         assert_eq!(info.param_count, 20);
         let n = store.decode("served", |n| n.param_count()).unwrap();

@@ -609,6 +609,86 @@ pub fn bench_gate(baseline: &str, current: &str) -> GateReport {
             }
         }
     }
+    // 11. **Hardened encode + budgeted ingest** (added with the
+    //     ingest→encode hardening).  Three sub-checks, each armed by its
+    //     baseline key:
+    //     * same-run floor `encode_hardened_vs_prev >=
+    //       min_encode_hardened_vs_prev` — `compress_dc_policy` under the
+    //       default Reject policy (candidate validation + finiteness scan,
+    //       the fast path every clean checkpoint takes) over the bare
+    //       pre-hardening `compress_dc` on the same network.  A floor of
+    //       0.90 bounds the encode-side hardening at ~11% overhead.
+    //       Machine-independent, so it is enforced even on bootstrap
+    //       baselines.
+    //     * absolute `encode_hardened_t1_msym_s` regression (hardened
+    //       encode throughput; same budget as the other absolute checks,
+    //       skipped while the baseline is bootstrap or carries a
+    //       non-positive placeholder).
+    //     * absolute `ingest_mb_s` regression (budgeted `.nwf` parse
+    //       throughput under the default `IngestLimits`; same
+    //       armed-but-skipped discipline).
+    if let Some(b) = json_num(baseline, "encode_hardened_t1_msym_s") {
+        match json_num(current, "encode_hardened_t1_msym_s") {
+            Some(c) if bootstrap || b <= 0.0 => lines.push(format!(
+                "SKIP hardened-encode absolute check: baseline not armed (current {c:.3} Msym/s)"
+            )),
+            Some(c) => {
+                let regress_pct = 100.0 * (b - c) / b;
+                let ok = regress_pct <= max_regress_pct;
+                pass &= ok;
+                lines.push(format!(
+                    "{} hardened encode@1t {c:.3} Msym/s vs baseline {b:.3} ({regress_pct:+.1}% \
+                     regression, limit {max_regress_pct}%)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no encode_hardened_t1_msym_s field".into(),
+                );
+            }
+        }
+    }
+    if let Some(b) = json_num(baseline, "ingest_mb_s") {
+        match json_num(current, "ingest_mb_s") {
+            Some(c) if bootstrap || b <= 0.0 => lines.push(format!(
+                "SKIP ingest absolute check: baseline not armed (current {c:.2} MB/s)"
+            )),
+            Some(c) => {
+                let regress_pct = 100.0 * (b - c) / b;
+                let ok = regress_pct <= max_regress_pct;
+                pass &= ok;
+                lines.push(format!(
+                    "{} budgeted ingest {c:.2} MB/s vs baseline {b:.2} ({regress_pct:+.1}% \
+                     regression, limit {max_regress_pct}%)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push("FAIL current BENCH_dcb2.json has no ingest_mb_s field".into());
+            }
+        }
+    }
+    if let Some(floor) = json_num(baseline, "min_encode_hardened_vs_prev") {
+        match json_num(current, "encode_hardened_vs_prev") {
+            Some(r) => {
+                let ok = r >= floor;
+                pass &= ok;
+                lines.push(format!(
+                    "{} same-run hardened/prev encode ratio @1t = {r:.2}x (floor {floor}x)",
+                    if ok { "PASS" } else { "FAIL" }
+                ));
+            }
+            None => {
+                pass = false;
+                lines.push(
+                    "FAIL current BENCH_dcb2.json has no encode_hardened_vs_prev field".into(),
+                );
+            }
+        }
+    }
     GateReport { pass, lines }
 }
 
@@ -1135,5 +1215,69 @@ mod tests {
         assert!(held.pass, "{:?}", held.lines);
         let regressed = bench_gate(real, &bench_json_hardened(0.5, 2.2, 6.0, 0.99)); // -40%
         assert!(!regressed.pass, "{:?}", regressed.lines);
+    }
+
+    fn bench_json_encode_hardened(
+        msym: f64,
+        speedup: f64,
+        e_msym: f64,
+        e_ratio: f64,
+        ingest: f64,
+    ) -> String {
+        format!(
+            "{{\"bench\": \"dcb2\", \"v3_t1_msym_s\": {msym}, \
+             \"decode_speedup_v3_t1_vs_seed_t1\": {speedup}, \
+             \"encode_hardened_t1_msym_s\": {e_msym}, \
+             \"encode_hardened_vs_prev\": {e_ratio}, \
+             \"ingest_mb_s\": {ingest}}}"
+        )
+    }
+
+    #[test]
+    fn gate_encode_hardened_checks_armed_by_baseline_keys() {
+        // Baseline without the encode-hardening keys: current values ignored.
+        let old_baseline = bench_json(10.0, 2.4);
+        let r = bench_gate(&old_baseline, &bench_json_encode_hardened(10.0, 2.4, 1.0, 0.5, 1.0));
+        assert!(r.pass, "{:?}", r.lines);
+
+        // Armed floor: machine-independent, enforced even on bootstrap
+        // baselines; the 0.0 absolute placeholders are armed-but-skipped.
+        let armed = "{\"bootstrap\": 1, \"min_self_speedup\": 2.0, \
+             \"encode_hardened_t1_msym_s\": 0.0, \
+             \"ingest_mb_s\": 0.0, \
+             \"min_encode_hardened_vs_prev\": 0.9}";
+        let good = bench_gate(armed, &bench_json_encode_hardened(0.5, 2.2, 4.0, 0.99, 300.0));
+        assert!(good.pass, "{:?}", good.lines);
+        assert!(
+            good.lines.iter().any(|l| l.contains("SKIP hardened-encode")),
+            "{:?}",
+            good.lines
+        );
+        assert!(
+            good.lines.iter().any(|l| l.contains("SKIP ingest")),
+            "{:?}",
+            good.lines
+        );
+        // Hardening got expensive: ratio under the floor must fail.
+        let slowed = bench_gate(armed, &bench_json_encode_hardened(0.5, 2.2, 4.0, 0.7, 300.0));
+        assert!(!slowed.pass, "{:?}", slowed.lines);
+        // Armed baseline + current missing the metrics entirely: fail loudly.
+        let missing = bench_gate(armed, &bench_json(0.5, 2.2));
+        assert!(!missing.pass, "{:?}", missing.lines);
+
+        // Real (non-bootstrap) baseline with committed throughputs:
+        // regression budgets enforced on both absolutes.
+        let real = "{\"min_self_speedup\": 2.0, \"v3_t1_msym_s\": 0.5, \
+             \"encode_hardened_t1_msym_s\": 4.0, \
+             \"ingest_mb_s\": 400.0, \
+             \"min_encode_hardened_vs_prev\": 0.9}";
+        let held = bench_gate(real, &bench_json_encode_hardened(0.5, 2.2, 3.8, 0.99, 380.0));
+        assert!(held.pass, "{:?}", held.lines);
+        let enc_regressed =
+            bench_gate(real, &bench_json_encode_hardened(0.5, 2.2, 2.0, 0.99, 380.0)); // -50%
+        assert!(!enc_regressed.pass, "{:?}", enc_regressed.lines);
+        let ingest_regressed =
+            bench_gate(real, &bench_json_encode_hardened(0.5, 2.2, 3.8, 0.99, 150.0)); // -62%
+        assert!(!ingest_regressed.pass, "{:?}", ingest_regressed.lines);
     }
 }

@@ -347,6 +347,7 @@ impl<'a> Decoder<'a> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::util::Pcg64;

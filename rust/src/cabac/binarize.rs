@@ -289,6 +289,7 @@ pub fn binarize_to_string(v: i32, n: u32) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::cabac::context::CodingConfig;

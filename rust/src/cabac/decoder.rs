@@ -165,6 +165,7 @@ pub fn decode_layer_legacy(bytes: &[u8], count: usize, cfg: CodingConfig) -> Res
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::cabac::encoder::{encode_layer, encode_layer_legacy};

@@ -106,6 +106,7 @@ pub fn roundtrip_verify(values: &[i32], cfg: CodingConfig) -> bool {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::util::Pcg64;

@@ -127,8 +127,16 @@ pub const SLICE_CODER_TAIL_BYTES: f64 = 4.5;
 /// `payload_estimate_tracks_real_sliced_encoding` test pins it against the
 /// real encoder.
 pub fn estimated_sliced_payload_bytes(per_slice_bits: &[f64]) -> usize {
+    // Degeneracy guard: a NaN/Inf slice rate (possible only if a caller
+    // feeds an unsanitized accumulation) must not collapse to 0 bytes via
+    // the float->usize cast — saturate so a poisoned estimate prices a
+    // candidate *out*, never in.
     let body: f64 = per_slice_bits.iter().map(|b| b / 8.0 + SLICE_CODER_TAIL_BYTES).sum();
-    (8.0 + 4.0 * per_slice_bits.len() as f64 + body).round() as usize
+    let total = 8.0 + 4.0 * per_slice_bits.len() as f64 + body;
+    if !total.is_finite() {
+        return usize::MAX;
+    }
+    total.max(0.0).round() as usize
 }
 
 /// Encode-side `Encoder` capacity hint for one slice, in bytes: the
@@ -147,7 +155,14 @@ pub fn slice_capacity_hint(tables: &[CostTable; 3], values: &[i32]) -> usize {
         bits += tables[hist.ctx_index()].bits(v) as f64;
         hist.push(v != 0);
     }
-    (bits / 8.0 + SLICE_CODER_TAIL_BYTES).ceil() as usize + 2
+    let cap = bits / 8.0 + SLICE_CODER_TAIL_BYTES;
+    if !cap.is_finite() {
+        // Poisoned tables (see estimated_sliced_payload_bytes): fall back
+        // to a worst-case-ish reservation rather than casting NaN to 0 and
+        // sending the encoder down a realloc ladder.
+        return values.len().saturating_mul(8).saturating_add(64);
+    }
+    cap.max(0.0).ceil() as usize + 2
 }
 
 /// Build all three sig-context cost tables in one pass (perf-critical: the
@@ -232,6 +247,7 @@ pub fn build_cost_tables_into(ctxs: &WeightContexts, half: i32, out: &mut [CostT
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::cabac::arith::Encoder;
@@ -539,6 +555,19 @@ mod tests {
                 "nonzero={nonzero}: hint {hint} vs real {real}"
             );
         }
+    }
+
+    #[test]
+    fn degenerate_rate_inputs_saturate_not_zero() {
+        // NaN/Inf slice rates must never make a candidate look free.
+        assert_eq!(estimated_sliced_payload_bytes(&[f64::NAN]), usize::MAX);
+        assert_eq!(estimated_sliced_payload_bytes(&[f64::INFINITY]), usize::MAX);
+        assert_eq!(estimated_sliced_payload_bytes(&[-1e18]), 0); // negative clamps, no wrap
+        // Poisoned cost tables still yield a usable (non-zero) capacity hint.
+        let mut tables = build_cost_tables(&fresh(), 4);
+        tables[0].cost[0] = f32::NAN;
+        let hint = slice_capacity_hint(&tables, &[-4, 0, 4]);
+        assert!(hint >= 3 * 8);
     }
 
     #[test]

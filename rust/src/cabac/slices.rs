@@ -87,6 +87,15 @@ pub fn assemble_sliced(slice_len: usize, payloads: &[Vec<u8>]) -> Vec<u8> {
     out
 }
 
+/// `u32` from an exactly-4-byte window.  Every caller slices the window
+/// out of a length-checked region first, so the `try_into` cannot fail —
+/// the one waiver of the codec-core unwrap ban (clippy.toml) in the
+/// slice-walking code.
+#[allow(clippy::disallowed_methods)]
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b.try_into().unwrap())
+}
+
 /// Parse a sliced stream into `(slice_len, per-slice (payload, n_symbols))`
 /// without decoding anything — the DCB2 container uses this to flatten
 /// slices across layers before fanning out.  Rejects truncation, an
@@ -98,7 +107,7 @@ pub fn parse_sliced(raw: &[u8], count: usize) -> Result<(usize, Vec<(&[u8], usiz
     // slices) so a corrupt header cannot force a huge reservation —
     // walk_sliced re-validates the count before anything is pushed.
     let claimed = if raw.len() >= 8 {
-        u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize
+        le_u32(&raw[4..8]) as usize
     } else {
         0
     };
@@ -124,8 +133,8 @@ pub(crate) fn walk_sliced(
     if raw.len() < 8 {
         return Err(Error::Wire("sliced stream truncated".into()));
     }
-    let slice_len = u32::from_le_bytes(raw[0..4].try_into().unwrap()) as usize;
-    let n_slices = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
+    let slice_len = le_u32(&raw[0..4]) as usize;
+    let n_slices = le_u32(&raw[4..8]) as usize;
     if slice_len == 0 || n_slices != count.div_ceil(slice_len) {
         return Err(Error::ShapeMismatch(format!(
             "sliced stream header inconsistent: {count} symbols at slice_len {slice_len} \
@@ -138,7 +147,7 @@ pub(crate) fn walk_sliced(
         if pos + 4 > raw.len() {
             return Err(Error::Wire("sliced stream truncated".into()));
         }
-        let len = u32::from_le_bytes(raw[pos..pos + 4].try_into().unwrap()) as usize;
+        let len = le_u32(&raw[pos..pos + 4]) as usize;
         pos += 4;
         if pos + len > raw.len() {
             return Err(Error::Wire("sliced stream truncated".into()));
@@ -324,6 +333,9 @@ where
                 if pos[i] >= lane.out.len() {
                     continue;
                 }
+                // Installed as `Some` for every lane in the setup loop
+                // above — the `Option` is only an array-init artifact.
+                #[allow(clippy::disallowed_methods)]
                 let d = decs[i].as_mut().unwrap();
                 let sym = binarize::decode_int_impl::<LEGACY>(d, &mut ctxs[i], &mut hists[i])
                     .ok_or_else(|| {
@@ -552,6 +564,7 @@ pub fn slicing_overhead(values: &[i32], cfg: CodingConfig, slice_len: usize) -> 
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::util::Pcg64;

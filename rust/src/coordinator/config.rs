@@ -1,7 +1,7 @@
 //! Coordinator configuration: methods, hyper-parameter grids, budgets.
 
 use crate::cabac::CodingConfig;
-use crate::model::{ContainerPolicy, Importance};
+use crate::model::{ContainerPolicy, Importance, NonFinitePolicy};
 
 /// Which compression method a run uses (the four Table I columns).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -98,6 +98,10 @@ pub struct SearchConfig {
     /// search re-quantizes survivors instead (assignments are deterministic,
     /// so both routes yield byte-identical streams).
     pub memo_budget_bytes: usize,
+    /// What to do with NaN/±Inf weights in ingested networks before
+    /// quantization (`Reject` by default — the quantizer stack assumes a
+    /// sanitized network; see `coordinator::pipeline::compress_dc_policy`).
+    pub nonfinite: NonFinitePolicy,
 }
 
 impl Default for SearchConfig {
@@ -118,6 +122,7 @@ impl Default for SearchConfig {
             max_half: 2048,
             strategy: SearchStrategy::default(),
             memo_budget_bytes: 256 << 20,
+            nonfinite: NonFinitePolicy::default(),
         }
     }
 }
@@ -173,6 +178,8 @@ mod tests {
         assert!(c.container.threads >= 1);
         assert_eq!(c.strategy, SearchStrategy::EstimateFirst);
         assert!(c.memo_budget_bytes > 0);
+        // silent value rewrites must be opt-in
+        assert_eq!(c.nonfinite, NonFinitePolicy::Reject);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! `--search-mode exact-always` escape hatch (or a legacy container)
 //! restores the trial-encode-everything behaviour.
 
-use crate::model::Network;
+use crate::model::{Network, SanitizeReport};
 use crate::runtime::EvalService;
 use crate::util::Result;
 
@@ -47,6 +47,10 @@ pub struct SearchOutcome {
     /// Estimate-first only: the worst |est − real| relative coded-size
     /// delta observed across the phase-B re-encoded survivors.
     pub est_real_max_rel: Option<f64>,
+    /// Per-layer non-finite sanitization counts applied at search entry
+    /// under [`SearchConfig::nonfinite`] (empty when the input network was
+    /// already clean — the common case pays one scan, no rewrite).
+    pub sanitized: SanitizeReport,
 }
 
 impl SearchOutcome {
@@ -278,6 +282,19 @@ pub fn search(
     cfg: &SearchConfig,
     service: &EvalService,
 ) -> Result<SearchOutcome> {
+    // Apply the non-finite policy exactly once, up front, so every
+    // candidate (and the accuracy oracle) sees the same sanitized planes.
+    // Clean networks — the overwhelmingly common case — skip the clone.
+    let mut sanitized = SanitizeReport::default();
+    let cleaned;
+    let net: &Network = if super::pipeline::network_needs_sanitizing(net) {
+        let mut c = net.clone();
+        sanitized = c.sanitize(cfg.nonfinite)?;
+        cleaned = c;
+        &cleaned
+    } else {
+        net
+    };
     let original_accuracy = service.accuracy(net)?;
     let dc2_deltas = if method == Method::DcV2 {
         dc_v2_feasible_deltas(net, cfg, service, original_accuracy)?
@@ -321,6 +338,7 @@ pub fn search(
         best,
         exact_sized,
         est_real_max_rel,
+        sanitized,
     })
 }
 

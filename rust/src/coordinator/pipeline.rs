@@ -9,7 +9,10 @@ use crate::cabac::estimator::estimated_sliced_payload_bytes;
 use crate::cabac::CodingConfig;
 use crate::codecs::LosslessCoder;
 use crate::metrics::Sizes;
-use crate::model::{decode_network_into, CompressedNetwork, DecodeArena, Network};
+use crate::model::{
+    decode_network_into, CompressedNetwork, DecodeArena, Network, SanitizeReport,
+};
+use crate::util::Error;
 use crate::quant::lloyd::lloyd_quantize_network;
 use crate::quant::rd::{
     rd_quantize_network, rd_quantize_network_planned, rd_quantize_network_sliced,
@@ -336,6 +339,82 @@ pub fn compress_dc(net: &Network, cand: &Candidate, cfg: &SearchConfig) -> Compr
         cfg: cfg.coding,
         layers,
     }
+}
+
+/// Validate the hyper-parameters of a DC candidate: every Δ/λ/S the
+/// quantizer prices with must be finite and in range, so no candidate can
+/// smuggle a NaN into the RDOQ objective or a Δ ≤ 0 into the grid.
+pub fn validate_dc_candidate(cand: &Candidate) -> Result<()> {
+    match cand.method {
+        Method::DcV1 => {
+            if !cand.s.is_finite() || cand.s < 0.0 {
+                return Err(Error::Config(format!(
+                    "DC-v1 coarseness S must be finite and >= 0, got {}",
+                    cand.s
+                )));
+            }
+        }
+        Method::DcV2 => {
+            if !cand.delta.is_finite() || cand.delta <= 0.0 {
+                return Err(Error::Config(format!(
+                    "DC-v2 step-size delta must be finite and > 0, got {}",
+                    cand.delta
+                )));
+            }
+        }
+        _ => {
+            return Err(Error::Config(format!(
+                "{} is not a DC method",
+                cand.method.name()
+            )))
+        }
+    }
+    if !cand.lambda.is_finite() || cand.lambda < 0.0 {
+        return Err(Error::Config(format!(
+            "lambda must be finite and >= 0, got {}",
+            cand.lambda
+        )));
+    }
+    Ok(())
+}
+
+/// Whether any plane of the network carries a value the non-finite policy
+/// would act on (non-finite weights/bias, non-finite or negative
+/// importance).
+pub(crate) fn network_needs_sanitizing(net: &Network) -> bool {
+    let bad_imp = |v: &Vec<f32>| v.iter().any(|x| !x.is_finite() || *x < 0.0);
+    net.layers.iter().any(|l| {
+        l.weights.iter().any(|w| !w.is_finite())
+            || l.fisher.as_ref().is_some_and(bad_imp)
+            || l.hessian.as_ref().is_some_and(bad_imp)
+            || l.bias
+                .as_ref()
+                .is_some_and(|b| b.iter().any(|x| !x.is_finite()))
+    })
+}
+
+/// The hardened ingest→encode boundary: validate the candidate and the
+/// network geometry, apply `cfg.nonfinite` (rejecting, zeroing, or clamping
+/// non-finite values — see [`crate::model::NonFinitePolicy`]), then run the
+/// infallible [`compress_dc`] on the now-sanitized input.  Returns the
+/// compressed network together with the per-layer sanitization counts.
+///
+/// Clean networks take a scan-only fast path (no clone, empty report), so
+/// the hardening cost on well-formed checkpoints is one linear pass over
+/// the planes — bounded by bench_gate check #11.
+pub fn compress_dc_policy(
+    net: &Network,
+    cand: &Candidate,
+    cfg: &SearchConfig,
+) -> Result<(CompressedNetwork, SanitizeReport)> {
+    validate_dc_candidate(cand)?;
+    net.validate()?;
+    if !network_needs_sanitizing(net) {
+        return Ok((compress_dc(net, cand, cfg), SanitizeReport::default()));
+    }
+    let mut cleaned = net.clone();
+    let report = cleaned.sanitize(cfg.nonfinite)?;
+    Ok((compress_dc(&cleaned, cand, cfg), report))
 }
 
 /// DC-v2 quantization through the AOT **Pallas kernel** (L1) instead of the
@@ -672,6 +751,117 @@ mod tests {
         }
         assert_eq!(best, ref_best);
         assert_eq!(name, ref_name);
+    }
+
+    #[test]
+    fn policy_rejects_nonfinite_by_default() {
+        let mut net = tiny_net();
+        net.layers[0].weights[17] = f32::NAN;
+        let cand = Candidate {
+            method: Method::DcV2,
+            s: 0.0,
+            delta: 0.01,
+            lambda: 1e-4,
+            clusters: 0,
+        };
+        let cfg = SearchConfig::default();
+        let err = compress_dc_policy(&net, &cand, &cfg).unwrap_err();
+        assert!(matches!(err, Error::NonFinite(_)), "{err}");
+    }
+
+    #[test]
+    fn policy_clean_fast_path_matches_compress_dc() {
+        let net = tiny_net();
+        let cand = Candidate {
+            method: Method::DcV2,
+            s: 0.0,
+            delta: 0.01,
+            lambda: 1e-4,
+            clusters: 0,
+        };
+        let cfg = SearchConfig::default();
+        let (comp, report) = compress_dc_policy(&net, &cand, &cfg).unwrap();
+        assert!(report.is_clean());
+        let plain = compress_dc(&net, &cand, &cfg);
+        assert_eq!(comp.layers[0].ints, plain.layers[0].ints);
+        assert_eq!(comp.to_bytes_with(cfg.container), plain.to_bytes_with(cfg.container));
+    }
+
+    #[test]
+    fn policy_sanitize_roundtrips_bit_exact() {
+        use crate::model::NonFinitePolicy;
+        let mut net = tiny_net();
+        net.layers[0].weights[0] = f32::NAN;
+        net.layers[0].weights[1] = f32::INFINITY;
+        net.layers[0].weights[2] = f32::NEG_INFINITY;
+        let cand = Candidate {
+            method: Method::DcV2,
+            s: 0.0,
+            delta: 0.01,
+            lambda: 1e-4,
+            clusters: 0,
+        };
+        let cfg = SearchConfig {
+            nonfinite: NonFinitePolicy::Sanitize,
+            ..SearchConfig::default()
+        };
+        let (comp, report) = compress_dc_policy(&net, &cand, &cfg).unwrap();
+        assert_eq!(report.total(), 3);
+        assert_eq!(report.layers[0].weights_fixed, 3);
+        // The input network must not be mutated (sanitization clones).
+        assert!(net.layers[0].weights[0].is_nan());
+        // And the stream must round-trip bit-exact like any clean encode.
+        let bytes = comp.to_bytes_with(cfg.container);
+        let back = CompressedNetwork::from_bytes(&bytes).unwrap();
+        assert_eq!(back.layers[0].ints, comp.layers[0].ints);
+    }
+
+    #[test]
+    fn policy_rejects_degenerate_candidates() {
+        let net = tiny_net();
+        let cfg = SearchConfig::default();
+        let mk = |delta: f32, lambda: f32| Candidate {
+            method: Method::DcV2,
+            s: 0.0,
+            delta,
+            lambda,
+            clusters: 0,
+        };
+        for cand in [
+            mk(0.0, 1e-4),
+            mk(-0.01, 1e-4),
+            mk(f32::NAN, 1e-4),
+            mk(f32::INFINITY, 1e-4),
+            mk(0.01, f32::NAN),
+            mk(0.01, -1.0),
+        ] {
+            let err = compress_dc_policy(&net, &cand, &cfg).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{cand:?}: {err}");
+        }
+        // DC-v1 validates S instead of Δ.
+        let bad_s = Candidate {
+            method: Method::DcV1,
+            s: f32::NAN,
+            delta: 0.0,
+            lambda: 0.0,
+            clusters: 0,
+        };
+        assert!(matches!(
+            compress_dc_policy(&net, &bad_s, &cfg),
+            Err(Error::Config(_))
+        ));
+        // Non-DC methods are a config error, not an unreachable! panic.
+        let lloyd = Candidate {
+            method: Method::Uniform,
+            s: 0.0,
+            delta: 0.01,
+            lambda: 0.0,
+            clusters: 8,
+        };
+        assert!(matches!(
+            compress_dc_policy(&net, &lloyd, &cfg),
+            Err(Error::Config(_))
+        ));
     }
 
     #[test]

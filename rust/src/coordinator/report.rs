@@ -28,6 +28,18 @@ pub fn outcome_details(o: &SearchOutcome) -> String {
         o.original_accuracy * 100.0,
         o.results.len()
     );
+    if !o.sanitized.is_clean() {
+        s.push_str(&format!(
+            "  non-finite policy rewrote {} value(s):\n",
+            o.sanitized.total()
+        ));
+        for l in &o.sanitized.layers {
+            s.push_str(&format!(
+                "    {}: {} weights, {} importance, {} bias\n",
+                l.name, l.weights_fixed, l.importance_fixed, l.bias_fixed
+            ));
+        }
+    }
     if let Some(rel) = o.est_real_max_rel {
         s.push_str(&format!(
             "  estimate-first: {}/{} candidates re-encoded exactly, est-vs-real <= {:.2}%\n",
@@ -83,6 +95,7 @@ mod tests {
             best: Some(0),
             exact_sized: 1,
             est_real_max_rel: None,
+            sanitized: crate::model::SanitizeReport::default(),
         }
     }
 
@@ -109,6 +122,22 @@ mod tests {
         let d = outcome_details(&o);
         assert!(d.contains("estimate-first: 1/1"));
         assert!(d.contains("1.23%"));
+    }
+
+    #[test]
+    fn details_report_sanitization_counts() {
+        let mut o = outcome();
+        // clean outcomes stay silent
+        assert!(!outcome_details(&o).contains("non-finite policy"));
+        o.sanitized.layers.push(crate::model::LayerSanitize {
+            name: "fc1".into(),
+            weights_fixed: 3,
+            importance_fixed: 1,
+            bias_fixed: 0,
+        });
+        let d = outcome_details(&o);
+        assert!(d.contains("non-finite policy rewrote 4 value(s)"));
+        assert!(d.contains("fc1: 3 weights, 1 importance, 0 bias"));
     }
 
     #[test]

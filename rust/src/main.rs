@@ -1,12 +1,25 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! `deepcabac` CLI — the leader entrypoint.
 //!
 //! Verbs:
 //!   compress   <model.nwf> [-o out.dcb] [--method dc-v1|dc-v2] [--delta D]
 //!              [--lambda L] [--s S] [--container v1|v2|v3]
-//!              [--slice-len N] [--threads N]  one-shot compression
+//!              [--slice-len N] [--threads N]
+//!              [--nonfinite reject|sanitize|clamp]  one-shot compression
 //!              (--container/--slice-len set the geometry for BOTH the
 //!              emitted stream and the quantizer's rate model: sliced
-//!              containers get slice-aligned RDOQ, v1 the monolithic chain)
+//!              containers get slice-aligned RDOQ, v1 the monolithic chain;
+//!              --nonfinite picks what happens to NaN/±Inf weights —
+//!              reject with a typed error by default)
+//!   ingest     <model.nwf> [--max-layers N] [--max-dims N] [--max-params N]
+//!              [--max-file-bytes N] [--max-layer-bytes N]
+//!              [--nonfinite reject|sanitize|clamp]
+//!              validate + summarize an external checkpoint WITHOUT
+//!              encoding: budgeted parse (typed Error::{Limit,Wire,Crc}
+//!              on violation), per-layer stats, and a finiteness census
+//!              (NaN / ±Inf / subnormal / −0.0 counts); under the default
+//!              reject policy a non-finite checkpoint exits nonzero,
+//!              sanitize|clamp report what a compress would rewrite
 //!   decompress <model.dcb> [-o out.nwf] [--threads N]  decode + reconstruct
 //!   eval       <model.nwf|model.dcb>         top-1 accuracy via PJRT
 //!   search     <model.nwf> [--method M]...   grid-search (Fig. 5 loop);
@@ -53,8 +66,8 @@ use deepcabac::coordinator::{
     StoreConfig,
 };
 use deepcabac::model::{
-    self, read_nwf, write_nwf, CompressedDelta, CompressedNetwork, ContainerPolicy, Importance,
-    Network,
+    self, read_nwf, read_nwf_with_limits, write_nwf, CompressedDelta, CompressedNetwork,
+    ContainerPolicy, FiniteCensus, Importance, IngestLimits, Network, NonFinitePolicy,
 };
 use deepcabac::runtime::EvalService;
 use deepcabac::util::Result;
@@ -104,6 +117,9 @@ fn usage() -> ExitCode {
          verbs:\n\
            compress   <model.nwf> [-o out.dcb] [--method dc-v1|dc-v2] [--delta D] [--lambda L] [--s S]\n\
                       [--container v1|v2|v3] [--slice-len N] [--threads N]\n\
+                      [--nonfinite reject|sanitize|clamp]\n\
+           ingest     <model.nwf> [--max-layers N] [--max-dims N] [--max-params N]\n\
+                      [--max-file-bytes N] [--max-layer-bytes N] [--nonfinite reject|sanitize|clamp]\n\
            decompress <model.dcb> [-o out.nwf] [--threads N]\n\
            eval       <model.nwf|.dcb> [--artifacts DIR]\n\
            search     <model.nwf> [--method dc-v1|dc-v2|lloyd|uniform|all] [--threads N] [--tolerance PP]\n\
@@ -125,6 +141,7 @@ fn main() -> ExitCode {
     };
     let r = match args.verb.as_str() {
         "compress" => cmd_compress(&args),
+        "ingest" => cmd_ingest(&args),
         "decompress" => cmd_decompress(&args),
         "eval" => cmd_eval(&args),
         "search" => cmd_search(&args),
@@ -159,6 +176,41 @@ fn flag_f32(args: &Args, key: &str, default: f32) -> f32 {
 
 fn flag_usize(args: &Args, key: &str) -> Option<usize> {
     args.flags.get(key).and_then(|v| v.parse().ok())
+}
+
+fn flag_u64(args: &Args, key: &str) -> Option<u64> {
+    args.flags.get(key).and_then(|v| v.parse().ok())
+}
+
+/// `--nonfinite reject|sanitize|clamp` (default: reject — never rewrite
+/// weight values without being asked).
+fn nonfinite_flag(args: &Args) -> Result<NonFinitePolicy> {
+    match args.flags.get("nonfinite") {
+        Some(s) => NonFinitePolicy::parse(s),
+        None => Ok(NonFinitePolicy::Reject),
+    }
+}
+
+/// Ingest budget from the `--max-*` flags, defaulting each axis to
+/// [`IngestLimits::default`].
+fn ingest_limits(args: &Args) -> IngestLimits {
+    let mut l = IngestLimits::default();
+    if let Some(n) = flag_usize(args, "max-layers") {
+        l.max_layers = n;
+    }
+    if let Some(n) = flag_usize(args, "max-dims") {
+        l.max_dims = n;
+    }
+    if let Some(n) = flag_u64(args, "max-params") {
+        l.max_params = n;
+    }
+    if let Some(n) = flag_u64(args, "max-file-bytes") {
+        l.max_file_bytes = n;
+    }
+    if let Some(n) = flag_u64(args, "max-layer-bytes") {
+        l.max_layer_bytes = n;
+    }
+    l
 }
 
 /// Build the `.dcb` container policy from `--container`, `--slice-len` and
@@ -208,9 +260,24 @@ fn cmd_compress(args: &Args) -> Result<()> {
     };
     let cfg = SearchConfig {
         container: container_policy(args)?,
+        nonfinite: nonfinite_flag(args)?,
         ..SearchConfig::default()
     };
-    let compressed = coordinator::pipeline::compress_dc(&net, &cand, &cfg);
+    let (compressed, report) = coordinator::pipeline::compress_dc_policy(&net, &cand, &cfg)?;
+    if !report.is_clean() {
+        eprintln!(
+            "[compress] non-finite policy '{}' rewrote {} value(s) across {} layer(s)",
+            cfg.nonfinite.name(),
+            report.total(),
+            report.layers.len()
+        );
+        for l in &report.layers {
+            eprintln!(
+                "  {:<12} {} weights, {} importance, {} bias",
+                l.name, l.weights_fixed, l.importance_fixed, l.bias_fixed
+            );
+        }
+    }
     let bytes = compressed.to_bytes_with(cfg.container);
     let out = args
         .flags
@@ -231,6 +298,77 @@ fn cmd_compress(args: &Args) -> Result<()> {
         orig as f64 / bytes.len() as f64,
         cfg.container.version
     );
+    Ok(())
+}
+
+/// Validate + summarize an external checkpoint without encoding: budgeted
+/// parse, per-layer stats, finiteness census, and the non-finite policy's
+/// verdict.  The dry-run front door for ROADMAP item 4 — run this on a
+/// checkpoint before pointing `compress` at it.
+fn cmd_ingest(args: &Args) -> Result<()> {
+    let input = args
+        .positional
+        .first()
+        .ok_or_else(|| deepcabac::util::Error::Config("missing input .nwf".into()))?;
+    let limits = ingest_limits(args);
+    let policy = nonfinite_flag(args)?;
+    let net = read_nwf_with_limits(input, limits)?;
+    println!(
+        "{input}: nwf ok, {} layers, {} params, {:.2} MB f32, nonzero {:.1}%",
+        net.layers.len(),
+        net.param_count(),
+        net.f32_size_bytes() as f64 / 1e6,
+        net.nonzero_frac() * 100.0
+    );
+    let mut total = FiniteCensus::default();
+    for l in &net.layers {
+        let c = l.weight_census();
+        println!(
+            "  {:<12} {:?} {:>4}x{:<6} fisher={} hessian={} bias={} \
+             nan={} +inf={} -inf={} subnormal={} -0.0={}",
+            l.name,
+            l.kind,
+            l.rows,
+            l.cols,
+            l.fisher.is_some(),
+            l.hessian.is_some(),
+            l.bias.is_some(),
+            c.nan,
+            c.pos_inf,
+            c.neg_inf,
+            c.subnormal,
+            c.neg_zero
+        );
+        total.nan += c.nan;
+        total.pos_inf += c.pos_inf;
+        total.neg_inf += c.neg_inf;
+        total.subnormal += c.subnormal;
+        total.neg_zero += c.neg_zero;
+    }
+    println!(
+        "census: {} non-finite ({} NaN, {} +Inf, {} -Inf), {} subnormal, {} -0.0",
+        total.non_finite(),
+        total.nan,
+        total.pos_inf,
+        total.neg_inf,
+        total.subnormal,
+        total.neg_zero
+    );
+    // The policy's verdict, without encoding: reject fails typed on a dirty
+    // checkpoint (nonzero exit), sanitize/clamp report what a compress run
+    // under the same flag would rewrite.
+    let mut scratch = net.clone();
+    let report = scratch.sanitize(policy)?;
+    if report.is_clean() {
+        println!("policy '{}': clean — nothing to rewrite", policy.name());
+    } else {
+        println!(
+            "policy '{}': would rewrite {} value(s) across {} layer(s)",
+            policy.name(),
+            report.total(),
+            report.layers.len()
+        );
+    }
     Ok(())
 }
 
@@ -299,6 +437,7 @@ fn cmd_search(args: &Args) -> Result<()> {
     if let Some(t) = args.flags.get("tolerance").and_then(|v| v.parse::<f64>().ok()) {
         cfg.tolerance = t / 100.0; // CLI takes percentage points
     }
+    cfg.nonfinite = nonfinite_flag(args)?;
     match args.flags.get("search-mode").map(String::as_str) {
         Some("exact-always") | Some("exact") => cfg.strategy = SearchStrategy::ExactAlways,
         Some("estimate-first") | Some("estimate") | None => {
@@ -427,15 +566,17 @@ fn cmd_info(args: &Args) -> Result<()> {
             net.nonzero_frac() * 100.0
         );
         for l in &net.layers {
+            let c = l.weight_census();
             println!(
-                "  {:<12} {:?} {:>4}x{:<6} fisher={} hessian={} bias={}",
+                "  {:<12} {:?} {:>4}x{:<6} fisher={} hessian={} bias={} nonfinite={}",
                 l.name,
                 l.kind,
                 l.rows,
                 l.cols,
                 l.fisher.is_some(),
                 l.hessian.is_some(),
-                l.bias.is_some()
+                l.bias.is_some(),
+                c.non_finite()
             );
         }
     }
@@ -539,18 +680,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let store = ModelStore::new(cfg);
     let mut names: Vec<String> = Vec::new();
+    let mut paths_by_name: std::collections::HashMap<String, String> = std::collections::HashMap::new();
     for (i, path) in args.positional.iter().enumerate() {
         let raw = std::fs::read(path)?;
-        let stem = std::path::Path::new(path)
+        let name = std::path::Path::new(path)
             .file_stem()
             .and_then(|s| s.to_str())
             .map(String::from)
             .unwrap_or_else(|| format!("model{i}"));
-        let name = if names.contains(&stem) {
-            format!("{stem}#{i}")
-        } else {
-            stem
-        };
+        // Stems are the serving names clients address; silently renaming a
+        // duplicate (the old `{stem}#{i}` fallback) served one of the two
+        // containers under a name nobody asked for.  Fail loud instead.
+        if let Some(prev) = paths_by_name.get(&name) {
+            return Err(deepcabac::util::Error::Config(format!(
+                "duplicate model stem '{name}': '{prev}' and '{path}' would register \
+                 under the same serving name — rename one of the files"
+            )));
+        }
+        paths_by_name.insert(name.clone(), path.clone());
         // A v4 positional is a delta: link it against the already-listed
         // base whose content hash its header pins.
         match model::delta_header(&raw).ok() {

@@ -556,8 +556,7 @@ impl<'a> LayerView<'a> {
 
     pub(crate) fn dims_iter(&self) -> impl Iterator<Item = usize> + 'a {
         let dims = self.dims;
-        dims.chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+        dims.chunks_exact(4).map(|c| le_u32(c) as usize)
     }
 }
 
@@ -570,16 +569,40 @@ fn take<'a>(body: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
     Ok(s)
 }
 
+// Fixed-width little-endian reads from windows that `take` (or an explicit
+// length check) has already sized exactly, so the `try_into` cannot fail.
+// These helpers are the only waiver of the codec-core unwrap ban
+// (clippy.toml) in this file's wire walkers.
+#[allow(clippy::disallowed_methods)]
+fn le_u16(b: &[u8]) -> u16 {
+    u16::from_le_bytes(b.try_into().unwrap())
+}
+
+#[allow(clippy::disallowed_methods)]
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b.try_into().unwrap())
+}
+
+#[allow(clippy::disallowed_methods)]
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b.try_into().unwrap())
+}
+
+#[allow(clippy::disallowed_methods)]
+pub(super) fn le_f32(b: &[u8]) -> f32 {
+    f32::from_le_bytes(b.try_into().unwrap())
+}
+
 fn take_u16(body: &[u8], pos: &mut usize) -> Result<u16> {
-    Ok(u16::from_le_bytes(take(body, pos, 2)?.try_into().unwrap()))
+    Ok(le_u16(take(body, pos, 2)?))
 }
 
 fn take_u32(body: &[u8], pos: &mut usize) -> Result<u32> {
-    Ok(u32::from_le_bytes(take(body, pos, 4)?.try_into().unwrap()))
+    Ok(le_u32(take(body, pos, 4)?))
 }
 
 fn take_u64(body: &[u8], pos: &mut usize) -> Result<u64> {
-    Ok(u64::from_le_bytes(take(body, pos, 8)?.try_into().unwrap()))
+    Ok(le_u64(take(body, pos, 8)?))
 }
 
 /// Streaming container walker: validates magic + CRC + head fields on
@@ -621,7 +644,7 @@ impl<'a> ContainerWalker<'a> {
             return Err(Error::Wire("bad dcb magic".into()));
         }
         let body = &raw[4..raw.len() - 4];
-        let crc_stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+        let crc_stored = le_u32(&raw[raw.len() - 4..]);
         let crc_actual = crc32fast::hash(body);
         if crc_actual != crc_stored {
             return Err(Error::Crc(format!(
@@ -698,7 +721,7 @@ impl<'a> ContainerWalker<'a> {
         let dims = take(body, pos, nd * 4)?;
         let rows = take_u32(body, pos)? as usize;
         let cols = take_u32(body, pos)? as usize;
-        let delta = f32::from_le_bytes(take(body, pos, 4)?.try_into().unwrap());
+        let delta = le_f32(take(body, pos, 4)?);
         let has_bias = take(body, pos, 1)?[0] != 0;
         let bias = if has_bias {
             let blen = take_u32(body, pos)? as usize;
@@ -770,11 +793,7 @@ fn parse_container_with(raw: &[u8], limits: DecodeLimits) -> Result<ParsedContai
             rows: v.rows,
             cols: v.cols,
             delta: v.delta,
-            bias: v.bias.map(|b| {
-                b.chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect()
-            }),
+            bias: v.bias.map(|b| b.chunks_exact(4).map(le_f32).collect()),
             payload: v.payload,
             skipped: v.skipped,
         });
@@ -1018,7 +1037,7 @@ impl DecodeArena {
             }
             if let (Some(dst), Some(src)) = (&mut l.bias, v.bias) {
                 for (d, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
-                    *d = f32::from_le_bytes(c.try_into().unwrap());
+                    *d = le_f32(c);
                 }
             }
             push_slice_refs(
@@ -1131,7 +1150,10 @@ impl DecodeArena {
         let slices = &*slices;
         let plane_ptrs = &*plane_ptrs;
         let park_err = |e: Error| {
-            let mut g = first_err.lock().unwrap();
+            // A poisoned lock still yields the parked slot — recover the
+            // guard instead of panicking (workers never panic while
+            // holding it, but the wall forbids assuming so).
+            let mut g = first_err.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             if g.is_none() {
                 *g = Some(e);
             }
@@ -1239,7 +1261,8 @@ impl DecodeArena {
                 pool.run(threads, work);
             }
         }
-        match first_err.into_inner().unwrap() {
+        let parked = first_err.into_inner();
+        match parked.unwrap_or_else(std::sync::PoisonError::into_inner) {
             Some(e) => Err(e),
             None => Ok(()),
         }
@@ -1291,7 +1314,7 @@ impl DecodeArena {
                 match &mut l.bias {
                     Some(dst) if dst.len() * 4 == src.len() => {
                         for (d, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
-                            *d = f32::from_le_bytes(c.try_into().unwrap());
+                            *d = le_f32(c);
                         }
                     }
                     _ => {
@@ -1350,7 +1373,10 @@ impl DecodeArena {
         let slices = &*slices;
         let plane_ptrs = &*plane_ptrs;
         let park_err = |e: Error| {
-            let mut g = first_err.lock().unwrap();
+            // A poisoned lock still yields the parked slot — recover the
+            // guard instead of panicking (workers never panic while
+            // holding it, but the wall forbids assuming so).
+            let mut g = first_err.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             if g.is_none() {
                 *g = Some(e);
             }
@@ -1394,7 +1420,8 @@ impl DecodeArena {
         } else {
             pool.run(threads, work);
         }
-        match first_err.into_inner().unwrap() {
+        let parked = first_err.into_inner();
+        match parked.unwrap_or_else(std::sync::PoisonError::into_inner) {
             Some(e) => Err(e),
             None => Ok(()),
         }
@@ -1802,6 +1829,7 @@ impl CompressedNetwork {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::util::Pcg64;

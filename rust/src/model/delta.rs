@@ -28,7 +28,7 @@
 //! arenas).
 
 use super::bitstream::{
-    container_shape_key, ContainerPolicy, ContainerWalker, DeltaHeader, MAGIC, VERSION_V4,
+    container_shape_key, le_f32, ContainerPolicy, ContainerWalker, DeltaHeader, MAGIC, VERSION_V4,
 };
 use super::network::{Kind, Layer, Network};
 use crate::cabac::slices::{decode_layer_sliced, encode_layer_sliced_parallel};
@@ -220,11 +220,7 @@ impl CompressedDelta {
                 rows: v.rows,
                 cols: v.cols,
                 delta: v.delta,
-                bias: v.bias.map(|b| {
-                    b.chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect()
-                }),
+                bias: v.bias.map(|b| b.chunks_exact(4).map(le_f32).collect()),
                 residual,
             });
         }
@@ -318,6 +314,7 @@ impl CompressedDelta {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::super::bitstream::{
         apply_delta_network_into, delta_header, probe, CompressedNetwork, DecodeArena,

@@ -17,6 +17,8 @@ pub use bitstream::{
 };
 pub use delta::{CompressedDelta, DeltaLayer};
 pub use format::{BinFormat, ContainerFormat};
-pub use network::{Importance, Kind, Layer, Network};
-pub use nwf::{read_nwf, write_nwf};
+pub use network::{
+    FiniteCensus, Importance, Kind, Layer, LayerSanitize, Network, NonFinitePolicy, SanitizeReport,
+};
+pub use nwf::{parse_nwf, read_nwf, read_nwf_with_limits, write_nwf, IngestLimits};
 pub use scan::ScanOrder;

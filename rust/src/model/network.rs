@@ -7,6 +7,174 @@
 
 use crate::util::{Error, Result};
 
+/// What to do with NaN/±Inf weights (or invalid importance values) found
+/// in ingested networks.  Threaded from the CLI / api facade down through
+/// `Network::sanitize`; the quantizer stack assumes sanitized input.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum NonFinitePolicy {
+    /// Fail with [`Error::NonFinite`](crate::Error::NonFinite) — the safe
+    /// default: silent value rewrites never happen unless asked for.
+    #[default]
+    Reject,
+    /// Replace every non-finite weight/bias value with `0.0` (and every
+    /// non-finite or negative importance value with `0.0`).
+    Sanitize,
+    /// Replace ±Inf weights/bias with ± the plane's largest *finite*
+    /// magnitude (`0.0` when the plane has none) and NaN with `0.0`;
+    /// importance values behave as under `Sanitize`.
+    Clamp,
+}
+
+impl NonFinitePolicy {
+    /// Parse a CLI spelling (`reject` | `sanitize` | `clamp`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "reject" => Ok(NonFinitePolicy::Reject),
+            "sanitize" => Ok(NonFinitePolicy::Sanitize),
+            "clamp" => Ok(NonFinitePolicy::Clamp),
+            _ => Err(Error::Config(format!(
+                "unknown non-finite policy '{s}' (want reject|sanitize|clamp)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NonFinitePolicy::Reject => "reject",
+            NonFinitePolicy::Sanitize => "sanitize",
+            NonFinitePolicy::Clamp => "clamp",
+        }
+    }
+}
+
+/// Per-layer sanitization counts from one [`Network::sanitize`] pass.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LayerSanitize {
+    pub name: String,
+    /// Non-finite weight values rewritten.
+    pub weights_fixed: usize,
+    /// Non-finite or negative fisher/hessian values rewritten.
+    pub importance_fixed: usize,
+    /// Non-finite bias values rewritten.
+    pub bias_fixed: usize,
+}
+
+impl LayerSanitize {
+    pub fn total(&self) -> usize {
+        self.weights_fixed + self.importance_fixed + self.bias_fixed
+    }
+}
+
+/// Result of a [`Network::sanitize`] pass: one entry per layer that needed
+/// at least one rewrite (empty = the network was already clean).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SanitizeReport {
+    pub layers: Vec<LayerSanitize>,
+}
+
+impl SanitizeReport {
+    /// Total values rewritten across all layers.
+    pub fn total(&self) -> usize {
+        self.layers.iter().map(LayerSanitize::total).sum()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.layers.is_empty()
+    }
+}
+
+/// Special-value census of one f32 plane (read-only; the `ingest` CLI verb
+/// reports these per layer).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FiniteCensus {
+    pub nan: usize,
+    pub pos_inf: usize,
+    pub neg_inf: usize,
+    pub subnormal: usize,
+    pub neg_zero: usize,
+}
+
+impl FiniteCensus {
+    pub fn scan(vals: &[f32]) -> Self {
+        let mut c = FiniteCensus::default();
+        for &v in vals {
+            if v.is_nan() {
+                c.nan += 1;
+            } else if v == f32::INFINITY {
+                c.pos_inf += 1;
+            } else if v == f32::NEG_INFINITY {
+                c.neg_inf += 1;
+            } else if v.is_subnormal() {
+                c.subnormal += 1;
+            } else if v == 0.0 && v.is_sign_negative() {
+                c.neg_zero += 1;
+            }
+        }
+        c
+    }
+
+    /// Values a `Reject` policy would refuse (NaN and ±Inf; subnormals and
+    /// −0.0 are valid f32 weights).
+    pub fn non_finite(&self) -> usize {
+        self.nan + self.pos_inf + self.neg_inf
+    }
+}
+
+/// Largest finite |v| in a plane (0 when it has none).
+fn finite_max_abs(vals: &[f32]) -> f32 {
+    vals.iter()
+        .copied()
+        .filter(|v| v.is_finite())
+        .fold(0f32, |m, v| m.max(v.abs()))
+}
+
+/// Rewrite non-finite values in a weight-like plane per policy; returns the
+/// rewrite count.  `Reject` only counts (the caller raises the error so it
+/// can name the layer).
+fn fix_weight_plane(vals: &mut [f32], policy: NonFinitePolicy) -> usize {
+    let clamp_to = match policy {
+        NonFinitePolicy::Clamp => finite_max_abs(vals),
+        _ => 0.0,
+    };
+    let mut fixed = 0;
+    for v in vals.iter_mut() {
+        if v.is_finite() {
+            continue;
+        }
+        fixed += 1;
+        match policy {
+            NonFinitePolicy::Reject => {}
+            NonFinitePolicy::Sanitize => *v = 0.0,
+            NonFinitePolicy::Clamp => {
+                *v = if v.is_nan() {
+                    0.0
+                } else if *v > 0.0 {
+                    clamp_to
+                } else {
+                    -clamp_to
+                };
+            }
+        }
+    }
+    fixed
+}
+
+/// Rewrite invalid importance values (non-finite *or* negative — Fisher and
+/// Hessian diagonals are magnitudes) to `0.0`; returns the rewrite count.
+fn fix_importance_plane(vals: &mut [f32], policy: NonFinitePolicy) -> usize {
+    let mut fixed = 0;
+    for v in vals.iter_mut() {
+        if v.is_finite() && *v >= 0.0 {
+            continue;
+        }
+        fixed += 1;
+        if policy != NonFinitePolicy::Reject {
+            *v = 0.0;
+        }
+    }
+    fixed
+}
+
 /// Layer kind — mirrors `python/compile/models.py`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Kind {
@@ -74,6 +242,39 @@ impl Layer {
         }
         self.weights.iter().filter(|&&w| w != 0.0).count() as f64
             / self.weights.len() as f64
+    }
+
+    /// Census of special f32 values in the weight plane.
+    pub fn weight_census(&self) -> FiniteCensus {
+        FiniteCensus::scan(&self.weights)
+    }
+
+    /// Apply a [`NonFinitePolicy`] to this layer's planes in place.  Under
+    /// `Reject` nothing is mutated — any offending value is a typed error
+    /// naming the layer and counts.
+    pub fn sanitize(&mut self, policy: NonFinitePolicy) -> Result<LayerSanitize> {
+        let mut rep = LayerSanitize {
+            name: self.name.clone(),
+            ..LayerSanitize::default()
+        };
+        rep.weights_fixed = fix_weight_plane(&mut self.weights, policy);
+        if let Some(f) = &mut self.fisher {
+            rep.importance_fixed += fix_importance_plane(f, policy);
+        }
+        if let Some(h) = &mut self.hessian {
+            rep.importance_fixed += fix_importance_plane(h, policy);
+        }
+        if let Some(b) = &mut self.bias {
+            rep.bias_fixed = fix_weight_plane(b, policy);
+        }
+        if policy == NonFinitePolicy::Reject && rep.total() > 0 {
+            return Err(Error::NonFinite(format!(
+                "layer '{}': {} non-finite weight(s), {} invalid importance value(s), \
+                 {} non-finite bias value(s) (use --nonfinite sanitize|clamp to rewrite)",
+                self.name, rep.weights_fixed, rep.importance_fixed, rep.bias_fixed
+            )));
+        }
+        Ok(rep)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -151,6 +352,21 @@ impl Network {
         Ok(())
     }
 
+    /// Apply a [`NonFinitePolicy`] to every layer.  With `Reject` (the
+    /// default) the network is untouched and the first offending layer is
+    /// a typed [`Error::NonFinite`]; otherwise returns the per-layer
+    /// rewrite counts (only layers that needed fixes are listed).
+    pub fn sanitize(&mut self, policy: NonFinitePolicy) -> Result<SanitizeReport> {
+        let mut report = SanitizeReport::default();
+        for l in &mut self.layers {
+            let rep = l.sanitize(policy)?;
+            if rep.total() > 0 {
+                report.layers.push(rep);
+            }
+        }
+        Ok(report)
+    }
+
     /// All weights concatenated in scan order (for whole-network quantizers
     /// like weighted Lloyd, Alg. 4).
     pub fn flat_weights(&self) -> Vec<f32> {
@@ -193,6 +409,7 @@ pub enum Importance {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
 
@@ -264,6 +481,126 @@ mod tests {
         let mut l = test_layer("a", 1, 3);
         l.weights = vec![-5.0, 2.0, 4.0];
         assert_eq!(l.max_abs(), 5.0);
+    }
+
+    #[test]
+    fn sanitize_reject_is_default_and_errors() {
+        let mut l = test_layer("a", 1, 4);
+        l.weights = vec![1.0, f32::NAN, 2.0, 3.0];
+        let mut net = Network {
+            name: "t".into(),
+            layers: vec![l],
+        };
+        let before = net.layers[0].weights.clone();
+        let err = net.sanitize(NonFinitePolicy::default()).unwrap_err();
+        assert!(matches!(err, Error::NonFinite(_)));
+        // Reject must not mutate.
+        assert_eq!(net.layers[0].weights[0], before[0]);
+        assert!(net.layers[0].weights[1].is_nan());
+    }
+
+    #[test]
+    fn sanitize_zeroes_nonfinite() {
+        let mut l = test_layer("a", 1, 4);
+        l.weights = vec![1.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+        l.fisher = Some(vec![1.0, -2.0, f32::NAN, 0.5]);
+        l.bias = Some(vec![f32::NAN]);
+        let mut net = Network {
+            name: "t".into(),
+            layers: vec![l],
+        };
+        let rep = net.sanitize(NonFinitePolicy::Sanitize).unwrap();
+        assert_eq!(rep.total(), 3 + 2 + 1);
+        assert_eq!(net.layers[0].weights, vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(net.layers[0].fisher.as_ref().unwrap(), &vec![1.0, 0.0, 0.0, 0.5]);
+        assert_eq!(net.layers[0].bias.as_ref().unwrap(), &vec![0.0]);
+    }
+
+    #[test]
+    fn clamp_uses_finite_dynamic_range() {
+        let mut l = test_layer("a", 1, 4);
+        l.weights = vec![-3.0, f32::INFINITY, f32::NEG_INFINITY, f32::NAN];
+        l.fisher = None;
+        l.bias = None;
+        let mut net = Network {
+            name: "t".into(),
+            layers: vec![l],
+        };
+        let rep = net.sanitize(NonFinitePolicy::Clamp).unwrap();
+        assert_eq!(rep.total(), 3);
+        assert_eq!(net.layers[0].weights, vec![-3.0, 3.0, -3.0, 0.0]);
+    }
+
+    #[test]
+    fn clamp_all_nonfinite_plane_goes_to_zero() {
+        let mut l = test_layer("a", 1, 2);
+        l.weights = vec![f32::INFINITY, f32::NEG_INFINITY];
+        l.fisher = None;
+        l.bias = None;
+        let mut net = Network {
+            name: "t".into(),
+            layers: vec![l],
+        };
+        net.sanitize(NonFinitePolicy::Clamp).unwrap();
+        assert_eq!(net.layers[0].weights, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn sanitize_clean_network_reports_clean() {
+        let mut net = Network {
+            name: "t".into(),
+            layers: vec![test_layer("a", 2, 2)],
+        };
+        let rep = net.sanitize(NonFinitePolicy::Reject).unwrap();
+        assert!(rep.is_clean());
+    }
+
+    #[test]
+    fn subnormal_and_neg_zero_survive_sanitize() {
+        let mut l = test_layer("a", 1, 3);
+        let sub = f32::from_bits(1); // smallest positive subnormal
+        l.weights = vec![sub, -0.0, 1.0];
+        l.fisher = None;
+        l.bias = None;
+        let mut net = Network {
+            name: "t".into(),
+            layers: vec![l],
+        };
+        let rep = net.sanitize(NonFinitePolicy::Sanitize).unwrap();
+        assert!(rep.is_clean());
+        assert_eq!(net.layers[0].weights[0].to_bits(), 1);
+        assert!(net.layers[0].weights[1].is_sign_negative());
+    }
+
+    #[test]
+    fn finite_census_counts() {
+        let sub = f32::from_bits(3);
+        let c = FiniteCensus::scan(&[
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            sub,
+            -0.0,
+            1.0,
+        ]);
+        assert_eq!(c.nan, 1);
+        assert_eq!(c.pos_inf, 1);
+        assert_eq!(c.neg_inf, 1);
+        assert_eq!(c.subnormal, 1);
+        assert_eq!(c.neg_zero, 1);
+        assert_eq!(c.non_finite(), 3);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            NonFinitePolicy::Reject,
+            NonFinitePolicy::Sanitize,
+            NonFinitePolicy::Clamp,
+        ] {
+            assert_eq!(NonFinitePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(NonFinitePolicy::parse("zap").is_err());
     }
 
     #[test]

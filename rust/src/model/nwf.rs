@@ -4,6 +4,13 @@
 //! pins the layout with golden bytes, the Rust tests roundtrip through this
 //! implementation, and the integration tests read actual Python-written
 //! artifacts.
+//!
+//! The read path treats `.nwf` bytes as untrusted input, mirroring the
+//! `DecodeLimits` contract on the `.dcb` side: every declared count is
+//! checked against an [`IngestLimits`] budget at header-walk time, *before*
+//! the corresponding plane buffer is allocated, and violations surface as
+//! typed [`Error::Limit`] / [`Error::Wire`] / [`Error::Crc`] — never a
+//! panic, never a runaway allocation.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -13,6 +20,39 @@ use crate::util::{Error, Result};
 
 const MAGIC: &[u8; 4] = b"NWF1";
 
+/// Resource budget for parsing untrusted `.nwf` weight files — the ingest
+/// twin of [`DecodeLimits`](super::DecodeLimits).  Every field bounds a
+/// quantity an attacker controls through wire headers; checks run where the
+/// quantity is first *declared* (header walk), before the matching
+/// allocation, so a hostile file is rejected at O(header) cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngestLimits {
+    /// Maximum number of layers in one file.
+    pub max_layers: usize,
+    /// Maximum logical-shape rank (`nd`) of a single layer.
+    pub max_dims: usize,
+    /// Maximum total f32 values across all planes (weights + fisher +
+    /// hessian + bias) of all layers.
+    pub max_params: u64,
+    /// Maximum size of the file itself, checked against metadata before
+    /// the body is read into memory.
+    pub max_file_bytes: u64,
+    /// Maximum plane bytes attributable to a single layer.
+    pub max_layer_bytes: u64,
+}
+
+impl Default for IngestLimits {
+    fn default() -> Self {
+        IngestLimits {
+            max_layers: 1 << 16,
+            max_dims: 8,
+            max_params: 1 << 30,
+            max_file_bytes: 4 << 30,
+            max_layer_bytes: 1 << 30,
+        }
+    }
+}
+
 struct Cursor<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -20,11 +60,15 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            return Err(Error::Format("nwf truncated".into()));
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| Error::Wire("nwf field length overflows".into()))?;
+        if end > self.buf.len() {
+            return Err(Error::Wire("nwf truncated".into()));
         }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
         Ok(s)
     }
 
@@ -33,41 +77,117 @@ impl<'a> Cursor<'a> {
     }
 
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
+    /// Read `n` f32s.  The caller must have budget-checked `n` already;
+    /// the byte count is still computed with checked math and the slice is
+    /// bounds-checked *before* the output vector allocates.
     fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
-        let raw = self.take(n * 4)?;
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| Error::Limit("nwf plane byte count overflows".into()))?;
+        let raw = self.take(bytes)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
 }
 
-/// Read a `.nwf` file into a [`Network`] (name = file stem).
-pub fn read_nwf(path: impl AsRef<Path>) -> Result<Network> {
-    let path = path.as_ref();
-    let mut raw = Vec::new();
-    std::fs::File::open(path)?.read_to_end(&mut raw)?;
+/// Incremental CRC-32 over the body: hashes in bounded chunks via the
+/// streaming `Hasher` so validation cost is a single linear pass with no
+/// intermediate buffer, and runs before any plane allocation.
+fn body_crc(body: &[u8]) -> u32 {
+    let mut h = crc32fast::Hasher::new();
+    for chunk in body.chunks(64 << 10) {
+        h.update(chunk);
+    }
+    h.finalize()
+}
+
+/// Tracks the running plane budget across the header walk.
+struct Budget {
+    limits: IngestLimits,
+    total_params: u64,
+}
+
+impl Budget {
+    /// Charge `n` f32 values against the per-layer and whole-file budgets.
+    /// `layer_bytes` is the running byte count for the current layer.
+    fn charge(&mut self, layer: &str, n: u64, layer_bytes: &mut u64) -> Result<()> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| Error::Limit(format!("layer '{layer}': plane size overflows")))?;
+        *layer_bytes = layer_bytes
+            .checked_add(bytes)
+            .ok_or_else(|| Error::Limit(format!("layer '{layer}': plane size overflows")))?;
+        if *layer_bytes > self.limits.max_layer_bytes {
+            return Err(Error::Limit(format!(
+                "layer '{layer}': {layer_bytes} plane bytes exceeds per-layer budget {}",
+                self.limits.max_layer_bytes
+            )));
+        }
+        self.total_params = self
+            .total_params
+            .checked_add(n)
+            .ok_or_else(|| Error::Limit("total param count overflows".into()))?;
+        if self.total_params > self.limits.max_params {
+            return Err(Error::Limit(format!(
+                "{} total params exceeds budget {}",
+                self.total_params, self.limits.max_params
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Parse in-memory `.nwf` bytes into a [`Network`] under an ingest budget.
+///
+/// The returned network's `name` is empty — path-based entry points fill it
+/// from the file stem.  Error taxonomy: [`Error::Wire`] for bad magic /
+/// truncation / trailing garbage, [`Error::Crc`] for checksum mismatch,
+/// [`Error::Limit`] for budget violations, [`Error::Format`] for
+/// well-framed but semantically invalid fields (bad UTF-8 name, unknown
+/// layer kind, inconsistent geometry).
+pub fn parse_nwf(raw: &[u8], limits: IngestLimits) -> Result<Network> {
+    if raw.len() as u64 > limits.max_file_bytes {
+        return Err(Error::Limit(format!(
+            "{} nwf bytes exceeds file budget {}",
+            raw.len(),
+            limits.max_file_bytes
+        )));
+    }
     if raw.len() < 12 || &raw[..4] != MAGIC {
-        return Err(Error::Format(format!("{}: bad nwf magic", path.display())));
+        return Err(Error::Wire("bad nwf magic".into()));
     }
     let body = &raw[4..raw.len() - 4];
-    let crc_stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
-    let crc = crc32fast::hash(body);
+    let tail = &raw[raw.len() - 4..];
+    let crc_stored = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+    let crc = body_crc(body);
     if crc != crc_stored {
-        return Err(Error::Format(format!(
-            "{}: crc mismatch (stored {crc_stored:08x}, computed {crc:08x})",
-            path.display()
+        return Err(Error::Crc(format!(
+            "nwf crc mismatch (stored {crc_stored:08x}, computed {crc:08x})"
         )));
     }
     let mut c = Cursor { buf: body, pos: 0 };
+    let mut budget = Budget {
+        limits,
+        total_params: 0,
+    };
     let n_layers = c.u32()? as usize;
+    if n_layers > limits.max_layers {
+        return Err(Error::Limit(format!(
+            "{n_layers} layers exceeds budget {}",
+            limits.max_layers
+        )));
+    }
     let mut layers = Vec::with_capacity(n_layers);
     for _ in 0..n_layers {
         let name_len = c.u16()? as usize;
@@ -75,6 +195,12 @@ pub fn read_nwf(path: impl AsRef<Path>) -> Result<Network> {
             .map_err(|e| Error::Format(format!("bad layer name: {e}")))?;
         let kind = Kind::from_code(c.u8()?)?;
         let nd = c.u8()? as usize;
+        if nd > limits.max_dims {
+            return Err(Error::Limit(format!(
+                "layer '{name}': rank {nd} exceeds budget {}",
+                limits.max_dims
+            )));
+        }
         let mut shape = Vec::with_capacity(nd);
         for _ in 0..nd {
             shape.push(c.u32()? as usize);
@@ -82,13 +208,27 @@ pub fn read_nwf(path: impl AsRef<Path>) -> Result<Network> {
         let rows = c.u32()? as usize;
         let cols = c.u32()? as usize;
         let flags = c.u8()?;
-        let n = rows * cols;
+        if flags & !0x07 != 0 {
+            return Err(Error::Wire(format!(
+                "layer '{name}': unknown flag bits {flags:#04x}"
+            )));
+        }
+        let n = (rows as u64)
+            .checked_mul(cols as u64)
+            .ok_or_else(|| Error::Limit(format!("layer '{name}': rows*cols overflows")))?;
+        // Charge every rows*cols plane this header declares before
+        // allocating any of them.
+        let mut layer_bytes = 0u64;
+        let planes = 1 + u64::from(flags & 1) + u64::from((flags >> 1) & 1);
+        budget.charge(&name, n.saturating_mul(planes), &mut layer_bytes)?;
+        let n = n as usize;
         let weights = c.f32_vec(n)?;
         let fisher = if flags & 1 != 0 { Some(c.f32_vec(n)?) } else { None };
         let hessian = if flags & 2 != 0 { Some(c.f32_vec(n)?) } else { None };
         let bias = if flags & 4 != 0 {
-            let blen = c.u32()? as usize;
-            Some(c.f32_vec(blen)?)
+            let blen = c.u32()? as u64;
+            budget.charge(&name, blen, &mut layer_bytes)?;
+            Some(c.f32_vec(blen as usize)?)
         } else {
             None
         };
@@ -106,11 +246,51 @@ pub fn read_nwf(path: impl AsRef<Path>) -> Result<Network> {
         layer.validate()?;
         layers.push(layer);
     }
-    let name = path
+    if c.pos != body.len() {
+        return Err(Error::Wire(format!(
+            "{} trailing bytes after last layer",
+            body.len() - c.pos
+        )));
+    }
+    Ok(Network {
+        name: String::new(),
+        layers,
+    })
+}
+
+/// Read a `.nwf` file into a [`Network`] (name = file stem) under an
+/// explicit ingest budget.  The file-size budget is checked against
+/// metadata *before* the body is read into memory.
+pub fn read_nwf_with_limits(path: impl AsRef<Path>, limits: IngestLimits) -> Result<Network> {
+    let path = path.as_ref();
+    let meta_len = std::fs::metadata(path)?.len();
+    if meta_len > limits.max_file_bytes {
+        return Err(Error::Limit(format!(
+            "{}: {meta_len} bytes exceeds file budget {}",
+            path.display(),
+            limits.max_file_bytes
+        )));
+    }
+    let mut raw = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut raw)?;
+    let mut net = parse_nwf(&raw, limits)
+        .map_err(|e| match e {
+            Error::Wire(m) => Error::Wire(format!("{}: {m}", path.display())),
+            Error::Crc(m) => Error::Crc(format!("{}: {m}", path.display())),
+            Error::Limit(m) => Error::Limit(format!("{}: {m}", path.display())),
+            other => other,
+        })?;
+    net.name = path
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_default();
-    Ok(Network { name, layers })
+    Ok(net)
+}
+
+/// Read a `.nwf` file into a [`Network`] (name = file stem) under the
+/// default [`IngestLimits`].
+pub fn read_nwf(path: impl AsRef<Path>) -> Result<Network> {
+    read_nwf_with_limits(path, IngestLimits::default())
 }
 
 /// Write a [`Network`] to `.nwf` (used by tests and the `export` CLI verb).
@@ -161,6 +341,7 @@ pub fn write_nwf(path: impl AsRef<Path>, net: &Network) -> Result<()> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::util::Pcg64;
@@ -185,6 +366,21 @@ mod tests {
                 mk("fc1", Kind::Dense, vec![72, 16], 16, 72, &mut rng),
             ],
         }
+    }
+
+    fn sample_bytes() -> Vec<u8> {
+        let dir = std::env::temp_dir().join("dcb_nwf_bytes");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.nwf");
+        write_nwf(&p, &sample_net()).unwrap();
+        std::fs::read(&p).unwrap()
+    }
+
+    /// Re-stamp the trailing CRC after a deliberate body mutation.
+    fn restamp(raw: &mut [u8]) {
+        let n = raw.len();
+        let crc = crc32fast::hash(&raw[4..n - 4]);
+        raw[n - 4..].copy_from_slice(&crc.to_le_bytes());
     }
 
     #[test]
@@ -217,7 +413,7 @@ mod tests {
         let mut raw = std::fs::read(&p).unwrap();
         raw[30] ^= 0x40;
         std::fs::write(&p, &raw).unwrap();
-        assert!(matches!(read_nwf(&p), Err(Error::Format(_))));
+        assert!(matches!(read_nwf(&p), Err(Error::Crc(_))));
     }
 
     #[test]
@@ -226,7 +422,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("m.nwf");
         std::fs::write(&p, b"XXXX0123456789").unwrap();
-        assert!(read_nwf(&p).is_err());
+        assert!(matches!(read_nwf(&p), Err(Error::Wire(_))));
     }
 
     #[test]
@@ -238,5 +434,96 @@ mod tests {
         let raw = std::fs::read(&p).unwrap();
         std::fs::write(&p, &raw[..raw.len() / 2]).unwrap();
         assert!(read_nwf(&p).is_err());
+    }
+
+    #[test]
+    fn layer_count_budget_rejects_before_walk() {
+        let mut raw = sample_bytes();
+        // Declare u32::MAX layers; with a valid CRC restamp the parser
+        // must reject on the budget, not attempt a giant Vec.
+        raw[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        restamp(&mut raw);
+        let err = parse_nwf(&raw, IngestLimits::default()).unwrap_err();
+        assert!(matches!(err, Error::Limit(_)), "got {err}");
+    }
+
+    #[test]
+    fn rank_budget_rejected() {
+        let limits = IngestLimits {
+            max_dims: 2,
+            ..IngestLimits::default()
+        };
+        // conv1 has rank 4 — over the tightened budget.
+        let err = parse_nwf(&sample_bytes(), limits).unwrap_err();
+        assert!(matches!(err, Error::Limit(_)), "got {err}");
+    }
+
+    #[test]
+    fn param_budget_rejected() {
+        let limits = IngestLimits {
+            max_params: 10,
+            ..IngestLimits::default()
+        };
+        let err = parse_nwf(&sample_bytes(), limits).unwrap_err();
+        assert!(matches!(err, Error::Limit(_)), "got {err}");
+    }
+
+    #[test]
+    fn per_layer_byte_budget_rejected() {
+        let limits = IngestLimits {
+            max_layer_bytes: 64,
+            ..IngestLimits::default()
+        };
+        let err = parse_nwf(&sample_bytes(), limits).unwrap_err();
+        assert!(matches!(err, Error::Limit(_)), "got {err}");
+    }
+
+    #[test]
+    fn file_byte_budget_rejected_from_metadata() {
+        let dir = std::env::temp_dir().join("dcb_nwf_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("big.nwf");
+        write_nwf(&p, &sample_net()).unwrap();
+        let limits = IngestLimits {
+            max_file_bytes: 16,
+            ..IngestLimits::default()
+        };
+        let err = read_nwf_with_limits(&p, limits).unwrap_err();
+        assert!(matches!(err, Error::Limit(_)), "got {err}");
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut raw = sample_bytes();
+        let n = raw.len();
+        // Splice 8 extra zero bytes between body and CRC, restamp.
+        raw.splice(n - 4..n - 4, [0u8; 8]);
+        restamp(&mut raw);
+        let err = parse_nwf(&raw, IngestLimits::default()).unwrap_err();
+        assert!(matches!(err, Error::Wire(_)), "got {err}");
+    }
+
+    #[test]
+    fn unknown_flag_bits_rejected() {
+        let raw = sample_bytes();
+        // Find the first layer's flags byte: 4 magic + 4 n_layers +
+        // 2 name_len + 5 name("conv1") + 1 kind + 1 nd + 16 shape +
+        // 4 rows + 4 cols = offset 41.
+        let mut raw2 = raw.clone();
+        raw2[41] |= 0x80;
+        restamp(&mut raw2);
+        let err = parse_nwf(&raw2, IngestLimits::default()).unwrap_err();
+        assert!(matches!(err, Error::Wire(_)), "got {err}");
+    }
+
+    #[test]
+    fn declared_huge_plane_rejected_without_allocation() {
+        let mut raw = sample_bytes();
+        // rows lives at offset 33 (see layout above).  Declare ~4.3e9
+        // rows; the budget must trip before any plane allocates.
+        raw[33..37].copy_from_slice(&u32::MAX.to_le_bytes());
+        restamp(&mut raw);
+        let err = parse_nwf(&raw, IngestLimits::default()).unwrap_err();
+        assert!(matches!(err, Error::Limit(_)), "got {err}");
     }
 }

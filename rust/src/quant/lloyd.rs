@@ -46,6 +46,32 @@ pub fn weighted_lloyd(
         };
     }
 
+    // Non-finite weights (or non-finite/negative importances) poison every
+    // cost comparison (NaN `<` is always false), so without this guard the
+    // loop never converges — it burns the full `max_iter` and returns NaN
+    // centroids through the importance-weighted update.  Neutralize such
+    // entries to 0 in a local copy (clean inputs take the borrow, no copy);
+    // the existing [-1, 1] uniform-init fallback below then covers the
+    // degenerate all-bad range.
+    let needs_fix = weights.iter().any(|w| !w.is_finite())
+        || importance.iter().any(|f| !f.is_finite() || *f < 0.0);
+    let fixed: (Vec<f32>, Vec<f32>);
+    let (weights, importance): (&[f32], &[f32]) = if needs_fix {
+        fixed = (
+            weights
+                .iter()
+                .map(|w| if w.is_finite() { *w } else { 0.0 })
+                .collect(),
+            importance
+                .iter()
+                .map(|f| if f.is_finite() && *f >= 0.0 { *f } else { 0.0 })
+                .collect(),
+        );
+        (&fixed.0, &fixed.1)
+    } else {
+        (weights, importance)
+    };
+
     // Init: uniform spread over the range, with one center pinned at 0
     // (weight EPMDs peak at 0, Fig. 6 — this also makes sparse models
     // converge much faster).
@@ -304,6 +330,7 @@ impl LloydQuantizedNetwork {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::util::Pcg64;
@@ -367,6 +394,66 @@ mod tests {
     fn empty_input() {
         let r = weighted_lloyd(&[], &[], 4, 0.1, 10, 1e-6);
         assert!(r.assignment.is_empty());
+    }
+
+    #[test]
+    fn nonfinite_weights_converge_with_finite_centroids() {
+        // NaN/±Inf weights used to poison the cost comparisons: the loop
+        // burned max_iter and returned NaN centroids.  Must now terminate
+        // early with an all-finite codebook.
+        let mut rng = Pcg64::new(84);
+        let mut w = rng.normal_vec(500, 0.1);
+        w[7] = f32::NAN;
+        w[99] = f32::INFINITY;
+        w[250] = f32::NEG_INFINITY;
+        let f = vec![1.0f32; w.len()];
+        let max_iter = 200;
+        let r = weighted_lloyd(&w, &f, 8, 0.01, max_iter, 1e-6);
+        assert!(r.centers.iter().all(|c| c.is_finite()), "{:?}", r.centers);
+        assert!(r.objective.is_finite());
+        assert!(r.iterations < max_iter, "never converged: {}", r.iterations);
+        assert!(r.assignment.iter().all(|&a| (a as usize) < 8));
+    }
+
+    #[test]
+    fn nonfinite_importance_converges() {
+        let mut rng = Pcg64::new(85);
+        let w = rng.normal_vec(400, 0.1);
+        let mut f = vec![1.0f32; w.len()];
+        f[3] = f32::NAN;
+        f[42] = f32::INFINITY;
+        f[100] = -5.0;
+        let r = weighted_lloyd(&w, &f, 4, 0.0, 40, 1e-6);
+        assert!(r.centers.iter().all(|c| c.is_finite()), "{:?}", r.centers);
+        assert!(r.objective.is_finite());
+    }
+
+    #[test]
+    fn all_nonfinite_falls_back_to_uniform_init() {
+        // Every weight bad -> neutralized to 0, degenerate lo==hi range ->
+        // the [-1, 1] uniform-init fallback; must terminate finitely.
+        let w = vec![f32::NAN; 64];
+        let f = vec![1.0f32; 64];
+        let r = weighted_lloyd(&w, &f, 4, 0.01, 40, 1e-6);
+        assert!(r.centers.iter().all(|c| c.is_finite()), "{:?}", r.centers);
+        // All (neutralized-to-0) weights land on an exact-zero center.
+        for &a in &r.assignment {
+            assert_eq!(r.centers[a as usize], 0.0);
+        }
+    }
+
+    #[test]
+    fn constant_plane_terminates_with_empty_clusters() {
+        // One distinct value, k=5: four clusters go empty every iteration
+        // (re-seeded at 0) — must converge, not loop to max_iter.
+        let w = vec![0.25f32; 1000];
+        let f = vec![1.0f32; 1000];
+        let max_iter = 40;
+        let r = weighted_lloyd(&w, &f, 5, 0.0, max_iter, 1e-6);
+        assert!(r.iterations < max_iter, "never converged: {}", r.iterations);
+        assert!(r.centers.iter().all(|c| c.is_finite()));
+        let c = r.centers[r.assignment[0] as usize];
+        assert!((c - 0.25).abs() < 1e-6);
     }
 
     #[test]

@@ -83,9 +83,22 @@ impl RdParams {
 
 /// Grid half-width needed so the nearest-neighbour index of every weight is
 /// representable (capped at `cap`).
+///
+/// Degenerate inputs price safely instead of collapsing through NaN-as-cast
+/// (which would silently yield half = 1): a non-finite or non-positive Δ,
+/// or a non-finite weight range, saturates to `cap`; the result is always
+/// ≥ 1 so cost tables stay well-formed.
 pub fn required_half(weights: &[f32], delta: f32, cap: i32) -> i32 {
+    let cap = cap.max(1);
+    if !delta.is_finite() || delta <= 0.0 {
+        return cap;
+    }
     let max_abs = weights.iter().fold(0f32, |m, &w| m.max(w.abs()));
-    (((max_abs / delta).ceil() as i64 + 1).min(cap as i64)) as i32
+    let ratio = max_abs / delta;
+    if !ratio.is_finite() {
+        return cap;
+    }
+    (((ratio.ceil() as i64 + 1).min(cap as i64)) as i32).max(1)
 }
 
 /// The λ-independent quantization plan for one layer: everything the grid
@@ -507,6 +520,7 @@ pub fn rd_quantize_network_planned(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::util::Pcg64;
@@ -662,6 +676,21 @@ mod tests {
         let h = required_half(&w, 0.01, 4096);
         assert!(h >= 120);
         assert_eq!(required_half(&w, 0.01, 64), 64); // cap applies
+    }
+
+    #[test]
+    fn required_half_guards_degenerate_delta() {
+        let w = vec![0.5f32, -1.2];
+        // Δ = 0 / negative / NaN / Inf: saturate to cap, never NaN-as-cast.
+        for d in [0.0f32, -0.5, f32::NAN] {
+            assert_eq!(required_half(&w, d, 64), 64, "delta={d}");
+        }
+        // Δ = +Inf is non-finite too: saturate rather than trust it.
+        assert_eq!(required_half(&w, f32::INFINITY, 64), 64);
+        // Non-finite weight range saturates too.
+        assert_eq!(required_half(&[f32::INFINITY], 0.01, 64), 64);
+        // Empty plane: always at least 1 so cost tables stay well-formed.
+        assert!(required_half(&[], 0.01, 64) >= 1);
     }
 
     #[test]

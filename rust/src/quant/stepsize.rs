@@ -81,9 +81,11 @@ pub fn rd_lambda_grid(points: usize) -> Vec<f32> {
 }
 
 /// σ_min of a layer from its Fisher diagonal: σ_i = 1/sqrt(F_i).
+/// Degenerate diagonals (all ≤ 0, or a non-finite maximum from hostile
+/// input) fall back to 1.0 so the eq.-12 Δ below stays finite.
 pub fn sigma_min(fisher: &[f32]) -> f32 {
     let f_max = fisher.iter().fold(0f32, |m, &f| m.max(f));
-    if f_max <= 0.0 {
+    if f_max <= 0.0 || !f_max.is_finite() {
         1.0
     } else {
         1.0 / f_max.sqrt()
@@ -92,9 +94,13 @@ pub fn sigma_min(fisher: &[f32]) -> f32 {
 
 /// DC-v1 per-layer step-size, eq. (12):
 /// Δ = 2|w_max| / (2|w_max|/σ_min + S).
+///
+/// Degenerate layers (all-zero, empty, or non-finite weight range / S)
+/// return the harmless Δ = 1.0 instead of 0, NaN, or ±Inf — every
+/// candidate must price finitely downstream.
 pub fn dc_v1_delta(layer: &Layer, s: f32) -> f32 {
     let w_max = layer.max_abs();
-    if w_max == 0.0 {
+    if w_max == 0.0 || !w_max.is_finite() {
         return 1.0;
     }
     let sig_min = layer
@@ -102,7 +108,12 @@ pub fn dc_v1_delta(layer: &Layer, s: f32) -> f32 {
         .as_deref()
         .map(sigma_min)
         .unwrap_or(w_max / 128.0);
-    2.0 * w_max / (2.0 * w_max / sig_min + s)
+    let delta = 2.0 * w_max / (2.0 * w_max / sig_min + s);
+    if delta.is_finite() && delta > 0.0 {
+        delta
+    } else {
+        1.0
+    }
 }
 
 /// Per-weight F_i for DC-v2: every weight counts equally (the method's
@@ -129,12 +140,22 @@ pub fn dc_v1_importance(layer: &Layer) -> Vec<f32> {
             let med = sorted[sorted.len() / 2].max(1e-20);
             // Vectorized under the `simd` feature; bit-identical to the
             // scalar `(x / med).clamp(1e-6, 1e6)` map either way.
-            crate::util::simd::div_clamp(f, med, 1e-6, 1e6)
+            let mut imp = crate::util::simd::div_clamp(f, med, 1e-6, 1e6);
+            // Non-finite Fisher entries (possible only on unsanitized
+            // input) pass through `clamp` as NaN — neutralize to 1.0 so
+            // the RDOQ cost model prices every weight finitely.
+            for x in imp.iter_mut() {
+                if !x.is_finite() {
+                    *x = 1.0;
+                }
+            }
+            imp
         }
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::model::Kind;
@@ -232,6 +253,32 @@ mod tests {
         // log spacing means the absolute gaps widen toward the top —
         // i.e. NOT the linear band an earlier doc claimed.
         assert!(band[1] - band[0] < band[4] - band[3]);
+    }
+
+    #[test]
+    fn degenerate_layers_price_delta_one() {
+        // Empty and all-zero layers: harmless Δ = 1.0, never 0/NaN.
+        assert_eq!(dc_v1_delta(&layer_with(None, vec![]), 16.0), 1.0);
+        assert_eq!(dc_v1_delta(&layer_with(None, vec![0.0, 0.0]), 16.0), 1.0);
+        // Non-finite weight range (unsanitized hostile input).
+        let d = dc_v1_delta(&layer_with(None, vec![f32::INFINITY, 0.1]), 16.0);
+        assert_eq!(d, 1.0);
+        let d = dc_v1_delta(&layer_with(None, vec![f32::NAN, 0.0]), 16.0);
+        assert!(d.is_finite() && d > 0.0);
+    }
+
+    #[test]
+    fn sigma_min_guards_nonfinite_fisher() {
+        assert_eq!(sigma_min(&[f32::INFINITY, 1.0]), 1.0);
+        assert_eq!(sigma_min(&[f32::NAN]), 1.0);
+        assert_eq!(sigma_min(&[]), 1.0);
+    }
+
+    #[test]
+    fn importance_neutralizes_nonfinite_entries() {
+        let l = layer_with(Some(vec![1.0, f32::NAN, f32::INFINITY, 4.0]), vec![0.0; 4]);
+        let imp = dc_v1_importance(&l);
+        assert!(imp.iter().all(|x| x.is_finite()), "{imp:?}");
     }
 
     #[test]

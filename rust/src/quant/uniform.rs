@@ -69,6 +69,7 @@ pub fn quantize_network_with_delta(net: &Network, delta: f32, half: i32) -> Vec<
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::model::Kind;

@@ -18,6 +18,7 @@
 //! a mutation *penetrates* that gate and exercises the header/payload
 //! validation behind it.  The engine emits both flavours.
 
+use crate::model::{Kind, Layer, Network};
 use crate::util::{crc32, Pcg64};
 
 /// The mutation classes the engine draws from.  Kept public so property
@@ -77,6 +78,110 @@ pub fn restamp(raw: &mut [u8]) {
 /// single-byte sweep in `tests/fault_injection.rs` drives directly.
 pub fn flip_bit(raw: &mut [u8], byte: usize, bit: u32) {
     raw[byte] ^= 1u8 << (bit % 8);
+}
+
+/// The IEEE-754 specials the adversarial network generator salts planes
+/// with: the values the encode-hardening contract must survive (typed
+/// error under `Reject`, bit-exact round-trip after `Sanitize`/`Clamp`),
+/// plus the finite extremes that stress Δ-division overflow paths.
+pub const SPECIAL_F32: [f32; 8] = [
+    f32::NAN,
+    f32::INFINITY,
+    f32::NEG_INFINITY,
+    1.0e-41,  // subnormal
+    -1.0e-41, // negative subnormal
+    -0.0,
+    f32::MAX,
+    f32::MIN,
+];
+
+/// Seeded adversarial [`Network`] generator for the encode-side fuzz
+/// campaign (`tests/encode_fuzz.rs`): pathological shapes (empty planes,
+/// 1×1, long ribbons) with weight/importance/bias planes salted with
+/// [`SPECIAL_F32`] values.  Roughly a third of the draws come out clean so
+/// the campaign also exercises the scan-only fast path.  Deterministic per
+/// seed.
+pub struct NetGen {
+    rng: Pcg64,
+}
+
+impl NetGen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg64::new(seed),
+        }
+    }
+
+    fn weight_plane(&mut self, n: usize, dirty: bool) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if dirty && self.rng.next_f64() < 0.08 {
+                    SPECIAL_F32[self.rng.below(SPECIAL_F32.len() as u64) as usize]
+                } else {
+                    (self.rng.next_f64() as f32 - 0.5) * 0.4
+                }
+            })
+            .collect()
+    }
+
+    fn importance_plane(&mut self, n: usize, dirty: bool) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if dirty && self.rng.next_f64() < 0.08 {
+                    // invalid importance: non-finite OR negative
+                    match self.rng.below(4) {
+                        0 => f32::NAN,
+                        1 => f32::INFINITY,
+                        2 => -1.0,
+                        _ => f32::NEG_INFINITY,
+                    }
+                } else {
+                    self.rng.next_f64() as f32 + 0.01
+                }
+            })
+            .collect()
+    }
+
+    /// One adversarial (but structurally *valid*) network: shapes pass
+    /// [`Network::validate`], values may not pass the non-finite policy.
+    pub fn adversarial(&mut self) -> Network {
+        let n_layers = 1 + self.rng.below(4) as usize;
+        let dirty_net = self.rng.next_f64() < 0.67;
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let (rows, cols) = match self.rng.below(6) {
+                0 => (0, self.rng.below(8) as usize), // empty plane
+                1 => (1, 1),
+                2 => (1, 1 + self.rng.below(96) as usize), // ribbons
+                3 => (1 + self.rng.below(96) as usize, 1),
+                _ => (
+                    1 + self.rng.below(24) as usize,
+                    1 + self.rng.below(24) as usize,
+                ),
+            };
+            let n = rows * cols;
+            let dirty = dirty_net && self.rng.next_f64() < 0.8;
+            let fisher = (self.rng.below(2) == 1).then(|| self.importance_plane(n, dirty));
+            let hessian = (self.rng.below(4) == 0).then(|| self.importance_plane(n, dirty));
+            let bias =
+                (self.rng.below(2) == 1).then(|| self.weight_plane(rows.clamp(1, 8), dirty));
+            layers.push(Layer {
+                name: format!("l{i}"),
+                kind: Kind::Dense,
+                shape: vec![cols, rows],
+                rows,
+                cols,
+                weights: self.weight_plane(n, dirty),
+                fisher,
+                hessian,
+                bias,
+            });
+        }
+        Network {
+            name: "adversarial".into(),
+            layers,
+        }
+    }
 }
 
 /// Seeded mutation engine: each [`Mutator::mutate`] call draws one
@@ -199,6 +304,36 @@ mod tests {
         let mut tiny = vec![1, 2, 3];
         restamp(&mut tiny);
         assert_eq!(tiny, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn netgen_is_deterministic_and_valid() {
+        let nets = |seed| {
+            let mut g = NetGen::new(seed);
+            (0..30).map(|_| g.adversarial()).collect::<Vec<_>>()
+        };
+        let a = nets(9);
+        let b = nets(9);
+        for (x, y) in a.iter().zip(&b) {
+            // f32 NaN != NaN, so compare bit patterns
+            assert_eq!(x.layers.len(), y.layers.len());
+            for (lx, ly) in x.layers.iter().zip(&y.layers) {
+                assert!(lx
+                    .weights
+                    .iter()
+                    .zip(&ly.weights)
+                    .all(|(p, q)| p.to_bits() == q.to_bits()));
+            }
+            x.validate().expect("adversarial nets are structurally valid");
+        }
+        // the salt actually lands: across 30 draws some plane is dirty and
+        // some network is fully clean
+        let dirty = a
+            .iter()
+            .filter(|n| n.layers.iter().any(|l| l.weight_census().non_finite() > 0))
+            .count();
+        assert!(dirty > 0, "no dirty draw in 30");
+        assert!(dirty < 30, "no clean draw in 30");
     }
 
     #[test]

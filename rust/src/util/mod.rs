@@ -48,6 +48,11 @@ pub enum Error {
     /// health-state policy).  Distinct from [`Error::Backpressure`]:
     /// capacity is available, the *model* is the problem.
     Quarantined(String),
+    /// Ingested weights (or importance/Fisher side data) contain NaN/±Inf
+    /// and the active [`model::NonFinitePolicy`](crate::model::NonFinitePolicy)
+    /// is `Reject`.  Distinct from [`Error::Format`]: the file is
+    /// well-formed, the *values* are unusable for quantization.
+    NonFinite(String),
 }
 
 impl std::fmt::Display for Error {
@@ -65,6 +70,7 @@ impl std::fmt::Display for Error {
             Error::Limit(m) => write!(f, "decode limit exceeded: {m}"),
             Error::Deadline(m) => write!(f, "decode deadline expired: {m}"),
             Error::Quarantined(m) => write!(f, "model quarantined: {m}"),
+            Error::NonFinite(m) => write!(f, "non-finite weights rejected: {m}"),
         }
     }
 }
@@ -138,5 +144,8 @@ mod tests {
         assert!(Error::Quarantined("model 'm'".into())
             .to_string()
             .contains("quarantined"));
+        assert!(Error::NonFinite("layer 'conv1': 3 NaN".into())
+            .to_string()
+            .contains("non-finite"));
     }
 }

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Zero-allocation pin for the fused decode path: once a `DecodeArena` is
 //! warm, repeated decodes of a same-shaped container must not touch the
 //! heap at all — serial AND pooled.

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! CLI integration: exercise the `deepcabac` binary end to end through
 //! std::process (compress → info → decompress → eval), the UX a downstream
 //! user actually touches.  Skipped when artifacts are absent.

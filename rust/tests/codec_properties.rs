@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Property tests over the codec stack: roundtrip identity, size
 //! consistency, entropy bounds — the invariants every lossless coder must
 //! hold for arbitrary quantized planes.

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Property tests on coordinator invariants: quantizer monotonicity, RDOQ
 //! optimality vs NN, Pareto-front correctness, Lloyd objective descent.
 

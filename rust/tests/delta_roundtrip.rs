@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Cross-version container identity and delta-application properties.
 //!
 //! Two families of guarantees ride here:

@@ -1,0 +1,332 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
+//! Encode-side fuzz + differential round-trip campaign — the mirror image
+//! of `fault_injection.rs` for the ingest→quantize→encode path.
+//!
+//! The contract under test: feeding **any** input to the hardened encode
+//! entry points produces either a typed [`Error`] or a container that
+//! round-trips bit-exactly — never a panic escape, never allocation beyond
+//! the 128 MiB cap.  Three layers of attack:
+//!
+//! * an **exhaustive single-byte corruption sweep** over the committed
+//!   `golden.nwf` fixture (generated + self-verified by `gen_golden.py`),
+//!   each flipped byte tried as-is (the CRC gate's job) and CRC-restamped
+//!   (penetrating to the header/budget validation behind the gate); any
+//!   mutation the parser *accepts* must still encode cleanly — the
+//!   differential half of the campaign;
+//! * a **seeded adversarial-network campaign**
+//!   ([`deepcabac::testutil::fuzz::NetGen`]) of NaN/±Inf/subnormal/−0.0
+//!   salted planes and pathological shapes, driven through every
+//!   [`NonFinitePolicy`] — `Reject` must fail typed exactly when the
+//!   network is dirty, `Sanitize`/`Clamp` must always produce a
+//!   byte-stable container whose fused and two-pass decodes agree
+//!   bit-for-bit;
+//! * a **counting allocator** asserting every attempt stays far below the
+//!   cap — a corrupted `rows` field that slipped past the ingest budget
+//!   would show up here as a multi-gigabyte allocation.
+//!
+//! Debug builds stride-sample the sweep; release builds (CI encode-fuzz
+//! step, `DCB_FUZZ_ITERS=1024`) sweep every byte.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use deepcabac::coordinator::pipeline::compress_dc_policy;
+use deepcabac::coordinator::{Candidate, Method, SearchConfig};
+use deepcabac::model::{
+    decode_network_into, parse_nwf, CompressedNetwork, ContainerPolicy, DecodeArena, IngestLimits,
+    Network, NonFinitePolicy,
+};
+use deepcabac::testutil::fuzz::{flip_bit, restamp, NetGen};
+use deepcabac::util::Error;
+
+struct CountingAlloc;
+
+static ALLOC_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(new_size, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Per-attempt allocation ceiling (matches the decode-side harness).
+const ALLOC_CAP_BYTES: usize = 128 << 20;
+
+fn fixture(name: &str) -> Vec<u8> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/golden")
+        .join(name);
+    std::fs::read(&path).unwrap_or_else(|e| panic!("missing fixture {path:?}: {e}"))
+}
+
+/// Debug builds sample every 7th byte; release sweeps exhaustively.
+fn sweep_stride() -> usize {
+    if cfg!(debug_assertions) {
+        7
+    } else {
+        1
+    }
+}
+
+/// Tight budget for the 2.6 KB golden fixture: a corrupted header that
+/// declares a plane bigger than the file must trip the budget (or the
+/// bounds check), never an allocation.
+fn limits() -> IngestLimits {
+    IngestLimits {
+        max_layers: 64,
+        max_dims: 8,
+        max_params: 1 << 20,
+        max_file_bytes: 1 << 20,
+        max_layer_bytes: 1 << 20,
+    }
+}
+
+fn cand() -> Candidate {
+    Candidate {
+        method: Method::DcV2,
+        s: 64.0,
+        delta: 0.01,
+        lambda: 1.0,
+        clusters: 0,
+    }
+}
+
+fn cfg(policy: NonFinitePolicy) -> SearchConfig {
+    SearchConfig {
+        container: ContainerPolicy::v3(512, 1),
+        threads: 1,
+        nonfinite: policy,
+        ..SearchConfig::default()
+    }
+}
+
+/// One contained parse attempt: must return (never unwind) and stay under
+/// the allocation cap.  Returns the parsed network when the mutation was
+/// indistinguishable from a valid file.
+fn attempt_parse(raw: &[u8], label: &str) -> Option<Network> {
+    let before = ALLOC_BYTES.load(Ordering::Relaxed);
+    let r = catch_unwind(AssertUnwindSafe(|| parse_nwf(raw, limits())));
+    let spent = ALLOC_BYTES.load(Ordering::Relaxed).wrapping_sub(before);
+    assert!(r.is_ok(), "panic escaped parse_nwf: {label}");
+    assert!(
+        spent < ALLOC_CAP_BYTES,
+        "{label}: parse allocated {spent} bytes (cap {ALLOC_CAP_BYTES})"
+    );
+    r.ok().and_then(|inner| inner.ok())
+}
+
+/// One contained encode attempt under `policy`.
+fn attempt_compress(
+    net: &Network,
+    c: &Candidate,
+    policy: NonFinitePolicy,
+    label: &str,
+) -> Result<CompressedNetwork, Error> {
+    let before = ALLOC_BYTES.load(Ordering::Relaxed);
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        compress_dc_policy(net, c, &cfg(policy)).map(|(comp, _)| comp)
+    }));
+    let spent = ALLOC_BYTES.load(Ordering::Relaxed).wrapping_sub(before);
+    assert!(r.is_ok(), "panic escaped the encode path: {label}");
+    assert!(
+        spent < ALLOC_CAP_BYTES,
+        "{label}: encode allocated {spent} bytes (cap {ALLOC_CAP_BYTES})"
+    );
+    match r {
+        Ok(inner) => inner,
+        Err(_) => unreachable!("asserted above"),
+    }
+}
+
+/// The bit-exact half of the contract: the emitted container is
+/// byte-stable under reserialize, and the fused single-pass decode agrees
+/// with the two-pass reconstruction bit-for-bit.
+fn assert_roundtrip(comp: &CompressedNetwork, label: &str) {
+    let policy = ContainerPolicy::v3(512, 1);
+    let bytes = comp.to_bytes_with(policy);
+    let back = CompressedNetwork::from_bytes(&bytes)
+        .unwrap_or_else(|e| panic!("{label}: emitted container failed to parse: {e}"));
+    assert_eq!(
+        bytes,
+        back.to_bytes_with(policy),
+        "{label}: container not byte-stable"
+    );
+    let mut arena = DecodeArena::new();
+    let fused = decode_network_into(&bytes, 1, &mut arena)
+        .unwrap_or_else(|e| panic!("{label}: fused decode refused own container: {e}"));
+    let two = back.reconstruct_named();
+    assert_eq!(fused.layers.len(), two.layers.len(), "{label}");
+    for (a, b) in fused.layers.iter().zip(&two.layers) {
+        assert_eq!(a.weights.len(), b.weights.len(), "{label}: {}", a.name);
+        assert!(
+            a.weights.iter().zip(&b.weights).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{label}: fused/two-pass reconstruction diverged on {}",
+            a.name
+        );
+    }
+}
+
+/// Mirror of the policy layer's dirtiness predicate (the crate-internal
+/// one is deliberately not public).
+fn net_is_dirty(net: &Network) -> bool {
+    let bad_imp = |v: &Vec<f32>| v.iter().any(|x| !x.is_finite() || *x < 0.0);
+    net.layers.iter().any(|l| {
+        l.weights.iter().any(|w| !w.is_finite())
+            || l.fisher.as_ref().is_some_and(bad_imp)
+            || l.hessian.as_ref().is_some_and(bad_imp)
+            || l.bias.as_ref().is_some_and(|b| b.iter().any(|x| !x.is_finite()))
+    })
+}
+
+#[test]
+fn pristine_golden_nwf_parses_with_pinned_census() {
+    let raw = fixture("golden.nwf");
+    let net = parse_nwf(&raw, IngestLimits::default()).expect("pristine golden.nwf");
+    assert_eq!(net.layers.len(), 3);
+    assert_eq!(net.param_count(), 72 + 240);
+    let conv1 = &net.layers[0];
+    assert_eq!(conv1.name, "conv1");
+    let c = conv1.weight_census();
+    assert_eq!(
+        (c.nan, c.pos_inf, c.neg_inf, c.subnormal, c.neg_zero),
+        (1, 1, 1, 1, 1),
+        "gen_golden.py plants exactly one of each special"
+    );
+    let fc1 = &net.layers[1];
+    assert_eq!(fc1.weight_census().non_finite(), 0, "fc1 is clean");
+    assert!(fc1.hessian.is_some() && fc1.fisher.is_none() && fc1.bias.is_none());
+    let tiny = &net.layers[2];
+    assert_eq!((tiny.rows, tiny.cols, tiny.weights.len()), (0, 5, 0));
+}
+
+#[test]
+fn golden_nwf_policy_matrix_rejects_or_roundtrips() {
+    let raw = fixture("golden.nwf");
+    let net = parse_nwf(&raw, IngestLimits::default()).expect("pristine golden.nwf");
+    // Reject: typed error naming the offending layer, input untouched.
+    match compress_dc_policy(&net, &cand(), &cfg(NonFinitePolicy::Reject)) {
+        Err(Error::NonFinite(m)) => assert!(m.contains("conv1"), "message names the layer: {m}"),
+        other => panic!("Reject on a dirty checkpoint must fail NonFinite, got {other:?}"),
+    }
+    // Sanitize / Clamp: exact per-layer rewrite counts, then a bit-exact
+    // container round-trip.  conv1: 3 non-finite weights (NaN, +Inf,
+    // -Inf — the subnormal, -0.0 and f32::MAX stay untouched), 2 invalid
+    // fisher entries (NaN + negative), 1 non-finite bias value.
+    for policy in [NonFinitePolicy::Sanitize, NonFinitePolicy::Clamp] {
+        let (comp, report) = compress_dc_policy(&net, &cand(), &cfg(policy))
+            .unwrap_or_else(|e| panic!("{policy:?} must compress the golden fixture: {e}"));
+        assert_eq!(report.layers.len(), 1, "only conv1 is dirty");
+        let l = &report.layers[0];
+        assert_eq!(
+            (l.name.as_str(), l.weights_fixed, l.importance_fixed, l.bias_fixed),
+            ("conv1", 3, 2, 1),
+            "{policy:?}"
+        );
+        assert_roundtrip(&comp, &format!("golden.nwf under {policy:?}"));
+    }
+    // The original network is never mutated by any policy pass.
+    assert_eq!(net.layers[0].weight_census().non_finite(), 3);
+}
+
+#[test]
+fn exhaustive_nwf_single_byte_corruption_sweep() {
+    let raw = fixture("golden.nwf");
+    for i in (0..raw.len()).step_by(sweep_stride()) {
+        // whole-byte flip, stale CRC: the gate's territory
+        let mut m = raw.clone();
+        m[i] ^= 0xFF;
+        attempt_parse(&m, &format!("golden.nwf byte {i}"));
+        // restamped: the mutation penetrates to header/budget validation;
+        // anything the parser accepts must still encode cleanly
+        restamp(&mut m);
+        if let Some(net) = attempt_parse(&m, &format!("golden.nwf byte {i} restamped")) {
+            let label = format!("golden.nwf byte {i} restamped, accepted");
+            if let Ok(comp) =
+                attempt_compress(&net, &cand(), NonFinitePolicy::Sanitize, &label)
+            {
+                assert_roundtrip(&comp, &label);
+            } else {
+                panic!("{label}: Sanitize must encode any parse-accepted network");
+            }
+        }
+        // single-bit flip, restamped: the subtlest corruption class
+        let mut b = raw.clone();
+        flip_bit(&mut b, i, (i % 8) as u32);
+        restamp(&mut b);
+        attempt_parse(&b, &format!("golden.nwf bit {i}.{}", i % 8));
+    }
+}
+
+#[test]
+fn seeded_adversarial_networks_fail_typed_or_roundtrip_bit_exact() {
+    let iters: usize = std::env::var("DCB_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if cfg!(debug_assertions) { 128 } else { 1024 });
+    let mut gen = NetGen::new(0xE2C0_DE);
+    let candidates = [
+        cand(),
+        Candidate {
+            method: Method::DcV2,
+            s: 0.0,
+            delta: 0.25,
+            lambda: 0.01,
+            clusters: 0,
+        },
+        Candidate {
+            method: Method::DcV1,
+            s: 64.0,
+            delta: 0.0,
+            lambda: 0.5,
+            clusters: 0,
+        },
+    ];
+    let policies = [
+        NonFinitePolicy::Reject,
+        NonFinitePolicy::Sanitize,
+        NonFinitePolicy::Clamp,
+    ];
+    for it in 0..iters {
+        let net = gen.adversarial();
+        let dirty = net_is_dirty(&net);
+        let c = &candidates[it % candidates.len()];
+        let policy = policies[it % policies.len()];
+        let label = format!("iter {it} ({:?}, {policy:?}, dirty={dirty})", c.method);
+        match attempt_compress(&net, c, policy, &label) {
+            Ok(comp) => {
+                assert!(
+                    policy != NonFinitePolicy::Reject || !dirty,
+                    "{label}: Reject let a dirty network through"
+                );
+                assert_roundtrip(&comp, &label);
+            }
+            Err(Error::NonFinite(_)) => {
+                assert!(
+                    policy == NonFinitePolicy::Reject && dirty,
+                    "{label}: spurious NonFinite error"
+                );
+            }
+            Err(e) => panic!("{label}: unexpected typed error {e}"),
+        }
+    }
+}

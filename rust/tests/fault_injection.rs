@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Fault-injection property suite for the hardened decode path.
 //!
 //! The contract under test: feeding **any** corrupted container to the

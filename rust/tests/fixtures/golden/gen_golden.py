@@ -22,6 +22,16 @@ and the DCB4 delta-container format (rust/src/model/delta.rs):
                        only, no payload fields); header pins the base's
                        crc32 and FNV-1a shape key
 
+and the ingest-side fixture for rust/tests/encode_fuzz.rs:
+
+  golden.nwf         - 3-layer .nwf checkpoint (model/nwf.rs wire format)
+                       covering every flag combination (fisher / hessian /
+                       bias), an empty plane, and IEEE-754 specials planted
+                       bitwise (NaN / +-Inf / subnormal / -0.0 / f32::MAX)
+                       so the non-finite policy and the exhaustive
+                       single-byte corruption sweep have a committed,
+                       adversarial-but-valid target
+
 The generator decodes everything back with an independent Python decoder
 mirror and CRC-checks the containers before writing, so a transcription slip
 fails here rather than in CI.  The network payload is derived from the same
@@ -624,6 +634,123 @@ def golden_v4_delta(base):
     )
 
 
+# --- golden .nwf ingest fixture (model/nwf.rs wire format) ------------------
+
+NAN_BITS = 0x7FC00000
+POS_INF_BITS = 0x7F800000
+NEG_INF_BITS = 0xFF800000
+SUBNORMAL_BITS = 0x00000001
+NEG_ZERO_BITS = 0x80000000
+F32_MAX_BITS = 0x7F7FFFFF
+
+
+def f32_bits(v):
+    return struct.unpack("<I", struct.pack("<f", v))[0]
+
+
+def gen_weight_bits(lcg, count):
+    """Deterministic small weights in [-0.2, 0.2], stored as bit patterns
+    so special-value planting is byte-exact."""
+    return [f32_bits(((lcg.next() % 2001) - 1000) / 5000.0) for _ in range(count)]
+
+
+def golden_nwf_layers():
+    """Structurally valid, value-adversarial: conv1 is salted with the full
+    IEEE-754 special set (weights + fisher + bias), fc1 is clean with a
+    hessian plane, tiny is an empty plane (rows=0)."""
+    lcg = Lcg(0xDCB6)
+    w = gen_weight_bits(lcg, 72)
+    for i, bits in zip((3, 10, 17, 30, 45, 60),
+                       (NAN_BITS, POS_INF_BITS, NEG_INF_BITS,
+                        SUBNORMAL_BITS, NEG_ZERO_BITS, F32_MAX_BITS)):
+        w[i] = bits
+    fisher = [f32_bits((lcg.next() % 1000) / 500.0 + 0.01) for _ in range(72)]
+    fisher[5] = NAN_BITS      # invalid importance: non-finite
+    fisher[40] = f32_bits(-1.0)  # invalid importance: negative
+    bias = gen_weight_bits(lcg, 8)
+    bias[2] = POS_INF_BITS
+    conv1 = dict(name="conv1", kind=1, shape=[3, 3, 2, 4], rows=8, cols=9,
+                 weights=w, fisher=fisher, hessian=None, bias=bias)
+    fc1 = dict(name="fc1", kind=0, shape=[24, 10], rows=10, cols=24,
+               weights=gen_weight_bits(lcg, 240), fisher=None,
+               hessian=[f32_bits((lcg.next() % 1000) / 500.0 + 0.01)
+                        for _ in range(240)],
+               bias=None)
+    tiny = dict(name="tiny", kind=2, shape=[0, 5], rows=0, cols=5,
+                weights=[], fisher=None, hessian=None, bias=None)
+    return [conv1, fc1, tiny]
+
+
+def nwf_to_bytes(layers):
+    """Mirror of model/nwf.rs::write_nwf (planes given as u32 bit lists)."""
+    body = bytearray()
+    body += struct.pack("<I", len(layers))
+    for l in layers:
+        body += struct.pack("<H", len(l["name"]))
+        body += l["name"].encode()
+        body += struct.pack("<BB", l["kind"], len(l["shape"]))
+        for d in l["shape"]:
+            body += struct.pack("<I", d)
+        body += struct.pack("<II", l["rows"], l["cols"])
+        flags = (int(l["fisher"] is not None)
+                 | (int(l["hessian"] is not None) << 1)
+                 | (int(l["bias"] is not None) << 2))
+        body += struct.pack("<B", flags)
+        for bits in l["weights"]:
+            body += struct.pack("<I", bits)
+        for plane in (l["fisher"], l["hessian"]):
+            if plane is not None:
+                for bits in plane:
+                    body += struct.pack("<I", bits)
+        if l["bias"] is not None:
+            body += struct.pack("<I", len(l["bias"]))
+            for bits in l["bias"]:
+                body += struct.pack("<I", bits)
+    return b"NWF1" + bytes(body) + struct.pack("<I", zlib.crc32(bytes(body)) & M32)
+
+
+def parse_nwf_mirror(raw):
+    """Independent parse mirror of model/nwf.rs::parse_nwf."""
+    assert raw[:4] == b"NWF1"
+    body = raw[4:-4]
+    assert struct.unpack("<I", raw[-4:])[0] == zlib.crc32(body) & M32, "crc"
+    pos = 0
+
+    def take(n):
+        nonlocal pos
+        assert pos + n <= len(body), "truncated"
+        s = body[pos:pos + n]
+        pos += n
+        return s
+
+    n_layers = struct.unpack("<I", take(4))[0]
+    layers = []
+    for _ in range(n_layers):
+        name = take(struct.unpack("<H", take(2))[0]).decode()
+        kind, nd = struct.unpack("<BB", take(2))
+        shape = [struct.unpack("<I", take(4))[0] for _ in range(nd)]
+        rows, cols = struct.unpack("<II", take(8))
+        (flags,) = struct.unpack("<B", take(1))
+        assert flags & ~0x07 == 0, "unknown flag bits"
+        n = rows * cols
+        plane = lambda count: list(struct.unpack(f"<{count}I", take(4 * count)))
+        weights = plane(n)
+        fisher = plane(n) if flags & 1 else None
+        hessian = plane(n) if flags & 2 else None
+        bias = None
+        if flags & 4:
+            bias = plane(struct.unpack("<I", take(4))[0])
+        prod = 1
+        for d in shape:
+            prod *= d
+        assert prod == n, (name, shape, n)
+        layers.append(dict(name=name, kind=kind, shape=shape, rows=rows,
+                           cols=cols, weights=weights, fisher=fisher,
+                           hessian=hessian, bias=bias))
+    assert pos == len(body), "trailing garbage"
+    return layers
+
+
 def main():
     here = os.path.dirname(os.path.abspath(__file__))
     net = golden_network()
@@ -685,6 +812,34 @@ def main():
             f.write(raw)
         print(f"{fname}: {len(raw)} bytes, crc32 {zlib.crc32(raw) & M32:08x}")
     print(f"base crc32 {base_crc:08x}, base shape key {base_key:016x}")
+
+    # --- golden .nwf ingest fixture ------------------------------------
+    nwf_layers = golden_nwf_layers()
+    nwf_raw = nwf_to_bytes(nwf_layers)
+    nwf_back = parse_nwf_mirror(nwf_raw)
+    assert len(nwf_back) == 3
+    for l, b in zip(nwf_layers, nwf_back):
+        for key in ("name", "kind", "shape", "rows", "cols", "weights",
+                    "fisher", "hessian", "bias"):
+            assert l[key] == b[key], ("nwf", l["name"], key)
+    # the specials must be present bit-exactly (encode_fuzz.rs pins the
+    # same census against parse_nwf)
+    conv1 = nwf_back[0]
+    assert conv1["weights"][3] == NAN_BITS
+    assert conv1["weights"][10] == POS_INF_BITS
+    assert conv1["weights"][17] == NEG_INF_BITS
+    assert conv1["weights"][30] == SUBNORMAL_BITS
+    assert conv1["weights"][45] == NEG_ZERO_BITS
+    assert conv1["weights"][60] == F32_MAX_BITS
+    assert conv1["fisher"][5] == NAN_BITS
+    assert conv1["bias"][2] == POS_INF_BITS
+    assert all((b >> 23) & 0xFF != 0xFF
+               for b in nwf_back[1]["weights"]), "fc1 must be clean"
+    assert nwf_back[2]["weights"] == [] and nwf_back[2]["rows"] == 0
+    with open(os.path.join(here, "golden.nwf"), "wb") as f:
+        f.write(nwf_raw)
+    print(f"golden.nwf: {len(nwf_raw)} bytes, "
+          f"crc32 {zlib.crc32(nwf_raw) & M32:08x}")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Fused decode→inference equivalence suite.
 //!
 //! Pins the zero-allocation decode path against the classic two-pass one:

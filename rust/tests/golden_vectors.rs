@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Golden-vector fixtures: checked-in v1/v2/v3 `.dcb` streams that pin all
 //! three container wire formats byte-for-byte.
 //!

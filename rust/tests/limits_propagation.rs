@@ -1,0 +1,133 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
+//! End-to-end pins for decode-budget propagation (ISSUE 10 satellite):
+//! a [`DecodeLimits`] set at any of the three public entry points —
+//! [`ContainerPolicy::builder`], [`DecodeArena`], or
+//! [`StoreConfig::limits`] — must actually reach the header walk that
+//! enforces it.  Each test drives the committed 2-layer `golden_v3.dcb`
+//! fixture through one path twice: once under a budget tightened along a
+//! single axis (must fail `Error::Limit`), once under the default budget
+//! (must decode).  A budget that silently fails to propagate shows up
+//! here as the tight run succeeding.
+
+use std::path::PathBuf;
+
+use deepcabac::api::{ModelStore, StoreConfig};
+use deepcabac::model::{
+    decode_network_into, CompressedNetwork, ContainerPolicy, DecodeArena, DecodeLimits,
+};
+use deepcabac::util::Error;
+
+fn fixture(name: &str) -> Vec<u8> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/golden")
+        .join(name);
+    std::fs::read(&path).unwrap_or_else(|e| panic!("missing fixture {path:?}: {e}"))
+}
+
+/// Default budget with one axis pinched shut.
+fn tight(axis: &str) -> DecodeLimits {
+    let mut l = DecodeLimits::default();
+    match axis {
+        "layers" => l.max_layers = 1,
+        "slices" => l.max_slices = 1,
+        "symbols" => l.max_symbols = 1,
+        "payload" => l.max_payload_bytes = 1,
+        "arena" => l.max_arena_bytes = 16,
+        other => panic!("unknown axis {other}"),
+    }
+    l
+}
+
+const AXES: [&str; 5] = ["layers", "slices", "symbols", "payload", "arena"];
+
+#[test]
+fn builder_carries_limits_into_policy() {
+    let l = tight("layers");
+    let p = ContainerPolicy::builder().v3().limits(l).build();
+    assert_eq!(p.limits, l, "builder must thread limits through build()");
+    assert_eq!(
+        ContainerPolicy::default().limits,
+        DecodeLimits::default(),
+        "default policy carries the default budget"
+    );
+}
+
+#[test]
+fn two_pass_decode_honors_explicit_limits() {
+    let raw = fixture("golden_v3.dcb");
+    for axis in AXES {
+        match CompressedNetwork::from_bytes_with_limits(&raw, 1, tight(axis)) {
+            Err(Error::Limit(_)) => {}
+            other => panic!(
+                "tight {axis} budget must refuse the fixture, got {}",
+                match other {
+                    Ok(_) => "Ok".into(),
+                    Err(e) => format!("{e}"),
+                }
+            ),
+        }
+    }
+    // Control: the same bytes decode under the default budget.
+    let comp = CompressedNetwork::from_bytes_with_limits(&raw, 1, DecodeLimits::default())
+        .expect("default budget admits the fixture");
+    assert_eq!(comp.layers.len(), 2);
+}
+
+#[test]
+fn arena_decode_honors_with_limits_and_set_limits() {
+    let raw = fixture("golden_v3.dcb");
+    for axis in AXES {
+        let l = tight(axis);
+        let mut arena = DecodeArena::with_limits(l);
+        assert_eq!(arena.limits(), l, "with_limits must stick");
+        match decode_network_into(&raw, 1, &mut arena) {
+            Err(Error::Limit(_)) => {}
+            Ok(_) => panic!("tight {axis} budget must refuse the fused decode"),
+            Err(e) => panic!("tight {axis}: wanted Error::Limit, got {e}"),
+        }
+    }
+    // set_limits after construction, and re-tightening a *warm* arena:
+    // the budget is enforced on every prepare, not just the cold parse.
+    let mut arena = DecodeArena::new();
+    let n = decode_network_into(&raw, 1, &mut arena)
+        .expect("default budget admits the fixture")
+        .layers
+        .len();
+    assert_eq!(n, 2);
+    arena.set_limits(tight("symbols"));
+    match decode_network_into(&raw, 1, &mut arena) {
+        Err(Error::Limit(_)) => {}
+        Ok(_) => panic!("warm arena must re-enforce a tightened budget"),
+        Err(e) => panic!("warm arena: wanted Error::Limit, got {e}"),
+    }
+    arena.set_limits(DecodeLimits::default());
+    assert!(
+        decode_network_into(&raw, 1, &mut arena).is_ok(),
+        "restoring the default budget restores service"
+    );
+}
+
+#[test]
+fn store_decode_honors_store_config_limits() {
+    let raw = fixture("golden_v3.dcb");
+    for axis in AXES {
+        let store = ModelStore::new(StoreConfig {
+            limits: tight(axis),
+            ..StoreConfig::default()
+        });
+        // Registration validates against the *default* budget by design —
+        // a model can be resident yet refused at decode time.
+        store
+            .register("m", raw.clone())
+            .expect("registration uses the default budget");
+        match store.decode("m", |net| net.layers.len()) {
+            Err(Error::Limit(_)) => {}
+            Ok(_) => panic!("store with tight {axis} budget must refuse decode"),
+            Err(e) => panic!("store tight {axis}: wanted Error::Limit, got {e}"),
+        }
+    }
+    // Control: a default-budget store serves the same bytes.
+    let store = ModelStore::new(StoreConfig::default());
+    store.register("m", raw).expect("register");
+    assert_eq!(store.decode("m", |net| net.layers.len()).expect("decode"), 2);
+}

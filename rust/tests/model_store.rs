@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! ModelStore serving-layer contract suite — deterministic, loom-free.
 //!
 //! Pins the behaviors the serving layer promises: LRU arena eviction in

@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! End-to-end pipeline integration over the real artifacts: grid-search on
 //! the trained LeNet5, verifying (a) the Table I orderings hold, (b) the
 //! best DC result decodes losslessly to the evaluated network, (c) the eval

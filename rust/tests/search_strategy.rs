@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Seeded end-to-end tests of the estimate-first grid search against the
 //! exact-always reference, over a deterministic in-process accuracy oracle
 //! (`EvalService::from_fn`) — no PJRT artifacts required.

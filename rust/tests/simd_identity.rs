@@ -1,3 +1,4 @@
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)] // outside the panic-free wall (clippy.toml)
 //! Scalar/SIMD identity pins: the `simd` cargo feature must change **no
 //! observable bit** anywhere — not one f32 bit pattern in a reconstructed
 //! plane, not one chosen RDOQ index, not one byte of an encoded stream.
